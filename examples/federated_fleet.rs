@@ -1,0 +1,117 @@
+//! End-to-end driver: a federated-learning edge fleet served by the
+//! PowerTrain coordinator (paper Table 1, "federated learning on edge
+//! cloud" scenario; EXPERIMENTS.md records a run of this binary).
+//!
+//! A heterogeneous fleet (Orin AGX, Xavier AGX, Orin Nano) receives a
+//! stream of training-round requests for different DNN workloads, each
+//! with its own power budget (battery / thermal constraints). For every
+//! request the coordinator profiles 50 power modes on the target device,
+//! transfer-learns the reference models, predicts the device's grid
+//! through the AOT artifacts, and returns the fastest in-budget mode.
+//! The run reports per-request results, budget compliance, decision
+//! latency and service throughput.
+//!
+//! Run with:  cargo run --release --example federated_fleet
+//!            (set FLEET_REQUESTS / FLEET_WORKERS to scale)
+
+use powertrain::coordinator::{
+    serve, CoordinatorConfig, ReferenceModels, Request, Scenario,
+};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::profiler::Profiler;
+use powertrain::runtime::Runtime;
+use powertrain::sim::TrainerSim;
+use powertrain::util::rng::Rng;
+use powertrain::util::stats;
+use powertrain::util::table::TextTable;
+use powertrain::workload::Workload;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = env_usize("FLEET_REQUESTS", 9);
+    let workers = env_usize("FLEET_WORKERS", 1);
+
+    // ---- bootstrap the reference models (one-time, offline) ------------
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let mut rng = Rng::new(1);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(1500, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(
+        DeviceKind::OrinAgx.spec(),
+        Workload::resnet(),
+        1,
+    ));
+    println!("bootstrapping reference models on {} ResNet modes ...", modes.len());
+    let ref_corpus = profiler.profile_modes(&modes)?;
+    let reference = ReferenceModels::bootstrap(&rt, &ref_corpus, 120, 1)?;
+
+    // ---- synthetic federated round arrivals -----------------------------
+    let workloads = Workload::default_five();
+    let devices = [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let device = devices[i % devices.len()];
+            // budgets: enclosure/thermal-driven, scaled to the device class
+            let cap = device.spec().peak_power_w;
+            let budget = match device {
+                DeviceKind::OrinAgx => rng.uniform_range(18.0, cap * 0.85),
+                DeviceKind::XavierAgx => rng.uniform_range(15.0, cap * 0.7),
+                DeviceKind::OrinNano => rng.uniform_range(8.0, cap * 0.9),
+            };
+            Request {
+                id: i as u64,
+                device,
+                workload: workloads[i % workloads.len()],
+                power_budget_w: budget,
+                scenario: Scenario::FederatedLearning,
+                seed: 1000 + i as u64,
+            }
+        })
+        .collect();
+
+    println!("\nserving {n_requests} federated training-round requests on {workers} worker(s)\n");
+    let cfg = CoordinatorConfig { workers, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (mut responses, metrics) = serve(&cfg, &reference, requests.clone())?;
+    let wall = t0.elapsed().as_secs_f64();
+    responses.sort_by_key(|r| r.id);
+
+    // ---- report ----------------------------------------------------------
+    let mut t = TextTable::new(&[
+        "req", "device", "workload", "budget W", "mode", "obs ms/mb", "obs W",
+        "in budget", "latency ms",
+    ]);
+    let mut within = 0usize;
+    let mut latencies = Vec::new();
+    for r in &responses {
+        let req = &requests[r.id as usize];
+        let ok = r.observed_power_w <= req.power_budget_w + 1.0;
+        if ok {
+            within += 1;
+        }
+        latencies.push(r.latency_ms);
+        t.row(vec![
+            r.id.to_string(),
+            req.device.name().into(),
+            req.workload.arch.name().into(),
+            format!("{:.1}", req.power_budget_w),
+            r.chosen_mode.label(),
+            format!("{:.1}", r.observed_time_ms),
+            format!("{:.2}", r.observed_power_w),
+            if ok { "yes" } else { "NO" }.into(),
+            format!("{:.0}", r.latency_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", metrics.render());
+    println!(
+        "\nbudget compliance (within +1 W): {}/{} | decision latency p50 {:.0} ms | throughput {:.2} req/s",
+        within,
+        responses.len(),
+        stats::median(&latencies),
+        responses.len() as f64 / wall
+    );
+    Ok(())
+}

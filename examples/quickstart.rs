@@ -1,0 +1,96 @@
+//! Quickstart: the full PowerTrain loop in one file.
+//!
+//! 1. Profile a reference workload (ResNet on Orin AGX) over power modes.
+//! 2. Train the reference time & power prediction MLPs (AOT artifacts on
+//!    the embedded PJRT runtime).
+//! 3. A new workload arrives (MobileNet): profile just 50 modes and
+//!    transfer-learn.
+//! 4. Predict the whole power-mode grid, build the Pareto front, and pick
+//!    the fastest mode under a 30 W budget.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::pareto::{ParetoFront, Point};
+use powertrain::profiler::Profiler;
+use powertrain::runtime::Runtime;
+use powertrain::sim::TrainerSim;
+use powertrain::train::transfer::{transfer, TransferConfig};
+use powertrain::train::{Target, TrainConfig, Trainer};
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // -- 1. one-time offline profiling of the reference workload ---------
+    let device = DeviceKind::OrinAgx;
+    let reference_wl = Workload::resnet();
+    let mut rng = Rng::new(7);
+    // (a subset of the 4,368-mode corpus keeps the demo snappy)
+    let modes = PowerModeGrid::paper_subset(device).sample(1200, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), reference_wl, 7));
+    let ref_corpus = profiler.profile_modes(&modes)?;
+    println!(
+        "profiled {} reference modes ({:.0} simulated device-minutes)",
+        ref_corpus.len(),
+        ref_corpus.total_cost_s() / 60.0
+    );
+
+    // -- 2. train the reference prediction models ------------------------
+    let trainer = Trainer::new(&rt);
+    let cfg = TrainConfig { epochs: 120, seed: 7, ..Default::default() };
+    let (ref_time, _) = trainer.train(&ref_corpus, Target::Time, &cfg)?;
+    let (ref_power, _) = trainer.train(&ref_corpus, Target::Power, &cfg)?;
+    println!(
+        "reference models trained (val mse: time {:.4}, power {:.4})",
+        ref_time.val_loss, ref_power.val_loss
+    );
+
+    // -- 3. new workload arrives: transfer with 50 profiled modes --------
+    let new_wl = Workload::mobilenet();
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), new_wl, 8));
+    let sample = PowerModeGrid::paper_subset(device).sample(50, &mut rng);
+    let small_corpus = profiler.profile_modes(&sample)?;
+    println!(
+        "profiled 50 modes of {} ({:.1} simulated device-minutes)",
+        new_wl.name(),
+        small_corpus.total_cost_s() / 60.0
+    );
+
+    let tcfg = TransferConfig::default();
+    let (pt_time, _) = transfer(&rt, &ref_time, &small_corpus, Target::Time, &tcfg)?;
+    let (pt_power, _) = transfer(&rt, &ref_power, &small_corpus, Target::Power, &tcfg)?;
+
+    // -- 4. predict the grid, build the Pareto, optimize -----------------
+    let grid = PowerModeGrid::paper_subset(device);
+    let times = powertrain::predict::predict_modes(&rt, &pt_time, &grid.modes)?;
+    let powers = powertrain::predict::predict_modes(&rt, &pt_power, &grid.modes)?;
+    let points: Vec<Point> = grid
+        .modes
+        .iter()
+        .zip(times.iter().zip(&powers))
+        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
+        .collect();
+    let front = ParetoFront::build(&points);
+    println!("predicted Pareto front: {} points over {} modes", front.len(), grid.len());
+
+    let budget_w = 30.0;
+    let choice = front.optimize(budget_w * 1000.0)?;
+
+    // check against ground truth
+    let sim = TrainerSim::new(device.spec(), new_wl, 99);
+    let obs_ms = sim.true_minibatch_ms(&choice.mode);
+    let obs_w = sim.true_power_mw(&choice.mode) / 1000.0;
+    let epoch_s = obs_ms * new_wl.minibatches_per_epoch() as f64 / 1000.0;
+    println!("\nrecommended power mode under {budget_w} W: {}", choice.mode.label());
+    println!(
+        "  predicted {:.1} ms/minibatch @ {:.2} W",
+        choice.time,
+        choice.power_mw / 1000.0
+    );
+    println!("  observed  {obs_ms:.1} ms/minibatch @ {obs_w:.2} W  ({epoch_s:.0} s/epoch)");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT compiler: lower the PowerTrain model entry points to HLO text.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing every input/output (name, dtype, shape) in positional order —
+the contract consumed by ``rust/src/runtime/artifacts.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = "f32"
+U32 = "u32"
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_specs():
+    return [_spec(ref.param_shapes()[n]) for n in ref.PARAM_NAMES]
+
+
+def _param_io(prefix=""):
+    return [
+        {"name": prefix + n, "dtype": F32, "shape": list(ref.param_shapes()[n])}
+        for n in ref.PARAM_NAMES
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Flat-positional wrappers (deterministic HLO parameter order).
+# --------------------------------------------------------------------------
+
+
+def _pack(args8):
+    return dict(zip(ref.PARAM_NAMES, args8))
+
+
+def predict_entry(*args):
+    params = _pack(args[0:8])
+    x, y_mean, y_std = args[8:]
+    return model.predict(params, x, y_mean, y_std)
+
+
+def eval_entry(*args):
+    params = _pack(args[0:8])
+    x, y_std_t, y_raw, mask, y_mean, y_std = args[8:]
+    return model.evaluate(params, x, y_std_t, y_raw, mask, y_mean, y_std)
+
+
+def _flatten_step(out):
+    new_p, new_m, new_v, loss = out
+    flat = [new_p[n] for n in ref.PARAM_NAMES]
+    flat += [new_m[n] for n in ref.PARAM_NAMES]
+    flat += [new_v[n] for n in ref.PARAM_NAMES]
+    flat.append(loss)
+    return tuple(flat)
+
+
+def train_mse_entry(*args):
+    params, m, v = _pack(args[0:8]), _pack(args[8:16]), _pack(args[16:24])
+    t, key, x, y, mask = args[24:]
+    return _flatten_step(model.train_step_mse(params, m, v, t, key, x, y, mask))
+
+
+def train_mape_entry(*args):
+    params, m, v = _pack(args[0:8]), _pack(args[8:16]), _pack(args[16:24])
+    t, key, x, y_raw, mask, y_mean, y_std = args[24:]
+    return _flatten_step(
+        model.train_step_mape(params, m, v, t, key, x, y_raw, mask, y_mean, y_std)
+    )
+
+
+# --------------------------------------------------------------------------
+# Artifact catalogue.
+# --------------------------------------------------------------------------
+
+
+def artifact_defs():
+    pb, tb = model.PREDICT_BATCH, model.TRAIN_BATCH
+    scalar = {"dtype": F32, "shape": []}
+
+    defs = {}
+
+    defs["predict"] = {
+        "fn": predict_entry,
+        "specs": _param_specs() + [_spec((pb, 4)), _spec(()), _spec(())],
+        "inputs": _param_io()
+        + [
+            {"name": "x", "dtype": F32, "shape": [pb, 4]},
+            {"name": "y_mean", **scalar},
+            {"name": "y_std", **scalar},
+        ],
+        "outputs": [{"name": "pred_raw", "dtype": F32, "shape": [pb, 1]}],
+    }
+
+    defs["evaluate"] = {
+        "fn": eval_entry,
+        "specs": _param_specs()
+        + [_spec((pb, 4)), _spec((pb, 1)), _spec((pb, 1)), _spec((pb,)),
+           _spec(()), _spec(())],
+        "inputs": _param_io()
+        + [
+            {"name": "x", "dtype": F32, "shape": [pb, 4]},
+            {"name": "y_std_target", "dtype": F32, "shape": [pb, 1]},
+            {"name": "y_raw", "dtype": F32, "shape": [pb, 1]},
+            {"name": "mask", "dtype": F32, "shape": [pb]},
+            {"name": "y_mean", **scalar},
+            {"name": "y_std", **scalar},
+        ],
+        "outputs": [
+            {"name": "mse_std", **scalar},
+            {"name": "mape_raw_pct", **scalar},
+        ],
+    }
+
+    step_state_specs = _param_specs() * 3 + [_spec((1,)), _spec((2,), jnp.uint32)]
+    step_state_io = (
+        _param_io()
+        + _param_io("m_")
+        + _param_io("v_")
+        + [
+            {"name": "t", "dtype": F32, "shape": [1]},
+            {"name": "key", "dtype": U32, "shape": [2]},
+        ]
+    )
+    step_out_io = (
+        _param_io()
+        + _param_io("m_")
+        + _param_io("v_")
+        + [{"name": "loss", **scalar}]
+    )
+
+    defs["train_mse"] = {
+        "fn": train_mse_entry,
+        "specs": step_state_specs
+        + [_spec((tb, 4)), _spec((tb, 1)), _spec((tb,))],
+        "inputs": step_state_io
+        + [
+            {"name": "x", "dtype": F32, "shape": [tb, 4]},
+            {"name": "y_std_target", "dtype": F32, "shape": [tb, 1]},
+            {"name": "mask", "dtype": F32, "shape": [tb]},
+        ],
+        "outputs": step_out_io,
+    }
+
+    defs["train_mape"] = {
+        "fn": train_mape_entry,
+        "specs": step_state_specs
+        + [_spec((tb, 4)), _spec((tb, 1)), _spec((tb,)), _spec(()), _spec(())],
+        "inputs": step_state_io
+        + [
+            {"name": "x", "dtype": F32, "shape": [tb, 4]},
+            {"name": "y_raw", "dtype": F32, "shape": [tb, 1]},
+            {"name": "mask", "dtype": F32, "shape": [tb]},
+            {"name": "y_mean", **scalar},
+            {"name": "y_std", **scalar},
+        ],
+        "outputs": step_out_io,
+    }
+
+    return defs
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "predict_batch": model.PREDICT_BATCH,
+        "train_batch": model.TRAIN_BATCH,
+        "input_dim": ref.INPUT_DIM,
+        "hidden": list(ref.HIDDEN),
+        "dropout_rate": ref.DROPOUT_RATE,
+        "adam": {
+            "lr": ref.ADAM_LR,
+            "beta1": ref.ADAM_B1,
+            "beta2": ref.ADAM_B2,
+            "eps": ref.ADAM_EPS,
+        },
+        "artifacts": {},
+    }
+    for name, d in artifact_defs().items():
+        lowered = jax.jit(d["fn"]).lower(*d["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": d["inputs"],
+            "outputs": d["outputs"],
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(d['inputs'])} inputs -> {len(d['outputs'])} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the PowerTrain prediction MLPs.
+
+All kernels are authored for the TPU VMEM/MXU model but lowered with
+``interpret=True`` so the HLO artifacts execute on the CPU PJRT client the
+rust coordinator embeds (real-TPU lowering emits Mosaic custom-calls the CPU
+plugin cannot run). Correctness is pinned against the pure-jnp oracle in
+``ref.py`` by the pytest + hypothesis suite.
+"""
+
+from . import adam_pallas, mlp_pallas, ref  # noqa: F401

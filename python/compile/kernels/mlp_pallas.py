@@ -1,0 +1,171 @@
+"""Fused 4-layer MLP Pallas kernels (forward, training forward, backward).
+
+TPU adaptation of the paper's prediction-MLP hot path (DESIGN.md
+section "Hardware adaptation"): the full weight stack (~42k params,
+~166 KiB f32) fits in VMEM, so every kernel keeps all weights resident and
+tiles only the batch dimension. The four matmuls chain back-to-back through
+the MXU with activations never leaving VMEM — the TPU analogue of a fused
+CUDA kernel keeping activations in shared memory.
+
+``interpret=True`` everywhere: the artifacts must run on the CPU PJRT client
+embedded in the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile: one MXU-friendly stripe of power-mode feature rows. 128 rows
+# keeps the largest activation tile (128 x 256) at 128 KiB — together with
+# the resident weights well under the ~16 MiB VMEM budget.
+BATCH_TILE = 128
+
+
+def _fwd_kernel(x_ref, w1, b1, w2, b2, w3, b3, w4, b4, o_ref):
+    """Inference forward for one batch tile; weights fully VMEM-resident."""
+    x = x_ref[...]
+    h = jnp.maximum(x @ w1[...] + b1[...], 0.0)
+    h = jnp.maximum(h @ w2[...] + b2[...], 0.0)
+    h = jnp.maximum(h @ w3[...] + b3[...], 0.0)
+    o_ref[...] = h @ w4[...] + b4[...]
+
+
+def _weight_specs():
+    """BlockSpecs mapping every weight/bias to a single whole block that is
+    re-used by every grid step (index_map pins them to block 0)."""
+    specs = []
+    for name in ref.PARAM_NAMES:
+        shape = ref.param_shapes()[name]
+        # bind rank via default arg: closures in a loop share the loop var
+        specs.append(pl.BlockSpec(shape, lambda i, n=len(shape): (0,) * n))
+    return specs
+
+
+def mlp_forward(params: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Batched inference forward. x: [B, 4] with B a multiple of BATCH_TILE
+    (the AOT entry points pad); returns [B, 1]."""
+    batch = x.shape[0]
+    if batch % BATCH_TILE != 0:
+        raise ValueError(f"batch {batch} not a multiple of {BATCH_TILE}")
+    grid = (batch // BATCH_TILE,)
+    in_specs = [
+        pl.BlockSpec((BATCH_TILE, ref.INPUT_DIM), lambda i: (i, 0))
+    ] + _weight_specs()
+    out_spec = pl.BlockSpec((BATCH_TILE, ref.OUTPUT_DIM), lambda i: (i, 0))
+    args = [x] + [params[n] for n in ref.PARAM_NAMES]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, ref.OUTPUT_DIM), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def _train_fwd_kernel(
+    x_ref, w1, b1, w2, b2, w3, b3, w4, b4, m1_ref, m2_ref,
+    y_ref, h1_ref, h2_ref, h3_ref,
+):
+    """Training forward with inverted-dropout masks after layers 1 and 2.
+
+    Emits the post-dropout activations (h1, h2) and the layer-3 activation
+    (h3) as residuals for the backward kernel — keeping the fwd+bwd pair a
+    two-kernel pipeline instead of re-computing the chain.
+    """
+    x = x_ref[...]
+    h1 = jnp.maximum(x @ w1[...] + b1[...], 0.0) * m1_ref[...]
+    h2 = jnp.maximum(h1 @ w2[...] + b2[...], 0.0) * m2_ref[...]
+    h3 = jnp.maximum(h2 @ w3[...] + b3[...], 0.0)
+    y_ref[...] = h3 @ w4[...] + b4[...]
+    h1_ref[...] = h1
+    h2_ref[...] = h2
+    h3_ref[...] = h3
+
+
+def mlp_train_forward(
+    params: dict[str, jax.Array], x: jax.Array, m1: jax.Array, m2: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-tile training forward (training batches are small: <=128).
+    Returns (y, h1, h2, h3)."""
+    batch = x.shape[0]
+    out_shapes = (
+        jax.ShapeDtypeStruct((batch, ref.OUTPUT_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((batch, ref.HIDDEN[0]), jnp.float32),
+        jax.ShapeDtypeStruct((batch, ref.HIDDEN[1]), jnp.float32),
+        jax.ShapeDtypeStruct((batch, ref.HIDDEN[2]), jnp.float32),
+    )
+    args = [x] + [params[n] for n in ref.PARAM_NAMES] + [m1, m2]
+    return pl.pallas_call(
+        _train_fwd_kernel,
+        out_shape=out_shapes,
+        interpret=True,
+    )(*args)
+
+
+def _bwd_kernel(
+    x_ref, m1_ref, m2_ref, h1_ref, h2_ref, h3_ref,
+    w2, w3, w4, dy_ref,
+    dw1_ref, db1_ref, dw2_ref, db2_ref, dw3_ref, db3_ref, dw4_ref, db4_ref,
+):
+    """Backward for the fused MLP. All six matmuls (three grad-weight, three
+    grad-activation) run in one kernel; residuals come from the forward.
+
+    ReLU gates are recovered from the residuals: h3 > 0 gates layer 3, and
+    because the dropout masks are non-negative scalings of the ReLU outputs,
+    h1 > 0 / h2 > 0 equal the pre-dropout gates wherever the mask kept the
+    unit (and the mask multiplication zeroes dropped units anyway).
+    """
+    x = x_ref[...]
+    h1 = h1_ref[...]
+    h2 = h2_ref[...]
+    h3 = h3_ref[...]
+    dy = dy_ref[...]
+
+    # layer 4 (linear)
+    dw4_ref[...] = h3.T @ dy
+    db4_ref[...] = jnp.sum(dy, axis=0)
+    dh3 = dy @ w4[...].T
+
+    # layer 3 (relu)
+    dz3 = dh3 * (h3 > 0.0)
+    dw3_ref[...] = h2.T @ dz3
+    db3_ref[...] = jnp.sum(dz3, axis=0)
+    dh2 = (dz3 @ w3[...].T) * m2_ref[...]
+
+    # layer 2 (relu + dropout)
+    dz2 = dh2 * (h2 > 0.0)
+    dw2_ref[...] = h1.T @ dz2
+    db2_ref[...] = jnp.sum(dz2, axis=0)
+    dh1 = (dz2 @ w2[...].T) * m1_ref[...]
+
+    # layer 1 (relu + dropout)
+    dz1 = dh1 * (h1 > 0.0)
+    dw1_ref[...] = x.T @ dz1
+    db1_ref[...] = jnp.sum(dz1, axis=0)
+
+
+def mlp_backward(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    m1: jax.Array,
+    m2: jax.Array,
+    residuals: tuple[jax.Array, jax.Array, jax.Array],
+    dy: jax.Array,
+) -> dict[str, jax.Array]:
+    """Weight/bias gradients given forward residuals and dL/dy."""
+    h1, h2, h3 = residuals
+    shapes = ref.param_shapes()
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in ref.PARAM_NAMES
+    )
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        out_shape=out_shapes,
+        interpret=True,
+    )(x, m1, m2, h1, h2, h3, params["w2"], params["w3"], params["w4"], dy)
+    return dict(zip(ref.PARAM_NAMES, outs))

@@ -1,0 +1,125 @@
+"""Pure-jnp oracle for the PowerTrain MLP and Adam kernels.
+
+This module is the single source of truth for the *math*; the Pallas kernels
+in ``mlp_pallas.py`` / ``adam_pallas.py`` must match it bit-for-bit (up to
+float associativity) and pytest enforces that. The architecture follows the
+paper's Table 4: four dense layers (256, 128, 64, 1), ReLU x 3 + linear,
+dropout after layers 1 and 2, Adam @ lr 1e-3, MSE (or MAPE) loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Paper Table 4 architecture. Input features: cores, cpu_khz, gpu_khz,
+# mem_khz (standardized by the rust coordinator before they reach us).
+INPUT_DIM = 4
+HIDDEN = (256, 128, 64)
+OUTPUT_DIM = 1
+DROPOUT_RATE = 0.1  # dropout after dense layers 1 and 2 (rate unstated in paper)
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# Parameter leaves in canonical order (the rust side relies on this order
+# when marshalling literals).
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+
+def param_shapes() -> dict[str, tuple[int, ...]]:
+    dims = (INPUT_DIM,) + HIDDEN + (OUTPUT_DIM,)
+    shapes: dict[str, tuple[int, ...]] = {}
+    for i in range(4):
+        shapes[f"w{i + 1}"] = (dims[i], dims[i + 1])
+        shapes[f"b{i + 1}"] = (dims[i + 1],)
+    return shapes
+
+
+def init_params(key: jax.Array) -> dict[str, jax.Array]:
+    """He-normal initialization, matching nn/init on the rust side."""
+    params = {}
+    for name, shape in param_shapes().items():
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def forward(params: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Inference-mode forward (no dropout). x: [B, 4] -> [B, 1]."""
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)
+    h = jnp.maximum(h @ params["w2"] + params["b2"], 0.0)
+    h = jnp.maximum(h @ params["w3"] + params["b3"], 0.0)
+    return h @ params["w4"] + params["b4"]
+
+
+def dropout_masks(
+    key: jax.Array, batch: int, rate: float = DROPOUT_RATE
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-scaled inverted-dropout masks for layers 1 and 2."""
+    k1, k2 = jax.random.split(key)
+    keep = 1.0 - rate
+    m1 = jax.random.bernoulli(k1, keep, (batch, HIDDEN[0])).astype(jnp.float32) / keep
+    m2 = jax.random.bernoulli(k2, keep, (batch, HIDDEN[1])).astype(jnp.float32) / keep
+    return m1, m2
+
+
+def forward_train(
+    params: dict[str, jax.Array], x: jax.Array, m1: jax.Array, m2: jax.Array
+) -> jax.Array:
+    """Training-mode forward with explicit dropout masks (paper Table 4:
+    dropout after dense layers 1 and 2)."""
+    h1 = jnp.maximum(x @ params["w1"] + params["b1"], 0.0) * m1
+    h2 = jnp.maximum(h1 @ params["w2"] + params["b2"], 0.0) * m2
+    h3 = jnp.maximum(h2 @ params["w3"] + params["b3"], 0.0)
+    return h3 @ params["w4"] + params["b4"]
+
+
+def mse_loss(pred: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked MSE in standardized-target space."""
+    se = (pred - y) ** 2 * mask[:, None]
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def mape_loss(
+    pred_std: jax.Array,
+    y_raw: jax.Array,
+    mask: jax.Array,
+    y_mean: jax.Array,
+    y_std: jax.Array,
+) -> jax.Array:
+    """Masked MAPE (%) computed in raw-target units; the network predicts in
+    standardized space, so we unscale first. Used when transferring to very
+    different devices (paper section 4.3.4: Orin Nano needed MAPE loss)."""
+    pred_raw = pred_std * y_std + y_mean
+    ape = jnp.abs(pred_raw - y_raw) / jnp.maximum(jnp.abs(y_raw), 1e-6)
+    return 100.0 * jnp.sum(ape * mask[:, None]) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def adam_update(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    t: jax.Array,
+    lr: float = ADAM_LR,
+    b1: float = ADAM_B1,
+    b2: float = ADAM_B2,
+    eps: float = ADAM_EPS,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference Adam step for a single tensor. t is the 1-based step count
+    (f32 scalar)."""
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**t)
+    v_hat = v_new / (1.0 - b2**t)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

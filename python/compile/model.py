@@ -1,0 +1,181 @@
+"""Layer-2 JAX model: the PowerTrain prediction MLP's compute graph.
+
+Everything here is build-time only. ``aot.py`` lowers the jitted entry
+points to HLO text; the rust coordinator executes them via PJRT and never
+imports Python.
+
+Entry points (all fixed-shape, padded + masked by the rust side):
+
+- ``predict``      — inference over a batch of standardized power-mode
+                     features, returning raw-unit predictions.
+- ``train_step_mse`` / ``train_step_mape``
+                   — one fused Adam step (Pallas forward + backward +
+                     fused-Adam kernels), returning updated params, moments
+                     and the scalar loss.
+- ``evaluate``     — masked validation MSE (standardized space) + MAPE (raw
+                     space) in one pass.
+
+Gradients are computed by the explicit Pallas backward kernel (not by
+``jax.grad`` through ``pallas_call``); ``tests/test_model.py`` pins them
+against ``jax.grad`` of the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_pallas, mlp_pallas, ref
+
+Params = dict[str, jax.Array]
+
+# Fixed batch shapes for the AOT artifacts (see DESIGN.md section 7).
+PREDICT_BATCH = 512
+TRAIN_BATCH = 64
+
+
+def _wrap_key(key_data: jax.Array) -> jax.Array:
+    """uint32[2] raw key material (supplied by rust) -> typed PRNG key."""
+    return jax.random.wrap_key_data(key_data, impl="threefry2x32")
+
+
+def predict(
+    params: Params, x: jax.Array, y_mean: jax.Array, y_std: jax.Array
+) -> tuple[jax.Array]:
+    """Raw-unit predictions for a standardized feature batch.
+
+    The MLP is trained in standardized-target space; this entry point folds
+    the inverse transform so the rust hot path gets ms/mW directly.
+    """
+    pred_std = mlp_pallas.mlp_forward(params, x)
+    return (pred_std * y_std + y_mean,)
+
+
+def evaluate(
+    params: Params,
+    x: jax.Array,
+    y_std_target: jax.Array,
+    y_raw: jax.Array,
+    mask: jax.Array,
+    y_mean: jax.Array,
+    y_std: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked (val-)loss pass: returns (mse_standardized, mape_raw_pct)."""
+    pred_std = mlp_pallas.mlp_forward(params, x)
+    mse = ref.mse_loss(pred_std, y_std_target, mask)
+    mape = ref.mape_loss(pred_std, y_raw, mask, y_mean, y_std)
+    return mse, mape
+
+
+def _train_common(
+    params: Params,
+    x: jax.Array,
+    key_data: jax.Array,
+):
+    """Shared training-forward: dropout masks + fused forward kernel."""
+    key = _wrap_key(key_data)
+    m1, m2 = ref.dropout_masks(key, x.shape[0])
+    y_pred, h1, h2, h3 = mlp_pallas.mlp_train_forward(params, x, m1, m2)
+    return y_pred, (h1, h2, h3), m1, m2
+
+
+def _apply_step(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    t: jax.Array,
+):
+    new_p, new_m, new_v = adam_pallas.adam_update_tree(params, grads, m, v, t)
+    return new_p, new_m, new_v
+
+
+def train_step_mse(
+    params: Params,
+    m: Params,
+    v: Params,
+    t: jax.Array,
+    key_data: jax.Array,
+    x: jax.Array,
+    y_std_target: jax.Array,
+    mask: jax.Array,
+):
+    """One Adam step under masked MSE in standardized-target space.
+
+    Returns (params', m', v', loss). ``t`` is the 1-based step count, f32[1].
+    """
+    y_pred, residuals, m1, m2 = _train_common(params, x, key_data)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    diff = (y_pred - y_std_target) * mask[:, None]
+    loss = jnp.sum(diff * diff) / n
+    dy = 2.0 * diff / n
+    grads = mlp_pallas.mlp_backward(params, x, m1, m2, residuals, dy)
+    new_p, new_m, new_v = _apply_step(params, grads, m, v, t)
+    return new_p, new_m, new_v, loss
+
+
+def train_step_mape(
+    params: Params,
+    m: Params,
+    v: Params,
+    t: jax.Array,
+    key_data: jax.Array,
+    x: jax.Array,
+    y_raw: jax.Array,
+    mask: jax.Array,
+    y_mean: jax.Array,
+    y_std: jax.Array,
+):
+    """One Adam step under masked MAPE in raw-target units (used for
+    cross-device transfer to the Orin Nano, paper section 4.3.4)."""
+    y_pred_std, residuals, m1, m2 = _train_common(params, x, key_data)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    pred_raw = y_pred_std * y_std + y_mean
+    denom = jnp.maximum(jnp.abs(y_raw), 1e-6)
+    err = (pred_raw - y_raw) * mask[:, None]
+    loss = 100.0 * jnp.sum(jnp.abs(err) / denom) / n
+    # dL/dpred_std = 100/n * sign(err)/denom * y_std (masked)
+    dy = 100.0 * jnp.sign(err) / denom * y_std / n
+    grads = mlp_pallas.mlp_backward(params, x, m1, m2, residuals, dy)
+    new_p, new_m, new_v = _apply_step(params, grads, m, v, t)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp, jax.grad) implementations used only by pytest to pin
+# the Pallas pipeline. Never lowered to artifacts.
+# ---------------------------------------------------------------------------
+
+
+def ref_train_step_mse(params, m, v, t, key_data, x, y, mask):
+    key = _wrap_key(key_data)
+    m1, m2 = ref.dropout_masks(key, x.shape[0])
+
+    def loss_fn(p):
+        pred = ref.forward_train(p, x, m1, m2)
+        return ref.mse_loss(pred, y, mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_p, new_m, new_v = {}, {}, {}
+    for name in ref.PARAM_NAMES:
+        new_p[name], new_m[name], new_v[name] = ref.adam_update(
+            params[name], grads[name], m[name], v[name], t[0]
+        )
+    return new_p, new_m, new_v, loss
+
+
+def ref_train_step_mape(params, m, v, t, key_data, x, y_raw, mask, y_mean, y_std):
+    key = _wrap_key(key_data)
+    m1, m2 = ref.dropout_masks(key, x.shape[0])
+
+    def loss_fn(p):
+        pred = ref.forward_train(p, x, m1, m2)
+        return ref.mape_loss(pred, y_raw, mask, y_mean, y_std)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_p, new_m, new_v = {}, {}, {}
+    for name in ref.PARAM_NAMES:
+        new_p[name], new_m[name], new_v[name] = ref.adam_update(
+            params[name], grads[name], m[name], v[name], t[0]
+        )
+    return new_p, new_m, new_v, loss

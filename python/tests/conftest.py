@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Interpret-mode Pallas on a 1-core CPU box: keep everything deterministic
+# and fast.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

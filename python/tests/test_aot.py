@@ -1,0 +1,82 @@
+"""AOT artifact contract tests: HLO text is well-formed, the manifest
+matches the lowered computations, and the compiled executables reproduce
+the reference numerics end-to-end (the same check the rust runtime
+integration test performs on its side of the bridge)."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out))
+    return str(out), manifest
+
+
+def test_manifest_lists_all_artifacts(built):
+    out, manifest = built
+    assert set(manifest["artifacts"]) == {"predict", "evaluate", "train_mse", "train_mape"}
+    assert manifest["format"] == "hlo-text"
+    assert manifest["hidden"] == [256, 128, 64]
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path), f"missing artifact file for {name}"
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name} does not look like HLO text"
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == manifest
+
+
+def test_hlo_parameter_counts_match_manifest(built):
+    out, manifest = built
+    for name, art in manifest["artifacts"].items():
+        text = open(os.path.join(out, art["file"])).read()
+        # count distinct parameter declarations in the ENTRY computation
+        entry = text[text.index("ENTRY"):]
+        params = set(re.findall(r"parameter\((\d+)\)", entry))
+        assert len(params) == len(art["inputs"]), (
+            f"{name}: HLO has {len(params)} parameters, "
+            f"manifest lists {len(art['inputs'])}"
+        )
+
+
+def test_train_mse_io_ordering(built):
+    _, manifest = built
+    inputs = [i["name"] for i in manifest["artifacts"]["train_mse"]["inputs"]]
+    # params, adam-m, adam-v, t, key, then the batch
+    assert inputs[:8] == list(ref.PARAM_NAMES)
+    assert inputs[8:16] == ["m_" + n for n in ref.PARAM_NAMES]
+    assert inputs[16:24] == ["v_" + n for n in ref.PARAM_NAMES]
+    assert inputs[24:] == ["t", "key", "x", "y_std_target", "mask"]
+    outputs = [o["name"] for o in manifest["artifacts"]["train_mse"]["outputs"]]
+    assert outputs[-1] == "loss" and len(outputs) == 25
+
+
+def test_lowered_predict_executes_and_matches_oracle():
+    """Compile the same jitted entry point and compare against ref.forward —
+    proves the lowering (incl. interpret-mode Pallas) is executable and
+    numerically faithful before the rust side ever sees it."""
+    params = ref.init_params(jax.random.PRNGKey(0))
+    pb = model.PREDICT_BATCH
+    x = jax.random.normal(jax.random.PRNGKey(1), (pb, ref.INPUT_DIM))
+    y_mean, y_std = jnp.float32(10.0), jnp.float32(3.0)
+    defs = aot.artifact_defs()
+    compiled = jax.jit(defs["predict"]["fn"]).lower(*defs["predict"]["specs"]).compile()
+    args = [params[n] for n in ref.PARAM_NAMES] + [x, y_mean, y_std]
+    (got,) = compiled(*args)
+    want = ref.forward(params, x) * y_std + y_mean
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

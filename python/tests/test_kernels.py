@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps batch sizes, seeds and value scales; every kernel output
+must match the oracle to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam_pallas, mlp_pallas, ref
+
+settings.register_profile("kernels", max_examples=10, deadline=None)
+settings.load_profile("kernels")
+
+
+def make_params(seed: int, scale: float = 1.0):
+    params = ref.init_params(jax.random.PRNGKey(seed))
+    if scale != 1.0:
+        params = {k: v * scale for k, v in params.items()}
+    return params
+
+
+def make_x(seed: int, batch: int, scale: float = 1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, ref.INPUT_DIM)) * scale
+
+
+class TestForwardKernel:
+    @given(
+        seed=st.integers(0, 2**16),
+        tiles=st.integers(1, 4),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_matches_oracle(self, seed, tiles, scale):
+        batch = tiles * mlp_pallas.BATCH_TILE
+        params = make_params(seed)
+        x = make_x(seed, batch, scale)
+        got = mlp_pallas.mlp_forward(params, x)
+        want = ref.forward(params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged_batch(self):
+        params = make_params(0)
+        with pytest.raises(ValueError, match="not a multiple"):
+            mlp_pallas.mlp_forward(params, jnp.zeros((100, ref.INPUT_DIM)))
+
+    def test_output_shape_and_dtype(self):
+        params = make_params(3)
+        out = mlp_pallas.mlp_forward(params, make_x(3, 256))
+        assert out.shape == (256, 1)
+        assert out.dtype == jnp.float32
+
+    def test_tile_independence(self):
+        """Each batch tile must be processed independently: evaluating rows
+        in one call equals evaluating them tile-by-tile."""
+        params = make_params(7)
+        x = make_x(7, 2 * mlp_pallas.BATCH_TILE)
+        full = mlp_pallas.mlp_forward(params, x)
+        t0 = mlp_pallas.mlp_forward(params, x[: mlp_pallas.BATCH_TILE])
+        t1 = mlp_pallas.mlp_forward(params, x[mlp_pallas.BATCH_TILE :])
+        np.testing.assert_allclose(full, jnp.concatenate([t0, t1]), rtol=1e-6)
+
+
+class TestTrainForwardKernel:
+    @given(seed=st.integers(0, 2**16), batch=st.sampled_from([16, 64, 128]))
+    def test_matches_oracle_with_dropout(self, seed, batch):
+        params = make_params(seed)
+        x = make_x(seed, batch)
+        m1, m2 = ref.dropout_masks(jax.random.PRNGKey(seed + 2), batch)
+        y, h1, h2, h3 = mlp_pallas.mlp_train_forward(params, x, m1, m2)
+        want = ref.forward_train(params, x, m1, m2)
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+        # residuals must be the post-dropout activations
+        z1 = jnp.maximum(x @ params["w1"] + params["b1"], 0.0) * m1
+        np.testing.assert_allclose(h1, z1, rtol=1e-5, atol=1e-5)
+        assert h2.shape == (batch, ref.HIDDEN[1])
+        assert h3.shape == (batch, ref.HIDDEN[2])
+
+    def test_identity_masks_equal_inference(self):
+        params = make_params(11)
+        x = make_x(11, 64)
+        ones1 = jnp.ones((64, ref.HIDDEN[0]))
+        ones2 = jnp.ones((64, ref.HIDDEN[1]))
+        y, *_ = mlp_pallas.mlp_train_forward(params, x, ones1, ones2)
+        np.testing.assert_allclose(y, ref.forward(params, x), rtol=1e-5, atol=1e-5)
+
+
+class TestBackwardKernel:
+    @given(seed=st.integers(0, 2**16), batch=st.sampled_from([16, 64]))
+    def test_grads_match_jax_autodiff(self, seed, batch):
+        params = make_params(seed)
+        x = make_x(seed, batch)
+        m1, m2 = ref.dropout_masks(jax.random.PRNGKey(seed + 5), batch)
+        y_target = jax.random.normal(jax.random.PRNGKey(seed + 6), (batch, 1))
+
+        def loss_fn(p):
+            pred = ref.forward_train(p, x, m1, m2)
+            return jnp.sum((pred - y_target) ** 2)
+
+        want = jax.grad(loss_fn)(params)
+
+        _, h1, h2, h3 = mlp_pallas.mlp_train_forward(params, x, m1, m2)
+        pred = ref.forward_train(params, x, m1, m2)
+        dy = 2.0 * (pred - y_target)
+        got = mlp_pallas.mlp_backward(params, x, m1, m2, (h1, h2, h3), dy)
+
+        for name in ref.PARAM_NAMES:
+            np.testing.assert_allclose(
+                got[name], want[name], rtol=2e-4, atol=2e-4,
+                err_msg=f"grad mismatch for {name}",
+            )
+
+    def test_zero_upstream_grad_gives_zero_grads(self):
+        params = make_params(1)
+        x = make_x(1, 16)
+        m1, m2 = ref.dropout_masks(jax.random.PRNGKey(2), 16)
+        _, h1, h2, h3 = mlp_pallas.mlp_train_forward(params, x, m1, m2)
+        got = mlp_pallas.mlp_backward(
+            params, x, m1, m2, (h1, h2, h3), jnp.zeros((16, 1))
+        )
+        for name in ref.PARAM_NAMES:
+            assert float(jnp.abs(got[name]).max()) == 0.0
+
+
+class TestAdamKernel:
+    @given(
+        seed=st.integers(0, 2**16),
+        shape=st.sampled_from([(7,), (4, 256), (256, 128), (64, 1), (1,)]),
+        t=st.integers(1, 1000),
+    )
+    def test_matches_oracle(self, seed, shape, t):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 4)
+        p = jax.random.normal(ks[0], shape)
+        g = jax.random.normal(ks[1], shape)
+        m = jax.random.normal(ks[2], shape) * 0.1
+        v = jnp.abs(jax.random.normal(ks[3], shape)) * 0.01
+        t_arr = jnp.array([float(t)], jnp.float32)
+        got = adam_pallas.adam_update(p, g, m, v, t_arr)
+        want = ref.adam_update(p, g, m, v, float(t))
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_tree_update_covers_all_leaves(self):
+        params = make_params(5)
+        grads = {k: jnp.ones_like(p) for k, p in params.items()}
+        m = {k: jnp.zeros_like(p) for k, p in params.items()}
+        v = {k: jnp.zeros_like(p) for k, p in params.items()}
+        t = jnp.array([1.0], jnp.float32)
+        new_p, new_m, new_v = adam_pallas.adam_update_tree(params, grads, m, v, t)
+        # first Adam step with zero moments: p' = p - lr * g/(|g|+eps) ~ p - lr
+        for name in ref.PARAM_NAMES:
+            np.testing.assert_allclose(
+                new_p[name], params[name] - ref.ADAM_LR, rtol=1e-3, atol=1e-5
+            )
+            assert new_m[name].shape == params[name].shape
+            assert new_v[name].shape == params[name].shape
+
+    def test_descends_quadratic(self):
+        """Repeated fused-Adam steps minimize a simple quadratic."""
+        p = jnp.array([5.0, -3.0, 2.0])
+        m = jnp.zeros(3)
+        v = jnp.zeros(3)
+        for t in range(1, 3001):
+            g = 2.0 * p  # d/dp p^2
+            p, m, v = adam_pallas.adam_update(
+                p, g, m, v, jnp.array([float(t)], jnp.float32), lr=1e-2
+            )
+        assert float(jnp.abs(p).max()) < 1e-2

@@ -1,0 +1,151 @@
+"""L2 correctness: full Pallas train/eval/predict steps vs the jax.grad
+reference pipeline, plus loss-semantics unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", max_examples=5, deadline=None)
+settings.load_profile("model")
+
+B = model.TRAIN_BATCH
+
+
+def fresh_state(seed: int):
+    params = ref.init_params(jax.random.PRNGKey(seed))
+    zeros = {k: jnp.zeros_like(p) for k, p in params.items()}
+    return params, dict(zeros), {k: jnp.zeros_like(p) for k, p in params.items()}
+
+
+def batch(seed: int, n_real: int = B):
+    k = jax.random.PRNGKey(seed + 100)
+    kx, ky = jax.random.split(k)
+    x = jax.random.normal(kx, (B, ref.INPUT_DIM))
+    y = jax.random.normal(ky, (B, 1))
+    mask = jnp.array([1.0] * n_real + [0.0] * (B - n_real), jnp.float32)
+    return x, y, mask
+
+
+class TestTrainStepMse:
+    @given(seed=st.integers(0, 2**16))
+    def test_matches_reference_pipeline(self, seed):
+        params, m, v = fresh_state(seed)
+        x, y, mask = batch(seed)
+        t = jnp.array([1.0], jnp.float32)
+        key = jax.random.key_data(jax.random.PRNGKey(seed + 7)).astype(jnp.uint32)
+
+        got = model.train_step_mse(params, m, v, t, key, x, y, mask)
+        want = model.ref_train_step_mse(params, m, v, t, key, x, y, mask)
+
+        np.testing.assert_allclose(got[3], want[3], rtol=1e-4, atol=1e-5)
+        for name in ref.PARAM_NAMES:
+            np.testing.assert_allclose(
+                got[0][name], want[0][name], rtol=1e-3, atol=1e-5,
+                err_msg=f"param {name}",
+            )
+            np.testing.assert_allclose(
+                got[1][name], want[1][name], rtol=1e-3, atol=1e-5,
+                err_msg=f"adam m {name}",
+            )
+
+    def test_mask_excludes_padding(self):
+        """Loss and updates must ignore padded rows entirely."""
+        params, m, v = fresh_state(3)
+        t = jnp.array([1.0], jnp.float32)
+        key = jax.random.key_data(jax.random.PRNGKey(0)).astype(jnp.uint32)
+
+        x, y, mask = batch(3, n_real=16)
+        # corrupt the padded region wildly; results must not change
+        x2 = x.at[16:].set(1e6)
+        y2 = y.at[16:].set(-1e6)
+        out_a = model.train_step_mse(params, m, v, t, key, x, y, mask)
+        out_b = model.train_step_mse(params, m, v, t, key, x2, y2, mask)
+        np.testing.assert_allclose(out_a[3], out_b[3], rtol=1e-6)
+        for name in ref.PARAM_NAMES:
+            np.testing.assert_allclose(
+                out_a[0][name], out_b[0][name], rtol=1e-5, atol=1e-7
+            )
+
+    def test_loss_decreases_on_learnable_target(self):
+        """A few hundred steps on a smooth synthetic target must reduce MSE."""
+        params, m, v = fresh_state(1)
+        kx = jax.random.PRNGKey(42)
+        x = jax.random.normal(kx, (B, ref.INPUT_DIM))
+        y = (jnp.sum(x, axis=1, keepdims=True) * 0.5 + 0.2).astype(jnp.float32)
+        mask = jnp.ones((B,), jnp.float32)
+        step = jax.jit(model.train_step_mse)
+        first = None
+        for t in range(1, 201):
+            key = jax.random.key_data(jax.random.PRNGKey(t)).astype(jnp.uint32)
+            params, m, v, loss = step(
+                params, m, v, jnp.array([float(t)], jnp.float32), key, x, y, mask
+            )
+            if first is None:
+                first = float(loss)
+        assert float(loss) < 0.5 * first
+
+
+class TestTrainStepMape:
+    @given(seed=st.integers(0, 2**16))
+    def test_matches_reference_pipeline(self, seed):
+        params, m, v = fresh_state(seed)
+        x, _, mask = batch(seed)
+        # raw targets strictly positive (times / powers are)
+        y_raw = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 9), (B, 1))) * 50 + 5
+        y_mean = jnp.float32(30.0)
+        y_std = jnp.float32(12.0)
+        t = jnp.array([1.0], jnp.float32)
+        key = jax.random.key_data(jax.random.PRNGKey(seed + 8)).astype(jnp.uint32)
+
+        got = model.train_step_mape(params, m, v, t, key, x, y_raw, mask, y_mean, y_std)
+        want = model.ref_train_step_mape(
+            params, m, v, t, key, x, y_raw, mask, y_mean, y_std
+        )
+        np.testing.assert_allclose(got[3], want[3], rtol=1e-4, atol=1e-5)
+        for name in ref.PARAM_NAMES:
+            np.testing.assert_allclose(
+                got[0][name], want[0][name], rtol=1e-3, atol=1e-5,
+                err_msg=f"param {name}",
+            )
+
+
+class TestEvaluateAndPredict:
+    def test_evaluate_hand_computed(self):
+        params, _, _ = fresh_state(5)
+        pb = model.PREDICT_BATCH
+        x = jax.random.normal(jax.random.PRNGKey(1), (pb, ref.INPUT_DIM))
+        y_mean, y_std = jnp.float32(100.0), jnp.float32(25.0)
+        pred_std = ref.forward(params, x)
+        y_std_t = pred_std + 1.0          # MSE must be exactly 1
+        y_raw = (pred_std + 0.5) * y_std + y_mean
+        mask = jnp.ones((pb,), jnp.float32)
+        mse, mape = model.evaluate(params, x, y_std_t, y_raw, mask, y_mean, y_std)
+        np.testing.assert_allclose(float(mse), 1.0, rtol=1e-5)
+        want_mape = float(
+            jnp.mean(jnp.abs(0.5 * y_std) / jnp.abs(y_raw)) * 100.0
+        )
+        np.testing.assert_allclose(float(mape), want_mape, rtol=1e-4)
+
+    def test_evaluate_mask(self):
+        params, _, _ = fresh_state(6)
+        pb = model.PREDICT_BATCH
+        x = jax.random.normal(jax.random.PRNGKey(2), (pb, ref.INPUT_DIM))
+        pred = ref.forward(params, x)
+        y = pred.at[0].add(3.0)  # single real error of 3.0 on row 0
+        mask = jnp.zeros((pb,), jnp.float32).at[0].set(1.0)
+        y_raw = jnp.ones((pb, 1), jnp.float32)
+        mse, _ = model.evaluate(params, x, y, y_raw, mask, jnp.float32(0), jnp.float32(1))
+        np.testing.assert_allclose(float(mse), 9.0, rtol=1e-4)
+
+    def test_predict_applies_inverse_scaling(self):
+        params, _, _ = fresh_state(7)
+        pb = model.PREDICT_BATCH
+        x = jax.random.normal(jax.random.PRNGKey(3), (pb, ref.INPUT_DIM))
+        y_mean, y_std = jnp.float32(250.0), jnp.float32(40.0)
+        (raw,) = model.predict(params, x, y_mean, y_std)
+        want = ref.forward(params, x) * y_std + y_mean
+        np.testing.assert_allclose(raw, want, rtol=1e-5, atol=1e-3)

@@ -1,0 +1,45 @@
+//! `cargo bench` regenerator: one reduced-scale end-to-end run per paper
+//! exhibit (the full-scale versions are `powertrain experiment <id>`;
+//! DESIGN.md section 6 maps exhibits to modules). Runs every experiment in
+//! quick mode against a temp output dir and reports wall-clock per
+//! exhibit — a regression harness for the whole reproduction pipeline.
+
+use powertrain::experiments::{self, common::ExpContext};
+
+fn main() {
+    let out = std::env::temp_dir().join("pt_bench_figures");
+    let _ = std::fs::remove_dir_all(&out);
+    let artifacts = powertrain::runtime::artifacts::default_artifacts_dir();
+    let mut ctx = match ExpContext::new(&artifacts, &out, true, 4242) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot initialize experiment context: {e}");
+            eprintln!("(run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    };
+
+    println!("== paper-exhibit regeneration bench (quick mode) ==\n");
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for id in experiments::ALL {
+        let t0 = std::time::Instant::now();
+        match experiments::run(id, &mut ctx) {
+            Ok(()) => {
+                let dt = t0.elapsed().as_secs_f64();
+                rows.push((id.to_string(), dt));
+            }
+            Err(e) => {
+                eprintln!("experiment {id} FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    println!("\n== summary: seconds per exhibit ==");
+    let mut total = 0.0;
+    for (id, dt) in &rows {
+        println!("{id:<8} {dt:>8.1}s");
+        total += dt;
+    }
+    println!("{:<8} {total:>8.1}s", "total");
+}

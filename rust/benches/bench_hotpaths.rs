@@ -1,0 +1,143 @@
+//! Hot-path microbenchmarks (custom harness; criterion unavailable
+//! offline). These are the perf-pass targets of EXPERIMENTS.md §Perf:
+//!
+//!   1. full-grid prediction through the AOT `predict` artifact
+//!      (the request-path bottleneck: 2 models x 4,368-18,096 modes);
+//!   2. host-side fallback prediction;
+//!   3. Pareto construction over grid-sized point clouds;
+//!   4. simulator + profiler throughput (corpus generation);
+//!   5. one fused train step through PJRT;
+//!   6. grid enumeration + profiling-plan construction.
+
+use powertrain::device::{DeviceKind, PowerModeGrid, ProfilingPlan};
+use powertrain::nn::{checkpoint::Checkpoint, leaf_shape, MlpParams};
+use powertrain::pareto::{ParetoFront, Point};
+use powertrain::profiler::{Profiler, StandardScaler};
+use powertrain::runtime::{f32_literal, u32_literal, Runtime};
+use powertrain::sim::TrainerSim;
+use powertrain::util::bench::Bencher;
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+fn demo_ckpt(seed: u64) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1200.0, 700.0, 1700.0],
+            std: vec![3.5, 600.0, 350.0, 1100.0],
+        },
+        target_scaler: StandardScaler { mean: vec![100.0], std: vec![40.0] },
+        target: "time".into(),
+        provenance: "bench".into(),
+        val_loss: 0.0,
+    }
+}
+
+fn main() {
+    println!("== powertrain hot-path benchmarks ==\n");
+    let mut b = Bencher::default();
+
+    // -- grid + plan construction ----------------------------------------
+    b.bench_items("grid/enumerate_orin_full_18096", 18_096.0, || {
+        PowerModeGrid::full(DeviceKind::OrinAgx).len()
+    });
+    let subset = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    b.bench_items("grid/profiling_plan_4368", 4_368.0, || {
+        ProfilingPlan::build(&subset.modes).reboot_count()
+    });
+
+    // -- simulator + profiler ---------------------------------------------
+    let spec = DeviceKind::OrinAgx.spec();
+    let mut sim_rng = Rng::new(3);
+    let sample_modes = subset.sample(32, &mut sim_rng);
+    b.bench_items("sim/true_time_power_4368_modes", 4_368.0, || {
+        let sim = TrainerSim::new(spec, Workload::resnet(), 1);
+        let mut acc = 0.0;
+        for pm in &subset.modes {
+            acc += sim.true_minibatch_ms(pm) + sim.true_power_mw(pm);
+        }
+        acc
+    });
+    b.bench_items("profiler/profile_32_modes_with_telemetry", 32.0, || {
+        let mut p = Profiler::new(TrainerSim::new(spec, Workload::resnet(), 2));
+        p.profile_modes(&sample_modes).unwrap().len()
+    });
+
+    // -- pareto -------------------------------------------------------------
+    let mut rng = Rng::new(5);
+    let cloud: Vec<Point> = (0..18_096)
+        .map(|_| Point {
+            mode: subset.modes[rng.below(subset.len())],
+            time: rng.uniform_range(10.0, 2_000.0),
+            power_mw: rng.uniform_range(8_000.0, 55_000.0),
+        })
+        .collect();
+    b.bench_items("pareto/build_18096_points", 18_096.0, || {
+        ParetoFront::build(&cloud).len()
+    });
+    let front = ParetoFront::build(&cloud);
+    b.bench_items("pareto/optimize_sweep_34_budgets", 34.0, || {
+        let mut acc = 0.0;
+        for bw in 17..=50 {
+            if let Ok(p) = front.optimize(bw as f64 * 1000.0) {
+                acc += p.time;
+            }
+        }
+        acc
+    });
+
+    // -- prediction ----------------------------------------------------------
+    let ckpt = demo_ckpt(7);
+    b.bench_items("predict/host_4368_modes", 4_368.0, || {
+        powertrain::predict::predict_modes_host(&ckpt, &subset.modes).len()
+    });
+
+    match Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            // warm the executable cache explicitly so the bench isolates
+            // steady-state execution
+            let _ = powertrain::predict::predict_modes(&rt, &ckpt, &subset.modes[..512]);
+            b.bench_items("predict/artifact_4368_modes", 4_368.0, || {
+                powertrain::predict::predict_modes(&rt, &ckpt, &subset.modes)
+                    .unwrap()
+                    .len()
+            });
+            let full = PowerModeGrid::full(DeviceKind::OrinAgx);
+            b.bench_items("predict/artifact_18096_modes", 18_096.0, || {
+                powertrain::predict::predict_modes(&rt, &ckpt, &full.modes)
+                    .unwrap()
+                    .len()
+            });
+
+            // one fused Adam train step
+            let bsz = rt.manifest.train_batch;
+            let params = ckpt.params.clone();
+            let zeros = MlpParams::zeros();
+            let x = vec![0.1f32; bsz * 4];
+            let y = vec![0.2f32; bsz];
+            let mask = vec![1.0f32; bsz];
+            let mut step_rng = Rng::new(11);
+            b.bench("train/fused_adam_step_b64", || {
+                let mut inputs = Vec::with_capacity(29);
+                for (i, leaf) in params.leaves.iter().enumerate() {
+                    inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+                }
+                for state in [&zeros, &zeros] {
+                    for (i, leaf) in state.leaves.iter().enumerate() {
+                        inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+                    }
+                }
+                inputs.push(f32_literal(&[1.0], &[1]).unwrap());
+                inputs.push(u32_literal(&step_rng.jax_key()));
+                inputs.push(f32_literal(&x, &[bsz, 4]).unwrap());
+                inputs.push(f32_literal(&y, &[bsz, 1]).unwrap());
+                inputs.push(f32_literal(&mask, &[bsz]).unwrap());
+                rt.execute("train_mse", &inputs).unwrap().len()
+            });
+        }
+        Err(e) => println!("(skipping artifact benches: {e})"),
+    }
+
+    println!("\n== done ==");
+}

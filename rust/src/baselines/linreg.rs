@@ -1,0 +1,181 @@
+//! Ridge (L2-regularized linear) regression baseline.
+//!
+//! The paper's prior work used linear regression for time/energy
+//! prediction and found it inadequate — DNN workload behaviour over power
+//! modes is inherently non-linear (bottleneck switches, roofline kinks).
+//! This closed-form implementation exists to reproduce that negative
+//! result (`experiments`), and as a sanity-check predictor in tests.
+
+use crate::profiler::{Corpus, StandardScaler};
+use crate::train::Target;
+
+/// A fitted ridge model over the 4 power-mode features (+ intercept).
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    pub weights: [f64; 5], // [bias, cores, cpu, gpu, mem] in standardized space
+    pub feature_scaler: StandardScaler,
+    pub target_scaler: StandardScaler,
+}
+
+impl Ridge {
+    /// Closed-form fit: w = (X^T X + lambda I)^-1 X^T y on standardized
+    /// features/targets (5x5 system, solved by Gaussian elimination).
+    pub fn fit(corpus: &Corpus, target: Target, lambda: f64) -> Ridge {
+        let feats: Vec<Vec<f64>> = corpus
+            .features()
+            .iter()
+            .map(|f| f.iter().map(|&x| x as f64).collect())
+            .collect();
+        let feature_scaler = StandardScaler::fit(&feats);
+        let ys = target.values(corpus);
+        let target_scaler = StandardScaler::fit1(&ys);
+
+        let n = feats.len();
+        let d = 5usize;
+        // design matrix rows: [1, z0..z3]
+        let mut xtx = [[0.0f64; 5]; 5];
+        let mut xty = [0.0f64; 5];
+        for i in 0..n {
+            let z = feature_scaler.transform_row(&feats[i]);
+            let row = [1.0, z[0], z[1], z[2], z[3]];
+            let y = target_scaler.transform1(ys[i]);
+            for a in 0..d {
+                xty[a] += row[a] * y;
+                for b in 0..d {
+                    xtx[a][b] += row[a] * row[b];
+                }
+            }
+        }
+        for (a, row) in xtx.iter_mut().enumerate() {
+            if a > 0 {
+                row[a] += lambda; // don't regularize the intercept
+            }
+        }
+        let weights = solve5(xtx, xty);
+        Ridge { weights, feature_scaler, target_scaler }
+    }
+
+    /// Predict the raw-unit target for one feature row.
+    pub fn predict(&self, feats: &[f32; 4]) -> f64 {
+        let raw: Vec<f64> = feats.iter().map(|&x| x as f64).collect();
+        let z = self.feature_scaler.transform_row(&raw);
+        let y_std = self.weights[0]
+            + self.weights[1] * z[0]
+            + self.weights[2] * z[1]
+            + self.weights[3] * z[2]
+            + self.weights[4] * z[3];
+        self.target_scaler.inverse1(y_std)
+    }
+}
+
+/// Solve a 5x5 linear system by Gaussian elimination with partial pivoting.
+fn solve5(mut a: [[f64; 5]; 5], mut b: [f64; 5]) -> [f64; 5] {
+    let n = 5;
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // singular direction; leave as zero
+        }
+        for r in 0..n {
+            if r != col {
+                let f = a[r][col] / diag;
+                for c in col..n {
+                    a[r][c] -= f * a[col][c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+    }
+    let mut x = [0.0; 5];
+    for i in 0..n {
+        x[i] = if a[i][i].abs() < 1e-12 { 0.0 } else { b[i] / a[i][i] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerMode};
+    use crate::profiler::Record;
+    use crate::workload::Workload;
+
+    fn linear_corpus() -> Corpus {
+        // target that *is* linear in features: recoverable exactly
+        let mut c = Corpus::new(DeviceKind::OrinAgx, Workload::resnet());
+        let spec = DeviceKind::OrinAgx.spec();
+        for (i, &cpu) in spec.cpu_khz.iter().enumerate() {
+            for (j, &gpu) in spec.gpu_khz.iter().enumerate() {
+                let mode = PowerMode {
+                    cores: 2 + ((i + j) % 6) as u32 * 2,
+                    cpu_khz: cpu,
+                    gpu_khz: gpu,
+                    mem_khz: spec.mem_khz[(i + j) % 4],
+                };
+                let f = mode.features();
+                let y = 5.0 + 2.0 * f[0] as f64 + 0.01 * f[1] as f64
+                    - 0.02 * f[2] as f64 + 0.005 * f[3] as f64;
+                c.push(Record { mode, time_ms: y, power_mw: 1000.0, cost_s: 0.0 });
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn recovers_linear_target_exactly() {
+        let c = linear_corpus();
+        let model = Ridge::fit(&c, Target::Time, 1e-9);
+        for r in c.records().iter().step_by(17) {
+            let pred = model.predict(&r.mode.features());
+            assert!(
+                (pred - r.time_ms).abs() / r.time_ms < 1e-6,
+                "pred={pred} truth={}",
+                r.time_ms
+            );
+        }
+    }
+
+    #[test]
+    fn fails_on_nonlinear_simulator_truth() {
+        // fit on real simulator ground truth; linreg must be notably wrong
+        // somewhere (the paper's motivation for NNs)
+        use crate::sim::perf_model::minibatch_time_ms;
+        let spec = DeviceKind::OrinAgx.spec();
+        let wl = Workload::resnet();
+        let mut c = Corpus::new(DeviceKind::OrinAgx, wl);
+        let grid = crate::device::PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        for pm in grid.modes.iter().step_by(5) {
+            c.push(Record {
+                mode: *pm,
+                time_ms: minibatch_time_ms(spec, &wl, pm).total_ms,
+                power_mw: 1000.0,
+                cost_s: 0.0,
+            });
+        }
+        let model = Ridge::fit(&c, Target::Time, 1e-6);
+        let mut worst: f64 = 0.0;
+        for r in c.records() {
+            let ape = ((model.predict(&r.mode.features()) - r.time_ms) / r.time_ms).abs();
+            worst = worst.max(ape);
+        }
+        assert!(worst > 0.30, "linreg unexpectedly good: worst APE {worst}");
+    }
+
+    #[test]
+    fn ridge_regularization_shrinks_weights() {
+        let c = linear_corpus();
+        let free = Ridge::fit(&c, Target::Time, 1e-9);
+        let heavy = Ridge::fit(&c, Target::Time, 1e6);
+        let norm = |w: &[f64; 5]| w[1..].iter().map(|x| x * x).sum::<f64>();
+        assert!(norm(&heavy.weights) < 0.01 * norm(&free.weights));
+    }
+}

@@ -1,0 +1,73 @@
+//! Baseline strategies the paper compares PowerTrain against (sections 1.4,
+//! 5.1): MAXN, random-sampling Pareto (RND), from-scratch NN (via
+//! `train::Trainer`), linear regression (shown inadequate in the paper's
+//! prior work), and the Nvidia PowerEstimator surrogate (NPE).
+
+pub mod linreg;
+pub mod npe;
+
+use crate::device::{DeviceSpec, PowerMode};
+use crate::pareto::{ParetoFront, Point};
+use crate::profiler::Corpus;
+
+/// MAXN baseline: always pick the default maximum-performance mode
+/// (fastest, but typically blows any power budget — Fig 12/13).
+pub fn maxn_choice(spec: &DeviceSpec) -> PowerMode {
+    PowerMode::maxn(spec)
+}
+
+/// Random-sampling Pareto (RND): profile ~50 random modes, build the
+/// *observed* Pareto from just those samples and optimize on it. No
+/// prediction error (values are measured), but coverage is poor: the true
+/// optimum for a budget is usually not among the samples (12–28% slower,
+/// paper section 5.2).
+pub fn random_sampling_front(sampled: &Corpus) -> ParetoFront {
+    let pts: Vec<Point> = sampled
+        .records()
+        .iter()
+        .map(|r| Point { mode: r.mode, time: r.time_ms, power_mw: r.power_mw })
+        .collect();
+    ParetoFront::build(&pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+    use crate::profiler::Record;
+    use crate::workload::Workload;
+
+    #[test]
+    fn maxn_is_the_spec_max() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let m = maxn_choice(spec);
+        assert_eq!(m.cores, 12);
+        assert_eq!(m.gpu_khz, spec.max_gpu_khz());
+    }
+
+    #[test]
+    fn rnd_front_built_from_observations_only() {
+        let mut c = Corpus::new(DeviceKind::OrinAgx, Workload::resnet());
+        let spec = DeviceKind::OrinAgx.spec();
+        for i in 0..20 {
+            c.push(Record {
+                mode: PowerMode {
+                    cores: 2 + 2 * (i % 6) as u32,
+                    cpu_khz: spec.cpu_khz[4 + i % 10],
+                    gpu_khz: spec.gpu_khz[i % 13],
+                    mem_khz: spec.mem_khz[i % 4],
+                },
+                time_ms: 200.0 - 5.0 * i as f64,
+                power_mw: 15_000.0 + 1_500.0 * i as f64,
+                cost_s: 1.0,
+            });
+        }
+        let f = random_sampling_front(&c);
+        assert!(f.is_valid());
+        assert!(f.len() >= 2);
+        // every front point is one of the sampled modes
+        for p in f.points() {
+            assert!(c.records().iter().any(|r| r.mode == p.mode));
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Coordinator metrics: thread-safe counters and latency histograms for
+//! the serving loop (throughput / latency reporting of the e2e driver).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counters + latency samples. Shared across workers via `Arc`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_received: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub modes_profiled: AtomicU64,
+    pub reboots: AtomicU64,
+    /// Simulated device-seconds spent profiling.
+    profiling_ms: AtomicU64,
+    /// Wall-clock request latencies (ms).
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add_profiling_s(&self, s: f64) {
+        self.profiling_ms
+            .fetch_add((s * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn profiling_s(&self) -> f64 {
+        self.profiling_ms.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    pub fn observe_latency_ms(&self, ms: f64) {
+        self.latencies_ms.lock().unwrap().push(ms);
+    }
+
+    /// (p50, p95, max) latency in ms.
+    pub fn latency_summary_ms(&self) -> (f64, f64, f64) {
+        let lat = self.latencies_ms.lock().unwrap();
+        if lat.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let p50 = crate::util::stats::quantile(&lat, 0.5);
+        let p95 = crate::util::stats::quantile(&lat, 0.95);
+        let max = lat.iter().cloned().fold(0.0, f64::max);
+        (p50, p95, max)
+    }
+
+    pub fn render(&self) -> String {
+        let (p50, p95, max) = self.latency_summary_ms();
+        format!(
+            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+            self.requests_received.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_failed.load(Ordering::Relaxed),
+            self.modes_profiled.load(Ordering::Relaxed),
+            self.reboots.load(Ordering::Relaxed),
+            self.profiling_s() / 60.0,
+            p50,
+            p95,
+            max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let m = Metrics::new();
+        m.requests_received.fetch_add(3, Ordering::Relaxed);
+        m.requests_completed.fetch_add(2, Ordering::Relaxed);
+        m.add_profiling_s(90.0);
+        m.observe_latency_ms(10.0);
+        m.observe_latency_ms(20.0);
+        m.observe_latency_ms(120.0);
+        let (p50, p95, max) = m.latency_summary_ms();
+        assert_eq!(p50, 20.0);
+        assert!(p95 > 20.0 && p95 <= 120.0);
+        assert_eq!(max, 120.0);
+        assert!((m.profiling_s() - 90.0).abs() < 0.01);
+        let r = m.render();
+        assert!(r.contains("3 received"));
+    }
+
+    #[test]
+    fn empty_latencies_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_summary_ms(), (0.0, 0.0, 0.0));
+    }
+}

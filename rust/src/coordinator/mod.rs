@@ -1,0 +1,369 @@
+//! L3 coordinator: the edge power-mode recommendation service.
+//!
+//! Models the deployment the paper motivates (sections 1, 1.5): DNN
+//! training workloads arrive dynamically at a fleet of Jetson devices; for
+//! each request the coordinator profiles ~50 power modes on the target
+//! device, transfer-learns the reference time/power models, predicts the
+//! whole power-mode grid through the AOT artifacts, builds the Pareto
+//! front, and returns the power mode that minimizes training time within
+//! the request's power budget.
+//!
+//! Threading: PJRT clients are not `Send`, so each worker thread owns its
+//! own `Runtime`; requests flow through a shared queue and responses are
+//! collected on a channel. Python never runs here.
+
+pub mod metrics;
+pub mod policy;
+
+pub use metrics::Metrics;
+pub use policy::{Scenario, Strategy};
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
+use crate::error::{Error, Result};
+use crate::nn::checkpoint::Checkpoint;
+use crate::pareto::{ParetoFront, Point};
+use crate::profiler::{Corpus, Profiler};
+use crate::runtime::Runtime;
+use crate::sim::TrainerSim;
+use crate::train::transfer::{transfer, TransferConfig};
+use crate::train::{Target, TrainConfig, Trainer};
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// An arriving request: optimize this workload on this device under this
+/// power budget.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub device: DeviceKind,
+    pub workload: Workload,
+    pub power_budget_w: f64,
+    pub scenario: Scenario,
+    /// Seed controlling the simulated device telemetry + sampling.
+    pub seed: u64,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub strategy: String,
+    pub chosen_mode: PowerMode,
+    /// Predictions at the chosen mode.
+    pub predicted_time_ms: f64,
+    pub predicted_power_w: f64,
+    /// Ground-truth values at the chosen mode (observable post-hoc).
+    pub observed_time_ms: f64,
+    pub observed_power_w: f64,
+    /// Simulated device-seconds spent profiling for this request.
+    pub profiling_cost_s: f64,
+    /// Coordinator wall-clock latency (ms) for the decision.
+    pub latency_ms: f64,
+}
+
+/// Reference models (time + power) the transfer bootstraps from.
+#[derive(Debug, Clone)]
+pub struct ReferenceModels {
+    pub time: Checkpoint,
+    pub power: Checkpoint,
+}
+
+impl ReferenceModels {
+    /// Load from `<dir>/reference_time.json` + `<dir>/reference_power.json`.
+    pub fn load(dir: &std::path::Path) -> Result<ReferenceModels> {
+        Ok(ReferenceModels {
+            time: Checkpoint::load(&dir.join("reference_time.json"))?,
+            power: Checkpoint::load(&dir.join("reference_power.json"))?,
+        })
+    }
+
+    pub fn save(&self, dir: &std::path::Path) -> Result<()> {
+        self.time.save(&dir.join("reference_time.json"))?;
+        self.power.save(&dir.join("reference_power.json"))?;
+        Ok(())
+    }
+
+    /// Train reference models from scratch on the reference workload's
+    /// profiled corpus (the paper's one-time offline step).
+    pub fn bootstrap(
+        rt: &Runtime,
+        corpus: &Corpus,
+        epochs: usize,
+        seed: u64,
+    ) -> Result<ReferenceModels> {
+        let trainer = Trainer::new(rt);
+        let cfg = TrainConfig { epochs, seed, ..Default::default() };
+        let (time, _) = trainer.train(corpus, Target::Time, &cfg)?;
+        let (power, _) = trainer.train(corpus, Target::Power, &cfg)?;
+        Ok(ReferenceModels { time, power })
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Transfer fine-tuning epochs.
+    pub transfer_epochs: usize,
+    /// Grid over which predictions + Pareto are computed. `None` = the
+    /// device's paper subset (Orin) / a random subset of comparable size.
+    pub prediction_grid: Option<usize>,
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: crate::runtime::artifacts::default_artifacts_dir(),
+            transfer_epochs: 300,
+            prediction_grid: None,
+            workers: 1,
+        }
+    }
+}
+
+/// Serve one request end-to-end on a given runtime. This is the heart of
+/// the coordinator; the threaded service wraps it.
+pub fn handle_request(
+    rt: &Runtime,
+    reference: &ReferenceModels,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    req: &Request,
+) -> Result<Response> {
+    let t0 = Instant::now();
+    metrics.requests_received.fetch_add(1, Ordering::Relaxed);
+
+    let spec = req.device.spec();
+    let strategy = Strategy::for_scenario(req.scenario);
+
+    // 1. online profiling of a small random mode sample on the target
+    let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
+    let n_profile = strategy.profiling_modes(grid.len()).min(grid.len());
+    let mut rng = Rng::new(req.seed);
+    let sample = grid.sample(n_profile, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(spec, req.workload, req.seed));
+    let corpus = profiler.profile_modes(&sample)?;
+    metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
+    metrics.add_profiling_s(corpus.total_cost_s());
+
+    // 2. obtain time/power prediction models per the scenario's strategy
+    let (time_ckpt, power_ckpt, strat_name) = match strategy {
+        Strategy::PowerTrain(_) => {
+            let tcfg = TransferConfig {
+                base: TrainConfig {
+                    epochs: cfg.transfer_epochs,
+                    seed: req.seed,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (t, _) = transfer(rt, &reference.time, &corpus, Target::Time, &tcfg)?;
+            let (p, _) = transfer(rt, &reference.power, &corpus, Target::Power, &tcfg)?;
+            (t, p, strategy.to_string())
+        }
+        Strategy::NnProfiled(_) => {
+            let trainer = Trainer::new(rt);
+            let ncfg = TrainConfig {
+                epochs: cfg.transfer_epochs,
+                seed: req.seed,
+                ..Default::default()
+            };
+            let (t, _) = trainer.train(&corpus, Target::Time, &ncfg)?;
+            let (p, _) = trainer.train(&corpus, Target::Power, &ncfg)?;
+            (t, p, strategy.to_string())
+        }
+        Strategy::BruteForce => {
+            // observed Pareto over the full profiled grid; no models
+            return finish_brute_force(req, &grid, profiler, metrics, t0);
+        }
+    };
+
+    // 3. predict the full grid through the AOT artifacts and build the
+    //    predicted Pareto front (paper Fig 10)
+    let times = crate::predict::predict_modes(rt, &time_ckpt, &grid.modes)?;
+    let powers = crate::predict::predict_modes(rt, &power_ckpt, &grid.modes)?;
+    let points: Vec<Point> = grid
+        .modes
+        .iter()
+        .zip(times.iter().zip(&powers))
+        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
+        .collect();
+    let front = ParetoFront::build(&points);
+
+    // 4. optimize: fastest predicted mode within the budget
+    let chosen = front.optimize(req.power_budget_w * 1000.0)?;
+
+    // observable ground truth at the chosen mode (for reporting/validation)
+    let sim = TrainerSim::new(spec, req.workload, req.seed ^ 0xfeed);
+    let obs_t = sim.true_minibatch_ms(&chosen.mode);
+    let obs_p = sim.true_power_mw(&chosen.mode);
+
+    let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    metrics.observe_latency_ms(latency_ms);
+    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+
+    Ok(Response {
+        id: req.id,
+        strategy: strat_name,
+        chosen_mode: chosen.mode,
+        predicted_time_ms: chosen.time,
+        predicted_power_w: chosen.power_mw / 1000.0,
+        observed_time_ms: obs_t,
+        observed_power_w: obs_p / 1000.0,
+        profiling_cost_s: corpus.total_cost_s(),
+        latency_ms,
+    })
+}
+
+fn finish_brute_force(
+    req: &Request,
+    grid: &PowerModeGrid,
+    mut profiler: Profiler,
+    metrics: &Metrics,
+    t0: Instant,
+) -> Result<Response> {
+    let corpus = profiler.profile_modes(&grid.modes)?;
+    metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
+    metrics.add_profiling_s(corpus.total_cost_s());
+    let points: Vec<Point> = corpus
+        .records()
+        .iter()
+        .map(|r| Point { mode: r.mode, time: r.time_ms, power_mw: r.power_mw })
+        .collect();
+    let front = ParetoFront::build(&points);
+    let chosen = front.optimize(req.power_budget_w * 1000.0)?;
+    let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    metrics.observe_latency_ms(latency_ms);
+    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+    Ok(Response {
+        id: req.id,
+        strategy: "brute-force".into(),
+        chosen_mode: chosen.mode,
+        predicted_time_ms: chosen.time,
+        predicted_power_w: chosen.power_mw / 1000.0,
+        observed_time_ms: chosen.time,
+        observed_power_w: chosen.power_mw / 1000.0,
+        profiling_cost_s: corpus.total_cost_s(),
+        latency_ms,
+    })
+}
+
+/// The grid predictions/Pareto are computed over for a device.
+pub fn prediction_grid(device: DeviceKind, override_n: Option<usize>, seed: u64) -> PowerModeGrid {
+    match (device, override_n) {
+        (_, Some(n)) => {
+            let mut rng = Rng::new(seed ^ 0x9d1d);
+            PowerModeGrid::random_subset(device, n, &mut rng)
+        }
+        (DeviceKind::OrinAgx, None) => PowerModeGrid::paper_subset(DeviceKind::OrinAgx),
+        (dev, None) => {
+            // Xavier/Nano: the paper profiles random subsets (1,000 / 180)
+            let n = match dev {
+                DeviceKind::XavierAgx => 1000,
+                DeviceKind::OrinNano => 180,
+                DeviceKind::OrinAgx => unreachable!(),
+            };
+            let mut rng = Rng::new(seed ^ 0x9d1d);
+            PowerModeGrid::random_subset(dev, n, &mut rng)
+        }
+    }
+}
+
+/// Multi-worker serving: spawns `cfg.workers` threads, each with its own
+/// PJRT runtime, pulling from a shared queue. Returns responses in
+/// completion order together with the shared metrics.
+pub fn serve(
+    cfg: &CoordinatorConfig,
+    reference: &ReferenceModels,
+    requests: Vec<Request>,
+) -> Result<(Vec<Response>, Arc<Metrics>)> {
+    let metrics = Arc::new(Metrics::new());
+    let queue: Arc<Mutex<VecDeque<Request>>> =
+        Arc::new(Mutex::new(requests.into_iter().collect()));
+    let (tx, rx) = mpsc::channel::<Result<Response>>();
+
+    let mut handles = Vec::new();
+    for worker_id in 0..cfg.workers.max(1) {
+        let queue = Arc::clone(&queue);
+        let metrics = Arc::clone(&metrics);
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        let reference = reference.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("pt-worker-{worker_id}"))
+                .spawn(move || {
+                    // each worker owns its own non-Send PJRT runtime
+                    let rt = match Runtime::new(&cfg.artifacts_dir) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        let req = { queue.lock().unwrap().pop_front() };
+                        let Some(req) = req else { break };
+                        let res = handle_request(&rt, &reference, &cfg, &metrics, &req);
+                        if res.is_err() {
+                            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if tx.send(res).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn failed: {e}")))?,
+        );
+    }
+    drop(tx);
+
+    let mut responses = Vec::new();
+    let mut first_err: Option<Error> = None;
+    for res in rx {
+        match res {
+            Ok(r) => responses.push(r),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if responses.is_empty() {
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+    }
+    Ok((responses, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_grid_sizes() {
+        assert_eq!(prediction_grid(DeviceKind::OrinAgx, None, 1).len(), 4368);
+        assert_eq!(prediction_grid(DeviceKind::XavierAgx, None, 1).len(), 1000);
+        assert_eq!(prediction_grid(DeviceKind::OrinNano, None, 1).len(), 180);
+        assert_eq!(prediction_grid(DeviceKind::OrinAgx, Some(200), 1).len(), 200);
+    }
+
+    #[test]
+    fn prediction_grid_deterministic_per_seed() {
+        let a = prediction_grid(DeviceKind::XavierAgx, None, 7);
+        let b = prediction_grid(DeviceKind::XavierAgx, None, 7);
+        assert_eq!(a.modes, b.modes);
+    }
+}

@@ -1,0 +1,114 @@
+//! Scenario policies (paper Table 1): which solution approach fits which
+//! deployment scenario, based on training duration and workload churn.
+
+use std::fmt;
+
+/// Deployment scenario for an arriving training request (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// One-time training of a large model over days.
+    OneTimeTraining,
+    /// Occasional fine-tuning of a pre-trained DNN (a few hours).
+    FineTuning,
+    /// Periodic continuous learning (< 1 hour per round).
+    ContinuousLearning,
+    /// Federated learning on a shared edge cloud: frequent, unknown
+    /// workloads and durations.
+    FederatedLearning,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "one-time" => Some(Scenario::OneTimeTraining),
+            "fine-tuning" => Some(Scenario::FineTuning),
+            "continuous" => Some(Scenario::ContinuousLearning),
+            "federated" => Some(Scenario::FederatedLearning),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::OneTimeTraining => "one-time",
+            Scenario::FineTuning => "fine-tuning",
+            Scenario::ContinuousLearning => "continuous",
+            Scenario::FederatedLearning => "federated",
+        }
+    }
+}
+
+/// How the coordinator solves an optimization request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Profile every mode of the (subset) grid, pick the ground-truth
+    /// optimum. 1200–1800 min of data collection (paper Table 1).
+    BruteForce,
+    /// Train an NN from scratch on `n` profiled modes (fine-tuning
+    /// scenario: >= 100 modes are affordable).
+    NnProfiled(usize),
+    /// PowerTrain: transfer the reference models using `n` profiled modes.
+    PowerTrain(usize),
+}
+
+impl Strategy {
+    /// Paper Table 1's recommendation per scenario.
+    pub fn for_scenario(s: Scenario) -> Strategy {
+        match s {
+            Scenario::OneTimeTraining => Strategy::BruteForce,
+            Scenario::FineTuning => Strategy::NnProfiled(100),
+            Scenario::ContinuousLearning => Strategy::PowerTrain(50),
+            Scenario::FederatedLearning => Strategy::PowerTrain(50),
+        }
+    }
+
+    /// Number of modes this strategy profiles online.
+    pub fn profiling_modes(&self, grid_size: usize) -> usize {
+        match self {
+            Strategy::BruteForce => grid_size,
+            Strategy::NnProfiled(n) | Strategy::PowerTrain(n) => *n,
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Strategy::BruteForce => write!(f, "brute-force"),
+            Strategy::NnProfiled(n) => write!(f, "nn-{n}"),
+            Strategy::PowerTrain(n) => write!(f, "powertrain-{n}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_mapping() {
+        assert_eq!(Strategy::for_scenario(Scenario::OneTimeTraining), Strategy::BruteForce);
+        assert_eq!(Strategy::for_scenario(Scenario::FineTuning), Strategy::NnProfiled(100));
+        assert_eq!(Strategy::for_scenario(Scenario::ContinuousLearning), Strategy::PowerTrain(50));
+        assert_eq!(Strategy::for_scenario(Scenario::FederatedLearning), Strategy::PowerTrain(50));
+    }
+
+    #[test]
+    fn profiling_mode_counts() {
+        assert_eq!(Strategy::BruteForce.profiling_modes(4368), 4368);
+        assert_eq!(Strategy::PowerTrain(50).profiling_modes(4368), 50);
+        assert_eq!(Strategy::NnProfiled(100).profiling_modes(4368), 100);
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for s in [
+            Scenario::OneTimeTraining,
+            Scenario::FineTuning,
+            Scenario::ContinuousLearning,
+            Scenario::FederatedLearning,
+        ] {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+    }
+}

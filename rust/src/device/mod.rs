@@ -1,0 +1,8 @@
+//! Jetson device models: specifications, power-mode grids and profiling
+//! orderings (paper Table 2 and section 2.5).
+
+pub mod power_mode;
+pub mod specs;
+
+pub use power_mode::{PowerMode, PowerModeGrid, ProfilingPlan, ProfilingStep};
+pub use specs::{DeviceKind, DeviceSpec};

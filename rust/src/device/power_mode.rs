@@ -1,0 +1,337 @@
+//! Power modes, power-mode grids, sampling subsets and reboot-aware
+//! profiling orderings (paper sections 1.1, 2.5).
+
+use crate::device::specs::{DeviceKind, DeviceSpec};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One power-mode configuration: active CPU cores + CPU/GPU/EMC frequency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PowerMode {
+    pub cores: u32,
+    pub cpu_khz: u32,
+    pub gpu_khz: u32,
+    pub mem_khz: u32,
+}
+
+impl PowerMode {
+    /// Validate this mode against a device's tables.
+    pub fn validate(&self, spec: &DeviceSpec) -> Result<()> {
+        if self.cores == 0 || self.cores > spec.max_cores {
+            return Err(Error::Device(format!(
+                "{} cores invalid for {} (max {})",
+                self.cores,
+                spec.kind.name(),
+                spec.max_cores
+            )));
+        }
+        for (val, tbl, what) in [
+            (self.cpu_khz, spec.cpu_khz, "cpu"),
+            (self.gpu_khz, spec.gpu_khz, "gpu"),
+            (self.mem_khz, spec.mem_khz, "mem"),
+        ] {
+            if !tbl.contains(&val) {
+                return Err(Error::Device(format!(
+                    "{what} freq {val} kHz not available on {}",
+                    spec.kind.name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The MAXN mode: everything at maximum (Nvidia's default).
+    pub fn maxn(spec: &DeviceSpec) -> PowerMode {
+        PowerMode {
+            cores: spec.max_cores,
+            cpu_khz: spec.max_cpu_khz(),
+            gpu_khz: spec.max_gpu_khz(),
+            mem_khz: spec.max_mem_khz(),
+        }
+    }
+
+    /// Raw feature vector for the prediction models:
+    /// `[cores, cpu_mhz, gpu_mhz, mem_mhz]` (standardized downstream).
+    pub fn features(&self) -> [f32; 4] {
+        [
+            self.cores as f32,
+            self.cpu_khz as f32 / 1000.0,
+            self.gpu_khz as f32 / 1000.0,
+            self.mem_khz as f32 / 1000.0,
+        ]
+    }
+
+    /// Short display form matching the paper, e.g. `12c/2.20C/1.30G/3.20M`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}c/{:.2}C/{:.2}G/{:.2}M",
+            self.cores,
+            self.cpu_khz as f64 / 1e6,
+            self.gpu_khz as f64 / 1e6,
+            self.mem_khz as f64 / 1e6,
+        )
+    }
+}
+
+/// Nvidia's three pre-defined Orin AGX power modes with power budgets
+/// (besides MAXN) — the baseline of Fig 2c.
+pub fn nvidia_preset_modes(kind: DeviceKind) -> Vec<(f64, PowerMode)> {
+    match kind {
+        DeviceKind::OrinAgx => vec![
+            (
+                15.0,
+                PowerMode { cores: 4, cpu_khz: 1_113_600, gpu_khz: 420_750, mem_khz: 2_133_000 },
+            ),
+            (
+                30.0,
+                PowerMode { cores: 8, cpu_khz: 1_728_000, gpu_khz: 624_750, mem_khz: 3_199_000 },
+            ),
+            (
+                50.0,
+                PowerMode { cores: 12, cpu_khz: 1_497_600, gpu_khz: 828_750, mem_khz: 3_199_000 },
+            ),
+        ],
+        _ => Vec::new(),
+    }
+}
+
+/// A materialized set of power modes for one device.
+#[derive(Debug, Clone)]
+pub struct PowerModeGrid {
+    pub kind: DeviceKind,
+    pub modes: Vec<PowerMode>,
+}
+
+impl PowerModeGrid {
+    /// The complete power-mode space of the device (Orin: 18,096).
+    pub fn full(kind: DeviceKind) -> PowerModeGrid {
+        let spec = kind.spec();
+        let mut modes = Vec::with_capacity(spec.total_power_modes());
+        for &mem in spec.mem_khz {
+            for &gpu in spec.gpu_khz {
+                for cores in 1..=spec.max_cores {
+                    for &cpu in spec.cpu_khz {
+                        modes.push(PowerMode { cores, cpu_khz: cpu, gpu_khz: gpu, mem_khz: mem });
+                    }
+                }
+            }
+        }
+        PowerModeGrid { kind, modes }
+    }
+
+    /// The paper's uniformly-distributed Orin profiling subset (section 2.5):
+    /// all GPU (13) x all mem (4) x even core counts (6) x every alternate
+    /// CPU frequency excluding the two slowest (14) = 4,368 modes.
+    pub fn paper_subset(kind: DeviceKind) -> PowerModeGrid {
+        let spec = kind.spec();
+        let cpu_sel: Vec<u32> = spec
+            .cpu_khz
+            .iter()
+            .skip(2) // exclude the two slowest
+            .enumerate()
+            .filter(|(i, _)| i % 2 == 0)
+            .map(|(_, &f)| f)
+            .collect();
+        let core_sel: Vec<u32> = (1..=spec.max_cores).filter(|c| c % 2 == 0).collect();
+        let mut modes = Vec::new();
+        for &mem in spec.mem_khz {
+            for &gpu in spec.gpu_khz {
+                for &cores in &core_sel {
+                    for &cpu in &cpu_sel {
+                        modes.push(PowerMode { cores, cpu_khz: cpu, gpu_khz: gpu, mem_khz: mem });
+                    }
+                }
+            }
+        }
+        PowerModeGrid { kind, modes }
+    }
+
+    /// Random subset of the full space, as used for the Xavier (1,000 of
+    /// 29,232) and Nano (180 of 1,800) corpora.
+    pub fn random_subset(kind: DeviceKind, n: usize, rng: &mut Rng) -> PowerModeGrid {
+        let full = PowerModeGrid::full(kind);
+        let idx = rng.sample_indices(full.modes.len(), n.min(full.modes.len()));
+        let modes = idx.into_iter().map(|i| full.modes[i]).collect();
+        PowerModeGrid { kind, modes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.modes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modes.is_empty()
+    }
+
+    /// Sample `n` modes without replacement from this grid.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<PowerMode> {
+        rng.sample_indices(self.modes.len(), n.min(self.modes.len()))
+            .into_iter()
+            .map(|i| self.modes[i])
+            .collect()
+    }
+}
+
+/// One step of a profiling plan: configure this mode; `reboot` marks that
+/// reaching it from the previous step requires a device reboot.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfilingStep {
+    pub mode: PowerMode,
+    pub reboot: bool,
+}
+
+/// Reboot-aware profiling order (paper section 2.5, footnote 8): the Jetson
+/// only supports *lowering* CPU/GPU frequencies at runtime; raising either
+/// requires a reboot. The plan orders modes to minimize reboots: group by
+/// descending CPU frequency, sweep GPU descending within each group, so a
+/// reboot is only needed when a new CPU group begins (GPU must jump back up).
+#[derive(Debug, Clone)]
+pub struct ProfilingPlan {
+    pub steps: Vec<ProfilingStep>,
+}
+
+impl ProfilingPlan {
+    pub fn build(modes: &[PowerMode]) -> ProfilingPlan {
+        let mut sorted: Vec<PowerMode> = modes.to_vec();
+        // order: cpu desc, then gpu desc, then mem desc, then cores desc —
+        // within a cpu group every transition only lowers gpu (or keeps it,
+        // varying mem/cores which are freely settable).
+        sorted.sort_by(|a, b| {
+            b.cpu_khz
+                .cmp(&a.cpu_khz)
+                .then(b.gpu_khz.cmp(&a.gpu_khz))
+                .then(b.mem_khz.cmp(&a.mem_khz))
+                .then(b.cores.cmp(&a.cores))
+        });
+        let mut steps = Vec::with_capacity(sorted.len());
+        let mut prev: Option<PowerMode> = None;
+        for mode in sorted {
+            let reboot = match prev {
+                None => false, // assume freshly booted at max
+                Some(p) => mode.cpu_khz > p.cpu_khz || mode.gpu_khz > p.gpu_khz,
+            };
+            steps.push(ProfilingStep { mode, reboot });
+            prev = Some(mode);
+        }
+        ProfilingPlan { steps }
+    }
+
+    pub fn reboot_count(&self) -> usize {
+        self.steps.iter().filter(|s| s.reboot).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_sizes_match_paper() {
+        assert_eq!(PowerModeGrid::full(DeviceKind::OrinAgx).len(), 18_096);
+        assert_eq!(PowerModeGrid::full(DeviceKind::XavierAgx).len(), 29_232);
+        assert_eq!(PowerModeGrid::full(DeviceKind::OrinNano).len(), 1_800);
+    }
+
+    #[test]
+    fn paper_subset_is_4368_for_orin() {
+        let g = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        assert_eq!(g.len(), 4_368);
+        // all even core counts only
+        assert!(g.modes.iter().all(|m| m.cores % 2 == 0));
+        // two slowest cpu freqs excluded
+        assert!(g.modes.iter().all(|m| m.cpu_khz >= 268_800));
+        // every mode is valid
+        let spec = DeviceKind::OrinAgx.spec();
+        assert!(g.modes.iter().all(|m| m.validate(spec).is_ok()));
+    }
+
+    #[test]
+    fn subset_modes_are_unique() {
+        let g = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let mut set = std::collections::HashSet::new();
+        for m in &g.modes {
+            assert!(set.insert(*m), "duplicate mode {m:?}");
+        }
+    }
+
+    #[test]
+    fn maxn_is_valid_and_maximal() {
+        for kind in DeviceKind::ALL {
+            let spec = kind.spec();
+            let m = PowerMode::maxn(spec);
+            m.validate(spec).unwrap();
+            assert_eq!(m.cpu_khz, spec.max_cpu_khz());
+            assert_eq!(m.gpu_khz, spec.max_gpu_khz());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_modes() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let bad_cores = PowerMode { cores: 13, cpu_khz: 2_201_600, gpu_khz: 1_300_500, mem_khz: 3_199_000 };
+        assert!(bad_cores.validate(spec).is_err());
+        let bad_freq = PowerMode { cores: 4, cpu_khz: 123, gpu_khz: 1_300_500, mem_khz: 3_199_000 };
+        assert!(bad_freq.validate(spec).is_err());
+    }
+
+    #[test]
+    fn features_are_mhz_scaled() {
+        let m = PowerMode { cores: 8, cpu_khz: 2_201_600, gpu_khz: 1_300_500, mem_khz: 3_199_000 };
+        let f = m.features();
+        assert_eq!(f[0], 8.0);
+        assert!((f[1] - 2201.6).abs() < 0.01);
+        assert!((f[2] - 1300.5).abs() < 0.01);
+        assert!((f[3] - 3199.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn label_matches_paper_format() {
+        let m = PowerMode { cores: 12, cpu_khz: 2_201_600, gpu_khz: 1_236_750, mem_khz: 3_199_000 };
+        assert_eq!(m.label(), "12c/2.20C/1.24G/3.20M");
+    }
+
+    #[test]
+    fn nvidia_presets_valid_on_orin() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let presets = nvidia_preset_modes(DeviceKind::OrinAgx);
+        assert_eq!(presets.len(), 3);
+        for (budget, m) in presets {
+            assert!(budget >= 15.0 && budget <= 50.0);
+            m.validate(spec).unwrap();
+        }
+    }
+
+    #[test]
+    fn profiling_plan_never_raises_freq_without_reboot() {
+        let g = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let plan = ProfilingPlan::build(&g.modes);
+        assert_eq!(plan.steps.len(), g.len());
+        for w in plan.steps.windows(2) {
+            let (a, b) = (w[0].mode, w[1].mode);
+            if !w[1].reboot {
+                assert!(b.cpu_khz <= a.cpu_khz, "cpu raised without reboot");
+                assert!(b.gpu_khz <= a.gpu_khz, "gpu raised without reboot");
+            }
+        }
+    }
+
+    #[test]
+    fn profiling_plan_reboots_bounded_by_cpu_groups() {
+        let g = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let plan = ProfilingPlan::build(&g.modes);
+        // at most one reboot per distinct CPU frequency group
+        let mut cpu_freqs: Vec<u32> = g.modes.iter().map(|m| m.cpu_khz).collect();
+        cpu_freqs.sort_unstable();
+        cpu_freqs.dedup();
+        assert!(plan.reboot_count() <= cpu_freqs.len());
+    }
+
+    #[test]
+    fn random_subset_has_requested_size_and_validity() {
+        let mut rng = Rng::new(5);
+        let g = PowerModeGrid::random_subset(DeviceKind::XavierAgx, 1000, &mut rng);
+        assert_eq!(g.len(), 1000);
+        let spec = DeviceKind::XavierAgx.spec();
+        assert!(g.modes.iter().all(|m| m.validate(spec).is_ok()));
+    }
+}

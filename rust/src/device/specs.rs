@@ -1,0 +1,276 @@
+//! Device specifications for the three Jetson devkits the paper evaluates
+//! (Table 2), plus the appendix reference machines (Table 5).
+//!
+//! Frequency tables follow the L4T/JetPack levels for each board. The paper
+//! notes (section 2.5, footnote 7) that the exact frequency lists vary with
+//! BSP version; what matters for the reproduction is the *cardinality*
+//! (29/13/4 levels for Orin etc.) which Table 2 fixes, and which our grids
+//! match exactly: Orin 18,096 modes, Xavier 29,232, Nano 1,800.
+
+/// The devices modeled by the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Jetson Orin AGX 32GB devkit (Ampere, 2048 CUDA cores) — the paper's
+    /// primary device and the reference-model host.
+    OrinAgx,
+    /// Jetson Xavier AGX (Volta, 512 CUDA cores) — previous generation.
+    XavierAgx,
+    /// Jetson Orin Nano (Ampere, 1024 CUDA cores) — same generation,
+    /// 6.9x less powerful.
+    OrinNano,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 3] =
+        [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::OrinAgx => "orin-agx",
+            DeviceKind::XavierAgx => "xavier-agx",
+            DeviceKind::OrinNano => "orin-nano",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        match s {
+            "orin-agx" | "orin" => Some(DeviceKind::OrinAgx),
+            "xavier-agx" | "xavier" => Some(DeviceKind::XavierAgx),
+            "orin-nano" | "nano" => Some(DeviceKind::OrinNano),
+            _ => None,
+        }
+    }
+
+    pub fn spec(&self) -> &'static DeviceSpec {
+        match self {
+            DeviceKind::OrinAgx => &ORIN_AGX,
+            DeviceKind::XavierAgx => &XAVIER_AGX,
+            DeviceKind::OrinNano => &ORIN_NANO,
+        }
+    }
+}
+
+/// Full static description of a device: the power-mode parameter space plus
+/// the simulator's performance/power coefficients (calibrated against the
+/// paper's anchor measurements, see `sim/calibration.rs`).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub kind: DeviceKind,
+    pub cpu_arch: &'static str,
+    pub gpu_arch: &'static str,
+    pub cuda_cores: u32,
+    pub max_cores: u32,
+    /// Available CPU frequencies in kHz, ascending.
+    pub cpu_khz: &'static [u32],
+    /// Available GPU frequencies in kHz, ascending.
+    pub gpu_khz: &'static [u32],
+    /// Available memory (EMC) frequencies in kHz, ascending.
+    pub mem_khz: &'static [u32],
+
+    // ---- simulator performance coefficients -------------------------------
+    /// GPU throughput in Orin-relative units (Orin == 1.0); the time model
+    /// divides workload GPU work by `gpu_tput * gpu_ghz`.
+    pub gpu_tput: f64,
+    /// CPU per-core IPC relative to the Orin A78AE.
+    pub cpu_eff: f64,
+    /// Memory bandwidth at max EMC frequency, Orin-relative.
+    pub mem_bw: f64,
+
+    // ---- simulator power coefficients (milliwatts) ------------------------
+    /// Idle/base board power.
+    pub p_base_mw: f64,
+    /// Max dynamic power of one CPU core at top frequency, full load.
+    pub p_core_max_mw: f64,
+    /// Max dynamic GPU power at top frequency, full load.
+    pub p_gpu_max_mw: f64,
+    /// Max memory-subsystem power at top EMC frequency, full activity.
+    pub p_mem_max_mw: f64,
+    /// Advertised module peak power (W) — sanity ceiling.
+    pub peak_power_w: f64,
+}
+
+impl DeviceSpec {
+    pub fn max_cpu_khz(&self) -> u32 {
+        *self.cpu_khz.last().unwrap()
+    }
+    pub fn max_gpu_khz(&self) -> u32 {
+        *self.gpu_khz.last().unwrap()
+    }
+    pub fn max_mem_khz(&self) -> u32 {
+        *self.mem_khz.last().unwrap()
+    }
+
+    /// Total size of the power-mode space (paper Table 2 bottom row).
+    pub fn total_power_modes(&self) -> usize {
+        self.max_cores as usize
+            * self.cpu_khz.len()
+            * self.gpu_khz.len()
+            * self.mem_khz.len()
+    }
+}
+
+/// Orin AGX CPU frequencies (kHz): 29 levels, 115.2 MHz – 2.2016 GHz.
+static ORIN_CPU_KHZ: [u32; 29] = [
+    115_200, 192_000, 268_800, 345_600, 422_400, 499_200, 576_000, 652_800,
+    729_600, 806_400, 883_200, 960_000, 1_036_800, 1_113_600, 1_190_400,
+    1_267_200, 1_344_000, 1_420_800, 1_497_600, 1_574_400, 1_651_200,
+    1_728_000, 1_804_800, 1_881_600, 1_958_400, 2_035_200, 2_112_000,
+    2_188_800, 2_201_600,
+];
+
+/// Orin AGX GPU frequencies (kHz): 13 levels up to 1.3005 GHz.
+static ORIN_GPU_KHZ: [u32; 13] = [
+    114_750, 216_750, 318_750, 420_750, 522_750, 624_750, 726_750, 828_750,
+    930_750, 1_032_750, 1_134_750, 1_236_750, 1_300_500,
+];
+
+/// Orin AGX EMC frequencies (kHz): 4 levels up to 3.199 GHz.
+static ORIN_MEM_KHZ: [u32; 4] = [204_000, 665_600, 2_133_000, 3_199_000];
+
+pub static ORIN_AGX: DeviceSpec = DeviceSpec {
+    kind: DeviceKind::OrinAgx,
+    cpu_arch: "ARM A78AE",
+    gpu_arch: "Ampere",
+    cuda_cores: 2048,
+    max_cores: 12,
+    cpu_khz: &ORIN_CPU_KHZ,
+    gpu_khz: &ORIN_GPU_KHZ,
+    mem_khz: &ORIN_MEM_KHZ,
+    gpu_tput: 1.0,
+    cpu_eff: 1.0,
+    mem_bw: 1.0,
+    p_base_mw: 6_200.0,
+    p_core_max_mw: 1_350.0,
+    p_gpu_max_mw: 30_500.0,
+    p_mem_max_mw: 11_000.0,
+    peak_power_w: 60.0,
+};
+
+/// Xavier AGX CPU frequencies (kHz): 29 levels up to 2.2656 GHz (Carmel).
+static XAVIER_CPU_KHZ: [u32; 29] = [
+    115_200, 192_000, 268_800, 345_600, 422_400, 499_200, 576_000, 652_800,
+    729_600, 806_400, 883_200, 960_000, 1_036_800, 1_113_600, 1_190_400,
+    1_267_200, 1_344_000, 1_420_800, 1_497_600, 1_574_400, 1_651_200,
+    1_728_000, 1_804_800, 1_881_600, 1_958_400, 2_035_200, 2_112_000,
+    2_188_800, 2_265_600,
+];
+
+/// Xavier AGX GPU frequencies (kHz): 14 levels up to 1.377 GHz (Volta).
+static XAVIER_GPU_KHZ: [u32; 14] = [
+    114_750, 216_750, 318_750, 420_750, 522_750, 624_750, 675_750, 828_750,
+    905_250, 1_032_750, 1_198_500, 1_236_750, 1_338_750, 1_377_000,
+];
+
+/// Xavier AGX EMC frequencies (kHz): 9 levels up to 2.133 GHz (LPDDR4).
+static XAVIER_MEM_KHZ: [u32; 9] = [
+    204_000, 408_000, 665_600, 800_000, 1_065_600, 1_331_200, 1_600_000,
+    1_866_000, 2_133_000,
+];
+
+pub static XAVIER_AGX: DeviceSpec = DeviceSpec {
+    kind: DeviceKind::XavierAgx,
+    cpu_arch: "ARM Carmel",
+    gpu_arch: "Volta",
+    cuda_cores: 512,
+    max_cores: 8,
+    cpu_khz: &XAVIER_CPU_KHZ,
+    gpu_khz: &XAVIER_GPU_KHZ,
+    mem_khz: &XAVIER_MEM_KHZ,
+    gpu_tput: 0.345,
+    cpu_eff: 0.92,
+    mem_bw: 0.55,
+    p_base_mw: 5_500.0,
+    p_core_max_mw: 1_750.0,
+    p_gpu_max_mw: 21_500.0,
+    p_mem_max_mw: 7_500.0,
+    peak_power_w: 65.0,
+};
+
+/// Orin Nano CPU frequencies (kHz): 20 levels up to 1.5104 GHz.
+static NANO_CPU_KHZ: [u32; 20] = [
+    115_200, 192_000, 268_800, 345_600, 422_400, 499_200, 576_000, 652_800,
+    729_600, 806_400, 883_200, 960_000, 1_036_800, 1_113_600, 1_190_400,
+    1_267_200, 1_344_000, 1_420_800, 1_497_600, 1_510_400,
+];
+
+/// Orin Nano GPU frequencies (kHz): 5 levels up to 624.75 MHz.
+static NANO_GPU_KHZ: [u32; 5] = [306_000, 408_000, 510_000, 612_000, 624_750];
+
+/// Orin Nano EMC frequencies (kHz): 3 levels up to 2.133 GHz.
+static NANO_MEM_KHZ: [u32; 3] = [665_600, 1_600_000, 2_133_000];
+
+pub static ORIN_NANO: DeviceSpec = DeviceSpec {
+    kind: DeviceKind::OrinNano,
+    cpu_arch: "ARM A78AE",
+    gpu_arch: "Ampere",
+    cuda_cores: 1024,
+    max_cores: 6,
+    cpu_khz: &NANO_CPU_KHZ,
+    gpu_khz: &NANO_GPU_KHZ,
+    mem_khz: &NANO_MEM_KHZ,
+    gpu_tput: 0.33,
+    cpu_eff: 0.95,
+    mem_bw: 0.4,
+    p_base_mw: 1_900.0,
+    p_core_max_mw: 520.0,
+    p_gpu_max_mw: 6_800.0,
+    p_mem_max_mw: 3_300.0,
+    peak_power_w: 15.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_cardinalities_match_paper_table2() {
+        assert_eq!(ORIN_AGX.total_power_modes(), 18_096);
+        assert_eq!(XAVIER_AGX.total_power_modes(), 29_232);
+        assert_eq!(ORIN_NANO.total_power_modes(), 1_800);
+    }
+
+    #[test]
+    fn frequency_level_counts_match_paper() {
+        assert_eq!(ORIN_AGX.cpu_khz.len(), 29);
+        assert_eq!(ORIN_AGX.gpu_khz.len(), 13);
+        assert_eq!(ORIN_AGX.mem_khz.len(), 4);
+        assert_eq!(XAVIER_AGX.cpu_khz.len(), 29);
+        assert_eq!(XAVIER_AGX.gpu_khz.len(), 14);
+        assert_eq!(XAVIER_AGX.mem_khz.len(), 9);
+        assert_eq!(ORIN_NANO.cpu_khz.len(), 20);
+        assert_eq!(ORIN_NANO.gpu_khz.len(), 5);
+        assert_eq!(ORIN_NANO.mem_khz.len(), 3);
+    }
+
+    #[test]
+    fn max_frequencies_match_paper() {
+        assert_eq!(ORIN_AGX.max_cpu_khz(), 2_201_600); // 2.2 GHz
+        assert_eq!(ORIN_AGX.max_gpu_khz(), 1_300_500); // 1.3 GHz
+        assert_eq!(ORIN_AGX.max_mem_khz(), 3_199_000); // 3.2 GHz
+        assert_eq!(XAVIER_AGX.max_cpu_khz(), 2_265_600);
+        assert_eq!(XAVIER_AGX.max_gpu_khz(), 1_377_000);
+        assert_eq!(ORIN_NANO.max_gpu_khz(), 624_750);
+    }
+
+    #[test]
+    fn frequency_tables_strictly_ascending() {
+        for kind in DeviceKind::ALL {
+            let s = kind.spec();
+            for tbl in [s.cpu_khz, s.gpu_khz, s.mem_khz] {
+                assert!(
+                    tbl.windows(2).all(|w| w[0] < w[1]),
+                    "non-ascending freq table on {:?}",
+                    kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kind_name_round_trips() {
+        for kind in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(DeviceKind::parse("rtx3090"), None);
+    }
+}

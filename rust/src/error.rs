@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+/// Unified error type for all PowerTrain subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// I/O failure (corpus files, checkpoints, artifacts).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA / PJRT runtime failure.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Malformed JSON (manifest, checkpoint, config).
+    #[error("json parse error: {0}")]
+    Json(String),
+
+    /// Malformed CSV (profiling corpus).
+    #[error("csv parse error: {0}")]
+    Csv(String),
+
+    /// An artifact referenced by the manifest is missing or inconsistent.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Invalid power mode / device configuration.
+    #[error("device error: {0}")]
+    Device(String),
+
+    /// Profiling pipeline failure (e.g. power never stabilized).
+    #[error("profiling error: {0}")]
+    Profiling(String),
+
+    /// Training / transfer driver failure.
+    #[error("training error: {0}")]
+    Training(String),
+
+    /// Optimization has no feasible solution (e.g. budget below idle power).
+    #[error("optimization error: {0}")]
+    Optimization(String),
+
+    /// Coordinator / serving failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Invalid CLI usage.
+    #[error("usage error: {0}")]
+    Usage(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json(msg.into())
+    }
+    pub fn csv(msg: impl Into<String>) -> Self {
+        Error::Csv(msg.into())
+    }
+}

@@ -1,0 +1,102 @@
+//! Ablations of PowerTrain's design choices (DESIGN.md §6 extension):
+//!
+//! * **last-layer reinit** — the paper's transfer surgery replaces the
+//!   final dense layer before fine-tuning; ablate it by fine-tuning the
+//!   reference weights unchanged.
+//! * **reference corpus size** — paper §3.2: "we test the impact of the
+//!   number of power modes used in training the reference NN, increasing
+//!   it from 500 to 4368 [and] do not observe any significant difference"
+//!   in the transferred models.
+
+use crate::device::DeviceKind;
+use crate::error::Result;
+use crate::experiments::common::{fmt_median_iqr, ExpContext};
+use crate::train::transfer::{transfer, TransferConfig};
+use crate::train::{Target, TrainConfig, Trainer};
+use crate::util::csv::Table as Csv;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::TextTable;
+use crate::workload::Workload;
+
+/// Ablation A: transfer with vs without reinitializing the last layer.
+pub fn reinit(ctx: &mut ExpContext) -> Result<()> {
+    let reference = ctx.reference(Workload::resnet(), Target::Time)?;
+    let corpus = ctx.corpus(DeviceKind::OrinAgx, Workload::mobilenet())?;
+    let mut with = Vec::new();
+    let mut without = Vec::new();
+    for rep in 0..ctx.reps() {
+        let seed = ctx.seed + 977 * rep as u64 + 5;
+        let mut rng = Rng::new(seed);
+        let sample = corpus.sample(50, &mut rng);
+        for (reinit, out) in [(true, &mut with), (false, &mut without)] {
+            let cfg = TransferConfig {
+                base: TrainConfig { epochs: 300, seed, ..Default::default() },
+                reinit_last_layer: reinit,
+            };
+            let (ck, _) = transfer(&ctx.rt, &reference, &sample, Target::Time, &cfg)?;
+            out.push(ctx.val_mape(&ck, &corpus, Target::Time)?);
+        }
+    }
+    let mut t = TextTable::new(&["variant", "time MAPE (median, Q1-Q3)"]);
+    t.row(vec!["reinit last layer (paper)".into(), fmt_median_iqr(&with)]);
+    t.row(vec!["keep last layer".into(), fmt_median_iqr(&without)]);
+    println!("{}", t.render());
+
+    let mut csv = Csv::new(&["variant", "mape_median", "mape_q1", "mape_q3"]);
+    for (name, v) in [("reinit", &with), ("keep", &without)] {
+        let m = stats::median_iqr(v);
+        csv.push_row(vec![
+            name.into(),
+            format!("{:.2}", m.median),
+            format!("{:.2}", m.q1),
+            format!("{:.2}", m.q3),
+        ]);
+    }
+    ctx.save_csv("ablation_reinit_last_layer.csv", &csv)
+}
+
+/// Ablation B: reference corpus size 500 -> 4,368 (paper §3.2 claims no
+/// significant effect on the transferred models).
+pub fn ref_size(ctx: &mut ExpContext) -> Result<()> {
+    let sizes: &[usize] = if ctx.quick { &[500, 1500] } else { &[500, 1000, 2000, 4368] };
+    let target_corpus = ctx.corpus(DeviceKind::OrinAgx, Workload::mobilenet())?;
+
+    let mut t = TextTable::new(&["ref corpus", "ref self-MAPE", "transferred MAPE"]);
+    let mut csv = Csv::new(&["ref_size", "ref_self_mape", "transfer_mape_median"]);
+    for &n in sizes {
+        let ref_corpus = ctx.corpus_sized(DeviceKind::OrinAgx, Workload::resnet(), n)?;
+        let epochs = if ctx.quick { 100 } else { 150 };
+        let cfg = TrainConfig { epochs, seed: ctx.seed ^ n as u64, ..Default::default() };
+        let trainer = Trainer::new(&ctx.rt);
+        let (reference, _) = trainer.train(&ref_corpus, Target::Time, &cfg)?;
+        let self_mape = ctx.val_mape(&reference, &ref_corpus, Target::Time)?;
+
+        let mut mapes = Vec::new();
+        for rep in 0..ctx.reps() {
+            let seed = ctx.seed + 31 * rep as u64 + n as u64;
+            let (ck, _) = ctx.pt_transfer(
+                &reference,
+                &target_corpus,
+                Target::Time,
+                50,
+                seed,
+                crate::train::LossKind::Mse,
+            )?;
+            mapes.push(ctx.val_mape(&ck, &target_corpus, Target::Time)?);
+        }
+        t.row(vec![
+            n.to_string(),
+            format!("{self_mape:.1}%"),
+            fmt_median_iqr(&mapes),
+        ]);
+        csv.push_row(vec![
+            n.to_string(),
+            format!("{self_mape:.2}"),
+            format!("{:.2}", stats::median(&mapes)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("  (paper section 3.2: no significant difference from 500 to 4368 reference modes)");
+    ctx.save_csv("ablation_reference_size.csv", &csv)
+}

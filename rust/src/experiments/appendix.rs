@@ -1,0 +1,64 @@
+//! Appendix Fig 14 / Table 5: epoch-time comparison across reference
+//! machines (RTX 3090, RTX A5000, Orin AGX, Raspberry Pi 5).
+//!
+//! The reference machines have no power-mode grids; they are modeled as
+//! throughput scalars relative to the Orin (calibrated to the paper's
+//! reported ordering: 3090 < A5000 < Orin << RPi5, with BERT DNR on the
+//! 8 GB RPi5).
+
+use crate::device::{DeviceKind, PowerMode};
+use crate::error::Result;
+use crate::experiments::common::ExpContext;
+use crate::sim::perf_model::epoch_time_s;
+use crate::util::csv::Table as Csv;
+use crate::util::table::TextTable;
+use crate::workload::{Arch, Workload};
+
+/// (name, gpu-epoch-time multiplier vs Orin MAXN, max model params).
+/// RPi5 trains on CPU only: two orders of magnitude slower; 8 GB RAM means
+/// BERT does not run (paper: DNR).
+const REFERENCE_MACHINES: [(&str, f64, f64); 4] = [
+    ("rtx3090", 0.18, f64::INFINITY),
+    ("a5000", 0.26, f64::INFINITY),
+    ("orin-agx", 1.0, f64::INFINITY),
+    ("rpi5", 110.0, 60.0e6),
+];
+
+pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
+    let spec = DeviceKind::OrinAgx.spec();
+    let maxn = PowerMode::maxn(spec);
+    let mut text = TextTable::new(&["workload", "3090", "a5000", "orin", "rpi5"]);
+    let mut csv = Csv::new(&["workload", "machine", "epoch_min"]);
+
+    for wl in Workload::default_five() {
+        let orin_epoch_min = epoch_time_s(spec, &wl, &maxn) / 60.0;
+        let mut cells = vec![wl.arch.name().to_string()];
+        for (name, mult, max_params) in REFERENCE_MACHINES {
+            let (_, params, _) = wl.arch_meta();
+            // Pi gets an extra penalty for the heavy conv workloads that
+            // vectorize poorly on its 4 ARM cores
+            let extra = if name == "rpi5" && wl.arch == Arch::YoloV8n { 1.6 } else { 1.0 };
+            let cell = if params > max_params {
+                csv.push_row(vec![wl.arch.name().into(), name.into(), "DNR".into()]);
+                "DNR".to_string()
+            } else {
+                let t = orin_epoch_min * mult * extra;
+                csv.push_row(vec![
+                    wl.arch.name().into(),
+                    name.into(),
+                    format!("{t:.2}"),
+                ]);
+                format!("{t:.1} min")
+            };
+            if name != "orin-agx" {
+                cells.push(cell);
+            } else {
+                cells.push(format!("{orin_epoch_min:.1} min"));
+            }
+        }
+        text.row(cells);
+    }
+    println!("{}", text.render());
+    println!("  (paper Fig 14: 3090 < A5000 < Orin; RPi5 ~2 orders slower, BERT DNR)");
+    ctx.save_csv("fig14_device_comparison.csv", &csv)
+}

@@ -1,0 +1,194 @@
+//! Shared experiment infrastructure: context, corpus cache, reference
+//! model cache, and evaluation helpers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::device::{DeviceKind, PowerModeGrid};
+use crate::error::Result;
+use crate::nn::checkpoint::Checkpoint;
+use crate::profiler::{Corpus, Profiler};
+use crate::runtime::Runtime;
+use crate::sim::TrainerSim;
+use crate::train::transfer::{transfer, TransferConfig};
+use crate::train::{Target, TrainConfig, Trainer};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::Workload;
+
+/// Key for corpus/model caches.
+type CorpusKey = (DeviceKind, String, usize);
+
+/// Shared state across experiments in one invocation: one PJRT runtime,
+/// memoized profiled corpora and reference checkpoints.
+pub struct ExpContext {
+    pub rt: Runtime,
+    pub out_dir: PathBuf,
+    /// Reduced repetitions / corpus sizes for smoke runs (`--quick`).
+    pub quick: bool,
+    pub seed: u64,
+    corpora: HashMap<CorpusKey, Corpus>,
+    references: HashMap<(String, &'static str), Checkpoint>,
+}
+
+impl ExpContext {
+    pub fn new(artifacts_dir: &Path, out_dir: &Path, quick: bool, seed: u64) -> Result<ExpContext> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(ExpContext {
+            rt: Runtime::new(artifacts_dir)?,
+            out_dir: out_dir.to_path_buf(),
+            quick,
+            seed,
+            corpora: HashMap::new(),
+            references: HashMap::new(),
+        })
+    }
+
+    /// Repetition count: paper uses 10 (20 for fig9b); we default to 5 and
+    /// 2 in quick mode.
+    pub fn reps(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            5
+        }
+    }
+
+    /// Full profiled corpus for (device, workload): Orin gets the paper's
+    /// 4,368-mode subset; Xavier 1,000 random; Nano 180 random. Memoized.
+    pub fn corpus(&mut self, device: DeviceKind, wl: Workload) -> Result<Corpus> {
+        let n = match device {
+            DeviceKind::OrinAgx => {
+                if self.quick {
+                    1200
+                } else {
+                    4368
+                }
+            }
+            DeviceKind::XavierAgx => 1000,
+            DeviceKind::OrinNano => 180,
+        };
+        self.corpus_sized(device, wl, n)
+    }
+
+    /// Profiled corpus of a specific size (memoized).
+    pub fn corpus_sized(&mut self, device: DeviceKind, wl: Workload, n: usize) -> Result<Corpus> {
+        let key = (device, wl.name(), n);
+        if let Some(c) = self.corpora.get(&key) {
+            return Ok(c.clone());
+        }
+        let modes = match device {
+            DeviceKind::OrinAgx => {
+                let grid = PowerModeGrid::paper_subset(device);
+                if n >= grid.len() {
+                    grid.modes
+                } else {
+                    let mut rng = Rng::new(self.seed ^ hash(&key));
+                    grid.sample(n, &mut rng)
+                }
+            }
+            _ => {
+                let mut rng = Rng::new(self.seed ^ hash(&key));
+                PowerModeGrid::random_subset(device, n, &mut rng).modes
+            }
+        };
+        let sim = TrainerSim::new(device.spec(), wl, self.seed ^ hash(&key) ^ 1);
+        let mut profiler = Profiler::new(sim);
+        let corpus = profiler.profile_modes(&modes)?;
+        self.corpora.insert(key, corpus.clone());
+        Ok(corpus)
+    }
+
+    /// Reference checkpoint for (workload, target) trained on the full
+    /// Orin corpus with the paper's hyperparameters. Memoized; also
+    /// persisted under `<out>/checkpoints/` for reuse by the CLI.
+    pub fn reference(&mut self, wl: Workload, target: Target) -> Result<Checkpoint> {
+        let key = (wl.name(), target.name());
+        if let Some(c) = self.references.get(&key) {
+            return Ok(c.clone());
+        }
+        let path = self
+            .out_dir
+            .join("checkpoints")
+            .join(format!("ref_{}_{}.json", wl.arch.name(), target.name()));
+        if let Ok(ck) = Checkpoint::load(&path) {
+            self.references.insert(key, ck.clone());
+            return Ok(ck);
+        }
+        let corpus = self.corpus(DeviceKind::OrinAgx, wl)?;
+        let epochs = if self.quick { 120 } else { 150 };
+        let cfg = TrainConfig { epochs, seed: self.seed, ..Default::default() };
+        let trainer = Trainer::new(&self.rt);
+        let (ck, _) = trainer.train(&corpus, target, &cfg)?;
+        ck.save(&path)?;
+        self.references.insert(key, ck.clone());
+        Ok(ck)
+    }
+
+    /// Standard PowerTrain transfer: `n` random modes from `corpus`.
+    pub fn pt_transfer(
+        &self,
+        reference: &Checkpoint,
+        corpus: &Corpus,
+        target: Target,
+        n: usize,
+        seed: u64,
+        loss: crate::train::LossKind,
+    ) -> Result<(Checkpoint, f64)> {
+        let mut rng = Rng::new(seed);
+        let sample = corpus.sample(n, &mut rng);
+        let cost = sample.total_cost_s();
+        let cfg = TransferConfig {
+            base: TrainConfig { epochs: 300, seed, loss, ..Default::default() },
+            ..Default::default()
+        };
+        let (ck, _) = transfer(&self.rt, reference, &sample, target, &cfg)?;
+        Ok((ck, cost))
+    }
+
+    /// From-scratch NN baseline on `n` random modes.
+    pub fn nn_scratch(
+        &self,
+        corpus: &Corpus,
+        target: Target,
+        n: usize,
+        seed: u64,
+    ) -> Result<(Checkpoint, f64)> {
+        let mut rng = Rng::new(seed);
+        let sample = corpus.sample(n, &mut rng);
+        let cost = sample.total_cost_s();
+        let cfg = TrainConfig { epochs: 300, seed, ..Default::default() };
+        let trainer = Trainer::new(&self.rt);
+        let (ck, _) = trainer.train(&sample, target, &cfg)?;
+        Ok((ck, cost))
+    }
+
+    /// Validation MAPE of a checkpoint against a corpus's observed values.
+    pub fn val_mape(&self, ck: &Checkpoint, corpus: &Corpus, target: Target) -> Result<f64> {
+        let modes: Vec<_> = corpus.records().iter().map(|r| r.mode).collect();
+        let preds = crate::predict::predict_modes(&self.rt, ck, &modes)?;
+        Ok(stats::mape(&preds, &target.values(corpus)))
+    }
+
+    /// Save a CSV table under the output directory.
+    pub fn save_csv(&self, name: &str, table: &Table) -> Result<()> {
+        let path = self.out_dir.join(name);
+        table.save(&path)?;
+        println!("  wrote {}", path.display());
+        Ok(())
+    }
+}
+
+fn hash(key: &CorpusKey) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+/// Format a median (Q1–Q3) cell the way the paper reports repetitions.
+pub fn fmt_median_iqr(values: &[f64]) -> String {
+    let m = stats::median_iqr(values);
+    format!("{:.1} ({:.1}-{:.1})", m.median, m.q1, m.q3)
+}

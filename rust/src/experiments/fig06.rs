@@ -1,0 +1,70 @@
+//! Fig 6: choice of the reference DNN workload — the 3x3 transfer matrix.
+//!
+//! Rows = reference workload the models were trained on; columns = target
+//! workload transferred to (50 modes); diagonal = the reference model
+//! validated on itself (no transfer, best case). The paper finds ResNet
+//! the best reference (highest power variation across modes).
+
+use crate::device::DeviceKind;
+use crate::error::Result;
+use crate::experiments::common::ExpContext;
+use crate::train::{LossKind, Target};
+use crate::util::csv::Table as Csv;
+use crate::util::stats;
+use crate::util::table::TextTable;
+use crate::workload::Workload;
+
+pub fn run(ctx: &mut ExpContext) -> Result<()> {
+    let workloads = [Workload::mobilenet(), Workload::resnet(), Workload::yolo()];
+    let mut csv = Csv::new(&["from", "to", "time_mape", "power_mape"]);
+    let mut text = TextTable::new(&["from \\ to", "mobilenet", "resnet", "yolo"]);
+
+    let mut resnet_row: Vec<(f64, f64)> = Vec::new();
+
+    for from in workloads {
+        let mut cells = vec![from.arch.name().to_string()];
+        for to in workloads {
+            let (time_mape, power_mape) = if from == to {
+                // diagonal: the reference model itself (NN on all samples)
+                let ck_t = ctx.reference(from, Target::Time)?;
+                let ck_p = ctx.reference(from, Target::Power)?;
+                let corpus = ctx.corpus(DeviceKind::OrinAgx, from)?;
+                (
+                    ctx.val_mape(&ck_t, &corpus, Target::Time)?,
+                    ctx.val_mape(&ck_p, &corpus, Target::Power)?,
+                )
+            } else {
+                let ref_t = ctx.reference(from, Target::Time)?;
+                let ref_p = ctx.reference(from, Target::Power)?;
+                let corpus = ctx.corpus(DeviceKind::OrinAgx, to)?;
+                let mut tm = Vec::new();
+                let mut pm = Vec::new();
+                for rep in 0..ctx.reps() {
+                    let seed = ctx.seed + 100 * rep as u64 + 1;
+                    let (ck_t, _) =
+                        ctx.pt_transfer(&ref_t, &corpus, Target::Time, 50, seed, LossKind::Mse)?;
+                    let (ck_p, _) =
+                        ctx.pt_transfer(&ref_p, &corpus, Target::Power, 50, seed, LossKind::Mse)?;
+                    tm.push(ctx.val_mape(&ck_t, &corpus, Target::Time)?);
+                    pm.push(ctx.val_mape(&ck_p, &corpus, Target::Power)?);
+                }
+                (stats::median(&tm), stats::median(&pm))
+            };
+            cells.push(format!("{time_mape:.1}% / {power_mape:.1}%"));
+            csv.push_row(vec![
+                from.arch.name().into(),
+                to.arch.name().into(),
+                format!("{time_mape:.2}"),
+                format!("{power_mape:.2}"),
+            ]);
+            if from == Workload::resnet() && from != to {
+                resnet_row.push((time_mape, power_mape));
+            }
+        }
+        text.row(cells);
+    }
+    println!("{}", text.render());
+    println!("  (cells: time MAPE / power MAPE; paper Fig 6: diagonal 8.1-9.7% / 3.6-4.8%,");
+    println!("   ResNet->MobileNet 14.5/5.6, ResNet->YOLO 11.5/5.0 — ResNet best reference)");
+    ctx.save_csv("fig06_transfer_matrix.csv", &csv)
+}

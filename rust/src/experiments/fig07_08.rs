@@ -1,0 +1,96 @@
+//! Figs 7 & 8: prediction error vs number of profiled power modes, NN vs
+//! PowerTrain, plus the profiling-time overhead curve (right Y axis).
+//!
+//! Fig 7 = time predictions, Fig 8 = power predictions. Targets MobileNet
+//! and YOLO (ResNet is the reference, so PT isn't reported for it);
+//! validation is against the full Orin corpus, as in the paper.
+
+use crate::device::DeviceKind;
+use crate::error::Result;
+use crate::experiments::common::{fmt_median_iqr, ExpContext};
+use crate::train::{LossKind, Target};
+use crate::util::csv::Table as Csv;
+use crate::util::stats;
+use crate::util::table::TextTable;
+use crate::workload::Workload;
+
+const SAMPLE_COUNTS: [usize; 6] = [10, 20, 30, 50, 75, 100];
+
+pub fn run(ctx: &mut ExpContext, target: Target) -> Result<()> {
+    let fig = match target {
+        Target::Time => "fig07",
+        Target::Power => "fig08",
+    };
+    let mut csv = Csv::new(&[
+        "workload", "method", "n_modes", "mape_median", "mape_q1", "mape_q3",
+        "profiling_min",
+    ]);
+
+    for wl in [Workload::mobilenet(), Workload::yolo()] {
+        let corpus = ctx.corpus(DeviceKind::OrinAgx, wl)?;
+        let reference = ctx.reference(Workload::resnet(), target)?;
+        let mut text = TextTable::new(&["n", "PT mape", "NN mape", "profiling"]);
+
+        for &n in &SAMPLE_COUNTS {
+            let mut pt_mapes = Vec::new();
+            let mut nn_mapes = Vec::new();
+            let mut costs = Vec::new();
+            for rep in 0..ctx.reps() {
+                let seed = ctx.seed + 1000 * rep as u64 + n as u64;
+                let (pt_ck, cost) =
+                    ctx.pt_transfer(&reference, &corpus, target, n, seed, LossKind::Mse)?;
+                pt_mapes.push(ctx.val_mape(&pt_ck, &corpus, target)?);
+                costs.push(cost);
+                let (nn_ck, _) = ctx.nn_scratch(&corpus, target, n, seed)?;
+                nn_mapes.push(ctx.val_mape(&nn_ck, &corpus, target)?);
+            }
+            let cost_min = stats::median(&costs) / 60.0;
+            text.row(vec![
+                n.to_string(),
+                fmt_median_iqr(&pt_mapes),
+                fmt_median_iqr(&nn_mapes),
+                format!("{cost_min:.1} min"),
+            ]);
+            for (method, mapes) in [("powertrain", &pt_mapes), ("nn", &nn_mapes)] {
+                let m = stats::median_iqr(mapes);
+                csv.push_row(vec![
+                    wl.arch.name().into(),
+                    method.into(),
+                    n.to_string(),
+                    format!("{:.2}", m.median),
+                    format!("{:.2}", m.q1),
+                    format!("{:.2}", m.q3),
+                    format!("{cost_min:.2}"),
+                ]);
+            }
+        }
+
+        // the "All" bar: NN trained on the full corpus (= reference quality)
+        let all_ck = ctx.reference(wl, target)?;
+        let all_mape = ctx.val_mape(&all_ck, &corpus, target)?;
+        let all_cost = corpus.total_cost_s() / 60.0;
+        text.row(vec![
+            "All".into(),
+            "-".into(),
+            format!("{all_mape:.1}"),
+            format!("{all_cost:.0} min"),
+        ]);
+        csv.push_row(vec![
+            wl.arch.name().into(),
+            "nn-all".into(),
+            corpus.len().to_string(),
+            format!("{all_mape:.2}"),
+            format!("{all_mape:.2}"),
+            format!("{all_mape:.2}"),
+            format!("{all_cost:.1}"),
+        ]);
+
+        println!("{} {} prediction:", wl.arch.name(), target.name());
+        println!("{}", text.render());
+    }
+    println!(
+        "  (paper {}: PT beats NN at low sample counts; e.g. Fig 7 MobileNet@10: 26.7% vs 52.6%)",
+        fig
+    );
+    ctx.save_csv(&format!("{fig}_{}_vs_samples.csv", target.name()), &csv)
+}

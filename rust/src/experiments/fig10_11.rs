@@ -1,0 +1,193 @@
+//! Figs 10 & 11: predicted vs observed Pareto fronts.
+//!
+//! Fig 10 — full scatter + fronts for a workload: the observed Pareto from
+//! ground truth, the PT-predicted Pareto (and its observed counterpart),
+//! and the NN-50 baseline fronts.
+//! Fig 11 — the zoomed MobileNet instance at a 30 W budget, reporting the
+//! exact chosen modes and their predicted/observed coordinates.
+
+use crate::device::DeviceKind;
+use crate::error::Result;
+use crate::experiments::common::ExpContext;
+use crate::pareto::{ParetoFront, Point};
+use crate::profiler::Corpus;
+use crate::sim::TrainerSim;
+use crate::train::{LossKind, Target};
+use crate::util::csv::Table as Csv;
+use crate::workload::Workload;
+
+/// Build (observed, PT-predicted, NN-predicted) point sets for a workload.
+struct FrontSet {
+    observed: Vec<Point>,
+    pt_pred: Vec<Point>,
+    nn_pred: Vec<Point>,
+}
+
+fn build_fronts(ctx: &mut ExpContext, wl: Workload, seed: u64) -> Result<(Corpus, FrontSet)> {
+    let corpus = ctx.corpus(DeviceKind::OrinAgx, wl)?;
+    let modes: Vec<_> = corpus.records().iter().map(|r| r.mode).collect();
+
+    let observed: Vec<Point> = corpus
+        .records()
+        .iter()
+        .map(|r| Point { mode: r.mode, time: r.time_ms, power_mw: r.power_mw })
+        .collect();
+
+    // PowerTrain models (transfer from ResNet reference with 50 modes)
+    let ref_t = ctx.reference(Workload::resnet(), Target::Time)?;
+    let ref_p = ctx.reference(Workload::resnet(), Target::Power)?;
+    let (pt_t, _) = ctx.pt_transfer(&ref_t, &corpus, Target::Time, 50, seed, LossKind::Mse)?;
+    let (pt_p, _) = ctx.pt_transfer(&ref_p, &corpus, Target::Power, 50, seed, LossKind::Mse)?;
+    let t_pred = crate::predict::predict_modes(&ctx.rt, &pt_t, &modes)?;
+    let p_pred = crate::predict::predict_modes(&ctx.rt, &pt_p, &modes)?;
+    let pt_pred: Vec<Point> = modes
+        .iter()
+        .zip(t_pred.iter().zip(&p_pred))
+        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
+        .collect();
+
+    // NN-50 baseline models
+    let (nn_t, _) = ctx.nn_scratch(&corpus, Target::Time, 50, seed)?;
+    let (nn_p, _) = ctx.nn_scratch(&corpus, Target::Power, 50, seed)?;
+    let t_nn = crate::predict::predict_modes(&ctx.rt, &nn_t, &modes)?;
+    let p_nn = crate::predict::predict_modes(&ctx.rt, &nn_p, &modes)?;
+    let nn_pred: Vec<Point> = modes
+        .iter()
+        .zip(t_nn.iter().zip(&p_nn))
+        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
+        .collect();
+
+    Ok((corpus, FrontSet { observed, pt_pred, nn_pred }))
+}
+
+/// Ground-truth coordinates of a predicted front's chosen modes ("PT Obs
+/// Pareto" in the paper's figures).
+fn observed_counterpart(wl: Workload, front: &ParetoFront, seed: u64) -> Vec<Point> {
+    let sim = TrainerSim::new(DeviceKind::OrinAgx.spec(), wl, seed);
+    front
+        .points()
+        .iter()
+        .map(|p| Point {
+            mode: p.mode,
+            time: sim.true_minibatch_ms(&p.mode),
+            power_mw: sim.true_power_mw(&p.mode),
+        })
+        .collect()
+}
+
+pub fn fig10(ctx: &mut ExpContext) -> Result<()> {
+    let wl = Workload::mobilenet();
+    let seed = ctx.seed + 31;
+    let (_corpus, fronts) = build_fronts(ctx, wl, seed)?;
+
+    let obs_front = ParetoFront::build(&fronts.observed);
+    let pt_front = ParetoFront::build(&fronts.pt_pred);
+    let nn_front = ParetoFront::build(&fronts.nn_pred);
+    let pt_obs = observed_counterpart(wl, &pt_front, seed);
+    let nn_obs = observed_counterpart(wl, &nn_front, seed);
+
+    let mut csv = Csv::new(&["series", "mode", "time_ms", "power_w"]);
+    let mut dump = |name: &str, pts: &[Point]| {
+        for p in pts {
+            csv.push_row(vec![
+                name.into(),
+                p.mode.label(),
+                format!("{:.3}", p.time),
+                format!("{:.3}", p.power_mw / 1000.0),
+            ]);
+        }
+    };
+    dump("obs_pareto", obs_front.points());
+    dump("pt_pred_pareto", pt_front.points());
+    dump("pt_obs_pareto", &pt_obs);
+    dump("nn_pred_pareto", nn_front.points());
+    dump("nn_obs_pareto", &nn_obs);
+
+    println!(
+        "fronts for {}: observed {} pts | PT predicted {} pts | NN predicted {} pts",
+        wl.name(),
+        obs_front.len(),
+        pt_front.len(),
+        nn_front.len()
+    );
+    // coverage: the PT front should span most of the observed power range
+    let span = |pts: &[Point]| {
+        let lo = pts.iter().map(|p| p.power_mw).fold(f64::INFINITY, f64::min);
+        let hi = pts.iter().map(|p| p.power_mw).fold(0.0, f64::max);
+        (lo / 1000.0, hi / 1000.0)
+    };
+    let (olo, ohi) = span(obs_front.points());
+    let (plo, phi) = span(pt_front.points());
+    let (nlo, nhi) = span(nn_front.points());
+    println!(
+        "power span W: observed {olo:.1}-{ohi:.1} | PT {plo:.1}-{phi:.1} | NN {nlo:.1}-{nhi:.1}"
+    );
+    println!("  (paper Fig 10: PT front tracks the observed front; NN limited to a small region)");
+    ctx.save_csv("fig10_pareto_fronts.csv", &csv)
+}
+
+pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
+    let wl = Workload::mobilenet();
+    let budget_w = 30.0;
+    let seed = ctx.seed + 32;
+    let (corpus, fronts) = build_fronts(ctx, wl, seed)?;
+
+    let mb_per_epoch = wl.minibatches_per_epoch() as f64;
+    let to_epoch_s = |ms: f64| ms * mb_per_epoch / 1000.0;
+
+    let obs_front = ParetoFront::build(&fronts.observed);
+    let pt_front = ParetoFront::build(&fronts.pt_pred);
+    let nn_front = ParetoFront::build(&fronts.nn_pred);
+
+    let optimal = obs_front.optimize(budget_w * 1000.0)?;
+    let sim = TrainerSim::new(DeviceKind::OrinAgx.spec(), wl, seed);
+
+    let mut csv = Csv::new(&[
+        "strategy", "mode", "pred_epoch_s", "pred_power_w", "obs_epoch_s", "obs_power_w",
+    ]);
+    csv.push_row(vec![
+        "optimal".into(),
+        optimal.mode.label(),
+        format!("{:.1}", to_epoch_s(optimal.time)),
+        format!("{:.2}", optimal.power_mw / 1000.0),
+        format!("{:.1}", to_epoch_s(optimal.time)),
+        format!("{:.2}", optimal.power_mw / 1000.0),
+    ]);
+
+    println!("MobileNet @ {budget_w} W (epoch times):");
+    println!(
+        "  ground-truth optimal: {} -> {:.1} s/epoch @ {:.2} W",
+        optimal.mode.label(),
+        to_epoch_s(optimal.time),
+        optimal.power_mw / 1000.0
+    );
+    for (name, front) in [("powertrain", &pt_front), ("nn-50", &nn_front)] {
+        match front.optimize(budget_w * 1000.0) {
+            Ok(chosen) => {
+                let obs_t = sim.true_minibatch_ms(&chosen.mode);
+                let obs_p = sim.true_power_mw(&chosen.mode);
+                println!(
+                    "  {name}: {} -> predicted {:.1} s @ {:.2} W, observed {:.1} s @ {:.2} W",
+                    chosen.mode.label(),
+                    to_epoch_s(chosen.time),
+                    chosen.power_mw / 1000.0,
+                    to_epoch_s(obs_t),
+                    obs_p / 1000.0
+                );
+                csv.push_row(vec![
+                    name.into(),
+                    chosen.mode.label(),
+                    format!("{:.1}", to_epoch_s(chosen.time)),
+                    format!("{:.2}", chosen.power_mw / 1000.0),
+                    format!("{:.1}", to_epoch_s(obs_t)),
+                    format!("{:.2}", obs_p / 1000.0),
+                ]);
+            }
+            Err(_) => println!("  {name}: no feasible mode under {budget_w} W"),
+        }
+    }
+    println!("  (paper Fig 11: optimal 186 s @ 29.9 W; NN picks 167 s but lands at 33.5 W,");
+    println!("   PT picks 179 s predicted and lands 183.9 s @ 30.3 W — near-optimal)");
+    let _ = corpus;
+    ctx.save_csv("fig11_mobilenet_30w.csv", &csv)
+}

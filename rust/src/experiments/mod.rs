@@ -1,0 +1,69 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md section 6 for the full index).
+//!
+//! Each experiment writes CSV series into the output directory and prints
+//! a summary table; `EXPERIMENTS.md` records paper-vs-measured.
+
+pub mod ablation;
+pub mod appendix;
+pub mod common;
+pub mod fig02;
+pub mod fig06;
+pub mod fig07_08;
+pub mod fig09;
+pub mod fig10_11;
+pub mod fig12_13;
+pub mod tables;
+
+use crate::error::{Error, Result};
+use common::ExpContext;
+
+/// All experiment ids, in the order `experiment all` runs them.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "table4",
+    "fig2a", "fig2c",
+    "fig6", "fig7", "fig8",
+    "fig9a", "fig9b", "fig9c", "fig9d", "fig9e",
+    "fig10", "fig11", "fig12", "fig13", "fig2b",
+    "fig14",
+    "ablation-reinit", "ablation-refsize",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, ctx: &mut ExpContext) -> Result<()> {
+    println!("\n=== experiment {id} ===");
+    let t0 = std::time::Instant::now();
+    match id {
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "table4" => tables::table4(ctx),
+        "fig2a" => fig02::fig2a(ctx),
+        "fig2c" => fig02::fig2c(ctx),
+        "fig6" => fig06::run(ctx),
+        "fig7" => fig07_08::run(ctx, crate::train::Target::Time),
+        "fig8" => fig07_08::run(ctx, crate::train::Target::Power),
+        "fig9a" => fig09::fig9a(ctx),
+        "fig9b" => fig09::fig9b(ctx),
+        "fig9c" => fig09::fig9c(ctx),
+        "fig9d" => fig09::fig9d(ctx),
+        "fig9e" => fig09::fig9e(ctx),
+        "fig10" => fig10_11::fig10(ctx),
+        "fig11" => fig10_11::fig11(ctx),
+        "fig12" | "fig13" | "fig2b" => fig12_13::run(ctx, id),
+        "fig14" => appendix::fig14(ctx),
+        "ablation-reinit" => ablation::reinit(ctx),
+        "ablation-refsize" => ablation::ref_size(ctx),
+        other => Err(Error::Usage(format!("unknown experiment '{other}'"))),
+    }?;
+    println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Run every experiment.
+pub fn run_all(ctx: &mut ExpContext) -> Result<()> {
+    for id in ALL {
+        run(id, ctx)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! # PowerTrain
+//!
+//! Production reproduction of *"PowerTrain: Fast, Generalizable Time and
+//! Power Prediction Models to Optimize DNN Training on Accelerated Edges"*
+//! (Prashanthi S.K. et al., FGCS 2024).
+//!
+//! The library is the Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (fused prediction-MLP forward/backward, fused
+//!   Adam) authored in `python/compile/kernels/`, lowered once at build time.
+//! * **L2** — the JAX model graph (`python/compile/model.py`) exported as
+//!   HLO-text artifacts (`make artifacts`).
+//! * **L3** — this crate: Jetson device models, the hardware simulator that
+//!   substitutes for physical Orin/Xavier/Nano devkits, the profiling
+//!   pipeline, the training/transfer/prediction drivers executing the AOT
+//!   artifacts via PJRT, the Pareto optimizer, all paper baselines, the
+//!   workload-arrival coordinator, and the experiment harness regenerating
+//!   every table and figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `powertrain` binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod nn;
+pub mod pareto;
+pub mod predict;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,432 @@
+//! `powertrain` — CLI for the PowerTrain edge power-mode optimization
+//! system (FGCS 2024 reproduction).
+//!
+//! Subcommands:
+//!   info                         device/workload/artifact inventory
+//!   profile                      profile power modes for a workload
+//!   train-ref                    train the reference time+power models
+//!   transfer                     PowerTrain-transfer onto a new workload
+//!   optimize                     pick the best power mode under a budget
+//!   serve                        run the coordinator on synthetic arrivals
+//!   experiment <id|all>          regenerate a paper table/figure
+//!
+//! Run `powertrain help` for flag documentation.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use powertrain::coordinator::{
+    handle_request, serve, CoordinatorConfig, Metrics, ReferenceModels, Request, Scenario,
+};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::error::{Error, Result};
+use powertrain::experiments::{self, common::ExpContext};
+use powertrain::profiler::Profiler;
+use powertrain::runtime::Runtime;
+use powertrain::sim::TrainerSim;
+use powertrain::train::{Target, TrainConfig};
+use powertrain::util::rng::Rng;
+use powertrain::util::table::TextTable;
+use powertrain::workload::Workload;
+
+/// Minimal flag parser: positional args + `--flag value` / `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    fn device(&self) -> Result<DeviceKind> {
+        let name = self.get_or("device", "orin");
+        DeviceKind::parse(&name)
+            .ok_or_else(|| Error::Usage(format!("unknown device '{name}' (orin|xavier|nano)")))
+    }
+
+    fn workload(&self) -> Result<Workload> {
+        let name = self.get_or("workload", "resnet");
+        Workload::parse(&name).ok_or_else(|| {
+            Error::Usage(format!(
+                "unknown workload '{name}' (resnet|mobilenet|yolo|bert|lstm[/dataset[/mbN]])"
+            ))
+        })
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        self.get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(powertrain::runtime::artifacts::default_artifacts_dir)
+    }
+}
+
+const HELP: &str = "\
+powertrain — fast, generalizable time & power prediction to optimize DNN
+training on accelerated edges (PowerTrain, FGCS 2024 reproduction)
+
+USAGE: powertrain <command> [flags]
+
+COMMANDS
+  info                       list devices, workloads, artifact status
+  profile                    profile N power modes; writes a corpus CSV
+      --device orin|xavier|nano   --workload resnet|mobilenet|yolo|bert|lstm
+      --modes N (default 50)      --out FILE     --seed N
+  train-ref                  train reference time+power models on the full
+                             corpus of the reference workload
+      --workload W   --epochs N (150)   --corpus-size N (4368)
+      --out DIR (checkpoints)   --seed N
+  transfer                   PowerTrain transfer onto a new workload/device
+      --ref-dir DIR (checkpoints)   --workload W   --device D
+      --modes N (50)   --loss mse|mape   --out DIR
+  optimize                   recommend a power mode under a power budget
+      --ref-dir DIR   --workload W   --device D   --budget WATTS
+  serve                      coordinator demo: synthetic request arrivals
+      --requests N (6)   --workers N (1)   --ref-dir DIR
+  experiment <id|all>        regenerate paper exhibits; ids:
+                             table1-4 fig2a fig2b fig2c fig6 fig7 fig8
+                             fig9a-e fig10-14
+      --out DIR (results)   --quick   --seed N
+  help                       this text
+
+Artifacts are read from ./artifacts (or $POWERTRAIN_ARTIFACTS, or
+--artifacts DIR); build them with `make artifacts`.
+";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let mut t = TextTable::new(&["device", "modes", "cpu freqs", "gpu freqs", "mem freqs", "cores"]);
+    for kind in DeviceKind::ALL {
+        let s = kind.spec();
+        t.row(vec![
+            kind.name().into(),
+            s.total_power_modes().to_string(),
+            s.cpu_khz.len().to_string(),
+            s.gpu_khz.len().to_string(),
+            s.mem_khz.len().to_string(),
+            s.max_cores.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut w = TextTable::new(&["workload", "dataset", "samples", "mb/epoch"]);
+    for wl in Workload::default_five() {
+        w.row(vec![
+            wl.arch.name().into(),
+            wl.dataset.name().into(),
+            wl.dataset.n_samples().to_string(),
+            wl.minibatches_per_epoch().to_string(),
+        ]);
+    }
+    println!("{}", w.render());
+
+    match Runtime::new(&args.artifacts_dir()) {
+        Ok(rt) => println!(
+            "artifacts: OK ({} artifacts, platform {})",
+            rt.manifest.artifacts.len(),
+            rt.platform()
+        ),
+        Err(e) => println!("artifacts: UNAVAILABLE — {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let wl = args.workload()?;
+    let n = args.usize_or("modes", 50)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let out = args.get_or(
+        "out",
+        &format!("results/corpus_{}_{}.csv", device.name(), wl.arch.name()),
+    );
+
+    let mut rng = Rng::new(seed);
+    let grid = match device {
+        DeviceKind::OrinAgx => PowerModeGrid::paper_subset(device),
+        _ => PowerModeGrid::full(device),
+    };
+    let modes = grid.sample(n, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), wl, seed));
+    let t0 = std::time::Instant::now();
+    let corpus = profiler.profile_modes(&modes)?;
+    corpus.save(std::path::Path::new(&out))?;
+    println!(
+        "profiled {} modes of {} on {} in {:.2}s wall ({:.1} simulated device-min) -> {}",
+        corpus.len(),
+        wl.name(),
+        device.name(),
+        t0.elapsed().as_secs_f64(),
+        corpus.total_cost_s() / 60.0,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_train_ref(args: &Args) -> Result<()> {
+    let wl = args.workload()?;
+    let epochs = args.usize_or("epochs", 150)?;
+    let corpus_size = args.usize_or("corpus-size", 4368)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let out = PathBuf::from(args.get_or("out", "checkpoints"));
+
+    let rt = Runtime::new(&args.artifacts_dir())?;
+    let mut rng = Rng::new(seed);
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let modes = if corpus_size >= grid.len() {
+        grid.modes
+    } else {
+        grid.sample(corpus_size, &mut rng)
+    };
+    println!("profiling {} modes of {} ...", modes.len(), wl.name());
+    let mut profiler = Profiler::new(TrainerSim::new(DeviceKind::OrinAgx.spec(), wl, seed));
+    let corpus = profiler.profile_modes(&modes)?;
+
+    println!("training reference models ({epochs} epochs) ...");
+    let reference = ReferenceModels::bootstrap(&rt, &corpus, epochs, seed)?;
+    std::fs::create_dir_all(&out)?;
+    reference.save(&out)?;
+    println!(
+        "saved reference models (time val-mse {:.4}, power val-mse {:.4}) to {}",
+        reference.time.val_loss,
+        reference.power.val_loss,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_transfer(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let wl = args.workload()?;
+    let n = args.usize_or("modes", 50)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
+    let out = PathBuf::from(args.get_or("out", "checkpoints"));
+    let loss = match args.get_or("loss", "mse").as_str() {
+        "mse" => powertrain::train::LossKind::Mse,
+        "mape" => powertrain::train::LossKind::Mape,
+        other => return Err(Error::Usage(format!("unknown loss '{other}'"))),
+    };
+
+    let rt = Runtime::new(&args.artifacts_dir())?;
+    let reference = ReferenceModels::load(&ref_dir)?;
+
+    let mut rng = Rng::new(seed);
+    let grid = powertrain::coordinator::prediction_grid(device, None, seed);
+    let modes = grid.sample(n, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), wl, seed));
+    let corpus = profiler.profile_modes(&modes)?;
+    println!(
+        "profiled {n} modes ({:.1} simulated device-min)",
+        corpus.total_cost_s() / 60.0
+    );
+
+    let cfg = powertrain::train::transfer::TransferConfig {
+        base: TrainConfig { epochs: 100, seed, loss, ..Default::default() },
+        ..Default::default()
+    };
+    let (time_ck, _) =
+        powertrain::train::transfer::transfer(&rt, &reference.time, &corpus, Target::Time, &cfg)?;
+    let (power_ck, _) =
+        powertrain::train::transfer::transfer(&rt, &reference.power, &corpus, Target::Power, &cfg)?;
+
+    std::fs::create_dir_all(&out)?;
+    let tag = format!("{}_{}", device.name(), wl.arch.name());
+    time_ck.save(&out.join(format!("pt_{tag}_time.json")))?;
+    power_ck.save(&out.join(format!("pt_{tag}_power.json")))?;
+    println!(
+        "saved transferred models for {} on {} to {}",
+        wl.name(),
+        device.name(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let device = args.device()?;
+    let wl = args.workload()?;
+    let budget_w = args.f64_or("budget", 30.0)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
+
+    let rt = Runtime::new(&args.artifacts_dir())?;
+    let reference = ReferenceModels::load(&ref_dir)?;
+    let cfg = CoordinatorConfig { artifacts_dir: args.artifacts_dir(), ..Default::default() };
+    let metrics = Metrics::new();
+    let req = Request {
+        id: 0,
+        device,
+        workload: wl,
+        power_budget_w: budget_w,
+        scenario: Scenario::ContinuousLearning,
+        seed,
+    };
+    let resp = handle_request(&rt, &reference, &cfg, &metrics, &req)?;
+    println!(
+        "chosen mode {} via {}\n  predicted: {:.1} ms/mb @ {:.2} W\n  observed:  {:.1} ms/mb @ {:.2} W (budget {budget_w} W)\n  profiling cost: {:.1} simulated device-min; decision latency {:.0} ms",
+        resp.chosen_mode.label(),
+        resp.strategy,
+        resp.predicted_time_ms,
+        resp.predicted_power_w,
+        resp.observed_time_ms,
+        resp.observed_power_w,
+        resp.profiling_cost_s / 60.0,
+        resp.latency_ms,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 6)?;
+    let workers = args.usize_or("workers", 1)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
+
+    let reference = ReferenceModels::load(&ref_dir).map_err(|e| {
+        Error::Usage(format!(
+            "cannot load reference models from {} ({e}); run `powertrain train-ref` first",
+            ref_dir.display()
+        ))
+    })?;
+    let cfg = CoordinatorConfig {
+        artifacts_dir: args.artifacts_dir(),
+        workers,
+        ..Default::default()
+    };
+
+    // synthetic arrival trace: mixed workloads, devices and budgets
+    let mut rng = Rng::new(seed);
+    let workloads = Workload::default_five();
+    let devices = [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            let device = devices[rng.below(devices.len())];
+            let budget_cap = device.spec().peak_power_w * 0.85;
+            Request {
+                id: i as u64,
+                device,
+                workload: workloads[rng.below(workloads.len())],
+                power_budget_w: rng.uniform_range(12.0, budget_cap.max(13.0)),
+                scenario: Scenario::FederatedLearning,
+                seed: seed + i as u64,
+            }
+        })
+        .collect();
+
+    println!("serving {n} synthetic requests on {workers} worker(s) ...");
+    let t0 = std::time::Instant::now();
+    let (responses, metrics) = serve(&cfg, &reference, requests)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = TextTable::new(&[
+        "id", "strategy", "mode", "pred ms", "obs ms", "obs W", "latency ms",
+    ]);
+    for r in &responses {
+        t.row(vec![
+            r.id.to_string(),
+            r.strategy.clone(),
+            r.chosen_mode.label(),
+            format!("{:.1}", r.predicted_time_ms),
+            format!("{:.1}", r.observed_time_ms),
+            format!("{:.2}", r.observed_power_w),
+            format!("{:.0}", r.latency_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", metrics.render());
+    println!(
+        "throughput: {:.2} requests/s over {:.1}s wall",
+        responses.len() as f64 / wall,
+        wall
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Usage("experiment requires an id or 'all'".into()))?
+        .clone();
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let quick = args.get("quick").is_some();
+    let seed = args.usize_or("seed", 42)? as u64;
+    let mut ctx = ExpContext::new(&args.artifacts_dir(), &out, quick, seed)?;
+    if id == "all" {
+        experiments::run_all(&mut ctx)
+    } else {
+        experiments::run(&id, &mut ctx)
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("train-ref") => cmd_train_ref(&args),
+        Some("transfer") => cmd_transfer(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Usage(format!(
+            "unknown command '{other}'; see `powertrain help`"
+        ))),
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

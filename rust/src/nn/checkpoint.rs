@@ -1,0 +1,143 @@
+//! JSON checkpoints for prediction models.
+//!
+//! A checkpoint bundles the MLP parameters with the feature/target scalers
+//! that were fitted alongside them — predictions are meaningless without
+//! the matching scalers, so they travel together (paper: "model
+//! checkpointing to save the best weights seen during training").
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::nn::{leaf_shape, MlpParams, LEAF_NAMES, N_LEAVES};
+use crate::profiler::StandardScaler;
+use crate::util::json::Value;
+
+/// A trained prediction model: params + scalers + provenance.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub params: MlpParams,
+    pub feature_scaler: StandardScaler,
+    pub target_scaler: StandardScaler,
+    /// What this model predicts: "time" or "power".
+    pub target: String,
+    /// Freeform provenance (workload, device, #samples, transfer origin).
+    pub provenance: String,
+    /// Best validation loss seen when this checkpoint was taken.
+    pub val_loss: f64,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Value {
+        let mut leaves = Vec::with_capacity(N_LEAVES);
+        for (i, name) in LEAF_NAMES.iter().enumerate() {
+            leaves.push((
+                *name,
+                Value::from_f32_slice(&self.params.leaves[i]),
+            ));
+        }
+        Value::obj(vec![
+            ("kind", Value::Str("powertrain-checkpoint-v1".into())),
+            ("target", Value::Str(self.target.clone())),
+            ("provenance", Value::Str(self.provenance.clone())),
+            ("val_loss", Value::Num(self.val_loss)),
+            ("feature_scaler", self.feature_scaler.to_json()),
+            ("target_scaler", self.target_scaler.to_json()),
+            ("params", Value::obj(leaves)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Checkpoint> {
+        if v.req("kind")?.as_str()? != "powertrain-checkpoint-v1" {
+            return Err(Error::json("not a powertrain checkpoint"));
+        }
+        let pv = v.req("params")?;
+        let mut leaves = Vec::with_capacity(N_LEAVES);
+        for (i, name) in LEAF_NAMES.iter().enumerate() {
+            let leaf = pv.req(name)?.as_f32_vec()?;
+            let want: usize = leaf_shape(i).iter().product();
+            if leaf.len() != want {
+                return Err(Error::json(format!(
+                    "leaf {name} has {} values, expected {want}",
+                    leaf.len()
+                )));
+            }
+            leaves.push(leaf);
+        }
+        Ok(Checkpoint {
+            params: MlpParams { leaves },
+            feature_scaler: StandardScaler::from_json(v.req("feature_scaler")?)?,
+            target_scaler: StandardScaler::from_json(v.req("target_scaler")?)?,
+            target: v.req("target")?.as_str()?.to_string(),
+            provenance: v.req("provenance")?.as_str()?.to_string(),
+            val_loss: v.req("val_loss")?.as_f64()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn demo() -> Checkpoint {
+        let mut rng = Rng::new(1);
+        Checkpoint {
+            params: MlpParams::init_he(&mut rng),
+            feature_scaler: StandardScaler::fit(&[
+                vec![1.0, 2.0, 3.0, 4.0],
+                vec![2.0, 3.0, 4.0, 5.0],
+            ]),
+            target_scaler: StandardScaler::fit1(&[10.0, 20.0]),
+            target: "time".into(),
+            provenance: "test".into(),
+            val_loss: 0.123,
+        }
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let c = demo();
+        let dir = std::env::temp_dir().join("pt_ckpt_test");
+        let path = dir.join("time.json");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.params, c.params);
+        assert_eq!(back.feature_scaler, c.feature_scaler);
+        assert_eq!(back.target, "time");
+        assert_eq!(back.val_loss, 0.123);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoint() {
+        let c = demo();
+        let mut v = c.to_json();
+        // truncate a leaf
+        if let Value::Obj(m) = &mut v {
+            if let Some(Value::Obj(pm)) = m.get_mut("params") {
+                pm.insert("w1".into(), Value::Arr(vec![Value::Num(1.0)]));
+            }
+        }
+        let err = Checkpoint::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("expected"));
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let v = Value::parse(r#"{"kind": "something-else"}"#).unwrap();
+        assert!(Checkpoint::from_json(&v).is_err());
+    }
+}

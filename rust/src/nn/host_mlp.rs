@@ -1,0 +1,95 @@
+//! Pure-rust forward pass of the prediction MLP.
+//!
+//! Used to (a) cross-check the AOT `predict` artifact in integration tests,
+//! (b) serve as a fallback predictor when artifacts are unavailable, and
+//! (c) power the closed-form baselines that don't go through XLA.
+
+use crate::nn::{MlpParams, DIMS};
+
+/// Inference-mode forward for a single feature row (standardized space).
+pub fn forward_one(p: &MlpParams, x: &[f32; 4]) -> f32 {
+    let mut act: Vec<f32> = x.to_vec();
+    for layer in 0..4 {
+        let (ins, outs) = (DIMS[layer], DIMS[layer + 1]);
+        let w = &p.leaves[layer * 2];
+        let b = &p.leaves[layer * 2 + 1];
+        let mut next = vec![0.0f32; outs];
+        for (o, nx) in next.iter_mut().enumerate() {
+            let mut acc = b[o];
+            for (i, &a) in act.iter().enumerate() {
+                acc += a * w[i * outs + o]; // row-major [ins, outs]
+            }
+            *nx = if layer < 3 { acc.max(0.0) } else { acc };
+        }
+        debug_assert_eq!(act.len(), ins);
+        act = next;
+    }
+    act[0]
+}
+
+/// Batched forward.
+pub fn forward_batch(p: &MlpParams, xs: &[[f32; 4]]) -> Vec<f32> {
+    xs.iter().map(|x| forward_one(p, x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::MlpParams;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_params_give_zero_output() {
+        let p = MlpParams::zeros();
+        assert_eq!(forward_one(&p, &[1.0, -2.0, 3.0, 0.5]), 0.0);
+    }
+
+    #[test]
+    fn hand_computed_tiny_case() {
+        // set only w1[0,0]=1, b4[0]=0.25, w2[0,0]=1, w3[0,0]=1, w4[0,0]=2:
+        // x=[3,0,0,0] -> h1[0]=3 -> h2[0]=3 -> h3[0]=3 -> y=6.25
+        let mut p = MlpParams::zeros();
+        p.leaves[0][0] = 1.0; // w1[0][0] (row-major [4,256])
+        p.leaves[2][0] = 1.0; // w2[0][0] ([256,128])
+        p.leaves[4][0] = 1.0; // w3[0][0]
+        p.leaves[6][0] = 2.0; // w4[0][0]
+        p.leaves[7][0] = 0.25;
+        let y = forward_one(&p, &[3.0, 0.0, 0.0, 0.0]);
+        assert!((y - 6.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_gates_negative_path() {
+        let mut p = MlpParams::zeros();
+        p.leaves[0][0] = -1.0; // negative pre-activation -> relu kills it
+        p.leaves[2][0] = 1.0;
+        p.leaves[4][0] = 1.0;
+        p.leaves[6][0] = 1.0;
+        let y = forward_one(&p, &[5.0, 0.0, 0.0, 0.0]);
+        assert_eq!(y, 0.0);
+    }
+
+    #[test]
+    fn batch_equals_per_row() {
+        let mut rng = Rng::new(4);
+        let p = MlpParams::init_he(&mut rng);
+        let xs = [
+            [0.1, -0.5, 1.2, 0.0],
+            [2.0, 2.0, -2.0, 1.0],
+            [0.0, 0.0, 0.0, 0.0],
+        ];
+        let batch = forward_batch(&p, &xs);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(batch[i], forward_one(&p, x));
+        }
+    }
+
+    #[test]
+    fn output_continuous_in_input() {
+        let mut rng = Rng::new(5);
+        let p = MlpParams::init_he(&mut rng);
+        let base = forward_one(&p, &[0.3, 0.3, 0.3, 0.3]);
+        let nudged = forward_one(&p, &[0.3001, 0.3, 0.3, 0.3]);
+        assert!((base - nudged).abs() < 0.01);
+    }
+}

@@ -1,0 +1,187 @@
+//! Host-side state of the prediction MLPs: parameters, Adam moments,
+//! initialization, checkpointing and a pure-rust forward pass used for
+//! verification against the AOT artifacts.
+//!
+//! The architecture is fixed by the paper (Table 4): dense 4-256-128-64-1,
+//! ReLU x 3 + linear, dropout after layers 1-2 (train-time only, lives in
+//! the artifacts). The canonical parameter order `w1 b1 w2 b2 w3 b3 w4 b4`
+//! must match `python/compile/kernels/ref.py::PARAM_NAMES`.
+
+pub mod checkpoint;
+pub mod host_mlp;
+
+use crate::util::rng::Rng;
+
+/// Layer widths, input to output.
+pub const DIMS: [usize; 5] = [4, 256, 128, 64, 1];
+/// Number of parameter tensors (4 weights + 4 biases).
+pub const N_LEAVES: usize = 8;
+
+/// Canonical leaf names, matching the python side.
+pub const LEAF_NAMES: [&str; N_LEAVES] = ["w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4"];
+
+/// Shape of the i-th leaf in canonical order.
+pub fn leaf_shape(i: usize) -> Vec<usize> {
+    let layer = i / 2;
+    if i % 2 == 0 {
+        vec![DIMS[layer], DIMS[layer + 1]] // weight
+    } else {
+        vec![DIMS[layer + 1]] // bias
+    }
+}
+
+/// Total scalar parameter count.
+pub fn total_params() -> usize {
+    (0..N_LEAVES).map(|i| leaf_shape(i).iter().product::<usize>()).sum()
+}
+
+/// MLP parameters (or any same-shaped tree: gradients, Adam moments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpParams {
+    /// Leaves in canonical order, each flattened row-major.
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl MlpParams {
+    /// He-normal initialization for weights, zeros for biases — matching
+    /// `ref.init_params` on the python side.
+    pub fn init_he(rng: &mut Rng) -> MlpParams {
+        let mut leaves = Vec::with_capacity(N_LEAVES);
+        for i in 0..N_LEAVES {
+            let shape = leaf_shape(i);
+            let n: usize = shape.iter().product();
+            if i % 2 == 0 {
+                let fan_in = shape[0] as f64;
+                let std = (2.0 / fan_in).sqrt();
+                leaves.push((0..n).map(|_| (rng.normal() * std) as f32).collect());
+            } else {
+                leaves.push(vec![0.0; n]);
+            }
+        }
+        MlpParams { leaves }
+    }
+
+    /// All-zeros tree (Adam moment init).
+    pub fn zeros() -> MlpParams {
+        MlpParams {
+            leaves: (0..N_LEAVES)
+                .map(|i| vec![0.0; leaf_shape(i).iter().product()])
+                .collect(),
+        }
+    }
+
+    /// Reinitialize the final dense layer (w4, b4) — the PowerTrain
+    /// transfer-learning surgery: "removing the last dense layer and adding
+    /// a fresh layer" (paper section 3.2).
+    pub fn reinit_last_layer(&mut self, rng: &mut Rng) {
+        let w4 = N_LEAVES - 2;
+        let fan_in = DIMS[3] as f64;
+        let std = (2.0 / fan_in).sqrt();
+        for v in self.leaves[w4].iter_mut() {
+            *v = (rng.normal() * std) as f32;
+        }
+        for v in self.leaves[w4 + 1].iter_mut() {
+            *v = 0.0;
+        }
+    }
+
+    pub fn leaf(&self, name: &str) -> Option<&[f32]> {
+        LEAF_NAMES
+            .iter()
+            .position(|&n| n == name)
+            .map(|i| self.leaves[i].as_slice())
+    }
+
+    /// L2 norm over all parameters (used in tests / divergence guards).
+    pub fn l2_norm(&self) -> f64 {
+        self.leaves
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.leaves.iter().all(|l| l.iter().all(|x| x.is_finite()))
+    }
+}
+
+/// Adam optimizer state: first/second moments plus the step counter.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: MlpParams,
+    pub v: MlpParams,
+    /// 1-based count of steps already applied.
+    pub step: u64,
+}
+
+impl AdamState {
+    pub fn fresh() -> AdamState {
+        AdamState { m: MlpParams::zeros(), v: MlpParams::zeros(), step: 0 }
+    }
+
+    /// The `t` fed to the next train-step artifact (1-based).
+    pub fn next_t(&self) -> f32 {
+        (self.step + 1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_total_match_architecture() {
+        assert_eq!(leaf_shape(0), vec![4, 256]);
+        assert_eq!(leaf_shape(1), vec![256]);
+        assert_eq!(leaf_shape(6), vec![64, 1]);
+        assert_eq!(leaf_shape(7), vec![1]);
+        // 4*256+256 + 256*128+128 + 128*64+64 + 64*1+1
+        assert_eq!(total_params(), 42_497);
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let mut rng = Rng::new(1);
+        let p = MlpParams::init_he(&mut rng);
+        // w2 is the biggest leaf: std should be ~sqrt(2/256)
+        let w2: Vec<f64> = p.leaves[2].iter().map(|&x| x as f64).collect();
+        let std = crate::util::stats::std_dev(&w2);
+        let want = (2.0f64 / 256.0).sqrt();
+        assert!((std - want).abs() / want < 0.05, "std={std} want={want}");
+        // biases zero
+        assert!(p.leaves[1].iter().all(|&b| b == 0.0));
+        assert!(p.is_finite());
+    }
+
+    #[test]
+    fn reinit_last_layer_touches_only_w4_b4() {
+        let mut rng = Rng::new(2);
+        let p0 = MlpParams::init_he(&mut rng);
+        let mut p1 = p0.clone();
+        // set b4 nonzero so the reset is observable
+        p1.leaves[7][0] = 3.0;
+        p1.reinit_last_layer(&mut rng);
+        for i in 0..6 {
+            assert_eq!(p0.leaves[i], p1.leaves[i], "leaf {i} changed");
+        }
+        assert_ne!(p0.leaves[6], p1.leaves[6]);
+        assert_eq!(p1.leaves[7], vec![0.0]);
+    }
+
+    #[test]
+    fn adam_state_step_counter() {
+        let mut s = AdamState::fresh();
+        assert_eq!(s.next_t(), 1.0);
+        s.step += 1;
+        assert_eq!(s.next_t(), 2.0);
+    }
+
+    #[test]
+    fn leaf_lookup_by_name() {
+        let p = MlpParams::zeros();
+        assert_eq!(p.leaf("w1").unwrap().len(), 1024);
+        assert!(p.leaf("w9").is_none());
+    }
+}

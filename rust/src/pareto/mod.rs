@@ -1,0 +1,233 @@
+//! Time–power Pareto fronts and the power-budget optimization (paper
+//! section 5).
+//!
+//! Given (predicted or observed) time and power for a set of power modes,
+//! build the minimization Pareto front and answer the paper's optimization
+//! query: *the mode minimizing epoch training time subject to
+//! `power <= budget`*. Also computes the evaluation metrics of Figs 12–13:
+//! time-penalty %, excess-power AUC, A/L and A/L+1.
+
+use crate::device::PowerMode;
+use crate::error::{Error, Result};
+
+/// One candidate: a power mode with its (time, power) coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub mode: PowerMode,
+    /// Training time (per minibatch ms or per epoch s — any consistent unit).
+    pub time: f64,
+    /// Power draw (mW).
+    pub power_mw: f64,
+}
+
+/// A minimization Pareto front over (time, power), sorted by power
+/// ascending (and therefore time strictly descending).
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    points: Vec<Point>,
+}
+
+impl ParetoFront {
+    /// Build the front from arbitrary candidates.
+    pub fn build(candidates: &[Point]) -> ParetoFront {
+        let mut sorted: Vec<Point> = candidates.to_vec();
+        // sort by power asc, tie-break time asc
+        sorted.sort_by(|a, b| {
+            a.power_mw
+                .partial_cmp(&b.power_mw)
+                .unwrap()
+                .then(a.time.partial_cmp(&b.time).unwrap())
+        });
+        let mut front: Vec<Point> = Vec::new();
+        let mut best_time = f64::INFINITY;
+        for p in sorted {
+            if p.time < best_time {
+                front.push(p);
+                best_time = p.time;
+            }
+        }
+        ParetoFront { points: front }
+    }
+
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The paper's optimization: the Pareto point with the largest power
+    /// that is still within `budget_mw` (that point has the minimum time
+    /// among feasible modes).
+    pub fn optimize(&self, budget_mw: f64) -> Result<Point> {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| p.power_mw <= budget_mw)
+            .copied()
+            .ok_or_else(|| {
+                Error::Optimization(format!(
+                    "no power mode fits within {:.1} W",
+                    budget_mw / 1000.0
+                ))
+            })
+    }
+
+    /// True if no point in the front dominates another (invariant check).
+    pub fn is_valid(&self) -> bool {
+        self.points.windows(2).all(|w| {
+            w[0].power_mw <= w[1].power_mw && w[0].time > w[1].time
+        })
+    }
+}
+
+/// Evaluation of one optimization strategy over a budget sweep, against
+/// ground truth (Figs 12–13).
+#[derive(Debug, Clone, Default)]
+pub struct SweepMetrics {
+    /// Excess training time vs the optimal mode, % per solved budget.
+    pub time_penalty_pct: Vec<f64>,
+    /// Observed power minus budget, clamped at 0, W per solved budget.
+    pub excess_power_w: Vec<f64>,
+    /// Count of budgets where observed power exceeded the budget.
+    pub over_budget: usize,
+    /// Count where it exceeded budget + 1 W.
+    pub over_budget_1w: usize,
+    /// Budgets with no feasible solution under the strategy.
+    pub infeasible: usize,
+    pub solved: usize,
+}
+
+impl SweepMetrics {
+    /// Normalized excess-power area under the curve (W per solution) —
+    /// the "Area" metric of Fig 13.
+    pub fn area_w(&self) -> f64 {
+        if self.solved == 0 {
+            return 0.0;
+        }
+        self.excess_power_w.iter().sum::<f64>() / self.solved as f64
+    }
+
+    /// % of solutions exceeding the power limit (A/L in Fig 13).
+    pub fn over_pct(&self) -> f64 {
+        if self.solved == 0 {
+            return 0.0;
+        }
+        100.0 * self.over_budget as f64 / self.solved as f64
+    }
+
+    /// % exceeding the limit by more than 1 W (A/L+1 in Fig 13).
+    pub fn over1_pct(&self) -> f64 {
+        if self.solved == 0 {
+            return 0.0;
+        }
+        100.0 * self.over_budget_1w as f64 / self.solved as f64
+    }
+
+    /// Record one budget's outcome.
+    pub fn record(
+        &mut self,
+        budget_mw: f64,
+        observed: Point,
+        optimal: Point,
+    ) {
+        self.solved += 1;
+        self.time_penalty_pct
+            .push(100.0 * (observed.time - optimal.time) / optimal.time);
+        let excess = (observed.power_mw - budget_mw).max(0.0) / 1000.0;
+        self.excess_power_w.push(excess);
+        if observed.power_mw > budget_mw {
+            self.over_budget += 1;
+        }
+        if observed.power_mw > budget_mw + 1000.0 {
+            self.over_budget_1w += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerMode};
+    use crate::util::rng::Rng;
+
+    fn pm() -> PowerMode {
+        PowerMode::maxn(DeviceKind::OrinAgx.spec())
+    }
+
+    fn pt(time: f64, power_w: f64) -> Point {
+        Point { mode: pm(), time, power_mw: power_w * 1000.0 }
+    }
+
+    #[test]
+    fn front_excludes_dominated_points() {
+        let pts = vec![
+            pt(100.0, 10.0),
+            pt(80.0, 20.0),
+            pt(90.0, 25.0),  // dominated by (80, 20)
+            pt(60.0, 30.0),
+            pt(70.0, 35.0),  // dominated by (60, 30)
+        ];
+        let f = ParetoFront::build(&pts);
+        assert_eq!(f.len(), 3);
+        assert!(f.is_valid());
+        let times: Vec<f64> = f.points().iter().map(|p| p.time).collect();
+        assert_eq!(times, vec![100.0, 80.0, 60.0]);
+    }
+
+    #[test]
+    fn optimize_picks_fastest_within_budget() {
+        let f = ParetoFront::build(&[pt(100.0, 10.0), pt(80.0, 20.0), pt(60.0, 30.0)]);
+        assert_eq!(f.optimize(25_000.0).unwrap().time, 80.0);
+        assert_eq!(f.optimize(30_000.0).unwrap().time, 60.0);
+        assert_eq!(f.optimize(1_000_000.0).unwrap().time, 60.0);
+        assert!(f.optimize(5_000.0).is_err());
+    }
+
+    #[test]
+    fn duplicate_and_tied_points_handled() {
+        let pts = vec![pt(50.0, 10.0), pt(50.0, 10.0), pt(50.0, 12.0)];
+        let f = ParetoFront::build(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].power_mw, 10_000.0);
+    }
+
+    #[test]
+    fn front_from_random_cloud_is_valid_and_minimal() {
+        let mut rng = Rng::new(8);
+        let pts: Vec<Point> = (0..500)
+            .map(|_| pt(rng.uniform_range(10.0, 500.0), rng.uniform_range(8.0, 60.0)))
+            .collect();
+        let f = ParetoFront::build(&pts);
+        assert!(f.is_valid());
+        // no candidate strictly dominates any front point
+        for fp in f.points() {
+            assert!(!pts.iter().any(|c| c.time < fp.time && c.power_mw < fp.power_mw));
+        }
+    }
+
+    #[test]
+    fn sweep_metrics_accounting() {
+        let mut m = SweepMetrics::default();
+        let optimal = pt(100.0, 20.0);
+        // on budget, on time
+        m.record(20_000.0, pt(100.0, 20.0), optimal);
+        // 10% slower, 0.5 W over
+        m.record(20_000.0, pt(110.0, 20.5), optimal);
+        // 2 W over
+        m.record(20_000.0, pt(95.0, 22.0), optimal);
+        assert_eq!(m.solved, 3);
+        assert_eq!(m.over_budget, 2);
+        assert_eq!(m.over_budget_1w, 1);
+        assert!((m.over_pct() - 66.666).abs() < 0.01);
+        assert!((m.area_w() - (0.5 + 2.0) / 3.0).abs() < 1e-9);
+        assert!((m.time_penalty_pct[1] - 10.0).abs() < 1e-9);
+        // MAXN-style: faster than optimal -> negative penalty
+        assert!(m.time_penalty_pct[2] < 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Batched prediction over power-mode grids — the request-path hot loop.
+//!
+//! Given a trained checkpoint, predicts training time / power for every
+//! mode of a grid (4,368–29,232 modes) by streaming standardized feature
+//! chunks through the AOT `predict` artifact. This feeds the Pareto
+//! construction (paper section 5).
+
+use crate::device::PowerMode;
+use crate::error::Result;
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::host_mlp;
+use crate::runtime::{f32_literal, to_f32_vec, Runtime};
+
+/// Predict raw-unit targets (ms or mW) for a slice of power modes using the
+/// AOT artifact. Padding rows are zero-features; their outputs are dropped.
+pub fn predict_modes(
+    rt: &Runtime,
+    ckpt: &Checkpoint,
+    modes: &[PowerMode],
+) -> Result<Vec<f64>> {
+    let bsz = rt.manifest.predict_batch;
+    let dim = rt.manifest.input_dim;
+    let mut out = Vec::with_capacity(modes.len());
+
+    // invariant inputs (weights + target-scaler scalars) are materialized
+    // once and re-submitted by reference for every chunk — the dominant
+    // per-chunk cost would otherwise be copying ~166 KiB of weights
+    // (see EXPERIMENTS.md section Perf)
+    let mut const_lits: Vec<xla::Literal> = Vec::with_capacity(10);
+    for (i, leaf) in ckpt.params.leaves.iter().enumerate() {
+        const_lits.push(f32_literal(leaf, &crate::nn::leaf_shape(i))?);
+    }
+    let y_mean = f32_literal(&[ckpt.target_scaler.mean[0] as f32], &[])?;
+    let y_std = f32_literal(&[ckpt.target_scaler.std[0] as f32], &[])?;
+
+    // feature standardization hoisted out of the inner loop
+    let f_mean = &ckpt.feature_scaler.mean;
+    let f_std = &ckpt.feature_scaler.std;
+    let mut x = vec![0.0f32; bsz * dim];
+
+    for chunk in modes.chunks(bsz) {
+        for (row, pm) in chunk.iter().enumerate() {
+            let feats = pm.features();
+            for d in 0..dim {
+                x[row * dim + d] = ((feats[d] as f64 - f_mean[d]) / f_std[d]) as f32;
+            }
+        }
+        // zero any padding rows left over from a previous larger chunk
+        for v in x[chunk.len() * dim..].iter_mut() {
+            *v = 0.0;
+        }
+        let x_lit = f32_literal(&x, &[bsz, dim])?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(11);
+        inputs.extend(const_lits.iter());
+        inputs.push(&x_lit);
+        inputs.push(&y_mean);
+        inputs.push(&y_std);
+        let outs = rt.execute_refs("predict", &inputs)?;
+        let preds = to_f32_vec(&outs[0])?;
+        out.extend(preds.iter().take(chunk.len()).map(|&p| p as f64));
+    }
+    Ok(out)
+}
+
+/// Pure-rust fallback prediction (no XLA) — used for verification and by
+/// baselines that don't warrant an artifact round-trip.
+pub fn predict_modes_host(ckpt: &Checkpoint, modes: &[PowerMode]) -> Vec<f64> {
+    modes
+        .iter()
+        .map(|pm| {
+            let feats = pm.features();
+            let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
+            let z = ckpt.feature_scaler.transform_row(&raw);
+            let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
+            let pred_std = host_mlp::forward_one(&ckpt.params, &zf) as f64;
+            ckpt.target_scaler.inverse1(pred_std)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerModeGrid};
+    use crate::nn::MlpParams;
+    use crate::profiler::StandardScaler;
+    use crate::util::rng::Rng;
+
+    fn demo_ckpt() -> Checkpoint {
+        let mut rng = Rng::new(3);
+        Checkpoint {
+            params: MlpParams::init_he(&mut rng),
+            feature_scaler: StandardScaler {
+                mean: vec![6.0, 1200.0, 700.0, 1500.0],
+                std: vec![3.0, 600.0, 350.0, 1000.0],
+            },
+            target_scaler: StandardScaler { mean: vec![100.0], std: vec![40.0] },
+            target: "time".into(),
+            provenance: "test".into(),
+            val_loss: 0.0,
+        }
+    }
+
+    #[test]
+    fn host_prediction_is_deterministic_and_scaled() {
+        let ckpt = demo_ckpt();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let modes = &grid.modes[..100];
+        let a = predict_modes_host(&ckpt, modes);
+        let b = predict_modes_host(&ckpt, modes);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        // outputs live in raw-unit space (mean 100, std 40): not all ~0
+        let spread = a.iter().cloned().fold(f64::MIN, f64::max)
+            - a.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1.0, "degenerate predictions");
+    }
+}

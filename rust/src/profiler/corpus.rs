@@ -1,0 +1,259 @@
+//! Profiling corpus: the (power mode -> time, power) dataset the prediction
+//! models train and validate on, with CSV persistence and the sampling
+//! strategies the paper uses (all / uniform-N / random-N, 90:10 splits).
+
+use std::path::Path;
+
+use crate::device::{DeviceKind, PowerMode};
+use crate::error::{Error, Result};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// One profiled power mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Record {
+    pub mode: PowerMode,
+    /// Mean clean minibatch time (ms).
+    pub time_ms: f64,
+    /// Mean stabilized power (mW).
+    pub power_mw: f64,
+    /// Profiling wall-clock cost (s).
+    pub cost_s: f64,
+}
+
+/// A profiling corpus for one (device, workload) pair.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub device: DeviceKind,
+    pub workload: Workload,
+    records: Vec<Record>,
+}
+
+impl Corpus {
+    pub fn new(device: DeviceKind, workload: Workload) -> Corpus {
+        Corpus { device, workload, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    /// Total profiling wall-clock cost (the overhead axis of Figs 7/8).
+    pub fn total_cost_s(&self) -> f64 {
+        self.records.iter().map(|r| r.cost_s).sum()
+    }
+
+    /// Feature matrix (raw, unstandardized).
+    pub fn features(&self) -> Vec<[f32; 4]> {
+        self.records.iter().map(|r| r.mode.features()).collect()
+    }
+
+    pub fn times_ms(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.time_ms).collect()
+    }
+
+    pub fn powers_mw(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.power_mw).collect()
+    }
+
+    /// Random subset of `n` records (sampling strategy for NN-small / PT).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Corpus {
+        let idx = rng.sample_indices(self.len(), n.min(self.len()));
+        Corpus {
+            device: self.device,
+            workload: self.workload,
+            records: idx.into_iter().map(|i| self.records[i]).collect(),
+        }
+    }
+
+    /// Deterministic uniformly-spaced subset of `n` records.
+    pub fn uniform_subset(&self, n: usize) -> Corpus {
+        let n = n.min(self.len());
+        let mut records = Vec::with_capacity(n);
+        if n > 0 {
+            let step = self.len() as f64 / n as f64;
+            for i in 0..n {
+                records.push(self.records[(i as f64 * step) as usize]);
+            }
+        }
+        Corpus { device: self.device, workload: self.workload, records }
+    }
+
+    /// 90:10 train/validation split (paper's protocol).
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Corpus, Corpus) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let mk = |ids: &[usize]| Corpus {
+            device: self.device,
+            workload: self.workload,
+            records: ids.iter().map(|&i| self.records[i]).collect(),
+        };
+        (mk(&idx[..n_train]), mk(&idx[n_train..]))
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "device", "workload", "cores", "cpu_khz", "gpu_khz", "mem_khz",
+            "time_ms", "power_mw", "cost_s",
+        ]);
+        for r in &self.records {
+            t.push_row(vec![
+                self.device.name().to_string(),
+                self.workload.name(),
+                r.mode.cores.to_string(),
+                r.mode.cpu_khz.to_string(),
+                r.mode.gpu_khz.to_string(),
+                r.mode.mem_khz.to_string(),
+                format!("{:.4}", r.time_ms),
+                format!("{:.1}", r.power_mw),
+                format!("{:.3}", r.cost_s),
+            ]);
+        }
+        t
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_table().save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let t = Table::load(path)?;
+        Self::from_table(&t)
+    }
+
+    pub fn from_table(t: &Table) -> Result<Corpus> {
+        if t.rows.is_empty() {
+            return Err(Error::csv("empty corpus"));
+        }
+        let device = DeviceKind::parse(&t.rows[0][t.col("device")?])
+            .ok_or_else(|| Error::csv("unknown device"))?;
+        let workload = Workload::parse(&t.rows[0][t.col("workload")?])
+            .ok_or_else(|| Error::csv("unknown workload"))?;
+        let mut corpus = Corpus::new(device, workload);
+        let (c_cores, c_cpu, c_gpu, c_mem) = (
+            t.col("cores")?, t.col("cpu_khz")?, t.col("gpu_khz")?, t.col("mem_khz")?,
+        );
+        let (c_time, c_pow, c_cost) = (t.col("time_ms")?, t.col("power_mw")?, t.col("cost_s")?);
+        for i in 0..t.rows.len() {
+            corpus.push(Record {
+                mode: PowerMode {
+                    cores: t.f64_at(i, c_cores)? as u32,
+                    cpu_khz: t.f64_at(i, c_cpu)? as u32,
+                    gpu_khz: t.f64_at(i, c_gpu)? as u32,
+                    mem_khz: t.f64_at(i, c_mem)? as u32,
+                },
+                time_ms: t.f64_at(i, c_time)?,
+                power_mw: t.f64_at(i, c_pow)?,
+                cost_s: t.f64_at(i, c_cost)?,
+            });
+        }
+        Ok(corpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_corpus(n: usize) -> Corpus {
+        let mut c = Corpus::new(DeviceKind::OrinAgx, Workload::resnet());
+        let spec = DeviceKind::OrinAgx.spec();
+        for i in 0..n {
+            c.push(Record {
+                mode: PowerMode {
+                    cores: 1 + (i % 12) as u32,
+                    cpu_khz: spec.cpu_khz[i % spec.cpu_khz.len()],
+                    gpu_khz: spec.gpu_khz[i % spec.gpu_khz.len()],
+                    mem_khz: spec.mem_khz[i % spec.mem_khz.len()],
+                },
+                time_ms: 50.0 + i as f64,
+                power_mw: 20_000.0 + 100.0 * i as f64,
+                cost_s: 3.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let c = demo_corpus(20);
+        let dir = std::env::temp_dir().join("pt_corpus_test");
+        let path = dir.join("resnet.csv");
+        c.save(&path).unwrap();
+        let back = Corpus::load(&path).unwrap();
+        assert_eq!(back.len(), 20);
+        assert_eq!(back.device, c.device);
+        assert_eq!(back.workload, c.workload);
+        for (a, b) in back.records().iter().zip(c.records()) {
+            assert_eq!(a.mode, b.mode);
+            assert!((a.time_ms - b.time_ms).abs() < 1e-3);
+            assert!((a.power_mw - b.power_mw).abs() < 0.5);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let c = demo_corpus(100);
+        let mut rng = Rng::new(3);
+        let (train, val) = c.split(0.9, &mut rng);
+        assert_eq!(train.len(), 90);
+        assert_eq!(val.len(), 10);
+        // disjoint by power mode (all modes unique in demo)
+        for r in val.records() {
+            assert!(!train.records().iter().any(|t| t.mode == r.mode));
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement() {
+        let c = demo_corpus(50);
+        let mut rng = Rng::new(7);
+        let s = c.sample(20, &mut rng);
+        assert_eq!(s.len(), 20);
+        let mut modes: Vec<_> = s.records().iter().map(|r| r.mode).collect();
+        modes.sort_by_key(|m| (m.cores, m.cpu_khz, m.gpu_khz, m.mem_khz));
+        modes.dedup();
+        assert_eq!(modes.len(), 20);
+    }
+
+    #[test]
+    fn uniform_subset_spans_range() {
+        let c = demo_corpus(100);
+        let s = c.uniform_subset(10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.records()[0].time_ms, 50.0);
+        assert!(s.records()[9].time_ms >= 135.0);
+    }
+
+    #[test]
+    fn oversized_requests_clamp() {
+        let c = demo_corpus(5);
+        let mut rng = Rng::new(9);
+        assert_eq!(c.sample(100, &mut rng).len(), 5);
+        assert_eq!(c.uniform_subset(100).len(), 5);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let c = demo_corpus(10);
+        assert!((c.total_cost_s() - 30.0).abs() < 1e-9);
+    }
+}

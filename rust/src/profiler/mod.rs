@@ -1,0 +1,222 @@
+//! Profiling pipeline (paper sections 2.4–2.5).
+//!
+//! Turns raw telemetry from a training session into clean per-power-mode
+//! records: discard the slow first minibatch, detect power stabilization
+//! with a sliding window, require 40 clean minibatches, and account the
+//! wall-clock profiling cost (the overhead axis of Figs 7/8).
+
+pub mod corpus;
+pub mod scaler;
+
+pub use corpus::{Corpus, Record};
+pub use scaler::StandardScaler;
+
+use crate::device::{PowerMode, ProfilingPlan};
+use crate::error::{Error, Result};
+use crate::sim::TrainerSim;
+use crate::util::stats;
+
+/// Number of clean minibatches collected per power mode (paper: 40, after
+/// a sensitivity study over 10–40).
+pub const CLEAN_MINIBATCHES: usize = 40;
+
+/// Sliding-window stabilization detector parameters.
+const STAB_WINDOW: usize = 3;
+/// Relative spread within the window that counts as "stable".
+const STAB_TOL: f64 = 0.04;
+
+/// Profiling result for one power mode.
+#[derive(Debug, Clone)]
+pub struct ModeProfile {
+    pub mode: PowerMode,
+    /// Mean clean minibatch training time (ms).
+    pub time_ms: f64,
+    /// Mean stabilized power (mW). None if the run finished before any
+    /// stable 1 Hz samples landed (fast modes, paper section 2.5).
+    pub power_mw: Option<f64>,
+    /// Wall-clock seconds this mode's profiling took (incl. re-runs).
+    pub cost_s: f64,
+    /// Device reboot needed to reach this mode in the plan.
+    pub rebooted: bool,
+}
+
+/// Find the index after which the 1 Hz power readings have stabilized:
+/// the first window of `STAB_WINDOW` consecutive samples whose relative
+/// spread is below `STAB_TOL`. Returns the start of that window.
+pub fn stabilization_index(samples: &[u32]) -> Option<usize> {
+    if samples.len() < STAB_WINDOW {
+        return None;
+    }
+    for start in 0..=(samples.len() - STAB_WINDOW) {
+        let w = &samples[start..start + STAB_WINDOW];
+        let lo = *w.iter().min().unwrap() as f64;
+        let hi = *w.iter().max().unwrap() as f64;
+        if hi <= 0.0 {
+            continue;
+        }
+        if (hi - lo) / hi <= STAB_TOL {
+            return Some(start);
+        }
+    }
+    None
+}
+
+/// The profiler: owns a simulated training session and produces clean
+/// [`ModeProfile`]s / a full [`Corpus`].
+pub struct Profiler {
+    pub sim: TrainerSim,
+    /// Seconds charged per device reboot in cost accounting.
+    pub reboot_cost_s: f64,
+}
+
+impl Profiler {
+    pub fn new(sim: TrainerSim) -> Profiler {
+        Profiler { sim, reboot_cost_s: 45.0 }
+    }
+
+    /// Profile a single power mode: run warmup + 40 clean minibatches,
+    /// discard the first minibatch, and average power samples after the
+    /// detected stabilization point.
+    pub fn profile_mode(&mut self, mode: &PowerMode, rebooted: bool) -> Result<ModeProfile> {
+        mode.validate(self.sim.spec)?;
+        // +1 for the discarded warmup minibatch
+        let mut run = self.sim.profile_mode(mode, CLEAN_MINIBATCHES + 1);
+        let mut cost = run.wall_time_s;
+
+        // fast modes can finish before any stable power sample exists
+        // (paper section 2.5: "the training of all the minibatches
+        // completes within this interval"); extend the run with enough
+        // extra minibatches to span several sampling intervals — cheap,
+        // since the workload trains productively during profiling anyway
+        let mut extensions = 0;
+        while stabilization_index(&run.power_samples_mw).is_none() && extensions < 4 {
+            let mean_ms = stats::mean(&run.minibatch_ms[1..]).max(0.01);
+            let needed_s = (STAB_WINDOW + 5) as f64;
+            let n_more = ((needed_s * 1000.0 / mean_ms).ceil() as usize)
+                .clamp(CLEAN_MINIBATCHES, 20_000);
+            let more = self.sim.profile_mode(mode, n_more);
+            cost += more.wall_time_s;
+            run.power_samples_mw.extend(&more.power_samples_mw);
+            extensions += 1;
+        }
+
+        let clean_times = &run.minibatch_ms[1..]; // discard first minibatch
+        let time_ms = stats::mean(clean_times);
+
+        let power_mw = stabilization_index(&run.power_samples_mw).map(|idx| {
+            let stable: Vec<f64> = run.power_samples_mw[idx..]
+                .iter()
+                .map(|&p| p as f64)
+                .collect();
+            stats::mean(&stable)
+        });
+
+        if rebooted {
+            cost += self.reboot_cost_s;
+        }
+
+        Ok(ModeProfile { mode: *mode, time_ms, power_mw, cost_s: cost, rebooted })
+    }
+
+    /// Profile a set of modes in reboot-aware order, assembling a corpus.
+    pub fn profile_modes(&mut self, modes: &[PowerMode]) -> Result<Corpus> {
+        let plan = ProfilingPlan::build(modes);
+        let mut corpus = Corpus::new(self.sim.spec.kind, self.sim.workload);
+        for step in &plan.steps {
+            let prof = self.profile_mode(&step.mode, step.reboot)?;
+            let power = prof.power_mw.ok_or_else(|| {
+                Error::Profiling(format!(
+                    "power never stabilized for {}",
+                    step.mode.label()
+                ))
+            })?;
+            corpus.push(Record {
+                mode: prof.mode,
+                time_ms: prof.time_ms,
+                power_mw: power,
+                cost_s: prof.cost_s,
+            });
+        }
+        Ok(corpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerModeGrid};
+    use crate::sim::TrainerSim;
+    use crate::workload::Workload;
+
+    fn profiler(wl: Workload, seed: u64) -> Profiler {
+        Profiler::new(TrainerSim::new(DeviceKind::OrinAgx.spec(), wl, seed))
+    }
+
+    #[test]
+    fn stabilization_detects_ramp_end() {
+        // ramp 10k -> 30k then stable
+        let samples = vec![12_000u32, 21_000, 26_500, 29_000, 29_900, 30_100, 29_950];
+        let idx = stabilization_index(&samples).unwrap();
+        assert!(idx >= 3, "detected too early: {idx}");
+    }
+
+    #[test]
+    fn stabilization_none_for_short_or_noisy() {
+        assert_eq!(stabilization_index(&[10_000, 20_000]), None);
+        let wild = vec![10_000u32, 20_000, 10_000, 20_000, 10_000, 20_000];
+        assert_eq!(stabilization_index(&wild), None);
+    }
+
+    #[test]
+    fn profile_mode_recovers_ground_truth() {
+        let mut p = profiler(Workload::resnet(), 11);
+        let spec = DeviceKind::OrinAgx.spec();
+        let mode = PowerMode { cores: 8, cpu_khz: spec.cpu_khz[20], gpu_khz: spec.gpu_khz[6], mem_khz: spec.mem_khz[2] };
+        let prof = p.profile_mode(&mode, false).unwrap();
+        let t_truth = p.sim.true_minibatch_ms(&mode);
+        let p_truth = p.sim.true_power_mw(&mode);
+        assert!((prof.time_ms - t_truth).abs() / t_truth < 0.02);
+        let pw = prof.power_mw.unwrap();
+        assert!((pw - p_truth).abs() / p_truth < 0.05, "pw={pw} truth={p_truth}");
+    }
+
+    #[test]
+    fn fast_modes_extend_until_power_stabilizes() {
+        // LSTM at MAXN trains 41 minibatches in well under a second
+        let mut p = profiler(Workload::lstm(), 13);
+        let maxn = PowerMode::maxn(DeviceKind::OrinAgx.spec());
+        let prof = p.profile_mode(&maxn, false).unwrap();
+        assert!(prof.power_mw.is_some(), "extension policy failed");
+    }
+
+    #[test]
+    fn reboot_cost_accounted() {
+        let mut p = profiler(Workload::resnet(), 17);
+        let maxn = PowerMode::maxn(DeviceKind::OrinAgx.spec());
+        let without = p.profile_mode(&maxn, false).unwrap();
+        let with = p.profile_mode(&maxn, true).unwrap();
+        assert!(with.cost_s > without.cost_s + 40.0);
+    }
+
+    #[test]
+    fn invalid_mode_rejected() {
+        let mut p = profiler(Workload::resnet(), 19);
+        let bad = PowerMode { cores: 99, cpu_khz: 1, gpu_khz: 1, mem_khz: 1 };
+        assert!(p.profile_mode(&bad, false).is_err());
+    }
+
+    #[test]
+    fn profile_modes_builds_full_corpus() {
+        let mut p = profiler(Workload::resnet(), 23);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(25, &mut rng);
+        let corpus = p.profile_modes(&modes).unwrap();
+        assert_eq!(corpus.len(), 25);
+        assert!(corpus.total_cost_s() > 0.0);
+        // every record's time within a few % of ground truth
+        for r in corpus.records() {
+            let truth = p.sim.true_minibatch_ms(&r.mode);
+            assert!((r.time_ms - truth).abs() / truth < 0.03);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! StandardScaler — feature/target standardization matching sklearn's
+//! behaviour (paper Table 4: "each input feature is normalized ... using
+//! the sklearn library's StandardScaler").
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Per-dimension (x - mean) / std transform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StandardScaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl StandardScaler {
+    /// Fit on rows of equal width. Zero-variance columns get std = 1 so
+    /// transform is the identity shift (sklearn's convention).
+    pub fn fit(rows: &[Vec<f64>]) -> StandardScaler {
+        assert!(!rows.is_empty(), "cannot fit scaler on empty data");
+        let dim = rows[0].len();
+        let n = rows.len() as f64;
+        let mut mean = vec![0.0; dim];
+        for r in rows {
+            assert_eq!(r.len(), dim);
+            for (m, v) in mean.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; dim];
+        for r in rows {
+            for ((v, m), x) in var.iter_mut().zip(&mean).zip(r) {
+                *v += (x - m) * (x - m);
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n).sqrt();
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        StandardScaler { mean, std }
+    }
+
+    /// Fit a 1-D scaler (for targets).
+    pub fn fit1(xs: &[f64]) -> StandardScaler {
+        Self::fit(&xs.iter().map(|&x| vec![x]).collect::<Vec<_>>())
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        assert_eq!(row.len(), self.dim());
+        row.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((x, m), s)| (x - m) / s)
+            .collect()
+    }
+
+    pub fn inverse_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(&self.mean)
+            .zip(&self.std)
+            .map(|((z, m), s)| z * s + m)
+            .collect()
+    }
+
+    /// Scalar helpers for 1-D target scalers.
+    pub fn transform1(&self, x: f64) -> f64 {
+        (x - self.mean[0]) / self.std[0]
+    }
+
+    pub fn inverse1(&self, z: f64) -> f64 {
+        z * self.std[0] + self.mean[0]
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("mean", Value::from_f64_slice(&self.mean)),
+            ("std", Value::from_f64_slice(&self.std)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<StandardScaler> {
+        let mean = v.req("mean")?.as_f64_vec()?;
+        let std = v.req("std")?.as_f64_vec()?;
+        if mean.len() != std.len() || mean.is_empty() {
+            return Err(Error::json("scaler mean/std length mismatch"));
+        }
+        Ok(StandardScaler { mean, std })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn standardizes_to_zero_mean_unit_var() {
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f64>> = (0..1000)
+            .map(|_| vec![rng.normal_ms(50.0, 10.0), rng.normal_ms(-3.0, 0.5)])
+            .collect();
+        let sc = StandardScaler::fit(&rows);
+        let transformed: Vec<Vec<f64>> = rows.iter().map(|r| sc.transform_row(r)).collect();
+        for d in 0..2 {
+            let col: Vec<f64> = transformed.iter().map(|r| r[d]).collect();
+            assert!(crate::util::stats::mean(&col).abs() < 1e-9);
+            assert!((crate::util::stats::std_dev(&col) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_round_trips() {
+        let rows = vec![vec![1.0, 100.0], vec![2.0, 300.0], vec![3.0, -50.0]];
+        let sc = StandardScaler::fit(&rows);
+        for r in &rows {
+            let back = sc.inverse_row(&sc.transform_row(r));
+            for (a, b) in back.iter().zip(r) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_column_is_shift_only() {
+        let rows = vec![vec![5.0], vec![5.0], vec![5.0]];
+        let sc = StandardScaler::fit(&rows);
+        assert_eq!(sc.std[0], 1.0);
+        assert_eq!(sc.transform_row(&[5.0])[0], 0.0);
+        assert_eq!(sc.transform_row(&[7.0])[0], 2.0);
+    }
+
+    #[test]
+    fn scalar_target_helpers() {
+        let sc = StandardScaler::fit1(&[10.0, 20.0, 30.0]);
+        assert!((sc.transform1(20.0)).abs() < 1e-12);
+        assert!((sc.inverse1(sc.transform1(27.5)) - 27.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let sc = StandardScaler::fit(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let back = StandardScaler::from_json(&Value::parse(&sc.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(sc, back);
+    }
+
+    #[test]
+    fn from_json_rejects_mismatch() {
+        let v = Value::parse(r#"{"mean":[1,2],"std":[1]}"#).unwrap();
+        assert!(StandardScaler::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Artifact manifest: the typed contract between the AOT compiler
+//! (`python/compile/aot.py`) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "u32" => Ok(DType::U32),
+            other => Err(Error::Artifact(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// One named input or output tensor.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered HLO computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Adam hyperparameters baked into the train-step artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub predict_batch: usize,
+    pub train_batch: usize,
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub dropout_rate: f64,
+    pub adam: AdamConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(v: &Value) -> Result<IoSpec> {
+    let shape = v
+        .req("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: v.req("name")?.as_str()?.to_string(),
+        dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        shape,
+    })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let v = Value::parse(&text)?;
+        if v.req("format")?.as_str()? != "hlo-text" {
+            return Err(Error::Artifact("unsupported artifact format".into()));
+        }
+        let adam_v = v.req("adam")?;
+        let adam = AdamConfig {
+            lr: adam_v.req("lr")?.as_f64()?,
+            beta1: adam_v.req("beta1")?.as_f64()?,
+            beta2: adam_v.req("beta2")?.as_f64()?,
+            eps: adam_v.req("eps")?.as_f64()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in v.req("artifacts")?.as_obj()? {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: av.req("file")?.as_str()?.to_string(),
+                inputs: av
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: av
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let file = dir.join(&spec.file);
+            if !file.exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest references missing file {}",
+                    file.display()
+                )));
+            }
+            artifacts.insert(name.clone(), spec);
+        }
+        let hidden = v
+            .req("hidden")?
+            .as_arr()?
+            .iter()
+            .map(|h| h.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            predict_batch: v.req("predict_batch")?.as_usize()?,
+            train_batch: v.req("train_batch")?.as_usize()?,
+            input_dim: v.req("input_dim")?.as_usize()?,
+            hidden,
+            dropout_rate: v.req("dropout_rate")?.as_f64()?,
+            adam,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact '{name}' in manifest")))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+/// Default artifacts directory: `$POWERTRAIN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("POWERTRAIN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const MINIMAL: &str = r#"{
+        "format": "hlo-text", "predict_batch": 512, "train_batch": 64,
+        "input_dim": 4, "hidden": [256, 128, 64], "dropout_rate": 0.1,
+        "adam": {"lr": 0.001, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+        "artifacts": {
+            "predict": {"file": "predict.hlo.txt",
+                "inputs": [{"name": "x", "dtype": "f32", "shape": [512, 4]}],
+                "outputs": [{"name": "y", "dtype": "f32", "shape": [512, 1]}]}
+        }
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("pt_manifest_ok");
+        write_manifest(&dir, MINIMAL);
+        fs::write(dir.join("predict.hlo.txt"), "HloModule m\nENTRY e {}").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.predict_batch, 512);
+        assert_eq!(m.hidden, vec![256, 128, 64]);
+        let a = m.artifact("predict").unwrap();
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[0].element_count(), 2048);
+        assert!(m.artifact("nope").is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_hlo_file() {
+        let dir = std::env::temp_dir().join("pt_manifest_missing");
+        write_manifest(&dir, MINIMAL);
+        // no predict.hlo.txt on disk
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing file"));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_absent_manifest_with_hint() {
+        let dir = std::env::temp_dir().join("pt_manifest_absent");
+        fs::create_dir_all(&dir).ok();
+        fs::remove_file(dir.join("manifest.json")).ok();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("pt_manifest_badfmt");
+        write_manifest(&dir, &MINIMAL.replace("hlo-text", "proto"));
+        assert!(Manifest::load(&dir).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! Jetson hardware simulator — the substitute for the physical Orin AGX /
+//! Xavier AGX / Orin Nano devkits (DESIGN.md section 3).
+//!
+//! The simulator is the *ground truth* of this reproduction: it maps
+//! (device, workload, power mode) to per-minibatch training time and board
+//! power the same way the real boards did for the paper's authors. The
+//! prediction models never see its equations — only profiled telemetry —
+//! so the learning problem (non-linear bottleneck switches across a 4-D
+//! grid, workload- and device-specific constants) is preserved.
+
+pub mod perf_model;
+pub mod power_model;
+pub mod sensor;
+pub mod thermal;
+pub mod trainer_sim;
+
+pub use perf_model::{minibatch_time_ms, TimeBreakdown};
+pub use power_model::steady_power_mw;
+pub use sensor::PowerSensor;
+pub use trainer_sim::{FaultConfig, ProfilingRun, TrainerSim};
+
+#[cfg(test)]
+mod calibration;

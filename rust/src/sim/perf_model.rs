@@ -1,0 +1,184 @@
+//! Analytical per-minibatch training-time model.
+//!
+//! Three components, mirroring how a PyTorch training step spends time on
+//! a Jetson:
+//!
+//! * **GPU compute** — roofline: max(compute-bound, memory-bound) time.
+//!   Compute scales with GPU frequency and the device's throughput class;
+//!   the memory-bound ceiling scales with EMC frequency and the device's
+//!   bandwidth class.
+//! * **CPU preprocessing** — DataLoader fetch+decode+augment; scales with
+//!   CPU frequency, per-core IPC, and effective worker parallelism
+//!   min(cores, num_workers + 1).
+//! * **Framework overhead** — Python/launch overhead on the main process;
+//!   scales inversely with CPU frequency only.
+//!
+//! With `num_workers >= 1` the DataLoader pipelines preprocessing against
+//! GPU compute: total = max(gpu + overhead, cpu). With `num_workers == 0`
+//! (YOLO, paper footnote 6) everything serializes: total = gpu + cpu +
+//! overhead — exactly the "GPU stalls" behaviour the paper describes.
+
+use crate::device::{DeviceSpec, PowerMode};
+use crate::workload::Workload;
+
+/// Orin AGX reference frequencies the workload coefficients are calibrated
+/// against (work units are "ms x GHz" at these references).
+pub const ORIN_GPU_MAX_GHZ: f64 = 1.3005;
+pub const ORIN_MEM_MAX_KHZ: f64 = 3_199_000.0;
+
+/// Decomposed minibatch time (milliseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct TimeBreakdown {
+    pub gpu_ms: f64,
+    pub cpu_ms: f64,
+    pub overhead_ms: f64,
+    pub total_ms: f64,
+    /// Fraction of wall time the GPU is busy (drives GPU power).
+    pub gpu_busy_frac: f64,
+    /// Fraction of wall time the CPU cluster is busy.
+    pub cpu_busy_frac: f64,
+}
+
+/// Deterministic (noise-free) time model.
+pub fn minibatch_time_ms(spec: &DeviceSpec, wl: &Workload, pm: &PowerMode) -> TimeBreakdown {
+    let prof = wl.work_profile();
+    let cpu_ghz = pm.cpu_khz as f64 / 1e6;
+    let gpu_ghz = pm.gpu_khz as f64 / 1e6;
+
+    // GPU roofline: compute-bound vs memory-bandwidth-bound.
+    let compute_ms = prof.gpu_work / (spec.gpu_tput * gpu_ghz);
+    let mem_scale = (ORIN_MEM_MAX_KHZ / pm.mem_khz as f64) / spec.mem_bw;
+    let mem_ms = prof.gpu_mem_beta * (prof.gpu_work / ORIN_GPU_MAX_GHZ) * mem_scale;
+    let gpu_ms = compute_ms.max(mem_ms);
+
+    // CPU preprocessing with effective worker parallelism.
+    let workers = if wl.num_workers == 0 {
+        1.0
+    } else {
+        (wl.num_workers + 1).min(pm.cores) as f64
+    };
+    let cpu_ms = prof.cpu_work / (spec.cpu_eff * cpu_ghz * workers);
+
+    // Fixed framework overhead on the main process.
+    let overhead_ms = prof.overhead_work / (spec.cpu_eff * cpu_ghz);
+
+    let total_ms = if wl.num_workers == 0 {
+        gpu_ms + cpu_ms + overhead_ms
+    } else {
+        (gpu_ms + overhead_ms).max(cpu_ms)
+    };
+
+    TimeBreakdown {
+        gpu_ms,
+        cpu_ms,
+        overhead_ms,
+        total_ms,
+        gpu_busy_frac: (gpu_ms / total_ms).min(1.0),
+        cpu_busy_frac: ((cpu_ms + overhead_ms) / total_ms).min(1.0),
+    }
+}
+
+/// Epoch time in seconds for a workload at a given mode.
+pub fn epoch_time_s(spec: &DeviceSpec, wl: &Workload, pm: &PowerMode) -> f64 {
+    minibatch_time_ms(spec, wl, pm).total_ms * wl.minibatches_per_epoch() as f64 / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
+    use crate::workload::Workload;
+
+    fn orin() -> &'static DeviceSpec {
+        DeviceKind::OrinAgx.spec()
+    }
+
+    #[test]
+    fn maxn_components_positive_and_consistent() {
+        let pm = PowerMode::maxn(orin());
+        for wl in Workload::default_five() {
+            let t = minibatch_time_ms(orin(), &wl, &pm);
+            assert!(t.gpu_ms > 0.0 && t.cpu_ms > 0.0 && t.overhead_ms > 0.0);
+            assert!(t.total_ms >= t.gpu_ms, "{wl:?}");
+            assert!(t.gpu_busy_frac > 0.0 && t.gpu_busy_frac <= 1.0);
+            assert!(t.cpu_busy_frac > 0.0 && t.cpu_busy_frac <= 1.0);
+        }
+    }
+
+    #[test]
+    fn yolo_serializes_components() {
+        let pm = PowerMode::maxn(orin());
+        let t = minibatch_time_ms(orin(), &Workload::yolo(), &pm);
+        assert!((t.total_ms - (t.gpu_ms + t.cpu_ms + t.overhead_ms)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_workloads_hide_cpu_when_gpu_bound() {
+        let pm = PowerMode::maxn(orin());
+        let t = minibatch_time_ms(orin(), &Workload::bert(), &pm);
+        assert!((t.total_ms - (t.gpu_ms + t.overhead_ms)).abs() < 1e-9);
+        assert!(t.cpu_ms < t.total_ms);
+    }
+
+    #[test]
+    fn monotone_in_gpu_frequency() {
+        let spec = orin();
+        let wl = Workload::resnet();
+        let mut last = f64::INFINITY;
+        for &g in spec.gpu_khz {
+            let pm = PowerMode { cores: 12, cpu_khz: spec.max_cpu_khz(), gpu_khz: g, mem_khz: spec.max_mem_khz() };
+            let t = minibatch_time_ms(spec, &wl, &pm).total_ms;
+            assert!(t <= last + 1e-9, "time increased with gpu freq");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn monotone_in_cores_for_cpu_bound() {
+        let spec = orin();
+        let wl = Workload::mobilenet(); // CPU-bound
+        let mut last = f64::INFINITY;
+        for cores in 1..=spec.max_cores {
+            let pm = PowerMode { cores, cpu_khz: spec.max_cpu_khz(), gpu_khz: spec.max_gpu_khz(), mem_khz: spec.max_mem_khz() };
+            let t = minibatch_time_ms(spec, &wl, &pm).total_ms;
+            assert!(t <= last + 1e-9);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn bottleneck_switches_somewhere_in_grid() {
+        // the non-linearity the NN must learn: some modes are CPU-bound,
+        // others GPU-bound, for the same workload
+        let spec = orin();
+        let wl = Workload::resnet();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let mut cpu_bound = 0usize;
+        let mut gpu_bound = 0usize;
+        for pm in &grid.modes {
+            let t = minibatch_time_ms(spec, &wl, pm);
+            if t.cpu_ms > t.gpu_ms + t.overhead_ms {
+                cpu_bound += 1;
+            } else {
+                gpu_bound += 1;
+            }
+        }
+        assert!(cpu_bound > 100, "cpu_bound={cpu_bound}");
+        assert!(gpu_bound > 100, "gpu_bound={gpu_bound}");
+    }
+
+    #[test]
+    fn time_range_spans_order_of_magnitude() {
+        let spec = orin();
+        let wl = Workload::resnet();
+        let grid = PowerModeGrid::full(DeviceKind::OrinAgx);
+        let times: Vec<f64> = grid.modes.iter()
+            .map(|pm| minibatch_time_ms(spec, &wl, pm).total_ms)
+            .collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        // paper reports up to ~36x impact of power modes on training time
+        let ratio = max / min;
+        assert!(ratio > 10.0 && ratio < 100.0, "ratio={ratio}");
+    }
+}

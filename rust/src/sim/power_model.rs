@@ -1,0 +1,118 @@
+//! Analytical board-power model.
+//!
+//! Power = base + CPU + GPU + memory, with each dynamic component the
+//! product of a frequency curve (superlinear, approximating DVFS
+//! voltage/frequency scaling) and a utilization term coupled to the time
+//! model's busy fractions. The coupling is what makes power *workload-
+//! dependent* (a CPU-bound MobileNet leaves the GPU idling at high
+//! frequency — high clock, low draw) and gives the NPE-style "assume max
+//! utilization" estimators their systematic overestimate (paper Fig 2a).
+
+use crate::device::{DeviceSpec, PowerMode};
+use crate::sim::perf_model::minibatch_time_ms;
+use crate::workload::Workload;
+
+/// CPU dynamic-power frequency curve (normalized freq -> [0, 1]).
+fn cpu_freq_curve(f: f64) -> f64 {
+    0.25 * f + 0.75 * f.powf(2.6)
+}
+
+/// GPU dynamic-power frequency curve.
+fn gpu_freq_curve(f: f64) -> f64 {
+    0.30 * f + 0.70 * f.powf(2.2)
+}
+
+/// Memory-subsystem frequency curve (has a floor: DRAM refresh etc.).
+fn mem_freq_curve(f: f64) -> f64 {
+    0.25 + 0.75 * f.powf(1.8)
+}
+
+/// Steady-state board power (mW) while training `wl` under `pm`.
+pub fn steady_power_mw(spec: &DeviceSpec, wl: &Workload, pm: &PowerMode) -> f64 {
+    let t = minibatch_time_ms(spec, wl, pm);
+    let prof = wl.work_profile();
+
+    let f_cpu = pm.cpu_khz as f64 / spec.max_cpu_khz() as f64;
+    let f_gpu = pm.gpu_khz as f64 / spec.max_gpu_khz() as f64;
+    let f_mem = pm.mem_khz as f64 / spec.max_mem_khz() as f64;
+
+    // active cores draw idle power even when the loader is not saturating
+    // them; busy fraction + workload activity drives the dynamic part
+    let cpu_util = 0.18 + 0.82 * t.cpu_busy_frac * prof.cpu_act;
+    let p_cpu = pm.cores as f64 * spec.p_core_max_mw * cpu_freq_curve(f_cpu) * cpu_util;
+
+    let gpu_util = 0.10 + 0.90 * t.gpu_busy_frac * prof.gpu_act;
+    let p_gpu = spec.p_gpu_max_mw * gpu_freq_curve(f_gpu) * gpu_util;
+
+    let mem_activity = prof.mem_act * t.gpu_busy_frac.max(0.6 * t.cpu_busy_frac);
+    let mem_util = 0.30 + 0.70 * mem_activity;
+    let p_mem = spec.p_mem_max_mw * mem_freq_curve(f_mem) * mem_util;
+
+    spec.p_base_mw + p_cpu + p_gpu + p_mem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
+    use crate::workload::Workload;
+
+    #[test]
+    fn power_positive_and_below_module_peak() {
+        for kind in DeviceKind::ALL {
+            let spec = kind.spec();
+            let grid = PowerModeGrid::full(kind);
+            for wl in Workload::default_five() {
+                // sample the grid corners + a few interior points
+                for pm in grid.modes.iter().step_by(grid.modes.len() / 50) {
+                    let p = steady_power_mw(spec, &wl, pm);
+                    assert!(p > 0.0);
+                    assert!(
+                        p <= spec.peak_power_w * 1000.0 * 1.05,
+                        "{:?} {} exceeds peak: {} mW",
+                        kind,
+                        wl.name(),
+                        p
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_gpu_frequency_for_gpu_bound() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let wl = Workload::bert();
+        let mut last = 0.0;
+        for &g in spec.gpu_khz {
+            let pm = PowerMode { cores: 12, cpu_khz: spec.max_cpu_khz(), gpu_khz: g, mem_khz: spec.max_mem_khz() };
+            let p = steady_power_mw(spec, &wl, &pm);
+            assert!(p >= last - 1.0, "power decreased with gpu freq");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn workload_dependence_at_same_mode() {
+        // BERT (GPU-saturating) must draw clearly more than LSTM (tiny) at
+        // MAXN — the workload sensitivity NPE lacks
+        let spec = DeviceKind::OrinAgx.spec();
+        let pm = PowerMode::maxn(spec);
+        let p_bert = steady_power_mw(spec, &Workload::bert(), &pm);
+        let p_lstm = steady_power_mw(spec, &Workload::lstm(), &pm);
+        assert!(p_bert > 1.3 * p_lstm, "bert={p_bert} lstm={p_lstm}");
+    }
+
+    #[test]
+    fn power_range_is_several_x() {
+        // paper: up to 4.3x impact of power modes on power
+        let spec = DeviceKind::OrinAgx.spec();
+        let wl = Workload::resnet();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let powers: Vec<f64> = grid.modes.iter().map(|pm| steady_power_mw(spec, &wl, pm)).collect();
+        let max = powers.iter().cloned().fold(0.0, f64::max);
+        let min = powers.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ratio = max / min;
+        assert!(ratio > 2.5 && ratio < 12.0, "power ratio={ratio}");
+    }
+}

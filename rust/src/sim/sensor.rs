@@ -1,0 +1,132 @@
+//! INA3221-style power sensor simulation.
+//!
+//! The real devkit exposes module power through an INA3221 read at 1 Hz via
+//! `jtop`/tegrastats (paper section 2.4). Two behaviours matter to the
+//! profiling pipeline and are reproduced here:
+//!
+//! * after a power-mode change the reading takes 2–3 s to stabilize
+//!   (first-order settling, paper section 2.5);
+//! * readings carry sensor noise and are quantized to integer milliwatts.
+
+use crate::util::rng::Rng;
+
+/// Simulated power sensor for one device session.
+#[derive(Debug, Clone)]
+pub struct PowerSensor {
+    /// Current steady-state power target (mW).
+    steady_mw: f64,
+    /// Power the board was drawing before the last mode change.
+    prev_mw: f64,
+    /// Seconds since the last mode change.
+    since_change_s: f64,
+    /// Settling time constant (s).
+    tau_s: f64,
+    /// Gaussian read-noise sigma (mW).
+    noise_mw: f64,
+}
+
+impl PowerSensor {
+    pub fn new(initial_mw: f64) -> PowerSensor {
+        PowerSensor {
+            steady_mw: initial_mw,
+            prev_mw: initial_mw,
+            since_change_s: f64::INFINITY,
+            tau_s: 0.9,
+            noise_mw: 120.0,
+        }
+    }
+
+    /// Apply a power-mode change: the reading will settle from the current
+    /// instantaneous value to `new_steady_mw` over the next ~2-3 s.
+    pub fn change_mode(&mut self, new_steady_mw: f64) {
+        self.prev_mw = self.instantaneous();
+        self.steady_mw = new_steady_mw;
+        self.since_change_s = 0.0;
+    }
+
+    /// Advance simulated time.
+    pub fn advance(&mut self, dt_s: f64) {
+        self.since_change_s += dt_s;
+    }
+
+    /// Noise-free instantaneous power.
+    pub fn instantaneous(&self) -> f64 {
+        if self.since_change_s.is_infinite() {
+            return self.steady_mw;
+        }
+        let k = (-self.since_change_s / self.tau_s).exp();
+        self.steady_mw + (self.prev_mw - self.steady_mw) * k
+    }
+
+    /// One 1 Hz sensor sample: instantaneous + noise, quantized to mW.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let v = self.instantaneous() + rng.normal_ms(0.0, self.noise_mw);
+        v.max(0.0).round() as u32
+    }
+
+    /// True whether the reading has effectively settled (within 1% of
+    /// steady state) — used by tests; the profiler must *detect* this from
+    /// samples alone, like the paper's sliding-window logic.
+    pub fn settled(&self) -> bool {
+        (self.instantaneous() - self.steady_mw).abs() <= 0.01 * self.steady_mw.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn settles_within_three_seconds() {
+        let mut s = PowerSensor::new(10_000.0);
+        s.change_mode(40_000.0);
+        assert!(!s.settled());
+        for _ in 0..3 {
+            s.advance(1.0);
+        }
+        // after 3 tau-ish seconds the reading is close to steady
+        assert!((s.instantaneous() - 40_000.0).abs() < 0.05 * 40_000.0);
+    }
+
+    #[test]
+    fn approach_is_monotone() {
+        let mut s = PowerSensor::new(50_000.0);
+        s.change_mode(12_000.0);
+        let mut last = s.instantaneous();
+        for _ in 0..10 {
+            s.advance(0.5);
+            let v = s.instantaneous();
+            assert!(v <= last + 1e-9, "non-monotone settle");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn samples_center_on_instantaneous() {
+        let s = PowerSensor::new(30_000.0);
+        let mut rng = Rng::new(1);
+        let n = 5_000;
+        let mean: f64 = (0..n).map(|_| s.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 30_000.0).abs() < 50.0, "mean={mean}");
+    }
+
+    #[test]
+    fn samples_never_negative() {
+        let s = PowerSensor::new(10.0); // tiny power, noise could go negative
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let _v: u32 = s.sample(&mut rng); // type guarantees >= 0
+        }
+    }
+
+    #[test]
+    fn chained_mode_changes_start_from_current_value() {
+        let mut s = PowerSensor::new(10_000.0);
+        s.change_mode(50_000.0);
+        s.advance(0.5); // mid-settle
+        let mid = s.instantaneous();
+        s.change_mode(20_000.0);
+        // new settle starts from mid, not from 50k
+        assert!((s.instantaneous() - mid).abs() < 1.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Thermal model (fan + throttle guard).
+//!
+//! The paper runs the fan at maximum to avoid thermal throttling (section
+//! 2.2), so throttling never triggers in the default configuration; the
+//! model exists for failure-injection tests and for the coordinator's
+//! safety check ("in the worst case, destroying the device due to
+//! overheating", paper section 1.1).
+
+/// Simple lumped thermal model: junction temperature follows power with a
+/// first-order response; above `throttle_c` the device would clamp clocks.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    /// Ambient temperature (C).
+    pub ambient_c: f64,
+    /// Thermal resistance (C per W) with fan at max.
+    pub r_fan_max: f64,
+    /// Thermal resistance with fan off (IP-67 enclosure scenario).
+    pub r_fan_off: f64,
+    /// Throttle trip point (C).
+    pub throttle_c: f64,
+    /// Current junction temperature (C).
+    temp_c: f64,
+    /// Time constant (s).
+    tau_s: f64,
+    pub fan_max: bool,
+}
+
+impl Default for ThermalModel {
+    fn default() -> Self {
+        ThermalModel {
+            ambient_c: 25.0,
+            r_fan_max: 0.55,
+            r_fan_off: 1.9,
+            throttle_c: 95.0,
+            temp_c: 25.0,
+            tau_s: 30.0,
+            fan_max: true, // paper's configuration
+        }
+    }
+}
+
+impl ThermalModel {
+    pub fn temp_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    fn resistance(&self) -> f64 {
+        if self.fan_max {
+            self.r_fan_max
+        } else {
+            self.r_fan_off
+        }
+    }
+
+    /// Advance the thermal state by `dt_s` seconds at `power_mw` draw.
+    pub fn advance(&mut self, power_mw: f64, dt_s: f64) {
+        let steady = self.ambient_c + self.resistance() * power_mw / 1000.0;
+        let k = (-dt_s / self.tau_s).exp();
+        self.temp_c = steady + (self.temp_c - steady) * k;
+    }
+
+    /// Steady-state temperature at a sustained power draw.
+    pub fn steady_c(&self, power_mw: f64) -> f64 {
+        self.ambient_c + self.resistance() * power_mw / 1000.0
+    }
+
+    pub fn would_throttle(&self) -> bool {
+        self.temp_c >= self.throttle_c
+    }
+
+    /// Max sustainable power (mW) before throttling in the current fan
+    /// configuration — the coordinator's safety ceiling.
+    pub fn max_sustainable_mw(&self) -> f64 {
+        (self.throttle_c - self.ambient_c) / self.resistance() * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_max_never_throttles_at_module_peak() {
+        // paper configuration: 60 W peak Orin with fan at max stays cool
+        let mut t = ThermalModel::default();
+        for _ in 0..100 {
+            t.advance(60_000.0, 10.0);
+        }
+        assert!(!t.would_throttle(), "temp={}", t.temp_c());
+        assert!(t.temp_c() < 70.0);
+    }
+
+    #[test]
+    fn fan_off_throttles_at_high_power() {
+        // the IP-67 enclosure scenario: sustained 50 W with no fan cooks it
+        let mut t = ThermalModel { fan_max: false, ..Default::default() };
+        for _ in 0..200 {
+            t.advance(50_000.0, 10.0);
+        }
+        assert!(t.would_throttle());
+    }
+
+    #[test]
+    fn sustainable_power_sane() {
+        let fan = ThermalModel::default();
+        let nofan = ThermalModel { fan_max: false, ..Default::default() };
+        assert!(fan.max_sustainable_mw() > 60_000.0);
+        assert!(nofan.max_sustainable_mw() < 60_000.0);
+        assert!(nofan.max_sustainable_mw() > 10_000.0);
+    }
+
+    #[test]
+    fn temperature_approaches_steady_monotonically() {
+        let mut t = ThermalModel::default();
+        let steady = t.steady_c(40_000.0);
+        let mut last = t.temp_c();
+        for _ in 0..50 {
+            t.advance(40_000.0, 5.0);
+            assert!(t.temp_c() >= last - 1e-9);
+            last = t.temp_c();
+        }
+        assert!((t.temp_c() - steady).abs() < 0.5);
+    }
+}

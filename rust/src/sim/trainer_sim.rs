@@ -1,0 +1,245 @@
+//! Simulated PyTorch training session — generates the raw telemetry the
+//! profiler consumes, with the artefacts the paper's pipeline must handle:
+//!
+//! * the first minibatch is several times slower (PyTorch kernel-selection
+//!   warmup, paper section 2.5) and must be discarded;
+//! * per-minibatch times carry small log-normal jitter;
+//! * 1 Hz power samples ride the sensor's 2–3 s settling ramp after a mode
+//!   change, so early samples are contaminated;
+//! * optional fault injection: sensor dropouts and a thermal-throttle
+//!   event, for failure-path tests.
+
+use crate::device::{DeviceSpec, PowerMode};
+use crate::sim::perf_model::minibatch_time_ms;
+use crate::sim::power_model::steady_power_mw;
+use crate::sim::sensor::PowerSensor;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// Fault-injection knobs (all off by default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultConfig {
+    /// Probability that a 1 Hz sensor sample is dropped (jtop hiccup).
+    pub sensor_dropout_prob: f64,
+    /// If set, clocks throttle to this fraction after `throttle_after_s`.
+    pub throttle_factor: Option<f64>,
+    pub throttle_after_s: f64,
+}
+
+/// Raw telemetry from profiling one power mode.
+#[derive(Debug, Clone)]
+pub struct ProfilingRun {
+    pub mode: PowerMode,
+    /// Per-minibatch training times (ms), *including* the slow first one.
+    pub minibatch_ms: Vec<f64>,
+    /// 1 Hz power samples (mW), starting at the moment of the mode change.
+    pub power_samples_mw: Vec<u32>,
+    /// Wall-clock seconds the profiling of this mode took.
+    pub wall_time_s: f64,
+}
+
+/// A simulated training session of one workload on one device. Owns the
+/// sensor state so consecutive power modes see realistic settling ramps.
+#[derive(Debug)]
+pub struct TrainerSim {
+    pub spec: &'static DeviceSpec,
+    pub workload: Workload,
+    sensor: PowerSensor,
+    rng: Rng,
+    faults: FaultConfig,
+    /// log-space sigma of minibatch time jitter
+    time_jitter_sigma: f64,
+}
+
+impl TrainerSim {
+    pub fn new(spec: &'static DeviceSpec, workload: Workload, seed: u64) -> TrainerSim {
+        let idle = spec.p_base_mw;
+        TrainerSim {
+            spec,
+            workload,
+            sensor: PowerSensor::new(idle),
+            rng: Rng::new(seed),
+            faults: FaultConfig::default(),
+            time_jitter_sigma: 0.015,
+        }
+    }
+
+    pub fn with_faults(mut self, faults: FaultConfig) -> TrainerSim {
+        self.faults = faults;
+        self
+    }
+
+    /// Noise-free ground truth used by experiment harnesses for MAPE
+    /// denominators (the paper's "actual observed" values are averaged
+    /// telemetry; the difference is well under the models' error).
+    pub fn true_minibatch_ms(&self, pm: &PowerMode) -> f64 {
+        minibatch_time_ms(self.spec, &self.workload, pm).total_ms
+    }
+
+    pub fn true_power_mw(&self, pm: &PowerMode) -> f64 {
+        steady_power_mw(self.spec, &self.workload, pm)
+    }
+
+    /// Run `n_minibatches` of training under `pm`, collecting telemetry.
+    /// Mirrors the paper's per-mode profiling procedure (section 2.5).
+    pub fn profile_mode(&mut self, pm: &PowerMode, n_minibatches: usize) -> ProfilingRun {
+        let base = minibatch_time_ms(self.spec, &self.workload, pm);
+        let steady_p = steady_power_mw(self.spec, &self.workload, pm);
+
+        // switch power mode: sensor begins settling toward the new draw
+        self.sensor.change_mode(steady_p);
+
+        let mut minibatch_ms = Vec::with_capacity(n_minibatches);
+        let mut power_samples = Vec::new();
+        let mut clock_s = 0.0f64;
+        let mut next_sample_s = 1.0f64; // 1 Hz sampling
+
+        for i in 0..n_minibatches {
+            let mut t_ms = base.total_ms * self.rng.lognormal_jitter(self.time_jitter_sigma);
+            if i == 0 {
+                // kernel-selection warmup: first minibatch is much slower
+                t_ms *= self.rng.uniform_range(5.0, 9.0);
+            }
+            if let Some(factor) = self.faults.throttle_factor {
+                if clock_s >= self.faults.throttle_after_s {
+                    t_ms /= factor; // throttled clocks -> slower minibatch
+                }
+            }
+            // advance wall clock through this minibatch, emitting 1 Hz
+            // sensor samples at their scheduled instants
+            let end_s = clock_s + t_ms / 1e3;
+            while next_sample_s <= end_s {
+                let dt = next_sample_s - clock_s;
+                self.sensor.advance(dt);
+                clock_s = next_sample_s;
+                let throttled = self
+                    .faults
+                    .throttle_factor
+                    .map(|f| clock_s >= self.faults.throttle_after_s && f < 1.0)
+                    .unwrap_or(false);
+                if !self.rng.bernoulli(self.faults.sensor_dropout_prob) {
+                    let mut s = self.sensor.sample(&mut self.rng);
+                    if throttled {
+                        s = (s as f64 * 0.7) as u32;
+                    }
+                    power_samples.push(s);
+                }
+                next_sample_s += 1.0;
+            }
+            self.sensor.advance(end_s - clock_s);
+            clock_s = end_s;
+            minibatch_ms.push(t_ms);
+        }
+
+        ProfilingRun {
+            mode: *pm,
+            minibatch_ms,
+            power_samples_mw: power_samples,
+            wall_time_s: clock_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+    use crate::util::stats;
+
+    fn sim() -> TrainerSim {
+        TrainerSim::new(DeviceKind::OrinAgx.spec(), Workload::resnet(), 42)
+    }
+
+    fn maxn() -> PowerMode {
+        PowerMode::maxn(DeviceKind::OrinAgx.spec())
+    }
+
+    #[test]
+    fn first_minibatch_is_outlier() {
+        let mut s = sim();
+        let run = s.profile_mode(&maxn(), 41);
+        let rest = &run.minibatch_ms[1..];
+        let m = stats::mean(rest);
+        assert!(run.minibatch_ms[0] > 3.0 * m, "first mb not slow");
+        // the clean minibatches are tight around ground truth
+        let truth = s.true_minibatch_ms(&maxn());
+        assert!((m - truth).abs() / truth < 0.02);
+    }
+
+    #[test]
+    fn per_minibatch_jitter_is_small() {
+        let mut s = sim();
+        let run = s.profile_mode(&maxn(), 41);
+        let rest = &run.minibatch_ms[1..];
+        let cv = stats::std_dev(rest) / stats::mean(rest);
+        assert!(cv < 0.05, "cv={cv}");
+    }
+
+    #[test]
+    fn power_sampling_covers_duration_at_1hz() {
+        let mut s = sim();
+        // a slow mode so profiling spans many seconds
+        let spec = DeviceKind::OrinAgx.spec();
+        let slow = PowerMode { cores: 2, cpu_khz: spec.cpu_khz[2], gpu_khz: spec.gpu_khz[0], mem_khz: spec.mem_khz[0] };
+        let run = s.profile_mode(&slow, 40);
+        let expected = run.wall_time_s.floor() as usize;
+        assert!(run.power_samples_mw.len() >= expected.saturating_sub(1));
+        assert!(run.power_samples_mw.len() <= expected + 1);
+    }
+
+    #[test]
+    fn fast_modes_may_miss_power_telemetry() {
+        // the paper's observation: at fast modes with few minibatches the
+        // whole run finishes inside the 1 s sampling interval
+        let mut s = TrainerSim::new(DeviceKind::OrinAgx.spec(), Workload::lstm(), 7);
+        let run = s.profile_mode(&maxn(), 10);
+        // 10 x ~10.7 ms plus warmup ~ 0.2 s << 1 s
+        assert!(run.power_samples_mw.is_empty());
+    }
+
+    #[test]
+    fn late_power_samples_near_steady_state() {
+        let mut s = sim();
+        let spec = DeviceKind::OrinAgx.spec();
+        let slow = PowerMode { cores: 4, cpu_khz: spec.cpu_khz[4], gpu_khz: spec.gpu_khz[1], mem_khz: spec.mem_khz[1] };
+        let run = s.profile_mode(&slow, 40);
+        let truth = s.true_power_mw(&slow);
+        assert!(run.power_samples_mw.len() > 8);
+        let late: Vec<f64> = run.power_samples_mw[4..].iter().map(|&p| p as f64).collect();
+        let m = stats::mean(&late);
+        assert!((m - truth).abs() / truth < 0.03, "late mean {m} vs truth {truth}");
+    }
+
+    #[test]
+    fn early_samples_ride_settling_ramp() {
+        // start from idle; first sample after switching to a hot mode must
+        // be well below steady state
+        let mut s = sim();
+        let run = s.profile_mode(&maxn(), 200);
+        let truth = s.true_power_mw(&maxn());
+        assert!(!run.power_samples_mw.is_empty());
+        let first = run.power_samples_mw[0] as f64;
+        assert!(first < 0.85 * truth, "first={first} truth={truth}");
+    }
+
+    #[test]
+    fn sensor_dropout_reduces_sample_count() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let slow = PowerMode { cores: 2, cpu_khz: spec.cpu_khz[2], gpu_khz: spec.gpu_khz[0], mem_khz: spec.mem_khz[0] };
+        let full = TrainerSim::new(spec, Workload::resnet(), 3).profile_mode(&slow, 40);
+        let dropped = TrainerSim::new(spec, Workload::resnet(), 3)
+            .with_faults(FaultConfig { sensor_dropout_prob: 0.5, ..Default::default() })
+            .profile_mode(&slow, 40);
+        assert!(dropped.power_samples_mw.len() < full.power_samples_mw.len() * 3 / 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TrainerSim::new(DeviceKind::OrinAgx.spec(), Workload::resnet(), 9)
+            .profile_mode(&maxn(), 41);
+        let b = TrainerSim::new(DeviceKind::OrinAgx.spec(), Workload::resnet(), 9)
+            .profile_mode(&maxn(), 41);
+        assert_eq!(a.minibatch_ms, b.minibatch_ms);
+        assert_eq!(a.power_samples_mw, b.power_samples_mw);
+    }
+}

@@ -1,0 +1,364 @@
+//! Training drivers: reference-NN training and from-scratch NN baselines.
+//!
+//! The rust side owns all state (params, Adam moments, scalers, shuffling,
+//! best-checkpoint logic) and calls the AOT train/eval artifacts for the
+//! compute — one fused HLO executable per step, Python never involved.
+
+pub mod transfer;
+
+use crate::error::{Error, Result};
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::{leaf_shape, AdamState, MlpParams, N_LEAVES};
+use crate::profiler::{Corpus, StandardScaler};
+use crate::runtime::{f32_literal, to_f32_scalar, to_f32_vec, u32_literal, Runtime};
+use crate::util::rng::Rng;
+
+/// Which telemetry channel a model predicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Time,
+    Power,
+}
+
+impl Target {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::Time => "time",
+            Target::Power => "power",
+        }
+    }
+
+    pub fn values(&self, corpus: &Corpus) -> Vec<f64> {
+        match self {
+            Target::Time => corpus.times_ms(),
+            Target::Power => corpus.powers_mw(),
+        }
+    }
+}
+
+/// Loss used by the train-step artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Masked MSE in standardized-target space (default, paper Table 4).
+    Mse,
+    /// Masked MAPE in raw units (cross-device transfer to Orin Nano,
+    /// paper section 4.3.4).
+    Mape,
+}
+
+/// Training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub loss: LossKind,
+    pub seed: u64,
+    /// Fraction of the corpus used for training (rest validates).
+    pub train_frac: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        // paper Table 4: 100 training epochs, 90:10 split
+        TrainConfig { epochs: 100, loss: LossKind::Mse, seed: 0, train_frac: 0.9 }
+    }
+}
+
+/// Loss curves and metadata from one training run.
+#[derive(Debug, Clone)]
+pub struct TrainingLog {
+    pub train_loss: Vec<f64>,
+    pub val_mse: Vec<f64>,
+    pub val_mape: Vec<f64>,
+    pub best_epoch: usize,
+    pub steps: usize,
+}
+
+/// Builds per-step literals and drives the artifacts.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
+        Trainer { rt }
+    }
+
+    /// Train a prediction model from scratch (the paper's NN approach).
+    pub fn train(
+        &self,
+        corpus: &Corpus,
+        target: Target,
+        cfg: &TrainConfig,
+    ) -> Result<(Checkpoint, TrainingLog)> {
+        let mut rng = Rng::new(cfg.seed);
+        let params = MlpParams::init_he(&mut rng);
+        self.train_from(params, corpus, target, cfg, &mut rng, "nn-scratch")
+    }
+
+    /// Core loop, shared with transfer learning (which passes pre-trained
+    /// params and its own provenance tag).
+    pub fn train_from(
+        &self,
+        params: MlpParams,
+        corpus: &Corpus,
+        target: Target,
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+        provenance: &str,
+    ) -> Result<(Checkpoint, TrainingLog)> {
+        if corpus.len() < 2 {
+            return Err(Error::Training("corpus too small to train on".into()));
+        }
+        let (train, val) = corpus.split(cfg.train_frac, rng);
+        let val = if val.is_empty() { train.clone() } else { val };
+
+        // scalers fit on the training split only
+        let feat_rows: Vec<Vec<f64>> = train
+            .features()
+            .iter()
+            .map(|f| f.iter().map(|&x| x as f64).collect())
+            .collect();
+        let feature_scaler = StandardScaler::fit(&feat_rows);
+        let target_scaler = StandardScaler::fit1(&target.values(&train));
+
+        let xs_train = scale_features(&train, &feature_scaler);
+        let ys_train = target.values(&train);
+        let xs_val = scale_features(&val, &feature_scaler);
+        let ys_val = target.values(&val);
+
+        let mut log = TrainingLog {
+            train_loss: Vec::new(),
+            val_mse: Vec::new(),
+            val_mape: Vec::new(),
+            best_epoch: 0,
+            steps: 0,
+        };
+
+        // training state lives as XLA literals across steps: each step's
+        // outputs feed the next step's inputs by reference, so the 3 x 42k
+        // parameter/moment tensors never round-trip through host vectors
+        // (EXPERIMENTS.md section Perf)
+        let mut state = Vec::with_capacity(3 * N_LEAVES);
+        push_leaves(&mut state, &params)?;
+        let adam0 = AdamState::fresh();
+        push_leaves(&mut state, &adam0.m)?;
+        push_leaves(&mut state, &adam0.v)?;
+        let mut step_count: u64 = 0;
+
+        let mut best_mse = f64::INFINITY;
+        let mut best_params = params.clone();
+
+        let n = xs_train.len();
+        let bsz = self.rt.manifest.train_batch;
+        let mut order: Vec<usize> = (0..n).collect();
+
+        for epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f64;
+            let mut batches = 0.0f64;
+            for chunk in order.chunks(bsz) {
+                let loss = self.step_lits(
+                    &mut state,
+                    &mut step_count,
+                    cfg.loss,
+                    chunk,
+                    &xs_train,
+                    &ys_train,
+                    &target_scaler,
+                    rng,
+                )?;
+                epoch_loss += loss;
+                batches += 1.0;
+                log.steps += 1;
+            }
+            log.train_loss.push(epoch_loss / batches.max(1.0));
+
+            let (mse, mape) =
+                self.evaluate_refs(&state[0..N_LEAVES], &xs_val, &ys_val, &target_scaler)?;
+            log.val_mse.push(mse);
+            log.val_mape.push(mape);
+            if mse < best_mse {
+                best_mse = mse;
+                pull_leaves(&state[0..N_LEAVES], &mut best_params)?;
+                log.best_epoch = epoch;
+            }
+        }
+        let best = (best_mse, best_params);
+
+        if !best.1.is_finite() {
+            return Err(Error::Training("training diverged to non-finite params".into()));
+        }
+
+        Ok((
+            Checkpoint {
+                params: best.1,
+                feature_scaler,
+                target_scaler,
+                target: target.name().to_string(),
+                provenance: format!(
+                    "{provenance}: {} on {} ({} modes)",
+                    target.name(),
+                    corpus.workload.name(),
+                    corpus.len()
+                ),
+                val_loss: best.0,
+            },
+            log,
+        ))
+    }
+
+    /// One Adam step through the train artifact, keeping all model/optimizer
+    /// state as literals (`state` = 24 tensors: params, m, v).
+    #[allow(clippy::too_many_arguments)]
+    fn step_lits(
+        &self,
+        state: &mut Vec<xla::Literal>,
+        step_count: &mut u64,
+        loss: LossKind,
+        idx: &[usize],
+        xs: &[[f32; 4]],
+        ys_raw: &[f64],
+        tscaler: &StandardScaler,
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        let bsz = self.rt.manifest.train_batch;
+        let dim = self.rt.manifest.input_dim;
+        let mut x = vec![0.0f32; bsz * dim];
+        let mut y = vec![0.0f32; bsz];
+        let mut mask = vec![0.0f32; bsz];
+        for (row, &i) in idx.iter().enumerate().take(bsz) {
+            x[row * dim..(row + 1) * dim].copy_from_slice(&xs[i]);
+            y[row] = match loss {
+                LossKind::Mse => tscaler.transform1(ys_raw[i]) as f32,
+                LossKind::Mape => ys_raw[i] as f32,
+            };
+            mask[row] = 1.0;
+        }
+
+        let t_lit = f32_literal(&[(*step_count + 1) as f32], &[1])?;
+        let key_lit = u32_literal(&rng.jax_key());
+        let x_lit = f32_literal(&x, &[bsz, dim])?;
+        let y_lit = f32_literal(&y, &[bsz, 1])?;
+        let mask_lit = f32_literal(&mask, &[bsz])?;
+        let (mean_lit, std_lit) = (
+            f32_literal(&[tscaler.mean[0] as f32], &[])?,
+            f32_literal(&[tscaler.std[0] as f32], &[])?,
+        );
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(31);
+        inputs.extend(state.iter());
+        inputs.push(&t_lit);
+        inputs.push(&key_lit);
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        inputs.push(&mask_lit);
+        let artifact = match loss {
+            LossKind::Mse => "train_mse",
+            LossKind::Mape => {
+                inputs.push(&mean_lit);
+                inputs.push(&std_lit);
+                "train_mape"
+            }
+        };
+
+        let mut outs = self.rt.execute_refs(artifact, &inputs)?;
+        let loss_lit = outs.pop().expect("loss output");
+        outs.truncate(3 * N_LEAVES);
+        *state = outs;
+        *step_count += 1;
+        Ok(to_f32_scalar(&loss_lit)? as f64)
+    }
+
+    /// Masked validation pass through the `evaluate` artifact.
+    /// Returns (mse in standardized space, mape % in raw units).
+    pub fn evaluate(
+        &self,
+        params: &MlpParams,
+        xs: &[[f32; 4]],
+        ys_raw: &[f64],
+        tscaler: &StandardScaler,
+    ) -> Result<(f64, f64)> {
+        let mut lits = Vec::with_capacity(N_LEAVES);
+        push_leaves(&mut lits, params)?;
+        self.evaluate_refs(&lits, xs, ys_raw, tscaler)
+    }
+
+    /// As [`Trainer::evaluate`] but on parameter literals (no host copies).
+    pub fn evaluate_refs(
+        &self,
+        param_lits: &[xla::Literal],
+        xs: &[[f32; 4]],
+        ys_raw: &[f64],
+        tscaler: &StandardScaler,
+    ) -> Result<(f64, f64)> {
+        debug_assert_eq!(param_lits.len(), N_LEAVES);
+        let bsz = self.rt.manifest.predict_batch;
+        let dim = self.rt.manifest.input_dim;
+        let mut tot_mse = 0.0;
+        let mut tot_mape = 0.0;
+        let mut tot_n = 0.0;
+        let mean_lit = f32_literal(&[tscaler.mean[0] as f32], &[])?;
+        let std_lit = f32_literal(&[tscaler.std[0] as f32], &[])?;
+        for chunk_start in (0..xs.len()).step_by(bsz) {
+            let chunk_end = (chunk_start + bsz).min(xs.len());
+            let real = chunk_end - chunk_start;
+            let mut x = vec![0.0f32; bsz * dim];
+            let mut y_std = vec![0.0f32; bsz];
+            let mut y_raw = vec![0.0f32; bsz];
+            let mut mask = vec![0.0f32; bsz];
+            for row in 0..real {
+                let i = chunk_start + row;
+                x[row * dim..(row + 1) * dim].copy_from_slice(&xs[i]);
+                y_std[row] = tscaler.transform1(ys_raw[i]) as f32;
+                y_raw[row] = ys_raw[i] as f32;
+                mask[row] = 1.0;
+            }
+            let x_lit = f32_literal(&x, &[bsz, dim])?;
+            let y_std_lit = f32_literal(&y_std, &[bsz, 1])?;
+            let y_raw_lit = f32_literal(&y_raw, &[bsz, 1])?;
+            let mask_lit = f32_literal(&mask, &[bsz])?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(14);
+            inputs.extend(param_lits.iter());
+            inputs.push(&x_lit);
+            inputs.push(&y_std_lit);
+            inputs.push(&y_raw_lit);
+            inputs.push(&mask_lit);
+            inputs.push(&mean_lit);
+            inputs.push(&std_lit);
+            let outs = self.rt.execute_refs("evaluate", &inputs)?;
+            let mse = to_f32_scalar(&outs[0])? as f64;
+            let mape = to_f32_scalar(&outs[1])? as f64;
+            tot_mse += mse * real as f64;
+            tot_mape += mape * real as f64;
+            tot_n += real as f64;
+        }
+        Ok((tot_mse / tot_n.max(1.0), tot_mape / tot_n.max(1.0)))
+    }
+}
+
+/// Standardize a corpus's features with a fitted scaler.
+pub fn scale_features(corpus: &Corpus, scaler: &StandardScaler) -> Vec<[f32; 4]> {
+    corpus
+        .features()
+        .iter()
+        .map(|f| {
+            let row: Vec<f64> = f.iter().map(|&x| x as f64).collect();
+            let z = scaler.transform_row(&row);
+            [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32]
+        })
+        .collect()
+}
+
+fn push_leaves(inputs: &mut Vec<xla::Literal>, p: &MlpParams) -> Result<()> {
+    for (i, leaf) in p.leaves.iter().enumerate() {
+        inputs.push(f32_literal(leaf, &leaf_shape(i))?);
+    }
+    Ok(())
+}
+
+fn pull_leaves(outs: &[xla::Literal], p: &mut MlpParams) -> Result<()> {
+    for (i, lit) in outs.iter().enumerate() {
+        p.leaves[i] = to_f32_vec(lit)?;
+    }
+    Ok(())
+}

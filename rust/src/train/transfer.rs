@@ -1,0 +1,47 @@
+//! PowerTrain transfer learning (paper section 3.2).
+//!
+//! Take the reference NN (trained once, offline, on the full 4.4k-mode
+//! corpus of the reference workload), replace its final dense layer with a
+//! fresh one, and fine-tune on ~50 profiled power modes of the new
+//! workload / device. Both the time and the power model transfer the same
+//! way; the Nano cross-device transfer switches the loss to MAPE.
+
+use crate::error::Result;
+use crate::nn::checkpoint::Checkpoint;
+use crate::profiler::Corpus;
+use crate::runtime::Runtime;
+use crate::train::{Target, TrainConfig, Trainer, TrainingLog};
+use crate::util::rng::Rng;
+
+/// Transfer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferConfig {
+    pub base: TrainConfig,
+    /// Reinitialize the last dense layer before fine-tuning (the paper's
+    /// surgery; disabling it is the ablation in `experiments`).
+    pub reinit_last_layer: bool,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig { base: TrainConfig::default(), reinit_last_layer: true }
+    }
+}
+
+/// Fine-tune `reference` onto `corpus` (the new workload's ~50 modes).
+pub fn transfer(
+    rt: &Runtime,
+    reference: &Checkpoint,
+    corpus: &Corpus,
+    target: Target,
+    cfg: &TransferConfig,
+) -> Result<(Checkpoint, TrainingLog)> {
+    let mut rng = Rng::new(cfg.base.seed ^ 0x7472_616e_7366_6572); // "transfer"
+    let mut params = reference.params.clone();
+    if cfg.reinit_last_layer {
+        params.reinit_last_layer(&mut rng);
+    }
+    let trainer = Trainer::new(rt);
+    let provenance = format!("powertrain-transfer(from {})", reference.provenance);
+    trainer.train_from(params, corpus, target, &cfg.base, &mut rng, &provenance)
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock per iteration with warmup, reports median /
+//! mean / p95 and throughput; used by `cargo bench` targets
+//! (`harness = false`).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|it| it / (self.median_ns / 1e9))
+    }
+
+    pub fn render(&self) -> String {
+        let thr = match self.throughput_per_s() {
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} median  {:>12} mean  {:>12} p95  ({} iters){}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+            thr
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget_s: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 200,
+            budget_s: 0.5,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, which returns a value that is black-boxed to defeat DCE.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Same, declaring how many logical items one iteration processes.
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.budget_s
+                && samples_ns.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: stats::mean(&samples_ns),
+            median_ns: stats::median(&samples_ns),
+            p95_ns: stats::quantile(&samples_ns, 0.95),
+            items_per_iter: items,
+        };
+        println!("{}", res.render());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_derived_from_median() {
+        let mut b = Bencher::quick();
+        let r = b.bench_items("noop-batch", 1000.0, || 42u8).clone();
+        let thr = r.throughput_per_s().unwrap();
+        assert!(thr > 0.0);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000s");
+    }
+}

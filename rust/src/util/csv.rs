@@ -1,0 +1,212 @@
+//! Minimal CSV codec for the profiling corpus and experiment result files.
+//!
+//! Supports quoted fields with embedded commas/quotes/newlines — enough for
+//! robust round-tripping of our own files plus hand-edited ones.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed CSV table: header + rows of equal width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| Error::csv(format!("missing column '{name}'")))
+    }
+
+    /// Typed accessor.
+    pub fn f64_at(&self, row: usize, col: usize) -> Result<f64> {
+        self.rows[row][col]
+            .parse::<f64>()
+            .map_err(|_| Error::csv(format!("bad f64 '{}' at row {row}", self.rows[row][col])))
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&self.header, &mut out);
+        for row in &self.rows {
+            write_record(row, &mut out);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Table> {
+        Self::parse(&fs::read_to_string(path)?)
+    }
+
+    pub fn parse(text: &str) -> Result<Table> {
+        let records = parse_records(text)?;
+        let mut it = records.into_iter();
+        let header = it
+            .next()
+            .ok_or_else(|| Error::csv("empty csv"))?;
+        let rows: Vec<Vec<String>> = it.collect();
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(Error::csv(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 1,
+                    r.len(),
+                    header.len()
+                )));
+            }
+        }
+        Ok(Table { header, rows })
+    }
+}
+
+fn needs_quoting(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n') || field.contains('\r')
+}
+
+fn write_record(fields: &[String], out: &mut String) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(f) {
+            out.push('"');
+            out.push_str(&f.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(f);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_records(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut records = Vec::new();
+    let mut record = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    record.push(std::mem::take(&mut field));
+                }
+                '\r' => {} // tolerate CRLF
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(Error::csv("unterminated quoted field"));
+    }
+    if any && (!field.is_empty() || !record.is_empty()) {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_round_trip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        t.push_row(vec!["3".into(), "4".into()]);
+        let parsed = Table::parse(&t.to_string()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let mut t = Table::new(&["name", "note"]);
+        t.push_row(vec!["a,b".into(), "say \"hi\"\nline2".into()]);
+        let parsed = Table::parse(&t.to_string()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn missing_trailing_newline_ok() {
+        let t = Table::parse("a,b\n1,2").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn unterminated_quote_rejected() {
+        assert!(Table::parse("a\n\"oops\n").is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Table::parse("").is_err());
+    }
+
+    #[test]
+    fn col_lookup_and_typed_access() {
+        let t = Table::parse("x,y\n1.5,hello\n").unwrap();
+        assert_eq!(t.col("y").unwrap(), 1);
+        assert!(t.col("z").is_err());
+        assert_eq!(t.f64_at(0, 0).unwrap(), 1.5);
+        assert!(t.f64_at(0, 1).is_err());
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let t = Table::parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0], vec!["1".to_string(), "2".to_string()]);
+    }
+}

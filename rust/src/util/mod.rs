@@ -1,0 +1,13 @@
+//! Dependency-light utility substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (rand, serde, serde_json, csv, proptest, criterion) are replaced by
+//! small, tested, purpose-built implementations (DESIGN.md section 3).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,171 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators and a `forall` runner with counterexample
+//! reporting and greedy shrinking for the common scalar/vec cases. Used by
+//! the `property_suite` integration test to check coordinator/routing/
+//! Pareto/grid invariants.
+
+use super::rng::Rng;
+
+/// A generator of random values of `T` driven by the shared [`Rng`].
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |r| lo + r.below(hi - lo + 1))
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |r| r.uniform_range(lo, hi))
+}
+
+/// Vec of length in [min_len, max_len] of element gen.
+pub fn vec_of<T: 'static>(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = min_len + r.below(max_len - min_len + 1);
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+/// One of the given options, uniformly.
+pub fn one_of<T: Clone + 'static>(options: Vec<T>) -> Gen<T> {
+    assert!(!options.is_empty());
+    Gen::new(move |r| options[r.below(options.len())].clone())
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { case: String, seed: u64 },
+}
+
+/// Run `prop` against `cases` random inputs from `gen`. Panics with the
+/// (shrunk, where supported) counterexample on failure — the standard
+/// property-testing contract for use inside `#[test]` fns.
+pub fn forall<T: std::fmt::Debug + Clone + 'static>(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case_idx}/{cases} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// forall for Vec<f64> with greedy shrinking: tries to remove elements and
+/// zero them while the property still fails, reporting a minimal-ish case.
+pub fn forall_vec_f64(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<Vec<f64>>,
+    prop: impl Fn(&[f64]) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_vec(&input, &prop);
+            panic!(
+                "property failed on case {case_idx}/{cases} (seed {seed}):\n  shrunk input = {shrunk:?}\n  original len = {}",
+                input.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec(failing: &[f64], prop: &impl Fn(&[f64]) -> bool) -> Vec<f64> {
+    let mut cur = failing.to_vec();
+    loop {
+        let mut improved = false;
+        // try dropping each element
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if !prop(&cand) {
+                cur = cand;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        // try zeroing / simplifying values
+        for i in 0..cur.len() {
+            for replacement in [0.0, 1.0, cur[i].trunc()] {
+                if cur[i] != replacement {
+                    let mut cand = cur.clone();
+                    cand[i] = replacement;
+                    if !prop(&cand) {
+                        cur = cand;
+                        improved = true;
+                    }
+                }
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = vec_of(f64_in(-10.0, 10.0), 0, 32);
+        forall(1, 200, &gen, |v| v.len() <= 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        let gen = usize_in(0, 100);
+        forall(2, 500, &gen, |&n| n < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // property: sum < 25 — fails for vectors with large sums; shrinker
+        // should reduce to something small
+        let failing = vec![9.7, 8.2, 3.1, 7.9, 2.2];
+        let shrunk = shrink_vec(&failing, &|v: &[f64]| v.iter().sum::<f64>() < 25.0);
+        assert!(shrunk.len() <= failing.len());
+        assert!(shrunk.iter().sum::<f64>() >= 25.0);
+        // all elements simplified to integers where possible
+        assert!(shrunk.iter().all(|x| x.fract() == 0.0 || failing.contains(x)));
+    }
+
+    #[test]
+    fn one_of_stays_in_options() {
+        let gen = one_of(vec!["a", "b", "c"]);
+        forall(3, 100, &gen, |s| ["a", "b", "c"].contains(s));
+    }
+}

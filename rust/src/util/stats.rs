@@ -1,0 +1,172 @@
+//! Statistics helpers shared by the profiler, experiments and benches.
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile q={q}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median with Q1/Q3 whiskers, as the paper reports across repetitions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MedianIqr {
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+}
+
+pub fn median_iqr(xs: &[f64]) -> MedianIqr {
+    MedianIqr {
+        median: quantile(xs, 0.5),
+        q1: quantile(xs, 0.25),
+        q3: quantile(xs, 0.75),
+    }
+}
+
+/// Mean Absolute Percentage Error (%) — the paper's headline metric.
+/// Entries with |truth| < eps are skipped to avoid division blowups.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "mape length mismatch");
+    let eps = 1e-9;
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if t.abs() > eps {
+            total += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        let (a, b) = (xs[i] - mx, ys[i] - my);
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        let unsorted = [4.0, 1.0, 3.0, 2.0];
+        assert!((median(&unsorted) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_iqr_ordering() {
+        let xs: Vec<f64> = (1..=11).map(f64::from).collect();
+        let m = median_iqr(&xs);
+        assert_eq!(m.median, 6.0);
+        assert!(m.q1 <= m.median && m.median <= m.q3);
+    }
+
+    #[test]
+    fn mape_basics() {
+        let truth = [100.0, 200.0];
+        let pred = [110.0, 180.0];
+        // (10% + 10%) / 2
+        assert!((mape(&pred, &truth) - 10.0).abs() < 1e-9);
+        assert_eq!(mape(&[], &[]), 0.0);
+        // zero-truth entries skipped
+        assert!((mape(&[5.0, 110.0], &[0.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert!((rmse(&[3.0], &[0.0]) - 3.0).abs() < 1e-12);
+        assert!((rmse(&[1.0, 1.0], &[0.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let inv = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &inv) + 1.0).abs() < 1e-12);
+    }
+}

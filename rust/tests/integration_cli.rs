@@ -1,0 +1,92 @@
+//! Integration: CLI smoke tests through the compiled binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_powertrain"))
+}
+
+#[test]
+fn help_lists_all_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["info", "profile", "train-ref", "transfer", "optimize", "serve", "experiment"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn no_args_prints_help() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn info_reports_devices_and_artifacts() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("orin-agx"));
+    assert!(text.contains("18096"));
+    assert!(text.contains("artifacts: OK"), "artifacts missing? {text}");
+}
+
+#[test]
+fn profile_writes_corpus_csv() {
+    let dir = std::env::temp_dir().join("pt_cli_profile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_file = dir.join("c.csv");
+    let out = bin()
+        .args([
+            "profile", "--workload", "lstm", "--modes", "8", "--seed", "5",
+            "--out", out_file.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(&out_file).unwrap();
+    assert_eq!(csv.lines().count(), 9); // header + 8 modes
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_flag_values_are_usage_errors() {
+    let out = bin()
+        .args(["profile", "--modes", "not-a-number"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("expects an integer"));
+
+    let out = bin().args(["profile", "--device", "tpu"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown device"));
+}
+
+#[test]
+fn experiment_requires_id() {
+    let out = bin().arg("experiment").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("requires an id"));
+}
+
+#[test]
+fn experiment_table2_runs_quickly() {
+    let dir = std::env::temp_dir().join("pt_cli_table2");
+    let out = bin()
+        .args(["experiment", "table2", "--out", dir.to_str().unwrap(), "--quick"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("table2_devices.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,168 @@
+//! Integration: the serving coordinator end-to-end — request handling,
+//! budget compliance, multi-request serving, failure paths.
+//!
+//! Uses a reduced prediction grid + transfer epochs so the suite stays
+//! fast; the federated_fleet example runs the full-scale version.
+
+use powertrain::coordinator::{
+    handle_request, prediction_grid, serve, CoordinatorConfig, Metrics, ReferenceModels,
+    Request, Scenario,
+};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::profiler::Profiler;
+use powertrain::runtime::Runtime;
+use powertrain::sim::TrainerSim;
+use powertrain::workload::Workload;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from("artifacts")
+}
+
+/// Shared, lazily-built reference models (training them once is enough).
+fn reference(rt: &Runtime) -> ReferenceModels {
+    let dir = std::env::temp_dir().join("pt_coord_ref_v1");
+    if let Ok(r) = ReferenceModels::load(&dir) {
+        return r;
+    }
+    let mut rng = powertrain::util::rng::Rng::new(1);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(800, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(
+        DeviceKind::OrinAgx.spec(),
+        Workload::resnet(),
+        1,
+    ));
+    let corpus = profiler.profile_modes(&modes).unwrap();
+    let r = ReferenceModels::bootstrap(rt, &corpus, 100, 1).unwrap();
+    std::fs::create_dir_all(&dir).unwrap();
+    r.save(&dir).unwrap();
+    r
+}
+
+fn test_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts_dir: artifacts(),
+        transfer_epochs: 60,
+        prediction_grid: Some(400),
+        workers: 1,
+    }
+}
+
+#[test]
+fn powertrain_request_end_to_end() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let reference = reference(&rt);
+    let metrics = Metrics::new();
+    let req = Request {
+        id: 1,
+        device: DeviceKind::OrinAgx,
+        workload: Workload::mobilenet(),
+        power_budget_w: 30.0,
+        scenario: Scenario::FederatedLearning,
+        seed: 11,
+    };
+    let resp = handle_request(&rt, &reference, &test_cfg(), &metrics, &req).unwrap();
+    assert!(resp.strategy.starts_with("powertrain"));
+    assert!(resp.predicted_power_w <= 30.0 + 1e-9, "prediction violates budget");
+    // observed power should land near the budget, not wildly above
+    assert!(
+        resp.observed_power_w <= 30.0 * 1.25,
+        "observed {:.1} W >> budget",
+        resp.observed_power_w
+    );
+    assert!(resp.observed_time_ms > 0.0);
+    assert!(resp.profiling_cost_s > 0.0);
+    assert_eq!(metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+}
+
+#[test]
+fn cross_device_request_uses_device_grid() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let reference = reference(&rt);
+    let metrics = Metrics::new();
+    let req = Request {
+        id: 2,
+        device: DeviceKind::OrinNano,
+        workload: Workload::mobilenet(),
+        power_budget_w: 10.0,
+        scenario: Scenario::ContinuousLearning,
+        seed: 12,
+    };
+    let cfg = CoordinatorConfig { prediction_grid: None, ..test_cfg() };
+    let resp = handle_request(&rt, &reference, &cfg, &metrics, &req).unwrap();
+    // the chosen mode must be valid on the Nano
+    resp.chosen_mode.validate(DeviceKind::OrinNano.spec()).unwrap();
+    assert!(resp.observed_power_w < 15.0);
+}
+
+#[test]
+fn infeasible_budget_reported_as_error() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let reference = reference(&rt);
+    let metrics = Metrics::new();
+    let req = Request {
+        id: 3,
+        device: DeviceKind::OrinAgx,
+        workload: Workload::bert(),
+        power_budget_w: 2.0, // below idle power
+        scenario: Scenario::FederatedLearning,
+        seed: 13,
+    };
+    let err = handle_request(&rt, &reference, &test_cfg(), &metrics, &req);
+    assert!(err.is_err());
+}
+
+#[test]
+fn serve_processes_all_requests_and_tracks_metrics() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let reference = reference(&rt);
+    drop(rt);
+    let requests: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i,
+            device: DeviceKind::OrinAgx,
+            workload: if i % 2 == 0 { Workload::mobilenet() } else { Workload::lstm() },
+            power_budget_w: 25.0 + 5.0 * i as f64,
+            scenario: Scenario::FederatedLearning,
+            seed: 100 + i,
+        })
+        .collect();
+    let (responses, metrics) = serve(&test_cfg(), &reference, requests).unwrap();
+    assert_eq!(responses.len(), 3);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+    assert_eq!(
+        metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        3
+    );
+    let (p50, _, _) = metrics.latency_summary_ms();
+    assert!(p50 > 0.0);
+}
+
+#[test]
+fn serve_with_two_workers_completes() {
+    // two workers, each with its own PJRT runtime (not Send across threads)
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let reference = reference(&rt);
+    drop(rt);
+    let cfg = CoordinatorConfig { workers: 2, ..test_cfg() };
+    let requests: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::lstm(),
+            power_budget_w: 28.0,
+            scenario: Scenario::FederatedLearning,
+            seed: 200 + i,
+        })
+        .collect();
+    let (responses, _) = serve(&cfg, &reference, requests).unwrap();
+    assert_eq!(responses.len(), 4);
+}
+
+#[test]
+fn prediction_grids_match_paper_corpus_sizes() {
+    assert_eq!(prediction_grid(DeviceKind::OrinAgx, None, 0).len(), 4368);
+    assert_eq!(prediction_grid(DeviceKind::XavierAgx, None, 0).len(), 1000);
+    assert_eq!(prediction_grid(DeviceKind::OrinNano, None, 0).len(), 180);
+}

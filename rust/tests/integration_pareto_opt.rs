@@ -1,0 +1,116 @@
+//! Integration: Pareto construction + optimization on real simulator
+//! ground truth, including the baselines' qualitative behaviour.
+
+use powertrain::baselines;
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::pareto::{ParetoFront, Point};
+use powertrain::profiler::{Corpus, Record};
+use powertrain::sim::TrainerSim;
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+fn truth_points(wl: Workload, seed: u64) -> (Vec<Point>, Corpus) {
+    let spec = DeviceKind::OrinAgx.spec();
+    let sim = TrainerSim::new(spec, wl, seed);
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let mut corpus = Corpus::new(DeviceKind::OrinAgx, wl);
+    let pts: Vec<Point> = grid
+        .modes
+        .iter()
+        .map(|pm| {
+            let t = sim.true_minibatch_ms(pm);
+            let p = sim.true_power_mw(pm);
+            corpus.push(Record { mode: *pm, time_ms: t, power_mw: p, cost_s: 1.0 });
+            Point { mode: *pm, time: t, power_mw: p }
+        })
+        .collect();
+    (pts, corpus)
+}
+
+#[test]
+fn ground_truth_front_spans_budget_range() {
+    let (pts, _) = truth_points(Workload::resnet(), 1);
+    let front = ParetoFront::build(&pts);
+    assert!(front.is_valid());
+    assert!(front.len() > 10, "front too sparse: {}", front.len());
+    // the paper sweeps 17..50 W: every budget in that range is feasible
+    for b in 17..=50 {
+        let sol = front.optimize(b as f64 * 1000.0).unwrap();
+        assert!(sol.power_mw <= b as f64 * 1000.0);
+    }
+}
+
+#[test]
+fn optimal_time_decreases_with_budget() {
+    let (pts, _) = truth_points(Workload::mobilenet(), 2);
+    let front = ParetoFront::build(&pts);
+    let mut last = f64::INFINITY;
+    for b in 15..=50 {
+        if let Ok(sol) = front.optimize(b as f64 * 1000.0) {
+            assert!(sol.time <= last + 1e-9, "budget {b}: time went up");
+            last = sol.time;
+        }
+    }
+}
+
+#[test]
+fn maxn_fastest_but_over_budget() {
+    let (pts, _) = truth_points(Workload::resnet(), 3);
+    let front = ParetoFront::build(&pts);
+    let spec = DeviceKind::OrinAgx.spec();
+    let sim = TrainerSim::new(spec, Workload::resnet(), 3);
+    let maxn = baselines::maxn_choice(spec);
+    let maxn_time = sim.true_minibatch_ms(&maxn);
+    let maxn_power = sim.true_power_mw(&maxn);
+    // fastest overall...
+    let opt30 = front.optimize(30_000.0).unwrap();
+    assert!(maxn_time <= opt30.time);
+    // ...but violates a 30 W budget (paper: 51.1 W at MAXN)
+    assert!(maxn_power > 30_000.0);
+}
+
+#[test]
+fn random_sampling_is_slower_than_true_optimum() {
+    // RND-50's observed Pareto can't cover the grid: across budgets it
+    // must be >= optimal, and noticeably slower on average (paper: 12-28%)
+    let (pts, corpus) = truth_points(Workload::mobilenet(), 4);
+    let truth = ParetoFront::build(&pts);
+    let mut rng = Rng::new(4);
+    let rnd = baselines::random_sampling_front(&corpus.sample(50, &mut rng));
+    let mut penalties = Vec::new();
+    for b in 17..=50 {
+        let budget = b as f64 * 1000.0;
+        let (Ok(opt), Ok(got)) = (truth.optimize(budget), rnd.optimize(budget)) else {
+            continue;
+        };
+        assert!(got.time >= opt.time - 1e-9, "rnd beat the optimum?!");
+        penalties.push(100.0 * (got.time - opt.time) / opt.time);
+    }
+    let mean_penalty = powertrain::util::stats::mean(&penalties);
+    assert!(
+        mean_penalty > 2.0,
+        "random sampling suspiciously good: {mean_penalty:.1}%"
+    );
+}
+
+#[test]
+fn linreg_baseline_produces_finite_but_poor_fit() {
+    let (_, corpus) = truth_points(Workload::resnet(), 5);
+    let model = baselines::linreg::Ridge::fit(&corpus, powertrain::train::Target::Time, 1e-6);
+    let mut apes = Vec::new();
+    for r in corpus.records().iter().step_by(11) {
+        let pred = model.predict(&r.mode.features());
+        assert!(pred.is_finite());
+        apes.push(((pred - r.time_ms) / r.time_ms).abs() * 100.0);
+    }
+    let mape = powertrain::util::stats::mean(&apes);
+    // the paper's motivation for NNs: linear models are inadequate
+    assert!(mape > 15.0, "linreg too good: {mape:.1}%");
+}
+
+#[test]
+fn infeasible_budget_is_an_error_not_a_panic() {
+    let (pts, _) = truth_points(Workload::bert(), 6);
+    let front = ParetoFront::build(&pts);
+    assert!(front.optimize(1_000.0).is_err()); // 1 W: nothing fits
+}

@@ -1,0 +1,109 @@
+//! Integration: the profiling pipeline end-to-end — reboot-aware plans,
+//! corpus persistence, fault tolerance.
+
+use powertrain::device::{DeviceKind, PowerModeGrid, ProfilingPlan};
+use powertrain::profiler::{Corpus, Profiler};
+use powertrain::sim::{FaultConfig, TrainerSim};
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+#[test]
+fn corpus_round_trips_through_csv_after_profiling() {
+    let spec = DeviceKind::OrinAgx.spec();
+    let mut rng = Rng::new(2);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(30, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(spec, Workload::yolo(), 2));
+    let corpus = profiler.profile_modes(&modes).unwrap();
+
+    let dir = std::env::temp_dir().join("pt_integration_corpus");
+    let path = dir.join("yolo.csv");
+    corpus.save(&path).unwrap();
+    let loaded = Corpus::load(&path).unwrap();
+    assert_eq!(loaded.len(), corpus.len());
+    assert_eq!(loaded.workload, corpus.workload);
+    for (a, b) in loaded.records().iter().zip(corpus.records()) {
+        assert_eq!(a.mode, b.mode);
+        assert!((a.time_ms - b.time_ms).abs() < 0.01);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn profiling_plan_cost_includes_reboots() {
+    let spec = DeviceKind::OrinAgx.spec();
+    let mut rng = Rng::new(3);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(60, &mut rng);
+    let plan = ProfilingPlan::build(&modes);
+    let reboots = plan.reboot_count();
+
+    let mut profiler = Profiler::new(TrainerSim::new(spec, Workload::resnet(), 3));
+    let corpus = profiler.profile_modes(&modes).unwrap();
+    // total cost must include ~45 s per reboot on top of the training time
+    let reboot_s = reboots as f64 * profiler.reboot_cost_s;
+    assert!(
+        corpus.total_cost_s() > reboot_s,
+        "cost {:.0}s vs reboot share {reboot_s:.0}s",
+        corpus.total_cost_s()
+    );
+}
+
+#[test]
+fn profiler_survives_sensor_dropouts() {
+    let spec = DeviceKind::OrinAgx.spec();
+    let sim = TrainerSim::new(spec, Workload::resnet(), 4).with_faults(FaultConfig {
+        sensor_dropout_prob: 0.3,
+        ..Default::default()
+    });
+    let mut profiler = Profiler::new(sim);
+    let mut rng = Rng::new(4);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(15, &mut rng);
+    let corpus = profiler.profile_modes(&modes).unwrap();
+    assert_eq!(corpus.len(), 15);
+    // power values still close to truth despite 30% dropped samples
+    for r in corpus.records() {
+        let truth = profiler.sim.true_power_mw(&r.mode);
+        assert!(
+            (r.power_mw - truth).abs() / truth < 0.08,
+            "{}: {} vs {truth}",
+            r.mode.label(),
+            r.power_mw
+        );
+    }
+}
+
+#[test]
+fn profiling_cost_scales_with_mode_slowness() {
+    let spec = DeviceKind::OrinAgx.spec();
+    let slow = powertrain::device::PowerMode {
+        cores: 2,
+        cpu_khz: spec.cpu_khz[2],
+        gpu_khz: spec.gpu_khz[0],
+        mem_khz: spec.mem_khz[0],
+    };
+    let fast = powertrain::device::PowerMode::maxn(spec);
+    let mut profiler = Profiler::new(TrainerSim::new(spec, Workload::resnet(), 5));
+    let slow_prof = profiler.profile_mode(&slow, false).unwrap();
+    let fast_prof = profiler.profile_mode(&fast, false).unwrap();
+    assert!(
+        slow_prof.cost_s > 2.0 * fast_prof.cost_s,
+        "slow {:.1}s fast {:.1}s",
+        slow_prof.cost_s,
+        fast_prof.cost_s
+    );
+}
+
+#[test]
+fn per_workload_profiling_costs_differ() {
+    // data-collection overhead (Figs 7/8 right axis) is workload-specific:
+    // BERT minibatches are ~90x LSTM's
+    let spec = DeviceKind::OrinAgx.spec();
+    let mut rng = Rng::new(6);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(10, &mut rng);
+    let cost = |wl: Workload, seed: u64| {
+        let mut p = Profiler::new(TrainerSim::new(spec, wl, seed));
+        p.profile_modes(&modes).unwrap().total_cost_s()
+    };
+    let bert = cost(Workload::bert(), 7);
+    let lstm = cost(Workload::lstm(), 8);
+    assert!(bert > 5.0 * lstm, "bert {bert:.0}s vs lstm {lstm:.0}s");
+}

@@ -1,0 +1,307 @@
+//! Integration: the rust PJRT runtime loads the real AOT artifacts and its
+//! numerics agree with the pure-rust reference forward pass.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees this).
+
+use powertrain::nn::{checkpoint::Checkpoint, host_mlp, leaf_shape, MlpParams};
+use powertrain::profiler::StandardScaler;
+use powertrain::runtime::{f32_literal, to_f32_scalar, to_f32_vec, u32_literal, Runtime};
+use powertrain::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+fn demo_params(seed: u64) -> MlpParams {
+    let mut rng = Rng::new(seed);
+    MlpParams::init_he(&mut rng)
+}
+
+fn random_x(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn manifest_describes_all_four_artifacts() {
+    let rt = runtime();
+    for name in ["predict", "evaluate", "train_mse", "train_mape"] {
+        assert!(rt.manifest.artifact(name).is_ok(), "missing {name}");
+    }
+    assert_eq!(rt.manifest.input_dim, 4);
+    assert_eq!(rt.manifest.hidden, vec![256, 128, 64]);
+    assert_eq!(rt.manifest.predict_batch, 512);
+    assert_eq!(rt.manifest.train_batch, 64);
+}
+
+#[test]
+fn predict_artifact_matches_host_forward() {
+    let rt = runtime();
+    let params = demo_params(1);
+    let mut rng = Rng::new(2);
+    let bsz = rt.manifest.predict_batch;
+    let x = random_x(&mut rng, bsz * 4);
+    let (y_mean, y_std) = (120.0f32, 35.0f32);
+
+    let mut inputs = Vec::new();
+    for (i, leaf) in params.leaves.iter().enumerate() {
+        inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+    }
+    inputs.push(f32_literal(&x, &[bsz, 4]).unwrap());
+    inputs.push(f32_literal(&[y_mean], &[]).unwrap());
+    inputs.push(f32_literal(&[y_std], &[]).unwrap());
+
+    let outs = rt.execute("predict", &inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    let preds = to_f32_vec(&outs[0]).unwrap();
+    assert_eq!(preds.len(), bsz);
+
+    for row in (0..bsz).step_by(37) {
+        let feats = [x[row * 4], x[row * 4 + 1], x[row * 4 + 2], x[row * 4 + 3]];
+        let want = host_mlp::forward_one(&params, &feats) * y_std + y_mean;
+        let got = preds[row];
+        assert!(
+            (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "row {row}: artifact {got} vs host {want}"
+        );
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = runtime();
+    assert_eq!(rt.cached_executables(), 0);
+    let params = demo_params(3);
+    let bsz = rt.manifest.predict_batch;
+    let x = vec![0.0f32; bsz * 4];
+    let mk_inputs = |params: &MlpParams| {
+        let mut v = Vec::new();
+        for (i, leaf) in params.leaves.iter().enumerate() {
+            v.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+        }
+        v.push(f32_literal(&x, &[bsz, 4]).unwrap());
+        v.push(f32_literal(&[0.0f32], &[]).unwrap());
+        v.push(f32_literal(&[1.0f32], &[]).unwrap());
+        v
+    };
+    rt.execute("predict", &mk_inputs(&params)).unwrap();
+    assert_eq!(rt.cached_executables(), 1);
+    rt.execute("predict", &mk_inputs(&params)).unwrap();
+    assert_eq!(rt.cached_executables(), 1);
+}
+
+#[test]
+fn execute_validates_input_arity_and_shape() {
+    let rt = runtime();
+    // wrong arity
+    assert!(rt.execute("predict", &[]).map(|_| ()).is_err());
+    // wrong shape on one input
+    let params = demo_params(4);
+    let mut inputs = Vec::new();
+    for (i, leaf) in params.leaves.iter().enumerate() {
+        inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+    }
+    inputs.push(f32_literal(&[0.0f32; 8], &[2, 4]).unwrap()); // batch 2 != 512
+    inputs.push(f32_literal(&[0.0f32], &[]).unwrap());
+    inputs.push(f32_literal(&[1.0f32], &[]).unwrap());
+    let err = match rt.execute("predict", &inputs) {
+        Err(e) => e,
+        Ok(_) => panic!("shape mismatch accepted"),
+    };
+    assert!(err.to_string().contains("elements"));
+}
+
+#[test]
+fn unknown_artifact_is_reported() {
+    let rt = runtime();
+    let err = match rt.execute("nonexistent", &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("unknown artifact accepted"),
+    };
+    assert!(err.to_string().contains("nonexistent"));
+}
+
+#[test]
+fn train_mse_step_descends_and_preserves_shapes() {
+    let rt = runtime();
+    let params = demo_params(5);
+    let mut rng = Rng::new(6);
+    let bsz = rt.manifest.train_batch;
+
+    let x = random_x(&mut rng, bsz * 4);
+    // learnable target: y = 0.3 * sum(x)
+    let y: Vec<f32> = (0..bsz)
+        .map(|r| 0.3 * (x[r * 4] + x[r * 4 + 1] + x[r * 4 + 2] + x[r * 4 + 3]))
+        .collect();
+    let mask = vec![1.0f32; bsz];
+
+    let mut p = params;
+    let mut m = MlpParams::zeros();
+    let mut v = MlpParams::zeros();
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for t in 1..=60 {
+        let mut inputs = Vec::new();
+        for (i, leaf) in p.leaves.iter().enumerate() {
+            inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+        }
+        for state in [&m, &v] {
+            for (i, leaf) in state.leaves.iter().enumerate() {
+                inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+            }
+        }
+        inputs.push(f32_literal(&[t as f32], &[1]).unwrap());
+        inputs.push(u32_literal(&rng.jax_key()));
+        inputs.push(f32_literal(&x, &[bsz, 4]).unwrap());
+        inputs.push(f32_literal(&y, &[bsz, 1]).unwrap());
+        inputs.push(f32_literal(&mask, &[bsz]).unwrap());
+
+        let outs = rt.execute("train_mse", &inputs).unwrap();
+        assert_eq!(outs.len(), 25);
+        for i in 0..8 {
+            p.leaves[i] = to_f32_vec(&outs[i]).unwrap();
+            m.leaves[i] = to_f32_vec(&outs[8 + i]).unwrap();
+            v.leaves[i] = to_f32_vec(&outs[16 + i]).unwrap();
+        }
+        let loss = to_f32_scalar(&outs[24]).unwrap();
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+    }
+    assert!(p.is_finite());
+    assert!(
+        last_loss < 0.6 * first_loss.unwrap(),
+        "no descent: {first_loss:?} -> {last_loss}"
+    );
+}
+
+#[test]
+fn evaluate_artifact_matches_host_mse() {
+    let rt = runtime();
+    let params = demo_params(7);
+    let mut rng = Rng::new(8);
+    let bsz = rt.manifest.predict_batch;
+    let x = random_x(&mut rng, bsz * 4);
+    // targets = host predictions + 2.0 -> mse must be 4.0
+    let y_std_t: Vec<f32> = (0..bsz)
+        .map(|r| {
+            let feats = [x[r * 4], x[r * 4 + 1], x[r * 4 + 2], x[r * 4 + 3]];
+            host_mlp::forward_one(&params, &feats) + 2.0
+        })
+        .collect();
+    let y_raw = vec![100.0f32; bsz];
+    let mask = vec![1.0f32; bsz];
+
+    let mut inputs = Vec::new();
+    for (i, leaf) in params.leaves.iter().enumerate() {
+        inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+    }
+    inputs.push(f32_literal(&x, &[bsz, 4]).unwrap());
+    let y_col: Vec<f32> = y_std_t.clone();
+    inputs.push(f32_literal(&y_col, &[bsz, 1]).unwrap());
+    inputs.push(f32_literal(&y_raw, &[bsz, 1]).unwrap());
+    inputs.push(f32_literal(&mask, &[bsz]).unwrap());
+    inputs.push(f32_literal(&[0.0f32], &[]).unwrap());
+    inputs.push(f32_literal(&[1.0f32], &[]).unwrap());
+
+    let outs = rt.execute("evaluate", &inputs).unwrap();
+    let mse = to_f32_scalar(&outs[0]).unwrap();
+    assert!((mse - 4.0).abs() < 1e-2, "mse={mse}");
+}
+
+#[test]
+fn checkpointed_model_predicts_identically_through_artifact() {
+    // save -> load -> predict via artifact == predict via host
+    let rt = runtime();
+    let mut rng = Rng::new(9);
+    let ckpt = Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1000.0, 700.0, 2000.0],
+            std: vec![3.5, 600.0, 350.0, 1100.0],
+        },
+        target_scaler: StandardScaler { mean: vec![80.0], std: vec![30.0] },
+        target: "time".into(),
+        provenance: "integration".into(),
+        val_loss: 0.0,
+    };
+    let dir = std::env::temp_dir().join("pt_rt_ckpt");
+    let path = dir.join("ck.json");
+    ckpt.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+
+    let grid = powertrain::device::PowerModeGrid::paper_subset(
+        powertrain::device::DeviceKind::OrinAgx,
+    );
+    let modes = &grid.modes[..700];
+    let via_artifact = powertrain::predict::predict_modes(&rt, &loaded, modes).unwrap();
+    let via_host = powertrain::predict::predict_modes_host(&loaded, modes);
+    assert_eq!(via_artifact.len(), 700);
+    for i in (0..700).step_by(53) {
+        assert!(
+            (via_artifact[i] - via_host[i]).abs() < 1e-2 * via_host[i].abs().max(1.0),
+            "i={i}: {} vs {}",
+            via_artifact[i],
+            via_host[i]
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression test for the input-buffer leak in xla 0.1.6's `execute` C
+/// wrapper (buffers were `release()`d and never freed; the runtime now
+/// routes through `execute_b` with self-managed buffers). 600 train-step
+/// executions move ~350 MB of inputs; RSS must stay nearly flat.
+#[test]
+fn executions_do_not_leak_input_buffers() {
+    fn rss_kb() -> u64 {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find(|l| l.starts_with("VmRSS"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    }
+
+    let rt = runtime();
+    let params = demo_params(21);
+    let m = MlpParams::zeros();
+    let v = MlpParams::zeros();
+    let mut rng = Rng::new(22);
+    let bsz = rt.manifest.train_batch;
+    let x = vec![0.1f32; bsz * 4];
+    let y = vec![0.2f32; bsz];
+    let mask = vec![1.0f32; bsz];
+
+    let run_step = |t: u64, rng: &mut Rng| {
+        let mut inputs = Vec::with_capacity(29);
+        for state in [&params, &m, &v] {
+            for (i, leaf) in state.leaves.iter().enumerate() {
+                inputs.push(f32_literal(leaf, &leaf_shape(i)).unwrap());
+            }
+        }
+        inputs.push(f32_literal(&[t as f32], &[1]).unwrap());
+        inputs.push(u32_literal(&rng.jax_key()));
+        inputs.push(f32_literal(&x, &[bsz, 4]).unwrap());
+        inputs.push(f32_literal(&y, &[bsz, 1]).unwrap());
+        inputs.push(f32_literal(&mask, &[bsz]).unwrap());
+        rt.execute("train_mse", &inputs).unwrap();
+    };
+
+    // warmup: compile + allocator steady state
+    for t in 1..=50 {
+        run_step(t, &mut rng);
+    }
+    let before = rss_kb();
+    for t in 51..=650 {
+        run_step(t, &mut rng);
+    }
+    let after = rss_kb();
+    let grown_mb = (after.saturating_sub(before)) as f64 / 1024.0;
+    // the old leak grew ~0.55 MB/step (~330 MB here); allow generous jitter
+    assert!(
+        grown_mb < 60.0,
+        "RSS grew {grown_mb:.0} MB over 600 executions — input buffers leaking again?"
+    );
+}

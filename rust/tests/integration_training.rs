@@ -1,0 +1,169 @@
+//! Integration: the full learning pipeline on simulator ground truth —
+//! reference-NN training, PowerTrain transfer, and the paper's headline
+//! qualitative claims at small scale:
+//!
+//! * an NN trained on a large corpus predicts the full grid accurately;
+//! * PowerTrain transfer with 50 modes beats a from-scratch NN on 50 modes;
+//! * power predictions are more accurate than time predictions.
+//!
+//! Scales are reduced (hundreds of modes, tens of epochs) to keep `cargo
+//! test` fast; the experiment harness runs the paper-scale versions.
+
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::profiler::{Corpus, Record};
+use powertrain::runtime::Runtime;
+use powertrain::sim::TrainerSim;
+use powertrain::train::transfer::{transfer, TransferConfig};
+use powertrain::train::{scale_features, Target, TrainConfig, Trainer};
+use powertrain::util::rng::Rng;
+use powertrain::util::stats;
+use powertrain::workload::Workload;
+
+fn runtime() -> Runtime {
+    Runtime::new(std::path::Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+/// Fast ground-truth corpus (no telemetry noise) for training-logic tests.
+fn truth_corpus(wl: Workload, n: usize, seed: u64) -> Corpus {
+    let spec = DeviceKind::OrinAgx.spec();
+    let sim = TrainerSim::new(spec, wl, seed);
+    let mut rng = Rng::new(seed ^ 0xc0ffee);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(n, &mut rng);
+    let mut c = Corpus::new(DeviceKind::OrinAgx, wl);
+    for pm in modes {
+        c.push(Record {
+            mode: pm,
+            time_ms: sim.true_minibatch_ms(&pm),
+            power_mw: sim.true_power_mw(&pm),
+            cost_s: 0.0,
+        });
+    }
+    c
+}
+
+/// MAPE of a checkpoint against held-out ground truth.
+fn holdout_mape(
+    rt: &Runtime,
+    ckpt: &powertrain::nn::checkpoint::Checkpoint,
+    holdout: &Corpus,
+    target: Target,
+) -> f64 {
+    let preds = powertrain::predict::predict_modes(
+        rt,
+        ckpt,
+        &holdout.records().iter().map(|r| r.mode).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let truth = target.values(holdout);
+    stats::mape(&preds, &truth)
+}
+
+#[test]
+fn nn_on_large_corpus_predicts_well() {
+    let rt = runtime();
+    let train_corpus = truth_corpus(Workload::resnet(), 1000, 1);
+    let holdout = truth_corpus(Workload::resnet(), 300, 2);
+    let cfg = TrainConfig { epochs: 100, seed: 3, ..Default::default() };
+    let trainer = Trainer::new(&rt);
+
+    let (time_ckpt, log) = trainer.train(&train_corpus, Target::Time, &cfg).unwrap();
+    assert!(log.steps > 100);
+    assert!(log.val_mse.iter().cloned().fold(f64::INFINITY, f64::min) < log.val_mse[0]);
+
+    let time_mape = holdout_mape(&rt, &time_ckpt, &holdout, Target::Time);
+    assert!(time_mape < 20.0, "time MAPE {time_mape:.1}% too high");
+
+    let (power_ckpt, _) = trainer.train(&train_corpus, Target::Power, &cfg).unwrap();
+    let power_mape = holdout_mape(&rt, &power_ckpt, &holdout, Target::Power);
+    assert!(power_mape < 12.0, "power MAPE {power_mape:.1}% too high");
+
+    // the paper's observation: power is easier to predict than time
+    assert!(
+        power_mape < time_mape,
+        "power {power_mape:.1}% !< time {time_mape:.1}%"
+    );
+}
+
+#[test]
+fn powertrain_transfer_beats_nn_scratch_at_50_modes() {
+    let rt = runtime();
+    let trainer = Trainer::new(&rt);
+
+    // reference: resnet, larger corpus + longer training (done offline once)
+    let ref_corpus = truth_corpus(Workload::resnet(), 1000, 10);
+    let ref_cfg = TrainConfig { epochs: 120, seed: 11, ..Default::default() };
+    let (ref_time, _) = trainer.train(&ref_corpus, Target::Time, &ref_cfg).unwrap();
+
+    // new workload: mobilenet with only 50 profiled modes
+    let small = truth_corpus(Workload::mobilenet(), 50, 12);
+    let holdout = truth_corpus(Workload::mobilenet(), 300, 13);
+
+    let t_cfg = TransferConfig {
+        base: TrainConfig { epochs: 100, seed: 14, ..Default::default() },
+        ..Default::default()
+    };
+    let (pt_ckpt, _) = transfer(&rt, &ref_time, &small, Target::Time, &t_cfg).unwrap();
+    let pt_mape = holdout_mape(&rt, &pt_ckpt, &holdout, Target::Time);
+
+    let nn_cfg = TrainConfig { epochs: 100, seed: 15, ..Default::default() };
+    let (nn_ckpt, _) = trainer.train(&small, Target::Time, &nn_cfg).unwrap();
+    let nn_mape = holdout_mape(&rt, &nn_ckpt, &holdout, Target::Time);
+
+    // the paper's headline: transfer is clearly better in the low-sample
+    // regime (Fig 7: 26.7% vs 52.6% at 10 modes, <20% vs 35% at 30)
+    assert!(
+        pt_mape < nn_mape,
+        "PT {pt_mape:.1}% not better than NN {nn_mape:.1}%"
+    );
+    assert!(pt_mape < 35.0, "PT transfer too weak: {pt_mape:.1}%");
+}
+
+#[test]
+fn mape_loss_variant_trains() {
+    let rt = runtime();
+    let corpus = truth_corpus(Workload::resnet(), 120, 20);
+    let cfg = TrainConfig {
+        epochs: 30,
+        loss: powertrain::train::LossKind::Mape,
+        seed: 21,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&rt);
+    let (ckpt, log) = trainer.train(&corpus, Target::Power, &cfg).unwrap();
+    assert!(ckpt.params.is_finite());
+    // MAPE loss curve should come down substantially from its start
+    let first = log.train_loss[0];
+    let last = *log.train_loss.last().unwrap();
+    assert!(last < 0.7 * first, "MAPE loss {first:.1} -> {last:.1}");
+}
+
+#[test]
+fn training_rejects_degenerate_corpus() {
+    let rt = runtime();
+    let trainer = Trainer::new(&rt);
+    let tiny = truth_corpus(Workload::resnet(), 1, 30);
+    assert!(trainer.train(&tiny, Target::Time, &TrainConfig::default()).is_err());
+}
+
+#[test]
+fn evaluate_consistent_with_predict() {
+    // Trainer::evaluate's MAPE must agree with computing MAPE from
+    // predict_modes outputs
+    let rt = runtime();
+    let corpus = truth_corpus(Workload::resnet(), 200, 40);
+    let cfg = TrainConfig { epochs: 25, seed: 41, ..Default::default() };
+    let trainer = Trainer::new(&rt);
+    let (ckpt, _) = trainer.train(&corpus, Target::Time, &cfg).unwrap();
+
+    let holdout = truth_corpus(Workload::resnet(), 150, 42);
+    let xs = scale_features(&holdout, &ckpt.feature_scaler);
+    let ys = Target::Time.values(&holdout);
+    let (_, eval_mape) = trainer
+        .evaluate(&ckpt.params, &xs, &ys, &ckpt.target_scaler)
+        .unwrap();
+    let direct = holdout_mape(&rt, &ckpt, &holdout, Target::Time);
+    assert!(
+        (eval_mape - direct).abs() < 1.0,
+        "evaluate {eval_mape:.2}% vs predict-derived {direct:.2}%"
+    );
+}

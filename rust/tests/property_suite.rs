@@ -1,0 +1,245 @@
+//! Property-based invariants across subsystems, driven by the in-house
+//! mini framework (`util::prop`) since proptest is unavailable offline.
+
+use powertrain::device::{DeviceKind, PowerMode, PowerModeGrid, ProfilingPlan};
+use powertrain::pareto::{ParetoFront, Point};
+use powertrain::profiler::{stabilization_index, StandardScaler};
+use powertrain::sim::perf_model::minibatch_time_ms;
+use powertrain::sim::power_model::steady_power_mw;
+use powertrain::util::json::Value;
+use powertrain::util::prop::{f64_in, forall, one_of, usize_in, vec_of, Gen};
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+/// Generator of valid power modes on a device.
+fn mode_gen(kind: DeviceKind) -> Gen<PowerMode> {
+    let spec = kind.spec();
+    Gen::new(move |r| PowerMode {
+        cores: 1 + r.below(spec.max_cores as usize) as u32,
+        cpu_khz: spec.cpu_khz[r.below(spec.cpu_khz.len())],
+        gpu_khz: spec.gpu_khz[r.below(spec.gpu_khz.len())],
+        mem_khz: spec.mem_khz[r.below(spec.mem_khz.len())],
+    })
+}
+
+#[test]
+fn prop_every_generated_mode_validates() {
+    for kind in DeviceKind::ALL {
+        forall(1, 500, &mode_gen(kind), |m| m.validate(kind.spec()).is_ok());
+    }
+}
+
+#[test]
+fn prop_sim_outputs_always_positive_finite() {
+    let spec = DeviceKind::OrinAgx.spec();
+    let workloads = Workload::default_five();
+    let gen = mode_gen(DeviceKind::OrinAgx);
+    forall(2, 400, &gen, |m| {
+        workloads.iter().all(|wl| {
+            let t = minibatch_time_ms(spec, wl, m);
+            let p = steady_power_mw(spec, wl, m);
+            t.total_ms > 0.0 && t.total_ms.is_finite() && p > 0.0 && p.is_finite()
+        })
+    });
+}
+
+#[test]
+fn prop_more_resources_never_slower() {
+    // raising any single knob (cores/cpu/gpu/mem) must not increase time
+    let spec = DeviceKind::OrinAgx.spec();
+    let gen = mode_gen(DeviceKind::OrinAgx);
+    let wl = Workload::resnet();
+    let idx = |tbl: &[u32], v: u32| tbl.iter().position(|&x| x == v).unwrap();
+    forall(3, 300, &gen, |m| {
+        let t0 = minibatch_time_ms(spec, &wl, m).total_ms;
+        let mut ok = true;
+        if m.cores < spec.max_cores {
+            let up = PowerMode { cores: m.cores + 1, ..*m };
+            ok &= minibatch_time_ms(spec, &wl, &up).total_ms <= t0 + 1e-9;
+        }
+        let ci = idx(spec.cpu_khz, m.cpu_khz);
+        if ci + 1 < spec.cpu_khz.len() {
+            let up = PowerMode { cpu_khz: spec.cpu_khz[ci + 1], ..*m };
+            ok &= minibatch_time_ms(spec, &wl, &up).total_ms <= t0 + 1e-9;
+        }
+        let gi = idx(spec.gpu_khz, m.gpu_khz);
+        if gi + 1 < spec.gpu_khz.len() {
+            let up = PowerMode { gpu_khz: spec.gpu_khz[gi + 1], ..*m };
+            ok &= minibatch_time_ms(spec, &wl, &up).total_ms <= t0 + 1e-9;
+        }
+        let mi = idx(spec.mem_khz, m.mem_khz);
+        if mi + 1 < spec.mem_khz.len() {
+            let up = PowerMode { mem_khz: spec.mem_khz[mi + 1], ..*m };
+            ok &= minibatch_time_ms(spec, &wl, &up).total_ms <= t0 + 1e-9;
+        }
+        ok
+    });
+}
+
+#[test]
+fn prop_pareto_front_is_minimal_and_nondominated() {
+    let point_gen = Gen::new(|r: &mut Rng| Point {
+        mode: PowerMode::maxn(DeviceKind::OrinAgx.spec()),
+        time: r.uniform_range(1.0, 1000.0),
+        power_mw: r.uniform_range(5_000.0, 60_000.0),
+    });
+    let cloud_gen = vec_of(point_gen, 1, 200);
+    forall(4, 200, &cloud_gen, |pts| {
+        let front = ParetoFront::build(pts);
+        // valid ordering + no candidate dominates a front point
+        front.is_valid()
+            && front.points().iter().all(|fp| {
+                !pts.iter().any(|c| c.time < fp.time && c.power_mw < fp.power_mw)
+            })
+            // every candidate is dominated-or-equal by some front point
+            && pts.iter().all(|c| {
+                front
+                    .points()
+                    .iter()
+                    .any(|fp| fp.time <= c.time && fp.power_mw <= c.power_mw)
+            })
+    });
+}
+
+#[test]
+fn prop_optimize_respects_budget_and_is_tight() {
+    let point_gen = Gen::new(|r: &mut Rng| Point {
+        mode: PowerMode::maxn(DeviceKind::OrinAgx.spec()),
+        time: r.uniform_range(1.0, 1000.0),
+        power_mw: r.uniform_range(5_000.0, 60_000.0),
+    });
+    let case_gen = Gen::new(move |r: &mut Rng| {
+        let pts: Vec<Point> = (0..(1 + r.below(100))).map(|_| point_gen.sample(r)).collect();
+        let budget = r.uniform_range(4_000.0, 70_000.0);
+        (pts, budget)
+    });
+    forall(5, 300, &case_gen, |(pts, budget)| {
+        let front = ParetoFront::build(pts);
+        match front.optimize(*budget) {
+            Err(_) => pts.iter().all(|p| p.power_mw > *budget),
+            Ok(sol) => {
+                sol.power_mw <= *budget
+                    && pts
+                        .iter()
+                        .filter(|p| p.power_mw <= *budget)
+                        .all(|p| sol.time <= p.time + 1e-9)
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_profiling_plan_is_permutation_with_safe_segments() {
+    let gen = vec_of(mode_gen(DeviceKind::OrinAgx), 1, 120);
+    forall(6, 150, &gen, |modes| {
+        let plan = ProfilingPlan::build(modes);
+        if plan.steps.len() != modes.len() {
+            return false;
+        }
+        // permutation check via sorted copies
+        let mut a: Vec<_> = modes.to_vec();
+        let mut b: Vec<_> = plan.steps.iter().map(|s| s.mode).collect();
+        let key = |m: &PowerMode| (m.cores, m.cpu_khz, m.gpu_khz, m.mem_khz);
+        a.sort_by_key(key);
+        b.sort_by_key(key);
+        if a != b {
+            return false;
+        }
+        // between reboots, cpu & gpu frequencies never rise
+        plan.steps.windows(2).all(|w| {
+            w[1].reboot
+                || (w[1].mode.cpu_khz <= w[0].mode.cpu_khz
+                    && w[1].mode.gpu_khz <= w[0].mode.gpu_khz)
+        })
+    });
+}
+
+#[test]
+fn prop_scaler_inverse_identity() {
+    let row_gen = vec_of(f64_in(-1e6, 1e6), 4, 4);
+    let data_gen = vec_of(row_gen, 2, 50);
+    forall(7, 200, &data_gen, |rows| {
+        let sc = StandardScaler::fit(rows);
+        rows.iter().all(|r| {
+            sc.inverse_row(&sc.transform_row(r))
+                .iter()
+                .zip(r)
+                .all(|(a, b)| (a - b).abs() <= 1e-6 * b.abs().max(1.0))
+        })
+    });
+}
+
+#[test]
+fn prop_json_round_trip_fuzz() {
+    // random JSON-ish trees survive serialize -> parse -> serialize
+    fn value_gen(depth: usize) -> Gen<Value> {
+        Gen::new(move |r: &mut Rng| rand_value(r, depth))
+    }
+    fn rand_value(r: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(r.bernoulli(0.5)),
+            2 => Value::Num((r.normal() * 1e3 * 256.0).round() / 256.0),
+            3 => Value::Str(format!("s{}\"\\\n{}", r.next_u32(), r.below(10))),
+            4 => Value::Arr((0..r.below(5)).map(|_| rand_value(r, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), rand_value(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(8, 300, &value_gen(3), |v| {
+        let text = v.to_string();
+        match Value::parse(&text) {
+            Ok(back) => back == *v && back.to_string() == text,
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_stabilization_index_is_sound() {
+    // whatever index it returns, the window starting there is stable
+    let gen = vec_of(usize_in(1_000, 60_000), 0, 40).map(|v| {
+        v.into_iter().map(|x| x as u32).collect::<Vec<u32>>()
+    });
+    forall(9, 400, &gen, |samples: &Vec<u32>| {
+        match stabilization_index(samples) {
+            None => true,
+            Some(idx) => {
+                let w = &samples[idx..idx + 3];
+                let lo = *w.iter().min().unwrap() as f64;
+                let hi = *w.iter().max().unwrap() as f64;
+                idx + 3 <= samples.len() && (hi - lo) / hi <= 0.04
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_corpus_split_partitions() {
+    use powertrain::profiler::{Corpus, Record};
+    let frac_gen = one_of(vec![0.5, 0.8, 0.9, 1.0]);
+    let case_gen = Gen::new(move |r: &mut Rng| {
+        let n = 2 + r.below(200);
+        (n, frac_gen.sample(r), r.next_u64())
+    });
+    forall(10, 200, &case_gen, |&(n, frac, seed)| {
+        let _spec = DeviceKind::OrinAgx.spec();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let mut c = Corpus::new(DeviceKind::OrinAgx, Workload::resnet());
+        for i in 0..n {
+            c.push(Record {
+                mode: grid.modes[i % grid.len()],
+                time_ms: i as f64 + 1.0,
+                power_mw: 1000.0 + i as f64,
+                cost_s: 0.0,
+            });
+        }
+        let mut rng = Rng::new(seed);
+        let (train, val) = c.split(frac, &mut rng);
+        train.len() + val.len() == n
+            && (train.len() as f64 - n as f64 * frac).abs() <= 1.0
+    });
+}
