@@ -1,19 +1,23 @@
 //! Hot-path microbenchmarks (custom harness; criterion unavailable
 //! offline). These are the perf-pass targets of EXPERIMENTS.md §Perf:
 //!
-//!   1. full-grid prediction through the AOT `predict` artifact
-//!      (the request-path bottleneck: 2 models x 4,368-18,096 modes);
-//!   2. host-side fallback prediction;
+//!   1. full-grid prediction through the batched host engine
+//!      (the request-path bottleneck: 2 models x 4,368-18,096 modes),
+//!      with the seed scalar path benched alongside as the baseline;
+//!   2. prediction through the AOT `predict` artifact (feature `xla`);
 //!   3. Pareto construction over grid-sized point clouds;
 //!   4. simulator + profiler throughput (corpus generation);
-//!   5. one fused train step through PJRT;
+//!   5. one fused train step through PJRT (feature `xla`);
 //!   6. grid enumeration + profiling-plan construction.
+//!
+//! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
+//! so successive PRs can track the perf trajectory.
 
 use powertrain::device::{DeviceKind, PowerModeGrid, ProfilingPlan};
-use powertrain::nn::{checkpoint::Checkpoint, leaf_shape, MlpParams};
+use powertrain::nn::{checkpoint::Checkpoint, host_mlp, MlpParams};
 use powertrain::pareto::{ParetoFront, Point};
+use powertrain::predict::GridPredictor;
 use powertrain::profiler::{Profiler, StandardScaler};
-use powertrain::runtime::{f32_literal, u32_literal, Runtime};
 use powertrain::sim::TrainerSim;
 use powertrain::util::bench::Bencher;
 use powertrain::util::rng::Rng;
@@ -32,6 +36,26 @@ fn demo_ckpt(seed: u64) -> Checkpoint {
         provenance: "bench".into(),
         val_loss: 0.0,
     }
+}
+
+/// The seed scalar host path, reproduced verbatim as the perf baseline
+/// the engine is compared against: per-mode `Vec` round-trips through the
+/// scaler plus `forward_one`'s per-layer allocations and strided weights.
+fn predict_modes_host_scalar(
+    ckpt: &Checkpoint,
+    modes: &[powertrain::device::PowerMode],
+) -> Vec<f64> {
+    modes
+        .iter()
+        .map(|pm| {
+            let feats = pm.features();
+            let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
+            let z = ckpt.feature_scaler.transform_row(&raw);
+            let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
+            let pred_std = host_mlp::forward_one(&ckpt.params, &zf) as f64;
+            ckpt.target_scaler.inverse1(pred_std)
+        })
+        .collect()
 }
 
 fn main() {
@@ -87,25 +111,60 @@ fn main() {
         acc
     });
 
-    // -- prediction ----------------------------------------------------------
+    // -- host prediction: seed scalar baseline vs batched engine ----------
     let ckpt = demo_ckpt(7);
+    let full = PowerModeGrid::full(DeviceKind::OrinAgx);
+    b.bench_items("predict/host_scalar_4368_modes", 4_368.0, || {
+        predict_modes_host_scalar(&ckpt, &subset.modes).len()
+    });
     b.bench_items("predict/host_4368_modes", 4_368.0, || {
         powertrain::predict::predict_modes_host(&ckpt, &subset.modes).len()
     });
+    // steady state: engine built once per checkpoint, output buffer reused
+    let gp = GridPredictor::new(&ckpt);
+    let mut out = Vec::new();
+    b.bench_items("predict/host_engine_steady_4368_modes", 4_368.0, || {
+        gp.predict_into(&subset.modes, &mut out);
+        out.len()
+    });
+    b.bench_items("predict/host_18096_modes", 18_096.0, || {
+        gp.predict_into(&full.modes, &mut out);
+        out.len()
+    });
+
+    #[cfg(feature = "xla")]
+    artifact_benches(&mut b, &ckpt, &subset, &full);
+
+    let report = std::path::Path::new("BENCH_hotpaths.json");
+    match b.save_json(report) {
+        Ok(()) => println!("\nwrote {}", report.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", report.display()),
+    }
+    println!("\n== done ==");
+}
+
+#[cfg(feature = "xla")]
+fn artifact_benches(
+    b: &mut Bencher,
+    ckpt: &Checkpoint,
+    subset: &PowerModeGrid,
+    full: &PowerModeGrid,
+) {
+    use powertrain::nn::leaf_shape;
+    use powertrain::runtime::{f32_literal, u32_literal, Runtime};
 
     match Runtime::new(std::path::Path::new("artifacts")) {
         Ok(rt) => {
             // warm the executable cache explicitly so the bench isolates
             // steady-state execution
-            let _ = powertrain::predict::predict_modes(&rt, &ckpt, &subset.modes[..512]);
+            let _ = powertrain::predict::predict_modes(&rt, ckpt, &subset.modes[..512]);
             b.bench_items("predict/artifact_4368_modes", 4_368.0, || {
-                powertrain::predict::predict_modes(&rt, &ckpt, &subset.modes)
+                powertrain::predict::predict_modes(&rt, ckpt, &subset.modes)
                     .unwrap()
                     .len()
             });
-            let full = PowerModeGrid::full(DeviceKind::OrinAgx);
             b.bench_items("predict/artifact_18096_modes", 18_096.0, || {
-                powertrain::predict::predict_modes(&rt, &ckpt, &full.modes)
+                powertrain::predict::predict_modes(&rt, ckpt, &full.modes)
                     .unwrap()
                     .len()
             });
@@ -138,6 +197,4 @@ fn main() {
         }
         Err(e) => println!("(skipping artifact benches: {e})"),
     }
-
-    println!("\n== done ==");
 }

@@ -20,7 +20,7 @@ use powertrain::util::rng::Rng;
 use powertrain::util::table::TextTable;
 use powertrain::workload::Workload;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> powertrain::Result<()> {
     let rt = Runtime::new(std::path::Path::new("artifacts"))?;
     let device = DeviceKind::OrinAgx;
     let wl = Workload::mobilenet(); // the continuously-retrained model

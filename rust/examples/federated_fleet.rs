@@ -30,7 +30,7 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> powertrain::Result<()> {
     let n_requests = env_usize("FLEET_REQUESTS", 9);
     let workers = env_usize("FLEET_WORKERS", 1);
 

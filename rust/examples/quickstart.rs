@@ -21,7 +21,7 @@ use powertrain::train::{Target, TrainConfig, Trainer};
 use powertrain::util::rng::Rng;
 use powertrain::workload::Workload;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> powertrain::Result<()> {
     let rt = Runtime::new(std::path::Path::new("artifacts"))?;
     println!("PJRT platform: {}", rt.platform());
 

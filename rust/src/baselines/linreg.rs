@@ -55,16 +55,21 @@ impl Ridge {
         Ridge { weights, feature_scaler, target_scaler }
     }
 
-    /// Predict the raw-unit target for one feature row.
+    /// Predict the raw-unit target for one feature row. Standardization is
+    /// inlined (no per-row `Vec` round-trips) so grid-scale sweeps stay
+    /// allocation-free.
     pub fn predict(&self, feats: &[f32; 4]) -> f64 {
-        let raw: Vec<f64> = feats.iter().map(|&x| x as f64).collect();
-        let z = self.feature_scaler.transform_row(&raw);
-        let y_std = self.weights[0]
-            + self.weights[1] * z[0]
-            + self.weights[2] * z[1]
-            + self.weights[3] * z[2]
-            + self.weights[4] * z[3];
+        let mut y_std = self.weights[0];
+        for d in 0..4 {
+            let z = (feats[d] as f64 - self.feature_scaler.mean[d]) / self.feature_scaler.std[d];
+            y_std += self.weights[d + 1] * z;
+        }
         self.target_scaler.inverse1(y_std)
+    }
+
+    /// Batched raw-unit prediction over a mode slice (grid sweeps).
+    pub fn predict_modes(&self, modes: &[crate::device::PowerMode]) -> Vec<f64> {
+        modes.iter().map(|pm| self.predict(&pm.features())).collect()
     }
 }
 
@@ -168,6 +173,17 @@ mod tests {
             worst = worst.max(ape);
         }
         assert!(worst > 0.30, "linreg unexpectedly good: worst APE {worst}");
+    }
+
+    #[test]
+    fn batched_mode_prediction_matches_per_row() {
+        let c = linear_corpus();
+        let model = Ridge::fit(&c, Target::Time, 1e-9);
+        let modes: Vec<_> = c.records().iter().map(|r| r.mode).take(40).collect();
+        let batch = model.predict_modes(&modes);
+        for (i, m) in modes.iter().enumerate() {
+            assert_eq!(batch[i], model.predict(&m.features()));
+        }
     }
 
     #[test]

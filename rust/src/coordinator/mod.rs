@@ -11,6 +11,13 @@
 //! Threading: PJRT clients are not `Send`, so each worker thread owns its
 //! own `Runtime`; requests flow through a shared queue and responses are
 //! collected on a channel. Python never runs here.
+//!
+//! Degraded mode: when the AOT artifacts are unavailable (built without
+//! the `xla` feature, or `Runtime` construction fails at serve time) the
+//! coordinator falls back to [`handle_request_host`] — no transfer
+//! fine-tuning, the reference checkpoints predict the grid directly
+//! through the batched host engine (`nn::engine`). Requests still get an
+//! in-budget recommendation instead of an error.
 
 pub mod metrics;
 pub mod policy;
@@ -28,13 +35,20 @@ use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
 use crate::error::{Error, Result};
 use crate::nn::checkpoint::Checkpoint;
 use crate::pareto::{ParetoFront, Point};
-use crate::profiler::{Corpus, Profiler};
-use crate::runtime::Runtime;
+use crate::predict::GridPredictor;
+use crate::profiler::Profiler;
 use crate::sim::TrainerSim;
-use crate::train::transfer::{transfer, TransferConfig};
-use crate::train::{Target, TrainConfig, Trainer};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
+
+#[cfg(feature = "xla")]
+use crate::profiler::Corpus;
+#[cfg(feature = "xla")]
+use crate::runtime::Runtime;
+#[cfg(feature = "xla")]
+use crate::train::transfer::{transfer, TransferConfig};
+#[cfg(feature = "xla")]
+use crate::train::{Target, TrainConfig, Trainer};
 
 /// An arriving request: optimize this workload on this device under this
 /// power budget.
@@ -91,6 +105,7 @@ impl ReferenceModels {
 
     /// Train reference models from scratch on the reference workload's
     /// profiled corpus (the paper's one-time offline step).
+    #[cfg(feature = "xla")]
     pub fn bootstrap(
         rt: &Runtime,
         corpus: &Corpus,
@@ -130,6 +145,7 @@ impl Default for CoordinatorConfig {
 
 /// Serve one request end-to-end on a given runtime. This is the heart of
 /// the coordinator; the threaded service wraps it.
+#[cfg(feature = "xla")]
 pub fn handle_request(
     rt: &Runtime,
     reference: &ReferenceModels,
@@ -189,19 +205,84 @@ pub fn handle_request(
     //    predicted Pareto front (paper Fig 10)
     let times = crate::predict::predict_modes(rt, &time_ckpt, &grid.modes)?;
     let powers = crate::predict::predict_modes(rt, &power_ckpt, &grid.modes)?;
+    finish_predicted(
+        req,
+        &grid,
+        &times,
+        &powers,
+        strat_name,
+        corpus.total_cost_s(),
+        metrics,
+        t0,
+    )
+}
+
+/// Serve one request without the PJRT runtime: the artifact-unavailable
+/// fallback. Skips online profiling and transfer (both need the train
+/// artifacts) and predicts the device grid directly with the *reference*
+/// checkpoints through the batched host engine — a degraded but in-budget
+/// answer with zero profiling cost. Brute force still works unchanged
+/// (it never touches the models).
+pub fn handle_request_host(
+    reference: &ReferenceModels,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    req: &Request,
+) -> Result<Response> {
+    let t0 = Instant::now();
+    metrics.requests_received.fetch_add(1, Ordering::Relaxed);
+
+    let spec = req.device.spec();
+    let strategy = Strategy::for_scenario(req.scenario);
+    let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
+
+    if let Strategy::BruteForce = strategy {
+        let profiler = Profiler::new(TrainerSim::new(spec, req.workload, req.seed));
+        return finish_brute_force(req, &grid, profiler, metrics, t0);
+    }
+
+    // engines are built once per request (weight transposition is O(params),
+    // ~3 orders of magnitude cheaper than one grid prediction)
+    let times = GridPredictor::new(&reference.time).predict(&grid.modes);
+    let powers = GridPredictor::new(&reference.power).predict(&grid.modes);
+    finish_predicted(
+        req,
+        &grid,
+        &times,
+        &powers,
+        format!("host-fallback({strategy})"),
+        0.0,
+        metrics,
+        t0,
+    )
+}
+
+/// Shared tail of the predicted paths: Pareto build, budget optimization,
+/// post-hoc observation, metrics.
+#[allow(clippy::too_many_arguments)]
+fn finish_predicted(
+    req: &Request,
+    grid: &PowerModeGrid,
+    times: &[f64],
+    powers: &[f64],
+    strategy: String,
+    profiling_cost_s: f64,
+    metrics: &Metrics,
+    t0: Instant,
+) -> Result<Response> {
     let points: Vec<Point> = grid
         .modes
         .iter()
-        .zip(times.iter().zip(&powers))
+        .zip(times.iter().zip(powers))
         .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
         .collect();
     let front = ParetoFront::build(&points);
 
-    // 4. optimize: fastest predicted mode within the budget
+    // optimize: fastest predicted mode within the budget
     let chosen = front.optimize(req.power_budget_w * 1000.0)?;
 
     // observable ground truth at the chosen mode (for reporting/validation)
-    let sim = TrainerSim::new(spec, req.workload, req.seed ^ 0xfeed);
+    let sim = TrainerSim::new(req.device.spec(), req.workload, req.seed ^ 0xfeed);
     let obs_t = sim.true_minibatch_ms(&chosen.mode);
     let obs_p = sim.true_power_mw(&chosen.mode);
 
@@ -211,13 +292,13 @@ pub fn handle_request(
 
     Ok(Response {
         id: req.id,
-        strategy: strat_name,
+        strategy,
         chosen_mode: chosen.mode,
         predicted_time_ms: chosen.time,
         predicted_power_w: chosen.power_mw / 1000.0,
         observed_time_ms: obs_t,
         observed_power_w: obs_p / 1000.0,
-        profiling_cost_s: corpus.total_cost_s(),
+        profiling_cost_s,
         latency_ms,
     })
 }
@@ -278,7 +359,9 @@ pub fn prediction_grid(device: DeviceKind, override_n: Option<usize>, seed: u64)
 
 /// Multi-worker serving: spawns `cfg.workers` threads, each with its own
 /// PJRT runtime, pulling from a shared queue. Returns responses in
-/// completion order together with the shared metrics.
+/// completion order together with the shared metrics. Workers whose
+/// runtime cannot be constructed (or builds without the `xla` feature)
+/// degrade to the host-engine fallback instead of failing the request.
 pub fn serve(
     cfg: &CoordinatorConfig,
     reference: &ReferenceModels,
@@ -300,18 +383,32 @@ pub fn serve(
             std::thread::Builder::new()
                 .name(format!("pt-worker-{worker_id}"))
                 .spawn(move || {
-                    // each worker owns its own non-Send PJRT runtime
+                    // each worker owns its own non-Send PJRT runtime;
+                    // without one it serves through the host engine
+                    #[cfg(feature = "xla")]
                     let rt = match Runtime::new(&cfg.artifacts_dir) {
-                        Ok(rt) => rt,
+                        Ok(rt) => Some(rt),
                         Err(e) => {
-                            let _ = tx.send(Err(e));
-                            return;
+                            // degradation must be visible, not silent: every
+                            // request on this worker now skips transfer and
+                            // answers from the untransferred reference models
+                            eprintln!(
+                                "pt-worker-{worker_id}: artifacts unavailable ({e}); \
+                                 serving via host-engine fallback"
+                            );
+                            None
                         }
                     };
                     loop {
                         let req = { queue.lock().unwrap().pop_front() };
                         let Some(req) = req else { break };
-                        let res = handle_request(&rt, &reference, &cfg, &metrics, &req);
+                        #[cfg(feature = "xla")]
+                        let res = match rt.as_ref() {
+                            Some(rt) => handle_request(rt, &reference, &cfg, &metrics, &req),
+                            None => handle_request_host(&reference, &cfg, &metrics, &req),
+                        };
+                        #[cfg(not(feature = "xla"))]
+                        let res = handle_request_host(&reference, &cfg, &metrics, &req);
                         if res.is_err() {
                             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
                         }
@@ -351,6 +448,8 @@ pub fn serve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::MlpParams;
+    use crate::profiler::StandardScaler;
 
     #[test]
     fn prediction_grid_sizes() {
@@ -365,5 +464,71 @@ mod tests {
         let a = prediction_grid(DeviceKind::XavierAgx, None, 7);
         let b = prediction_grid(DeviceKind::XavierAgx, None, 7);
         assert_eq!(a.modes, b.modes);
+    }
+
+    fn host_reference() -> ReferenceModels {
+        let mut rng = Rng::new(17);
+        let ck = |target: &str| Checkpoint {
+            params: MlpParams::init_he(&mut rng),
+            feature_scaler: StandardScaler {
+                mean: vec![6.0, 1400.0, 800.0, 2000.0],
+                std: vec![3.5, 600.0, 350.0, 1100.0],
+            },
+            target_scaler: StandardScaler { mean: vec![30_000.0], std: vec![9_000.0] },
+            target: target.into(),
+            provenance: "host-fallback-test".into(),
+            val_loss: 0.0,
+        };
+        ReferenceModels { time: ck("time"), power: ck("power") }
+    }
+
+    #[test]
+    fn host_fallback_answers_without_artifacts() {
+        let reference = host_reference();
+        let cfg = CoordinatorConfig {
+            prediction_grid: Some(300),
+            ..Default::default()
+        };
+        let metrics = Metrics::new();
+        let req = Request {
+            id: 9,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6, // any front point qualifies
+            scenario: Scenario::FederatedLearning,
+            seed: 5,
+        };
+        let resp = handle_request_host(&reference, &cfg, &metrics, &req).unwrap();
+        assert!(resp.strategy.starts_with("host-fallback"));
+        assert_eq!(resp.profiling_cost_s, 0.0);
+        resp.chosen_mode.validate(DeviceKind::OrinAgx.spec()).unwrap();
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn host_serve_processes_queue_without_artifacts() {
+        let reference = host_reference();
+        let cfg = CoordinatorConfig {
+            artifacts_dir: PathBuf::from("definitely-missing-artifacts"),
+            prediction_grid: Some(200),
+            workers: 2,
+            ..Default::default()
+        };
+        let requests: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                device: DeviceKind::OrinAgx,
+                workload: Workload::lstm(),
+                power_budget_w: 1e6,
+                scenario: Scenario::ContinuousLearning,
+                seed: 40 + i,
+            })
+            .collect();
+        let (responses, metrics) = serve(&cfg, &reference, requests).unwrap();
+        assert_eq!(responses.len(), 4);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 4);
     }
 }

@@ -1,54 +1,92 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default
+//! build is dependency-free so the pure-host paths compile offline.
+
+use std::fmt;
 
 /// Unified error type for all PowerTrain subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (corpus files, checkpoints, artifacts).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// XLA / PJRT runtime failure.
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "xla")]
+    Xla(xla::Error),
 
     /// Malformed JSON (manifest, checkpoint, config).
-    #[error("json parse error: {0}")]
     Json(String),
 
     /// Malformed CSV (profiling corpus).
-    #[error("csv parse error: {0}")]
     Csv(String),
 
     /// An artifact referenced by the manifest is missing or inconsistent.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Invalid power mode / device configuration.
-    #[error("device error: {0}")]
     Device(String),
 
     /// Profiling pipeline failure (e.g. power never stabilized).
-    #[error("profiling error: {0}")]
     Profiling(String),
 
     /// Training / transfer driver failure.
-    #[error("training error: {0}")]
     Training(String),
 
     /// Optimization has no feasible solution (e.g. budget below idle power).
-    #[error("optimization error: {0}")]
     Optimization(String),
 
     /// Coordinator / serving failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Invalid CLI usage.
-    #[error("usage error: {0}")]
     Usage(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Json(m) => write!(f, "json parse error: {m}"),
+            Error::Csv(m) => write!(f, "csv parse error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Device(m) => write!(f, "device error: {m}"),
+            Error::Profiling(m) => write!(f, "profiling error: {m}"),
+            Error::Training(m) => write!(f, "training error: {m}"),
+            Error::Optimization(m) => write!(f, "optimization error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
+}
 
 impl Error {
     pub fn json(msg: impl Into<String>) -> Self {

@@ -26,6 +26,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod device;
 pub mod error;
+#[cfg(feature = "xla")]
 pub mod experiments;
 pub mod nn;
 pub mod pareto;

@@ -16,18 +16,27 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use powertrain::coordinator::{
-    handle_request, serve, CoordinatorConfig, Metrics, ReferenceModels, Request, Scenario,
+    serve, CoordinatorConfig, Metrics, ReferenceModels, Request, Scenario,
 };
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::error::{Error, Result};
-use powertrain::experiments::{self, common::ExpContext};
 use powertrain::profiler::Profiler;
-use powertrain::runtime::Runtime;
 use powertrain::sim::TrainerSim;
-use powertrain::train::{Target, TrainConfig};
 use powertrain::util::rng::Rng;
 use powertrain::util::table::TextTable;
 use powertrain::workload::Workload;
+
+#[cfg(feature = "xla")]
+use powertrain::coordinator::handle_request;
+#[cfg(feature = "xla")]
+use powertrain::experiments::{self, common::ExpContext};
+#[cfg(feature = "xla")]
+use powertrain::runtime::Runtime;
+#[cfg(feature = "xla")]
+use powertrain::train::{Target, TrainConfig};
+
+#[cfg(not(feature = "xla"))]
+use powertrain::coordinator::handle_request_host;
 
 /// Minimal flag parser: positional args + `--flag value` / `--flag`.
 struct Args {
@@ -160,6 +169,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     }
     println!("{}", w.render());
 
+    #[cfg(feature = "xla")]
     match Runtime::new(&args.artifacts_dir()) {
         Ok(rt) => println!(
             "artifacts: OK ({} artifacts, platform {})",
@@ -167,6 +177,16 @@ fn cmd_info(args: &Args) -> Result<()> {
             rt.platform()
         ),
         Err(e) => println!("artifacts: UNAVAILABLE — {e}"),
+    }
+    #[cfg(not(feature = "xla"))]
+    match powertrain::runtime::Manifest::load(&args.artifacts_dir()) {
+        Ok(m) => println!(
+            "artifacts: PRESENT ({} artifacts) but execution disabled — built without the 'xla' feature; predictions use the host engine",
+            m.artifacts.len()
+        ),
+        Err(_) => println!(
+            "artifacts: UNAVAILABLE — built without the 'xla' feature; predictions use the host engine"
+        ),
     }
     Ok(())
 }
@@ -203,6 +223,20 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn xla_required(what: &str) -> Error {
+    Error::Usage(format!(
+        "{what} needs the AOT train/eval artifacts; rebuild with `--features xla` \
+         (see rust/Cargo.toml for the dependency note)"
+    ))
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train_ref(_args: &Args) -> Result<()> {
+    Err(xla_required("train-ref"))
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train_ref(args: &Args) -> Result<()> {
     let wl = args.workload()?;
     let epochs = args.usize_or("epochs", 150)?;
@@ -235,6 +269,12 @@ fn cmd_train_ref(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_transfer(_args: &Args) -> Result<()> {
+    Err(xla_required("transfer"))
+}
+
+#[cfg(feature = "xla")]
 fn cmd_transfer(args: &Args) -> Result<()> {
     let device = args.device()?;
     let wl = args.workload()?;
@@ -290,7 +330,6 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 42)? as u64;
     let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
 
-    let rt = Runtime::new(&args.artifacts_dir())?;
     let reference = ReferenceModels::load(&ref_dir)?;
     let cfg = CoordinatorConfig { artifacts_dir: args.artifacts_dir(), ..Default::default() };
     let metrics = Metrics::new();
@@ -302,7 +341,13 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         scenario: Scenario::ContinuousLearning,
         seed,
     };
-    let resp = handle_request(&rt, &reference, &cfg, &metrics, &req)?;
+    #[cfg(feature = "xla")]
+    let resp = {
+        let rt = Runtime::new(&args.artifacts_dir())?;
+        handle_request(&rt, &reference, &cfg, &metrics, &req)?
+    };
+    #[cfg(not(feature = "xla"))]
+    let resp = handle_request_host(&reference, &cfg, &metrics, &req)?;
     println!(
         "chosen mode {} via {}\n  predicted: {:.1} ms/mb @ {:.2} W\n  observed:  {:.1} ms/mb @ {:.2} W (budget {budget_w} W)\n  profiling cost: {:.1} simulated device-min; decision latency {:.0} ms",
         resp.chosen_mode.label(),
@@ -389,14 +434,22 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| Error::Usage("experiment requires an id or 'all'".into()))?
         .clone();
-    let out = PathBuf::from(args.get_or("out", "results"));
-    let quick = args.get("quick").is_some();
-    let seed = args.usize_or("seed", 42)? as u64;
-    let mut ctx = ExpContext::new(&args.artifacts_dir(), &out, quick, seed)?;
-    if id == "all" {
-        experiments::run_all(&mut ctx)
-    } else {
-        experiments::run(&id, &mut ctx)
+    #[cfg(not(feature = "xla"))]
+    {
+        let _ = id;
+        Err(xla_required("experiment"))
+    }
+    #[cfg(feature = "xla")]
+    {
+        let out = PathBuf::from(args.get_or("out", "results"));
+        let quick = args.get("quick").is_some();
+        let seed = args.usize_or("seed", 42)? as u64;
+        let mut ctx = ExpContext::new(&args.artifacts_dir(), &out, quick, seed)?;
+        if id == "all" {
+            experiments::run_all(&mut ctx)
+        } else {
+            experiments::run(&id, &mut ctx)
+        }
     }
 }
 

@@ -1,8 +1,10 @@
-//! Pure-rust forward pass of the prediction MLP.
+//! Scalar reference forward pass of the prediction MLP.
 //!
-//! Used to (a) cross-check the AOT `predict` artifact in integration tests,
-//! (b) serve as a fallback predictor when artifacts are unavailable, and
-//! (c) power the closed-form baselines that don't go through XLA.
+//! This is the *oracle*: a deliberately simple per-row implementation used
+//! to cross-check the AOT `predict` artifact in integration tests and to
+//! property-test the batched host engine (`nn::engine`), which serves all
+//! production host-path prediction. Keep it simple — its value is being
+//! obviously correct, not fast.
 
 use crate::nn::{MlpParams, DIMS};
 

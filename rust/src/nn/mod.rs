@@ -8,6 +8,7 @@
 //! must match `python/compile/kernels/ref.py::PARAM_NAMES`.
 
 pub mod checkpoint;
+pub mod engine;
 pub mod host_mlp;
 
 use crate::util::rng::Rng;

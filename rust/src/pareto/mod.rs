@@ -29,18 +29,32 @@ pub struct ParetoFront {
 
 impl ParetoFront {
     /// Build the front from arbitrary candidates.
+    ///
+    /// Allocation-lean: sorts a `u32` index permutation instead of cloning
+    /// the full `Point` cloud (a `Point` is 32 bytes, so the sort moves
+    /// 8× less memory). Candidates with
+    /// non-finite time or power (NaN predictions from a diverged
+    /// checkpoint, ±inf) are excluded up front; ordering uses
+    /// `f64::total_cmp`, so the build can never panic.
     pub fn build(candidates: &[Point]) -> ParetoFront {
-        let mut sorted: Vec<Point> = candidates.to_vec();
+        debug_assert!(candidates.len() <= u32::MAX as usize);
+        let mut idx: Vec<u32> = (0..candidates.len() as u32)
+            .filter(|&i| {
+                let p = &candidates[i as usize];
+                p.time.is_finite() && p.power_mw.is_finite()
+            })
+            .collect();
         // sort by power asc, tie-break time asc
-        sorted.sort_by(|a, b| {
-            a.power_mw
-                .partial_cmp(&b.power_mw)
-                .unwrap()
-                .then(a.time.partial_cmp(&b.time).unwrap())
+        idx.sort_unstable_by(|&a, &b| {
+            let (pa, pb) = (&candidates[a as usize], &candidates[b as usize]);
+            pa.power_mw
+                .total_cmp(&pb.power_mw)
+                .then(pa.time.total_cmp(&pb.time))
         });
         let mut front: Vec<Point> = Vec::new();
         let mut best_time = f64::INFINITY;
-        for p in sorted {
+        for &i in &idx {
+            let p = candidates[i as usize];
             if p.time < best_time {
                 front.push(p);
                 best_time = p.time;
@@ -209,6 +223,33 @@ mod tests {
         for fp in f.points() {
             assert!(!pts.iter().any(|c| c.time < fp.time && c.power_mw < fp.power_mw));
         }
+    }
+
+    #[test]
+    fn non_finite_candidates_are_excluded_not_fatal() {
+        // NaN predictions from a diverged checkpoint must not crash the
+        // coordinator: they are filtered, the finite points still form
+        // a valid front
+        let pts = vec![
+            pt(f64::NAN, 10.0),
+            pt(100.0, f64::NAN),
+            pt(f64::INFINITY, 15.0),
+            pt(90.0, f64::NEG_INFINITY),
+            pt(80.0, 20.0),
+            pt(60.0, 30.0),
+        ];
+        let f = ParetoFront::build(&pts);
+        assert_eq!(f.len(), 2);
+        assert!(f.is_valid());
+        assert_eq!(f.optimize(25_000.0).unwrap().time, 80.0);
+    }
+
+    #[test]
+    fn all_nan_cloud_gives_empty_front() {
+        let pts = vec![pt(f64::NAN, f64::NAN); 8];
+        let f = ParetoFront::build(&pts);
+        assert!(f.is_empty());
+        assert!(f.optimize(1e9).is_err());
     }
 
     #[test]

@@ -1,18 +1,30 @@
 //! Batched prediction over power-mode grids — the request-path hot loop.
 //!
 //! Given a trained checkpoint, predicts training time / power for every
-//! mode of a grid (4,368–29,232 modes) by streaming standardized feature
-//! chunks through the AOT `predict` artifact. This feeds the Pareto
-//! construction (paper section 5).
+//! mode of a grid (4,368–29,232 modes). Two backends:
+//!
+//! * [`predict_modes`] (feature `xla`) streams standardized feature chunks
+//!   through the AOT `predict` artifact;
+//! * [`GridPredictor`] / [`predict_modes_host`] run the batched,
+//!   cache-blocked host engine (`nn::engine`) — the fallback when
+//!   artifacts are unavailable, and the backend for baselines and the
+//!   pure-host builds.
+//!
+//! Both feed the Pareto construction (paper section 5).
 
 use crate::device::PowerMode;
-use crate::error::Result;
 use crate::nn::checkpoint::Checkpoint;
-use crate::nn::host_mlp;
+use crate::nn::engine::HostEngine;
+use crate::profiler::StandardScaler;
+
+#[cfg(feature = "xla")]
+use crate::error::Result;
+#[cfg(feature = "xla")]
 use crate::runtime::{f32_literal, to_f32_vec, Runtime};
 
 /// Predict raw-unit targets (ms or mW) for a slice of power modes using the
 /// AOT artifact. Padding rows are zero-features; their outputs are dropped.
+#[cfg(feature = "xla")]
 pub fn predict_modes(
     rt: &Runtime,
     ckpt: &Checkpoint,
@@ -62,28 +74,71 @@ pub fn predict_modes(
     Ok(out)
 }
 
-/// Pure-rust fallback prediction (no XLA) — used for verification and by
-/// baselines that don't warrant an artifact round-trip.
+/// Host-engine predictor for one checkpoint: transposed weights plus the
+/// scaler constants, built once at checkpoint-load time and reused across
+/// grids. Standardization writes straight into the engine's batch buffer
+/// (no per-mode `Vec<f64>` round-trips) and the inverse target transform
+/// is applied on the way out.
+#[derive(Debug, Clone)]
+pub struct GridPredictor {
+    engine: HostEngine,
+    feature_scaler: StandardScaler,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl GridPredictor {
+    pub fn new(ckpt: &Checkpoint) -> GridPredictor {
+        assert_eq!(ckpt.feature_scaler.dim(), 4, "feature scaler must be 4-wide");
+        GridPredictor {
+            engine: HostEngine::new(&ckpt.params),
+            feature_scaler: ckpt.feature_scaler.clone(),
+            y_mean: ckpt.target_scaler.mean[0],
+            y_std: ckpt.target_scaler.std[0],
+        }
+    }
+
+    /// Predict raw-unit targets for every mode, appending into `out`
+    /// (cleared first). Callers that predict repeatedly can reuse both
+    /// `out` and this predictor; per-mode work allocates nothing.
+    pub fn predict_into(&self, modes: &[PowerMode], out: &mut Vec<f64>) {
+        let n = modes.len();
+        out.clear();
+        if n == 0 {
+            return;
+        }
+        // standardize features directly into the batch buffer
+        let mut xs = vec![0.0f32; n * 4];
+        for (row, pm) in modes.iter().enumerate() {
+            let z = self.feature_scaler.transform4(&pm.features());
+            xs[row * 4..row * 4 + 4].copy_from_slice(&z);
+        }
+        let mut y_std = vec![0.0f32; n];
+        self.engine.forward_into(&xs, &mut y_std);
+        out.reserve(n);
+        out.extend(y_std.iter().map(|&z| z as f64 * self.y_std + self.y_mean));
+    }
+
+    pub fn predict(&self, modes: &[PowerMode]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.predict_into(modes, &mut out);
+        out
+    }
+}
+
+/// Pure-rust fallback prediction (no XLA) — used for verification, by
+/// baselines that don't warrant an artifact round-trip, and by the
+/// coordinator when artifacts are unavailable. One engine build per call;
+/// hold a [`GridPredictor`] to amortize it across requests.
 pub fn predict_modes_host(ckpt: &Checkpoint, modes: &[PowerMode]) -> Vec<f64> {
-    modes
-        .iter()
-        .map(|pm| {
-            let feats = pm.features();
-            let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
-            let z = ckpt.feature_scaler.transform_row(&raw);
-            let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
-            let pred_std = host_mlp::forward_one(&ckpt.params, &zf) as f64;
-            ckpt.target_scaler.inverse1(pred_std)
-        })
-        .collect()
+    GridPredictor::new(ckpt).predict(modes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::device::{DeviceKind, PowerModeGrid};
-    use crate::nn::MlpParams;
-    use crate::profiler::StandardScaler;
+    use crate::nn::{host_mlp, MlpParams};
     use crate::util::rng::Rng;
 
     fn demo_ckpt() -> Checkpoint {
@@ -114,5 +169,44 @@ mod tests {
         let spread = a.iter().cloned().fold(f64::MIN, f64::max)
             - a.iter().cloned().fold(f64::MAX, f64::min);
         assert!(spread > 1.0, "degenerate predictions");
+    }
+
+    #[test]
+    fn engine_path_matches_scalar_oracle() {
+        // the batched engine must agree with the seed scalar path
+        // (standardize -> forward_one -> inverse) within 1e-5 relative
+        let ckpt = demo_ckpt();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let modes = &grid.modes[..517]; // ragged vs the 64-row tile
+        let got = predict_modes_host(&ckpt, modes);
+        for (i, pm) in modes.iter().enumerate() {
+            let feats = pm.features();
+            let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
+            let z = ckpt.feature_scaler.transform_row(&raw);
+            let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
+            let want = ckpt
+                .target_scaler
+                .inverse1(host_mlp::forward_one(&ckpt.params, &zf) as f64);
+            assert!(
+                (got[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+                "mode {i}: engine {} vs oracle {want}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn predict_into_reuses_output_buffer() {
+        let ckpt = demo_ckpt();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let p = GridPredictor::new(&ckpt);
+        let mut out = Vec::new();
+        p.predict_into(&grid.modes[..80], &mut out);
+        assert_eq!(out.len(), 80);
+        let first = out.clone();
+        p.predict_into(&grid.modes[..80], &mut out);
+        assert_eq!(out, first);
+        p.predict_into(&[], &mut out);
+        assert!(out.is_empty());
     }
 }

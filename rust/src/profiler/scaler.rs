@@ -58,6 +58,20 @@ impl StandardScaler {
         self.mean.len()
     }
 
+    /// Standardize a 4-wide f32 feature row without allocating — the
+    /// hot-path variant used by the batched engine and training feature
+    /// prep. Single source of truth with [`StandardScaler::transform_row`]
+    /// for the (x - mean) / std semantics (zero-variance columns already
+    /// have std forced to 1.0 at fit time).
+    pub fn transform4(&self, feats: &[f32; 4]) -> [f32; 4] {
+        debug_assert_eq!(self.dim(), 4);
+        let mut z = [0.0f32; 4];
+        for d in 0..4 {
+            z[d] = ((feats[d] as f64 - self.mean[d]) / self.std[d]) as f32;
+        }
+        z
+    }
+
     pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
         assert_eq!(row.len(), self.dim());
         row.iter()
@@ -142,6 +156,21 @@ mod tests {
         assert_eq!(sc.std[0], 1.0);
         assert_eq!(sc.transform_row(&[5.0])[0], 0.0);
         assert_eq!(sc.transform_row(&[7.0])[0], 2.0);
+    }
+
+    #[test]
+    fn transform4_matches_transform_row() {
+        let sc = StandardScaler {
+            mean: vec![6.0, 1200.0, 700.0, 1500.0],
+            std: vec![3.0, 600.0, 350.0, 1000.0],
+        };
+        let feats = [8.0f32, 1651.2, 420.75, 2133.0];
+        let z4 = sc.transform4(&feats);
+        let row: Vec<f64> = feats.iter().map(|&x| x as f64).collect();
+        let zr = sc.transform_row(&row);
+        for d in 0..4 {
+            assert_eq!(z4[d], zr[d] as f32, "dim {d}");
+        }
     }
 
     #[test]

@@ -1,197 +1,18 @@
-//! AOT runtime: load HLO-text artifacts and execute them on the embedded
-//! PJRT CPU client (the `xla` crate).
+//! AOT runtime: the artifact manifest (always available) plus the PJRT
+//! execution layer (behind the `xla` feature).
 //!
-//! This is the only place the request path touches XLA. Executables are
-//! compiled once per artifact and cached; the hot loop re-uses them with
-//! fresh literals. Python is never involved at runtime.
+//! With the feature on, HLO-text artifacts are compiled once per artifact
+//! on the embedded PJRT CPU client and cached; the hot loop re-uses them
+//! with fresh literals. Python is never involved at runtime. Without it,
+//! the manifest types still parse (CLI `info`, tooling) and every
+//! prediction path runs through the batched host engine (`nn::engine`).
 
 pub mod artifacts;
 
+#[cfg(feature = "xla")]
+mod exec;
+
 pub use artifacts::{AdamConfig, ArtifactSpec, DType, IoSpec, Manifest};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-
-use crate::error::{Error, Result};
-
-/// A loaded artifact runtime bound to one PJRT client.
-///
-/// Not `Send`: the underlying PJRT client is reference-counted without
-/// atomics. Each coordinator worker owns its own `Runtime` (compilation is
-/// cheap relative to profiling; see DESIGN.md section 9 for the measured
-/// costs).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, executables: RefCell::new(HashMap::new()) })
-    }
-
-    /// Create from the default artifacts directory.
-    pub fn from_default_dir() -> Result<Runtime> {
-        Runtime::new(&artifacts::default_artifacts_dir())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached executable for) an artifact.
-    fn executable(&self, name: &str) -> Result<()> {
-        if self.executables.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let path = self.manifest.hlo_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.executables.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached_executables(&self) -> usize {
-        self.executables.borrow().len()
-    }
-
-    /// Execute an artifact with positional inputs, validating shapes
-    /// against the manifest, and return the flattened output tuple.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.execute_any(name, inputs)
-    }
-
-    /// Like [`Runtime::execute`] but accepts borrowed literals, so hot
-    /// paths can build invariant inputs (e.g. model weights) once and
-    /// re-submit them across many calls without copying.
-    pub fn execute_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.execute_any(name, inputs)
-    }
-
-    fn execute_any<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        name: &str,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        let spec = self.manifest.artifact(name)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            return Err(Error::Artifact(format!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            )));
-        }
-        for (lit, io) in inputs.iter().zip(&spec.inputs) {
-            let n = lit.borrow().element_count();
-            if n != io.element_count() {
-                return Err(Error::Artifact(format!(
-                    "{name}: input '{}' has {} elements, manifest says {}",
-                    io.name,
-                    n,
-                    io.element_count()
-                )));
-            }
-        }
-        self.executable(name)?;
-        let exes = self.executables.borrow();
-        let exe = exes.get(name).expect("just inserted");
-        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` here —
-        // its C wrapper (xla_rs.cc `execute`) `release()`s every input
-        // buffer and never frees it, leaking ~0.5 MB per train step. We
-        // materialize the input buffers ourselves (freed on Drop) and go
-        // through the leak-free `execute_b` path instead.
-        let mut buffers = Vec::with_capacity(inputs.len());
-        for lit in inputs {
-            buffers.push(self.client.buffer_from_host_literal(None, lit.borrow())?);
-        }
-        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-        // single device, single output buffer holding the result tuple
-        // (aot.py lowers with return_tuple=True)
-        let lit = result[0][0].to_literal_sync()?;
-        let outs = lit.to_tuple()?;
-        if outs.len() != spec.outputs.len() {
-            return Err(Error::Artifact(format!(
-                "{name}: got {} outputs, manifest says {}",
-                outs.len(),
-                spec.outputs.len()
-            )));
-        }
-        Ok(outs)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Literal marshalling helpers
-// ---------------------------------------------------------------------------
-
-/// Build an f32 literal of the given shape from a flat slice.
-pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product::<usize>().max(1);
-    if data.len() != n {
-        return Err(Error::Artifact(format!(
-            "literal data length {} != shape product {}",
-            data.len(),
-            n
-        )));
-    }
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
-/// Build a u32 literal (rank 1).
-pub fn u32_literal(data: &[u32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-/// Extract an f32 vector from a literal.
-pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Extract a single f32 scalar.
-pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.get_first_element::<f32>()?)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn f32_literal_shapes() {
-        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
-        assert_eq!(l.element_count(), 6);
-        let back = to_f32_vec(&l).unwrap();
-        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-    }
-
-    #[test]
-    fn f32_literal_scalar() {
-        let l = f32_literal(&[7.5], &[]).unwrap();
-        assert_eq!(to_f32_scalar(&l).unwrap(), 7.5);
-    }
-
-    #[test]
-    fn f32_literal_rejects_mismatch() {
-        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
-    }
-
-    #[test]
-    fn u32_literal_round_trip() {
-        let l = u32_literal(&[0xdead_beef, 42]);
-        assert_eq!(l.to_vec::<u32>().unwrap(), vec![0xdead_beef, 42]);
-    }
-}
+#[cfg(feature = "xla")]
+pub use exec::{f32_literal, to_f32_scalar, to_f32_vec, u32_literal, Runtime};

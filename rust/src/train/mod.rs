@@ -6,11 +6,17 @@
 
 pub mod transfer;
 
-use crate::error::{Error, Result};
-use crate::nn::checkpoint::Checkpoint;
-use crate::nn::{leaf_shape, AdamState, MlpParams, N_LEAVES};
 use crate::profiler::{Corpus, StandardScaler};
+
+#[cfg(feature = "xla")]
+use crate::error::{Error, Result};
+#[cfg(feature = "xla")]
+use crate::nn::checkpoint::Checkpoint;
+#[cfg(feature = "xla")]
+use crate::nn::{leaf_shape, AdamState, MlpParams, N_LEAVES};
+#[cfg(feature = "xla")]
 use crate::runtime::{f32_literal, to_f32_scalar, to_f32_vec, u32_literal, Runtime};
+#[cfg(feature = "xla")]
 use crate::util::rng::Rng;
 
 /// Which telemetry channel a model predicts.
@@ -74,10 +80,12 @@ pub struct TrainingLog {
 }
 
 /// Builds per-step literals and drives the artifacts.
+#[cfg(feature = "xla")]
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
 }
 
+#[cfg(feature = "xla")]
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
         Trainer { rt }
@@ -299,19 +307,27 @@ impl<'rt> Trainer<'rt> {
         let mut tot_n = 0.0;
         let mean_lit = f32_literal(&[tscaler.mean[0] as f32], &[])?;
         let std_lit = f32_literal(&[tscaler.std[0] as f32], &[])?;
+        // chunk buffers hoisted out of the loop (mirroring predict_modes);
+        // ragged final chunks zero their padding tail below
+        let mut x = vec![0.0f32; bsz * dim];
+        let mut y_std = vec![0.0f32; bsz];
+        let mut y_raw = vec![0.0f32; bsz];
+        let mut mask = vec![0.0f32; bsz];
         for chunk_start in (0..xs.len()).step_by(bsz) {
             let chunk_end = (chunk_start + bsz).min(xs.len());
             let real = chunk_end - chunk_start;
-            let mut x = vec![0.0f32; bsz * dim];
-            let mut y_std = vec![0.0f32; bsz];
-            let mut y_raw = vec![0.0f32; bsz];
-            let mut mask = vec![0.0f32; bsz];
             for row in 0..real {
                 let i = chunk_start + row;
                 x[row * dim..(row + 1) * dim].copy_from_slice(&xs[i]);
                 y_std[row] = tscaler.transform1(ys_raw[i]) as f32;
                 y_raw[row] = ys_raw[i] as f32;
                 mask[row] = 1.0;
+            }
+            if real < bsz {
+                x[real * dim..].fill(0.0);
+                y_std[real..].fill(0.0);
+                y_raw[real..].fill(0.0);
+                mask[real..].fill(0.0);
             }
             let x_lit = f32_literal(&x, &[bsz, dim])?;
             let y_std_lit = f32_literal(&y_std, &[bsz, 1])?;
@@ -336,19 +352,14 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-/// Standardize a corpus's features with a fitted scaler.
+/// Standardize a corpus's features with a fitted scaler, writing each row
+/// straight into the output array — no per-row `Vec<f64>` round-trips.
 pub fn scale_features(corpus: &Corpus, scaler: &StandardScaler) -> Vec<[f32; 4]> {
-    corpus
-        .features()
-        .iter()
-        .map(|f| {
-            let row: Vec<f64> = f.iter().map(|&x| x as f64).collect();
-            let z = scaler.transform_row(&row);
-            [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32]
-        })
-        .collect()
+    assert_eq!(scaler.dim(), 4, "feature scaler must be 4-wide");
+    corpus.features().iter().map(|f| scaler.transform4(f)).collect()
 }
 
+#[cfg(feature = "xla")]
 fn push_leaves(inputs: &mut Vec<xla::Literal>, p: &MlpParams) -> Result<()> {
     for (i, leaf) in p.leaves.iter().enumerate() {
         inputs.push(f32_literal(leaf, &leaf_shape(i))?);
@@ -356,6 +367,7 @@ fn push_leaves(inputs: &mut Vec<xla::Literal>, p: &MlpParams) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn pull_leaves(outs: &[xla::Literal], p: &mut MlpParams) -> Result<()> {
     for (i, lit) in outs.iter().enumerate() {
         p.leaves[i] = to_f32_vec(lit)?;

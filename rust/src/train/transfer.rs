@@ -6,11 +6,19 @@
 //! workload / device. Both the time and the power model transfer the same
 //! way; the Nano cross-device transfer switches the loss to MAPE.
 
+use crate::train::TrainConfig;
+
+#[cfg(feature = "xla")]
 use crate::error::Result;
+#[cfg(feature = "xla")]
 use crate::nn::checkpoint::Checkpoint;
+#[cfg(feature = "xla")]
 use crate::profiler::Corpus;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
-use crate::train::{Target, TrainConfig, Trainer, TrainingLog};
+#[cfg(feature = "xla")]
+use crate::train::{Target, Trainer, TrainingLog};
+#[cfg(feature = "xla")]
 use crate::util::rng::Rng;
 
 /// Transfer configuration.
@@ -29,6 +37,7 @@ impl Default for TransferConfig {
 }
 
 /// Fine-tune `reference` onto `corpus` (the new workload's ~50 modes).
+#[cfg(feature = "xla")]
 pub fn transfer(
     rt: &Runtime,
     reference: &Checkpoint,

@@ -5,9 +5,12 @@
 //! (`harness = false`).
 
 use std::hint::black_box;
+use std::path::Path;
 use std::time::Instant;
 
+use super::json::Value;
 use super::stats;
+use crate::error::Result;
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -25,6 +28,34 @@ impl BenchResult {
     pub fn throughput_per_s(&self) -> Option<f64> {
         self.items_per_iter
             .map(|it| it / (self.median_ns / 1e9))
+    }
+
+    /// Median nanoseconds per logical item (per-iteration time when no
+    /// item count was declared).
+    pub fn ns_per_item(&self) -> f64 {
+        match self.items_per_iter {
+            Some(it) if it > 0.0 => self.median_ns / it,
+            _ => self.median_ns,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("iters", Value::Num(self.iters as f64)),
+            ("median_ns", Value::Num(self.median_ns)),
+            ("mean_ns", Value::Num(self.mean_ns)),
+            ("p95_ns", Value::Num(self.p95_ns)),
+            (
+                "items_per_iter",
+                self.items_per_iter.map_or(Value::Null, Value::Num),
+            ),
+            ("ns_per_item", Value::Num(self.ns_per_item())),
+            (
+                "throughput_per_s",
+                self.throughput_per_s().map_or(Value::Null, Value::Num),
+            ),
+        ])
     }
 
     pub fn render(&self) -> String {
@@ -140,6 +171,26 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write all recorded results as machine-readable JSON (one object per
+    /// bench, keyed per-bench ns/item) so successive PRs can track the
+    /// perf trajectory — e.g. `BENCH_hotpaths.json` from `bench_hotpaths`.
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        let doc = Value::obj(vec![
+            ("kind", Value::Str("powertrain-bench-v1".into())),
+            (
+                "benches",
+                Value::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, doc.to_string())?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +217,23 @@ mod tests {
         let r = b.bench_items("noop-batch", 1000.0, || 42u8).clone();
         let thr = r.throughput_per_s().unwrap();
         assert!(thr > 0.0);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut b = Bencher::quick();
+        b.bench_items("alpha", 100.0, || 1u8);
+        b.bench("beta", || 2u8);
+        let path = std::env::temp_dir().join("pt_bench_json").join("r.json");
+        b.save_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(&text).unwrap();
+        let benches = v.req("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        let first = &benches[0];
+        assert_eq!(first.req("name").unwrap().as_str().unwrap(), "alpha");
+        assert!(first.req("ns_per_item").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //!
 //! Uses a reduced prediction grid + transfer epochs so the suite stays
 //! fast; the federated_fleet example runs the full-scale version.
+//!
+//! Gated on the `xla` feature: the host-fallback serving paths are
+//! covered by `coordinator::tests` and run in every build.
+
+#![cfg(feature = "xla")]
 
 use powertrain::coordinator::{
     handle_request, prediction_grid, serve, CoordinatorConfig, Metrics, ReferenceModels,

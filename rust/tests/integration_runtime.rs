@@ -3,6 +3,8 @@
 //!
 //! Requires `make artifacts` (the Makefile test target guarantees this).
 
+#![cfg(feature = "xla")]
+
 use powertrain::nn::{checkpoint::Checkpoint, host_mlp, leaf_shape, MlpParams};
 use powertrain::profiler::StandardScaler;
 use powertrain::runtime::{f32_literal, to_f32_scalar, to_f32_vec, u32_literal, Runtime};

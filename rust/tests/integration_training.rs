@@ -9,6 +9,8 @@
 //! Scales are reduced (hundreds of modes, tens of epochs) to keep `cargo
 //! test` fast; the experiment harness runs the paper-scale versions.
 
+#![cfg(feature = "xla")]
+
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::profiler::{Corpus, Record};
 use powertrain::runtime::Runtime;

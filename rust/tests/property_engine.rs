@@ -1,0 +1,184 @@
+//! Property suite for the batched host inference engine: the engine must
+//! be indistinguishable (within 1e-5) from the scalar oracle
+//! `host_mlp::forward_one` across random parameters, random inputs and
+//! ragged batch sizes — plus NaN/infinity robustness for the Pareto
+//! construction that consumes its predictions.
+
+use powertrain::device::{DeviceKind, PowerMode, PowerModeGrid};
+use powertrain::nn::engine::{HostEngine, Scratch};
+use powertrain::nn::checkpoint::Checkpoint;
+use powertrain::nn::{host_mlp, MlpParams};
+use powertrain::pareto::{ParetoFront, Point};
+use powertrain::predict::GridPredictor;
+use powertrain::profiler::StandardScaler;
+use powertrain::util::prop::{forall, vec_of, Gen};
+use powertrain::util::rng::Rng;
+
+fn agree(got: f32, want: f32) -> bool {
+    (got - want).abs() <= 1e-5 * want.abs().max(1.0)
+}
+
+/// The acceptance bar: batched engine == forward_one within 1e-5 across
+/// random params/inputs and ragged batch sizes spanning tile boundaries.
+#[test]
+fn engine_matches_oracle_across_ragged_batch_sizes() {
+    for (case, &n) in [1usize, 63, 64, 65, 4_368].iter().enumerate() {
+        let mut rng = Rng::new(100 + case as u64);
+        let params = MlpParams::init_he(&mut rng);
+        let engine = HostEngine::new(&params);
+        let xs: Vec<[f32; 4]> = (0..n)
+            .map(|_| {
+                [
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                ]
+            })
+            .collect();
+        let got = engine.forward_batch(&xs);
+        assert_eq!(got.len(), n);
+        for (i, x) in xs.iter().enumerate() {
+            let want = host_mlp::forward_one(&params, x);
+            assert!(
+                agree(got[i], want),
+                "batch {n} row {i}: engine {} vs oracle {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_agrees_for_many_random_parameter_draws() {
+    // smaller batches, many independent parameter draws (incl. extreme
+    // scales) — transposition must be exact for every leaf layout
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let mut params = MlpParams::init_he(&mut rng);
+        if seed % 3 == 0 {
+            // exercise non-trivial biases too (init_he zeroes them)
+            for leaf in [1usize, 3, 5, 7] {
+                for v in params.leaves[leaf].iter_mut() {
+                    *v = (rng.normal() * 0.5) as f32;
+                }
+            }
+        }
+        let engine = HostEngine::new(&params);
+        let xs: Vec<[f32; 4]> = (0..37)
+            .map(|_| {
+                [
+                    (rng.normal() * 3.0) as f32,
+                    rng.uniform_range(-5.0, 5.0) as f32,
+                    rng.normal() as f32,
+                    0.0,
+                ]
+            })
+            .collect();
+        let got = engine.forward_batch(&xs);
+        for (i, x) in xs.iter().enumerate() {
+            let want = host_mlp::forward_one(&params, x);
+            assert!(agree(got[i], want), "seed {seed} row {i}");
+        }
+    }
+}
+
+#[test]
+fn scratch_arena_is_stateless_between_calls() {
+    let mut rng = Rng::new(55);
+    let params = MlpParams::init_he(&mut rng);
+    let engine = HostEngine::new(&params);
+    let mut scratch = Scratch::new();
+    // interleave differently-sized batches through one scratch; results
+    // must match fresh-scratch runs exactly
+    for n in [65usize, 1, 130, 64, 7] {
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+        let mut reused = vec![0.0f32; n];
+        engine.forward_serial(&xs, &mut reused, &mut scratch);
+        let mut fresh = vec![0.0f32; n];
+        engine.forward_serial(&xs, &mut fresh, &mut Scratch::new());
+        assert_eq!(reused, fresh, "n={n}");
+    }
+}
+
+#[test]
+fn grid_predictor_matches_seed_scalar_pipeline() {
+    // end-to-end: standardize -> forward -> inverse-scale over real grid
+    // modes equals the seed per-mode path within 1e-5 relative
+    let mut rng = Rng::new(9);
+    let ckpt = Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1200.0, 700.0, 1500.0],
+            std: vec![3.0, 600.0, 350.0, 1000.0],
+        },
+        target_scaler: StandardScaler { mean: vec![100.0], std: vec![40.0] },
+        target: "time".into(),
+        provenance: "prop".into(),
+        val_loss: 0.0,
+    };
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let gp = GridPredictor::new(&ckpt);
+    let got = gp.predict(&grid.modes);
+    assert_eq!(got.len(), grid.len());
+    for (i, pm) in grid.modes.iter().enumerate() {
+        let feats = pm.features();
+        let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
+        let z = ckpt.feature_scaler.transform_row(&raw);
+        let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
+        let want = ckpt
+            .target_scaler
+            .inverse1(host_mlp::forward_one(&ckpt.params, &zf) as f64);
+        assert!(
+            (got[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+            "mode {i}: engine {} vs oracle {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn prop_pareto_build_survives_nan_and_infinity() {
+    // clouds with randomly injected NaN/±inf coordinates: build must not
+    // panic, must exclude every non-finite candidate, and the front over
+    // the finite ones must stay valid and non-dominated
+    let point_gen = Gen::new(|r: &mut Rng| {
+        let corrupt = r.below(5);
+        let time = match corrupt {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            _ => r.uniform_range(1.0, 1000.0),
+        };
+        let power = match corrupt {
+            2 => f64::NAN,
+            3 => f64::NEG_INFINITY,
+            _ => r.uniform_range(5_000.0, 60_000.0),
+        };
+        Point {
+            mode: PowerMode::maxn(DeviceKind::OrinAgx.spec()),
+            time,
+            power_mw: power,
+        }
+    });
+    let cloud_gen = vec_of(point_gen, 1, 150);
+    forall(42, 300, &cloud_gen, |pts| {
+        let front = ParetoFront::build(pts);
+        let finite: Vec<&Point> = pts
+            .iter()
+            .filter(|p| p.time.is_finite() && p.power_mw.is_finite())
+            .collect();
+        front.is_valid()
+            && front
+                .points()
+                .iter()
+                .all(|fp| fp.time.is_finite() && fp.power_mw.is_finite())
+            && front.len() <= finite.len()
+            // every finite candidate is dominated-or-equal by a front point
+            && finite.iter().all(|c| {
+                front
+                    .points()
+                    .iter()
+                    .any(|fp| fp.time <= c.time && fp.power_mw <= c.power_mw)
+            })
+    });
+}
