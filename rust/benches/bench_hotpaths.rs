@@ -8,11 +8,16 @@
 //!   3. Pareto construction over grid-sized point clouds;
 //!   4. simulator + profiler throughput (corpus generation);
 //!   5. one fused train step through PJRT (feature `xla`);
-//!   6. grid enumeration + profiling-plan construction.
+//!   6. grid enumeration + profiling-plan construction;
+//!   7. coordinator serving over the full 18,096-mode Orin grid: the cold
+//!      per-request pipeline vs the grid-resident cache hit (requests/s).
 //!
 //! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
 //! so successive PRs can track the perf trajectory.
 
+use powertrain::coordinator::{
+    self, CoordinatorConfig, PlaneCache, ReferenceModels, Request, Scenario,
+};
 use powertrain::device::{DeviceKind, PowerModeGrid, ProfilingPlan};
 use powertrain::nn::{checkpoint::Checkpoint, host_mlp, MlpParams};
 use powertrain::pareto::{ParetoFront, Point};
@@ -131,6 +136,39 @@ fn main() {
         gp.predict_into(&full.modes, &mut out);
         out.len()
     });
+
+    // -- coordinator serving: cold pipeline vs grid-resident cache hit ----
+    // items = 1 request, so throughput reads directly as requests/sec
+    {
+        let reference = ReferenceModels { time: demo_ckpt(7), power: demo_ckpt(8) };
+        let cfg = CoordinatorConfig { prediction_grid: Some(18_096), ..Default::default() };
+        let metrics = coordinator::Metrics::new();
+        let req = Request {
+            id: 0,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::resnet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            seed: 4,
+        };
+        // cold: every request pays grid enumeration, the shared feature
+        // build, two folded engine builds + grid passes and a Pareto sort
+        b.bench_items("coordinator/serve_cold_18096", 1.0, || {
+            let cache = PlaneCache::new();
+            coordinator::handle_request_host(&cache, &reference, &cfg, &metrics, &req)
+                .unwrap()
+                .id
+        });
+        // steady state: plane resident, request cost = fingerprints +
+        // map lookup + partition_point over the cached front
+        let cache = PlaneCache::new();
+        coordinator::handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
+        b.bench_items("coordinator/serve_cachehit_18096", 1.0, || {
+            coordinator::handle_request_host(&cache, &reference, &cfg, &metrics, &req)
+                .unwrap()
+                .id
+        });
+    }
 
     #[cfg(feature = "xla")]
     artifact_benches(&mut b, &ckpt, &subset, &full);

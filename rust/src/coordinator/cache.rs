@@ -1,0 +1,276 @@
+//! Grid-resident serving state: the coordinator's cache of prediction
+//! planes and Pareto fronts.
+//!
+//! The paper's deployment query — "best power mode under budget B" — is
+//! asked over a fixed grid with fixed reference models; only the budget
+//! (and the workload bookkeeping) varies between most requests. The seed
+//! serve path nevertheless re-ran the whole pipeline per request: grid
+//! enumeration, two engine builds, two grid-sized forward passes and a
+//! from-scratch Pareto sort. This module makes that state *resident*:
+//!
+//! * [`GridEntry`] — one device grid plus its shared SoA
+//!   [`FeatureMatrix`], keyed by [`GridKey`] and reused by both the time
+//!   and power models and by every model pair that predicts over the grid;
+//! * [`ServePlane`] — the full prediction planes (raw-unit time and power
+//!   per mode) and the [`ParetoFront`] over them, keyed by [`PlaneKey`]
+//!   (grid identity + content fingerprints of both checkpoints, see
+//!   `Checkpoint::fingerprint`);
+//! * [`PlaneCache`] — the two bounded, thread-safe maps, shared by all
+//!   workers of a [`serve`](crate::coordinator::serve) call.
+//!
+//! A cache-hit request therefore costs one fingerprint pass, one map
+//! lookup and one `partition_point` binary search over the cached front —
+//! O(log front) instead of O(grid × params). Builds run outside the lock:
+//! two workers missing the same key concurrently each build (the build is
+//! deterministic per key, so the results are identical) and first insert
+//! wins. [`Metrics`] counts hits and misses so degraded cache behaviour
+//! is visible in the serve report.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::Metrics;
+use crate::device::{DeviceKind, FeatureMatrix, PowerModeGrid};
+use crate::pareto::ParetoFront;
+
+/// Bound on resident planes/grids. Fleets have a handful of device kinds
+/// and model pairs; the caps only guard pathological request streams
+/// (e.g. a distinct grid seed per request on seed-dependent grids).
+const MAX_GRIDS: usize = 64;
+const MAX_PLANES: usize = 64;
+
+/// Identity of the grid a request's predictions are computed over.
+///
+/// `grid_seed` is canonicalized to 0 for seed-independent grids (the
+/// Orin paper subset) so every request shares one entry; seed-dependent
+/// grids (random subsets) key on the seed they were drawn with, which
+/// keeps caching *sound* — two requests share an entry only when they
+/// resolve to the identical mode list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GridKey {
+    pub device: DeviceKind,
+    pub override_n: Option<usize>,
+    pub grid_seed: u64,
+}
+
+impl GridKey {
+    /// Key for the grid `prediction_grid(device, override_n, seed)`
+    /// resolves to. Seed-(in)dependence is owned by
+    /// [`prediction_grid_is_seed_independent`](crate::coordinator::prediction_grid_is_seed_independent)
+    /// — `prediction_grid` dispatches through the same predicate, so the
+    /// canonicalization cannot drift from the grid construction.
+    pub fn for_request(device: DeviceKind, override_n: Option<usize>, seed: u64) -> GridKey {
+        let canonical =
+            crate::coordinator::prediction_grid_is_seed_independent(device, override_n);
+        GridKey {
+            device,
+            override_n,
+            grid_seed: if canonical { 0 } else { seed },
+        }
+    }
+}
+
+/// Identity of a full serve plane: the grid plus the two models that
+/// predicted over it. Checkpoint fingerprints are content hashes, so
+/// retrained/transferred reference models move the key and can never
+/// serve stale planes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlaneKey {
+    pub grid: GridKey,
+    pub time_fp: u64,
+    pub power_fp: u64,
+}
+
+/// Device-level grid state shared across model pairs: the mode list and
+/// its SoA feature matrix, built once.
+#[derive(Debug, Clone)]
+pub struct GridEntry {
+    pub grid: PowerModeGrid,
+    pub features: FeatureMatrix,
+}
+
+impl GridEntry {
+    pub fn new(grid: PowerModeGrid) -> GridEntry {
+        let features = grid.feature_matrix();
+        GridEntry { grid, features }
+    }
+}
+
+/// Everything needed to answer budget queries over one (grid, model-pair):
+/// the raw-unit prediction planes and the Pareto front over them.
+///
+/// The budget path reads only `front`; the full planes are retained
+/// (bounded: ≤ 2 × grid × 8 bytes × `MAX_PLANES`) so plane-level
+/// consumers — per-mode diagnostics, Fig-10-style exports, future
+/// non-budget queries — answer from cache instead of re-predicting.
+#[derive(Debug, Clone)]
+pub struct ServePlane {
+    pub grid: Arc<GridEntry>,
+    /// Predicted training time per mode (ms), parallel to `grid.grid.modes`.
+    pub times: Vec<f64>,
+    /// Predicted power per mode (mW), parallel to `grid.grid.modes`.
+    pub powers: Vec<f64>,
+    pub front: ParetoFront,
+}
+
+/// The coordinator-level cache: grids shared across model pairs, planes
+/// shared across requests. Cheap to share (`Arc`) across worker threads.
+#[derive(Debug, Default)]
+pub struct PlaneCache {
+    grids: Mutex<HashMap<GridKey, Arc<GridEntry>>>,
+    planes: Mutex<HashMap<PlaneKey, Arc<ServePlane>>>,
+}
+
+impl PlaneCache {
+    pub fn new() -> PlaneCache {
+        PlaneCache::default()
+    }
+
+    /// Grid + feature matrix for `key`, building (outside the lock) on
+    /// miss. `build` must be deterministic for the key.
+    pub fn grid(&self, key: GridKey, build: impl FnOnce() -> GridEntry) -> Arc<GridEntry> {
+        if let Some(hit) = self.grids.lock().unwrap().get(&key) {
+            return Arc::clone(hit);
+        }
+        let built = Arc::new(build());
+        let mut map = self.grids.lock().unwrap();
+        evict_if_full(&mut map, MAX_GRIDS, &key);
+        Arc::clone(map.entry(key).or_insert(built))
+    }
+
+    /// Serve plane for `key`, building (outside the lock) on miss and
+    /// recording the hit/miss in `metrics`.
+    pub fn plane(
+        &self,
+        key: PlaneKey,
+        metrics: &Metrics,
+        build: impl FnOnce() -> ServePlane,
+    ) -> Arc<ServePlane> {
+        use std::sync::atomic::Ordering;
+        if let Some(hit) = self.planes.lock().unwrap().get(&key) {
+            metrics.plane_cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        metrics.plane_cache_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build());
+        let mut map = self.planes.lock().unwrap();
+        evict_if_full(&mut map, MAX_PLANES, &key);
+        Arc::clone(map.entry(key).or_insert(built))
+    }
+
+    /// (resident grids, resident planes) — for reporting/tests.
+    pub fn sizes(&self) -> (usize, usize) {
+        (
+            self.grids.lock().unwrap().len(),
+            self.planes.lock().unwrap().len(),
+        )
+    }
+}
+
+/// Keep `map` bounded: if inserting a *new* key would exceed `cap`, drop
+/// one resident entry (arbitrary — the maps are small and churn only on
+/// pathological streams, so LRU bookkeeping isn't worth its lock time).
+fn evict_if_full<K: Copy + Eq + std::hash::Hash, V>(
+    map: &mut HashMap<K, V>,
+    cap: usize,
+    incoming: &K,
+) {
+    if map.len() >= cap && !map.contains_key(incoming) {
+        if let Some(k) = map.keys().next().copied() {
+            map.remove(&k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn entry(n: usize) -> GridEntry {
+        let full = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        GridEntry::new(PowerModeGrid {
+            kind: DeviceKind::OrinAgx,
+            modes: full.modes[..n].to_vec(),
+        })
+    }
+
+    fn plane_over(grid: Arc<GridEntry>) -> ServePlane {
+        let n = grid.grid.len();
+        let times: Vec<f64> = (0..n).map(|i| 1000.0 - i as f64).collect();
+        let powers: Vec<f64> = (0..n).map(|i| 10_000.0 + 10.0 * i as f64).collect();
+        let points: Vec<crate::pareto::Point> = grid
+            .grid
+            .modes
+            .iter()
+            .zip(times.iter().zip(&powers))
+            .map(|(m, (&t, &p))| crate::pareto::Point { mode: *m, time: t, power_mw: p })
+            .collect();
+        let front = ParetoFront::build(&points);
+        ServePlane { grid, times, powers, front }
+    }
+
+    #[test]
+    fn grid_key_canonicalizes_seed_independent_grids() {
+        let a = GridKey::for_request(DeviceKind::OrinAgx, None, 7);
+        let b = GridKey::for_request(DeviceKind::OrinAgx, None, 99);
+        assert_eq!(a, b);
+        // seed-dependent grids must NOT be conflated across seeds
+        let c = GridKey::for_request(DeviceKind::XavierAgx, None, 7);
+        let d = GridKey::for_request(DeviceKind::XavierAgx, None, 99);
+        assert_ne!(c, d);
+        let e = GridKey::for_request(DeviceKind::OrinAgx, Some(200), 7);
+        let f = GridKey::for_request(DeviceKind::OrinAgx, Some(200), 99);
+        assert_ne!(e, f);
+    }
+
+    #[test]
+    fn plane_hits_share_the_arc_and_count() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let gkey = GridKey::for_request(DeviceKind::OrinAgx, None, 1);
+        let key = PlaneKey { grid: gkey, time_fp: 1, power_fp: 2 };
+        let g = cache.grid(gkey, || entry(50));
+        let p1 = cache.plane(key, &metrics, || plane_over(Arc::clone(&g)));
+        let p2 = cache.plane(key, &metrics, || panic!("must not rebuild on hit"));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn grid_entry_is_shared_across_model_pairs() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let gkey = GridKey::for_request(DeviceKind::OrinAgx, None, 1);
+        let k1 = PlaneKey { grid: gkey, time_fp: 1, power_fp: 2 };
+        let k2 = PlaneKey { grid: gkey, time_fp: 3, power_fp: 4 };
+        let p1 = cache.plane(k1, &metrics, || {
+            plane_over(cache.grid(gkey, || entry(40)))
+        });
+        let p2 = cache.plane(k2, &metrics, || {
+            plane_over(cache.grid(gkey, || panic!("grid must be resident")))
+        });
+        assert!(Arc::ptr_eq(&p1.grid, &p2.grid));
+        assert_eq!(cache.sizes(), (1, 2));
+    }
+
+    #[test]
+    fn caches_stay_bounded() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        for seed in 0..(MAX_PLANES as u64 + 40) {
+            let gkey = GridKey::for_request(DeviceKind::XavierAgx, Some(10), seed);
+            let key = PlaneKey { grid: gkey, time_fp: seed, power_fp: seed };
+            let g = cache.grid(gkey, || entry(10));
+            cache.plane(key, &metrics, || plane_over(g));
+        }
+        let (grids, planes) = cache.sizes();
+        assert!(grids <= MAX_GRIDS, "{grids} grids resident");
+        assert!(planes <= MAX_PLANES, "{planes} planes resident");
+        assert_eq!(
+            metrics.plane_cache_misses.load(Ordering::Relaxed),
+            MAX_PLANES as u64 + 40
+        );
+    }
+}

@@ -12,6 +12,11 @@ pub struct Metrics {
     pub requests_failed: AtomicU64,
     pub modes_profiled: AtomicU64,
     pub reboots: AtomicU64,
+    /// Grid-resident serve-plane cache hits/misses (host path): a hit
+    /// answers from the cached Pareto front in O(log front); a miss pays
+    /// the full grid prediction + front build.
+    pub plane_cache_hits: AtomicU64,
+    pub plane_cache_misses: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms).
@@ -51,12 +56,14 @@ impl Metrics {
     pub fn render(&self) -> String {
         let (p50, p95, max) = self.latency_summary_ms();
         format!(
-            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
             self.requests_received.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
             self.modes_profiled.load(Ordering::Relaxed),
             self.reboots.load(Ordering::Relaxed),
+            self.plane_cache_hits.load(Ordering::Relaxed),
+            self.plane_cache_misses.load(Ordering::Relaxed),
             self.profiling_s() / 60.0,
             p50,
             p95,

@@ -4,5 +4,5 @@
 pub mod power_mode;
 pub mod specs;
 
-pub use power_mode::{PowerMode, PowerModeGrid, ProfilingPlan, ProfilingStep};
+pub use power_mode::{FeatureMatrix, PowerMode, PowerModeGrid, ProfilingPlan, ProfilingStep};
 pub use specs::{DeviceKind, DeviceSpec};

@@ -95,6 +95,50 @@ pub fn nvidia_preset_modes(kind: DeviceKind) -> Vec<(f64, PowerMode)> {
     }
 }
 
+/// SoA `f32` feature matrix for a set of power modes: four contiguous
+/// columns (`cores`, `cpu MHz`, `gpu MHz`, `mem MHz`), the raw-feature
+/// layout the affine-folded host engine streams through its first layer.
+/// Built once per grid and shared by every model that predicts over it —
+/// both the time and power predictors, and (via the coordinator's cache)
+/// every request that resolves to the same grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMatrix {
+    n: usize,
+    cols: [Vec<f32>; 4],
+}
+
+impl FeatureMatrix {
+    pub fn from_modes(modes: &[PowerMode]) -> FeatureMatrix {
+        let n = modes.len();
+        let mut cols: [Vec<f32>; 4] = [
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+        ];
+        for pm in modes {
+            let f = pm.features();
+            for d in 0..4 {
+                cols[d].push(f[d]);
+            }
+        }
+        FeatureMatrix { n, cols }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The four feature columns, each `len()` long.
+    pub fn cols(&self) -> [&[f32]; 4] {
+        [&self.cols[0], &self.cols[1], &self.cols[2], &self.cols[3]]
+    }
+}
+
 /// A materialized set of power modes for one device.
 #[derive(Debug, Clone)]
 pub struct PowerModeGrid {
@@ -161,6 +205,11 @@ impl PowerModeGrid {
 
     pub fn is_empty(&self) -> bool {
         self.modes.is_empty()
+    }
+
+    /// The grid's SoA feature matrix (see [`FeatureMatrix`]).
+    pub fn feature_matrix(&self) -> FeatureMatrix {
+        FeatureMatrix::from_modes(&self.modes)
     }
 
     /// Sample `n` modes without replacement from this grid.
@@ -324,6 +373,21 @@ mod tests {
         cpu_freqs.sort_unstable();
         cpu_freqs.dedup();
         assert!(plan.reboot_count() <= cpu_freqs.len());
+    }
+
+    #[test]
+    fn feature_matrix_is_column_transposed_features() {
+        let g = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let fm = g.feature_matrix();
+        assert_eq!(fm.len(), g.len());
+        let cols = fm.cols();
+        for (r, pm) in g.modes.iter().enumerate().step_by(97) {
+            let f = pm.features();
+            for d in 0..4 {
+                assert_eq!(cols[d][r], f[d], "row {r} dim {d}");
+            }
+        }
+        assert!(FeatureMatrix::from_modes(&[]).is_empty());
     }
 
     #[test]

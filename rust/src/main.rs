@@ -36,7 +36,7 @@ use powertrain::runtime::Runtime;
 use powertrain::train::{Target, TrainConfig};
 
 #[cfg(not(feature = "xla"))]
-use powertrain::coordinator::handle_request_host;
+use powertrain::coordinator::{handle_request_host, PlaneCache};
 
 /// Minimal flag parser: positional args + `--flag value` / `--flag`.
 struct Args {
@@ -347,7 +347,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         handle_request(&rt, &reference, &cfg, &metrics, &req)?
     };
     #[cfg(not(feature = "xla"))]
-    let resp = handle_request_host(&reference, &cfg, &metrics, &req)?;
+    let resp = handle_request_host(&PlaneCache::new(), &reference, &cfg, &metrics, &req)?;
     println!(
         "chosen mode {} via {}\n  predicted: {:.1} ms/mb @ {:.2} W\n  observed:  {:.1} ms/mb @ {:.2} W (budget {budget_w} W)\n  profiling cost: {:.1} simulated device-min; decision latency {:.0} ms",
         resp.chosen_mode.label(),

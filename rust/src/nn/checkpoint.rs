@@ -27,6 +27,33 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Cheap content fingerprint over everything that affects predictions:
+    /// parameters, both scalers and the target name. FNV-1a over the raw
+    /// bit patterns, one round per value (not per byte) so hashing 42k
+    /// params costs microseconds — it runs on the coordinator's per-request
+    /// path to key the grid-resident plane cache. Stable across runs and
+    /// platforms (bit patterns, not float formatting).
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = 0xcbf29ce484222325u64;
+        let eat = |h: u64, v: u64| (h ^ v).wrapping_mul(PRIME);
+        for (i, leaf) in self.params.leaves.iter().enumerate() {
+            h = eat(h, i as u64);
+            for &v in leaf {
+                h = eat(h, v.to_bits() as u64);
+            }
+        }
+        for sc in [&self.feature_scaler, &self.target_scaler] {
+            for &v in sc.mean.iter().chain(sc.std.iter()) {
+                h = eat(h, v.to_bits());
+            }
+        }
+        for &b in self.target.as_bytes() {
+            h = eat(h, b as u64);
+        }
+        h
+    }
+
     pub fn to_json(&self) -> Value {
         let mut leaves = Vec::with_capacity(N_LEAVES);
         for (i, name) in LEAF_NAMES.iter().enumerate() {
@@ -119,6 +146,29 @@ mod tests {
         assert_eq!(back.target, "time");
         assert_eq!(back.val_loss, 0.123);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let c = demo();
+        let same = demo();
+        assert_eq!(c.fingerprint(), same.fingerprint());
+        // survives a save/load round trip (bit-exact persistence)
+        let dir = std::env::temp_dir().join("pt_ckpt_fp_test");
+        let path = dir.join("fp.json");
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().fingerprint(), c.fingerprint());
+        std::fs::remove_dir_all(&dir).ok();
+        // any content change moves the fingerprint
+        let mut p = demo();
+        p.params.leaves[0][0] += 1.0;
+        assert_ne!(p.fingerprint(), c.fingerprint());
+        let mut t = demo();
+        t.target = "power".into();
+        assert_ne!(t.fingerprint(), c.fingerprint());
+        let mut s = demo();
+        s.feature_scaler.mean[0] += 0.5;
+        assert_ne!(s.fingerprint(), c.fingerprint());
     }
 
     #[test]

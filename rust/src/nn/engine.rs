@@ -29,6 +29,22 @@
 //! `host_mlp::forward_one` is retained unchanged as the oracle the engine
 //! is property-tested against (`tests/property_engine.rs`): outputs agree
 //! within 1e-5 (the 8-lane accumulators reassociate the f32 sums).
+//!
+//! **Affine folding** ([`HostEngine::folded`]) — the serve path brackets
+//! every forward pass with two per-batch affine passes: feature
+//! standardization `z = (x - μ)/σ` on the way in and the inverse target
+//! transform `y = ŷ·σ_y + μ_y` on the way out. Both fold into the weights
+//! once at build time (`W1' = W1/σ`, `b1' = b1 − W1·μ/σ`; `W4' = σ_y·W4`,
+//! `b4' = σ_y·b4 + μ_y`, exact because layer 4 is linear), so the folded
+//! engine consumes *raw* features and emits *raw-unit* predictions — the
+//! two O(batch × dim) affine sweeps disappear from the hot loop. Folded
+//! constants are computed in f64; the runtime difference vs the unfused
+//! pipeline is f32 rounding only, property-tested within 1e-5.
+//!
+//! [`HostEngine::forward_cols_into`] accepts the grid-resident SoA layout
+//! (`device::FeatureMatrix`): four contiguous feature columns instead of
+//! row-major rows, so layer 1 reads four unit-stride streams and the
+//! feature matrix is shared across models and requests without reshaping.
 
 use crate::nn::{MlpParams, DIMS};
 
@@ -107,6 +123,53 @@ impl HostEngine {
         HostEngine { wt, b, threads }
     }
 
+    /// Build an affine-folded engine: the input standardization
+    /// `z = (x - μ)/σ` is folded into layer 1 and the inverse target
+    /// transform `y = ŷ·σ_y + μ_y` into layer 4, so the engine consumes
+    /// raw features and emits raw-unit predictions.
+    ///
+    /// Fold math (per output neuron `o`, input dim `i`):
+    ///
+    /// ```text
+    /// W1'[o,i] = W1[o,i] / σ[i]
+    /// b1'[o]   = b1[o] − Σ_i W1[o,i]·μ[i]/σ[i]
+    /// W4'      = σ_y · W4          (layer 4 is linear, so exact)
+    /// b4'      = σ_y · b4 + μ_y
+    /// ```
+    ///
+    /// The folded constants are accumulated in f64 and rounded once to
+    /// f32. Callers must pass finite, strictly positive `f_std` (scalers
+    /// sanitize σ at fit/load time — see `StandardScaler::clamp_std`).
+    pub fn folded(
+        p: &MlpParams,
+        f_mean: &[f64],
+        f_std: &[f64],
+        y_mean: f64,
+        y_std: f64,
+    ) -> HostEngine {
+        let ins = DIMS[0];
+        assert_eq!(f_mean.len(), ins, "feature mean must be {ins}-wide");
+        assert_eq!(f_std.len(), ins, "feature std must be {ins}-wide");
+        debug_assert!(f_std.iter().all(|&s| s.is_finite() && s > 0.0));
+        let mut eng = HostEngine::new(p);
+        let outs = DIMS[1];
+        for o in 0..outs {
+            let row = &mut eng.wt[0][o * ins..(o + 1) * ins];
+            let mut shift = 0.0f64;
+            for i in 0..ins {
+                let w = row[i] as f64;
+                shift += w * f_mean[i] / f_std[i];
+                row[i] = (w / f_std[i]) as f32;
+            }
+            eng.b[0][o] = (eng.b[0][o] as f64 - shift) as f32;
+        }
+        for w in eng.wt[3].iter_mut() {
+            *w = (*w as f64 * y_std) as f32;
+        }
+        eng.b[3][0] = (eng.b[3][0] as f64 * y_std + y_mean) as f32;
+        eng
+    }
+
     /// Batched forward over standardized features: `xs` is row-major
     /// `[n, 4]`, `out` receives the `n` standardized predictions. Fans out
     /// across scoped threads for large batches; output is identical
@@ -162,6 +225,63 @@ impl HostEngine {
         out
     }
 
+    /// Batched forward over the SoA feature layout: `cols` holds the four
+    /// feature columns (each `out.len()` long) of a `FeatureMatrix`.
+    /// Layer 1 streams the columns directly — no row-major reshape, no
+    /// copy of the shared matrix. Fans out like [`HostEngine::forward_into`].
+    pub fn forward_cols_into(&self, cols: [&[f32]; 4], out: &mut [f32]) {
+        let n = out.len();
+        for (d, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n, "feature column {d} must be {n} long");
+        }
+        let workers = self.workers_for(n);
+        if workers <= 1 {
+            let mut scratch = Scratch::new();
+            self.forward_cols_serial(cols, out, &mut scratch);
+            return;
+        }
+        // split into contiguous TILE-aligned chunks, one per worker
+        let per_worker = (n + workers - 1) / workers;
+        let rows_per = ((per_worker + TILE - 1) / TILE) * TILE;
+        std::thread::scope(|scope| {
+            for ((((c0, c1), c2), c3), ochunk) in cols[0]
+                .chunks(rows_per)
+                .zip(cols[1].chunks(rows_per))
+                .zip(cols[2].chunks(rows_per))
+                .zip(cols[3].chunks(rows_per))
+                .zip(out.chunks_mut(rows_per))
+            {
+                scope.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    self.forward_cols_serial([c0, c1, c2, c3], ochunk, &mut scratch);
+                });
+            }
+        });
+    }
+
+    /// Single-threaded SoA forward with an explicit scratch arena.
+    pub fn forward_cols_serial(
+        &self,
+        cols: [&[f32]; 4],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let n = out.len();
+        debug_assert!(cols.iter().all(|c| c.len() == n));
+        let mut start = 0;
+        while start < n {
+            let t = TILE.min(n - start);
+            let c = [
+                &cols[0][start..start + t],
+                &cols[1][start..start + t],
+                &cols[2][start..start + t],
+                &cols[3][start..start + t],
+            ];
+            self.forward_tile_cols(c, t, &mut out[start..start + t], scratch);
+            start += t;
+        }
+    }
+
     fn workers_for(&self, n: usize) -> usize {
         if n < 2 * MIN_ROWS_PER_WORKER {
             return 1;
@@ -187,6 +307,35 @@ impl HostEngine {
                 }
             }
         }
+        self.tail_layers(t, out, s);
+    }
+
+    /// One cache block from SoA columns (`cols[d]` is tile-sliced, `t`
+    /// long). Same per-row accumulation order as [`HostEngine::forward_tile`],
+    /// only the layer-1 memory walk differs: four unit-stride column
+    /// streams instead of row-major rows.
+    fn forward_tile_cols(&self, cols: [&[f32]; 4], t: usize, out: &mut [f32], s: &mut Scratch) {
+        {
+            let (ins, outs) = (DIMS[0], DIMS[1]);
+            let (wt, b) = (&self.wt[0], &self.b[0]);
+            let [c0, c1, c2, c3] = cols;
+            for o in 0..outs {
+                let w = &wt[o * ins..o * ins + ins];
+                for r in 0..t {
+                    let acc = b[o]
+                        + c0[r] * w[0]
+                        + c1[r] * w[1]
+                        + c2[r] * w[2]
+                        + c3[r] * w[3];
+                    s.h1[r * outs + o] = acc.max(0.0);
+                }
+            }
+        }
+        self.tail_layers(t, out, s);
+    }
+
+    /// Layers 2–4 over a tile whose layer-1 activations are in `s.h1`.
+    fn tail_layers(&self, t: usize, out: &mut [f32], s: &mut Scratch) {
         // layers 2 and 3: wide GEMM blocks with relu
         gemm_relu(&s.h1, t, DIMS[1], &self.wt[1], &self.b[1], DIMS[2], &mut s.h2);
         gemm_relu(&s.h2, t, DIMS[2], &self.wt[2], &self.b[2], DIMS[3], &mut s.h3);
@@ -321,5 +470,86 @@ mod tests {
         let eng = HostEngine::new(&MlpParams::zeros());
         let out = eng.forward_batch(&[[1.0, -2.0, 3.0, 0.5]; 5]);
         assert!(out.iter().all(|&y| y == 0.0));
+    }
+
+    #[test]
+    fn cols_path_matches_row_path_exactly() {
+        // same per-row accumulation order => bitwise identical outputs
+        let mut rng = Rng::new(21);
+        let p = MlpParams::init_he(&mut rng);
+        let eng = HostEngine::new(&p);
+        for n in [0usize, 1, TILE, TILE + 5, 2 * MIN_ROWS_PER_WORKER + 31] {
+            let rows: Vec<[f32; 4]> = (0..n)
+                .map(|_| {
+                    [
+                        rng.normal() as f32,
+                        rng.normal() as f32,
+                        rng.normal() as f32,
+                        rng.normal() as f32,
+                    ]
+                })
+                .collect();
+            let mut cols: [Vec<f32>; 4] = Default::default();
+            for r in &rows {
+                for d in 0..4 {
+                    cols[d].push(r[d]);
+                }
+            }
+            let via_rows = eng.forward_batch(&rows);
+            let mut via_cols = vec![0.0f32; n];
+            eng.forward_cols_into([&cols[0], &cols[1], &cols[2], &cols[3]], &mut via_cols);
+            assert_eq!(via_rows, via_cols, "n={n}");
+        }
+    }
+
+    #[test]
+    fn folded_engine_matches_unfused_affine_pipeline() {
+        // folded(raw) ~= inverse(unfused(standardize(raw))) within 1e-5
+        let mut rng = Rng::new(33);
+        let p = MlpParams::init_he(&mut rng);
+        let f_mean = [6.0, 1400.0, 800.0, 2000.0];
+        let f_std = [3.5, 600.0, 350.0, 1100.0];
+        let (y_mean, y_std) = (30_000.0, 9_000.0);
+        let unfused = HostEngine::new(&p);
+        let folded = HostEngine::folded(&p, &f_mean, &f_std, y_mean, y_std);
+        let raw: Vec<[f32; 4]> = (0..300)
+            .map(|_| {
+                [
+                    rng.uniform_range(1.0, 12.0) as f32,
+                    rng.uniform_range(100.0, 2200.0) as f32,
+                    rng.uniform_range(100.0, 1300.0) as f32,
+                    rng.uniform_range(200.0, 3200.0) as f32,
+                ]
+            })
+            .collect();
+        let got = folded.forward_batch(&raw);
+        for (i, x) in raw.iter().enumerate() {
+            let z = [
+                ((x[0] as f64 - f_mean[0]) / f_std[0]) as f32,
+                ((x[1] as f64 - f_mean[1]) / f_std[1]) as f32,
+                ((x[2] as f64 - f_mean[2]) / f_std[2]) as f32,
+                ((x[3] as f64 - f_mean[3]) / f_std[3]) as f32,
+            ];
+            let want = unfused.forward_batch(&[z])[0] as f64 * y_std + y_mean;
+            // tolerance floor = σ_y: a folded raw output near zero is the
+            // difference of σ_y-sized terms, so that's the honest scale
+            assert!(
+                (got[i] as f64 - want).abs() <= 1e-5 * want.abs().max(y_std),
+                "row {i}: folded {} vs unfused {want}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fold_with_identity_affine_is_exact() {
+        let mut rng = Rng::new(34);
+        let p = MlpParams::init_he(&mut rng);
+        let plain = HostEngine::new(&p);
+        let folded = HostEngine::folded(&p, &[0.0; 4], &[1.0; 4], 0.0, 1.0);
+        let xs: Vec<[f32; 4]> = (0..64)
+            .map(|_| [rng.normal() as f32, 1.5, -0.5, rng.normal() as f32])
+            .collect();
+        assert_eq!(plain.forward_batch(&xs), folded.forward_batch(&xs));
     }
 }

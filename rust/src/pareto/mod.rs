@@ -78,18 +78,23 @@ impl ParetoFront {
     /// The paper's optimization: the Pareto point with the largest power
     /// that is still within `budget_mw` (that point has the minimum time
     /// among feasible modes).
+    ///
+    /// O(log n): the front is sorted by power ascending and free of
+    /// non-finite coordinates (both build invariants), so the feasible
+    /// prefix `{p : power ≤ budget}` ends at a partition point and its
+    /// last element is the answer. This is the entire steady-state cost
+    /// of a budget-only request served from the coordinator's cached
+    /// front. A NaN budget partitions at 0 and errors, like the seed's
+    /// linear scan.
     pub fn optimize(&self, budget_mw: f64) -> Result<Point> {
-        self.points
-            .iter()
-            .rev()
-            .find(|p| p.power_mw <= budget_mw)
-            .copied()
-            .ok_or_else(|| {
-                Error::Optimization(format!(
-                    "no power mode fits within {:.1} W",
-                    budget_mw / 1000.0
-                ))
-            })
+        let idx = self.points.partition_point(|p| p.power_mw <= budget_mw);
+        if idx == 0 {
+            return Err(Error::Optimization(format!(
+                "no power mode fits within {:.1} W",
+                budget_mw / 1000.0
+            )));
+        }
+        Ok(self.points[idx - 1])
     }
 
     /// True if no point in the front dominates another (invariant check).
@@ -209,6 +214,37 @@ mod tests {
         let f = ParetoFront::build(&pts);
         assert_eq!(f.len(), 1);
         assert_eq!(f.points()[0].power_mw, 10_000.0);
+    }
+
+    #[test]
+    fn binary_search_optimize_matches_linear_scan() {
+        // the O(log n) partition_point query must be indistinguishable
+        // from the seed's linear reverse scan for every budget, including
+        // exact boundaries and out-of-range budgets
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let pts: Vec<Point> = (0..200)
+                .map(|_| pt(rng.uniform_range(10.0, 500.0), rng.uniform_range(8.0, 60.0)))
+                .collect();
+            let f = ParetoFront::build(&pts);
+            let mut budgets: Vec<f64> = (0..40)
+                .map(|_| rng.uniform_range(0.0, 70.0) * 1000.0)
+                .collect();
+            // exact front powers are the boundary cases
+            budgets.extend(f.points().iter().map(|p| p.power_mw));
+            budgets.push(f64::NAN);
+            for &b in &budgets {
+                let linear = f.points.iter().rev().find(|p| p.power_mw <= b).copied();
+                match (f.optimize(b), linear) {
+                    (Ok(got), Some(want)) => {
+                        assert_eq!(got.power_mw, want.power_mw);
+                        assert_eq!(got.time, want.time);
+                    }
+                    (Err(_), None) => {}
+                    (got, want) => panic!("budget {b}: {got:?} vs linear {want:?}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -37,16 +37,23 @@ impl StandardScaler {
         }
         let std = var
             .into_iter()
-            .map(|v| {
-                let s = (v / n).sqrt();
-                if s > 1e-12 {
-                    s
-                } else {
-                    1.0
-                }
-            })
+            .map(|v| Self::clamp_std((v / n).sqrt()))
             .collect();
         StandardScaler { mean, std }
+    }
+
+    /// Guard a fitted/loaded σ against the degenerate cases that would
+    /// otherwise divide straight through in `transform*` and poison every
+    /// downstream feature with NaN/∞: zero or near-zero variance (a
+    /// profiling corpus where a feature never moves), and non-finite
+    /// values from a corrupt checkpoint. Clamped to 1.0, sklearn's
+    /// convention (the transform degrades to a mean shift).
+    pub fn clamp_std(s: f64) -> f64 {
+        if s.is_finite() && s > 1e-12 {
+            s
+        } else {
+            1.0
+        }
     }
 
     /// Fit a 1-D scaler (for targets).
@@ -109,7 +116,12 @@ impl StandardScaler {
 
     pub fn from_json(v: &Value) -> Result<StandardScaler> {
         let mean = v.req("mean")?.as_f64_vec()?;
-        let std = v.req("std")?.as_f64_vec()?;
+        let std: Vec<f64> = v
+            .req("std")?
+            .as_f64_vec()?
+            .into_iter()
+            .map(Self::clamp_std)
+            .collect();
         if mean.len() != std.len() || mean.is_empty() {
             return Err(Error::json("scaler mean/std length mismatch"));
         }
@@ -171,6 +183,42 @@ mod tests {
         for d in 0..4 {
             assert_eq!(z4[d], zr[d] as f32, "dim {d}");
         }
+    }
+
+    #[test]
+    fn degenerate_corpus_yields_finite_features() {
+        // a profiling corpus where every feature is constant (e.g. a
+        // single-mode corpus) must not produce NaN/inf features
+        let rows = vec![vec![4.0, 1113.6, 420.75, 2133.0]; 5];
+        let sc = StandardScaler::fit(&rows);
+        assert!(sc.std.iter().all(|&s| s == 1.0));
+        let z = sc.transform_row(&[8.0, 1113.6, 420.75, 2133.0]);
+        assert!(z.iter().all(|v| v.is_finite()));
+        assert_eq!(z[0], 4.0); // shift-only
+        assert_eq!(z[1], 0.0);
+    }
+
+    #[test]
+    fn clamp_std_guards_zero_and_nonfinite() {
+        assert_eq!(StandardScaler::clamp_std(0.0), 1.0);
+        assert_eq!(StandardScaler::clamp_std(1e-300), 1.0);
+        assert_eq!(StandardScaler::clamp_std(-2.0), 1.0);
+        assert_eq!(StandardScaler::clamp_std(f64::NAN), 1.0);
+        assert_eq!(StandardScaler::clamp_std(f64::INFINITY), 1.0);
+        assert_eq!(StandardScaler::clamp_std(3.5), 3.5);
+    }
+
+    #[test]
+    fn from_json_clamps_degenerate_std() {
+        // a checkpoint written with σ = 0 (degenerate corpus, older
+        // builds) must load with the clamped convention, not divide
+        // through to NaN at predict time
+        let v = Value::parse(r#"{"mean":[5.0, 1.0],"std":[0.0, 2.0]}"#).unwrap();
+        let sc = StandardScaler::from_json(&v).unwrap();
+        assert_eq!(sc.std, vec![1.0, 2.0]);
+        let z = sc.transform_row(&[7.0, 5.0]);
+        assert!(z.iter().all(|x| x.is_finite()));
+        assert_eq!(z[0], 2.0);
     }
 
     #[test]

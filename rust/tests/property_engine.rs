@@ -121,6 +121,9 @@ fn grid_predictor_matches_seed_scalar_pipeline() {
     let gp = GridPredictor::new(&ckpt);
     let got = gp.predict(&grid.modes);
     assert_eq!(got.len(), grid.len());
+    // tolerance floor = σ_y: after the affine output fold, raw values
+    // near zero are differences of σ_y-sized terms (see predict tests)
+    let y_scale = ckpt.target_scaler.std[0];
     for (i, pm) in grid.modes.iter().enumerate() {
         let feats = pm.features();
         let raw: Vec<f64> = feats.iter().map(|&v| v as f64).collect();
@@ -130,11 +133,81 @@ fn grid_predictor_matches_seed_scalar_pipeline() {
             .target_scaler
             .inverse1(host_mlp::forward_one(&ckpt.params, &zf) as f64);
         assert!(
-            (got[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+            (got[i] - want).abs() <= 1e-5 * want.abs().max(y_scale),
             "mode {i}: engine {} vs oracle {want}",
             got[i]
         );
     }
+}
+
+#[test]
+fn folded_engine_matches_unfused_oracle_across_ragged_batches() {
+    // the affine-folded serve engine (GridPredictor: scalers folded into
+    // the first/last layer weights, raw features in, raw units out) must
+    // match the unfused oracle — standardize -> HostEngine::new forward ->
+    // inverse target transform — within 1e-5 relative, across ragged
+    // batch sizes spanning the tile and threading boundaries
+    let mut rng = Rng::new(210);
+    let ckpt = Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1400.0, 800.0, 2000.0],
+            std: vec![3.5, 600.0, 350.0, 1100.0],
+        },
+        target_scaler: StandardScaler { mean: vec![30_000.0], std: vec![9_000.0] },
+        target: "power".into(),
+        provenance: "prop-folded".into(),
+        val_loss: 0.0,
+    };
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let folded = GridPredictor::new(&ckpt);
+    let unfused = HostEngine::new(&ckpt.params);
+    for &n in &[1usize, 63, 64, 65, 4_368] {
+        let modes = &grid.modes[..n];
+        let got = folded.predict(modes);
+        assert_eq!(got.len(), n);
+        let zs: Vec<[f32; 4]> = modes
+            .iter()
+            .map(|pm| ckpt.feature_scaler.transform4(&pm.features()))
+            .collect();
+        let std_out = unfused.forward_batch(&zs);
+        let y_scale = ckpt.target_scaler.std[0];
+        for i in 0..n {
+            let want = ckpt.target_scaler.inverse1(std_out[i] as f64);
+            assert!(
+                (got[i] - want).abs() <= 1e-5 * want.abs().max(y_scale),
+                "n={n} row {i}: folded {} vs unfused {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn folded_predictions_are_identical_across_entry_points() {
+    // predict / predict_into / predict_features_into are one computation:
+    // outputs must be bitwise equal however the features are fed
+    let mut rng = Rng::new(211);
+    let ckpt = Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1200.0, 700.0, 1500.0],
+            std: vec![3.0, 600.0, 350.0, 1000.0],
+        },
+        target_scaler: StandardScaler { mean: vec![100.0], std: vec![40.0] },
+        target: "time".into(),
+        provenance: "prop-folded".into(),
+        val_loss: 0.0,
+    };
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let gp = GridPredictor::new(&ckpt);
+    let via_modes = gp.predict(&grid.modes);
+    let fm = grid.feature_matrix();
+    let via_features = gp.predict_features(&fm);
+    assert_eq!(via_modes, via_features);
+    let mut reused = Vec::new();
+    gp.predict_features_into(&fm, &mut reused);
+    assert_eq!(via_modes, reused);
 }
 
 #[test]
