@@ -15,7 +15,14 @@
 //!   per mode) and the [`ParetoFront`] over them, keyed by [`PlaneKey`]
 //!   (grid identity + content fingerprints of both checkpoints, see
 //!   `Checkpoint::fingerprint`);
-//! * [`PlaneCache`] — the two bounded, thread-safe maps, shared by all
+//! * [`HostModels`] — a per-workload pair of host-trained checkpoints
+//!   (PowerTrain transfer or scratch NN), keyed by [`ModelKey`] — every
+//!   input that determines the (deterministic) profiling corpus and fit,
+//!   so a hit provably reproduces what a rebuild would compute. Planes
+//!   for transferred models then flow through the ordinary [`PlaneKey`]
+//!   path: the transferred checkpoints' fingerprints key them, so
+//!   per-workload planes cache (and evict) alongside reference planes;
+//! * [`PlaneCache`] — the bounded, thread-safe maps, shared by all
 //!   workers of a [`serve`](crate::coordinator::serve) call.
 //!
 //! A cache-hit request therefore costs one fingerprint pass, one map
@@ -29,15 +36,20 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::Metrics;
+use crate::coordinator::{Metrics, Strategy};
 use crate::device::{DeviceKind, FeatureMatrix, PowerModeGrid};
+use crate::error::Result;
+use crate::nn::checkpoint::Checkpoint;
 use crate::pareto::ParetoFront;
+use crate::workload::Workload;
 
-/// Bound on resident planes/grids. Fleets have a handful of device kinds
-/// and model pairs; the caps only guard pathological request streams
-/// (e.g. a distinct grid seed per request on seed-dependent grids).
+/// Bound on resident planes/grids/models. Fleets have a handful of device
+/// kinds and model pairs; the caps only guard pathological request
+/// streams (e.g. a distinct grid seed per request on seed-dependent
+/// grids, or a distinct workload/seed per request on the model cache).
 const MAX_GRIDS: usize = 64;
 const MAX_PLANES: usize = 64;
+const MAX_MODELS: usize = 64;
 
 /// Identity of the grid a request's predictions are computed over.
 ///
@@ -81,6 +93,49 @@ pub struct PlaneKey {
     pub power_fp: u64,
 }
 
+/// Identity of a per-workload host-trained model pair: every input that
+/// determines the profiling corpus (the grid it was sampled from, the
+/// workload simulated, the request seed driving sampling + telemetry)
+/// and the fit (strategy, epochs, and — for transfer — the reference
+/// models fine-tuned from, by content fingerprint). Host training is
+/// deterministic in all of these, so equal keys provably yield
+/// bit-identical checkpoints and caching is sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    pub grid: GridKey,
+    pub workload: Workload,
+    /// Request seed (drives mode sampling and simulated telemetry).
+    pub seed: u64,
+    pub strategy: Strategy,
+    /// Fine-tuning / training epochs (`CoordinatorConfig::transfer_epochs`).
+    pub epochs: usize,
+    /// Reference checkpoint fingerprints the transfer starts from (also
+    /// kept in the key for scratch strategies: harmless, and it keeps
+    /// entries from outliving a reference-model swap).
+    pub ref_time_fp: u64,
+    pub ref_power_fp: u64,
+}
+
+/// A host-trained (time, power) checkpoint pair plus the bookkeeping the
+/// serve path reports: the checkpoints' content fingerprints (the plane
+/// key halves) and what the one-time profiling cost to build them was.
+#[derive(Debug, Clone)]
+pub struct HostModels {
+    pub time: Checkpoint,
+    pub power: Checkpoint,
+    pub time_fp: u64,
+    pub power_fp: u64,
+    /// Simulated device-seconds of online profiling this fit consumed.
+    pub profiling_cost_s: f64,
+}
+
+impl HostModels {
+    pub fn new(time: Checkpoint, power: Checkpoint, profiling_cost_s: f64) -> HostModels {
+        let (time_fp, power_fp) = (time.fingerprint(), power.fingerprint());
+        HostModels { time, power, time_fp, power_fp, profiling_cost_s }
+    }
+}
+
 /// Device-level grid state shared across model pairs: the mode list and
 /// its SoA feature matrix, built once.
 #[derive(Debug, Clone)]
@@ -119,6 +174,7 @@ pub struct ServePlane {
 pub struct PlaneCache {
     grids: Mutex<HashMap<GridKey, Arc<GridEntry>>>,
     planes: Mutex<HashMap<PlaneKey, Arc<ServePlane>>>,
+    models: Mutex<HashMap<ModelKey, Arc<HostModels>>>,
 }
 
 impl PlaneCache {
@@ -158,11 +214,39 @@ impl PlaneCache {
         Arc::clone(map.entry(key).or_insert(built))
     }
 
-    /// (resident grids, resident planes) — for reporting/tests.
-    pub fn sizes(&self) -> (usize, usize) {
+    /// Host-trained model pair for `key`, building (outside the lock, so
+    /// concurrent misses on *different* keys profile/train in parallel)
+    /// on miss. Returns the resident entry plus whether *this call* paid
+    /// the build — callers report profiling cost only when they actually
+    /// profiled. A fallible build is not cached: the error propagates and
+    /// the next request retries.
+    pub fn models(
+        &self,
+        key: ModelKey,
+        metrics: &Metrics,
+        build: impl FnOnce() -> Result<HostModels>,
+    ) -> Result<(Arc<HostModels>, bool)> {
+        use std::sync::atomic::Ordering;
+        if let Some(hit) = self.models.lock().unwrap().get(&key) {
+            metrics.model_cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(hit), false));
+        }
+        metrics.model_cache_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build()?);
+        let mut map = self.models.lock().unwrap();
+        evict_if_full(&mut map, MAX_MODELS, &key);
+        // first insert wins; the build is deterministic per key, so a
+        // racing worker's entry is bit-identical anyway
+        Ok((Arc::clone(map.entry(key).or_insert(built)), true))
+    }
+
+    /// (resident grids, resident planes, resident model pairs) — for
+    /// reporting/tests.
+    pub fn sizes(&self) -> (usize, usize, usize) {
         (
             self.grids.lock().unwrap().len(),
             self.planes.lock().unwrap().len(),
+            self.models.lock().unwrap().len(),
         )
     }
 }
@@ -252,7 +336,7 @@ mod tests {
             plane_over(cache.grid(gkey, || panic!("grid must be resident")))
         });
         assert!(Arc::ptr_eq(&p1.grid, &p2.grid));
-        assert_eq!(cache.sizes(), (1, 2));
+        assert_eq!(cache.sizes(), (1, 2, 0));
     }
 
     #[test]
@@ -265,12 +349,90 @@ mod tests {
             let g = cache.grid(gkey, || entry(10));
             cache.plane(key, &metrics, || plane_over(g));
         }
-        let (grids, planes) = cache.sizes();
+        let (grids, planes, _) = cache.sizes();
         assert!(grids <= MAX_GRIDS, "{grids} grids resident");
         assert!(planes <= MAX_PLANES, "{planes} planes resident");
         assert_eq!(
             metrics.plane_cache_misses.load(Ordering::Relaxed),
             MAX_PLANES as u64 + 40
         );
+    }
+
+    fn demo_models(tag: f32) -> HostModels {
+        use crate::nn::MlpParams;
+        use crate::profiler::StandardScaler;
+        let ck = |target: &str| {
+            let mut params = MlpParams::zeros();
+            params.leaves[0][0] = tag;
+            Checkpoint {
+                params,
+                feature_scaler: StandardScaler {
+                    mean: vec![0.0; 4],
+                    std: vec![1.0; 4],
+                },
+                target_scaler: StandardScaler { mean: vec![0.0], std: vec![1.0] },
+                target: target.into(),
+                provenance: "cache-test".into(),
+                val_loss: 0.0,
+            }
+        };
+        HostModels::new(ck("time"), ck("power"), 120.0)
+    }
+
+    fn model_key(seed: u64) -> ModelKey {
+        ModelKey {
+            grid: GridKey::for_request(DeviceKind::OrinAgx, Some(50), seed),
+            workload: Workload::mobilenet(),
+            seed,
+            strategy: Strategy::PowerTrain(50),
+            epochs: 100,
+            ref_time_fp: 1,
+            ref_power_fp: 2,
+        }
+    }
+
+    #[test]
+    fn model_hits_share_the_arc_count_and_report_no_build() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(5);
+        let (m1, built1) = cache.models(key, &metrics, || Ok(demo_models(1.0))).unwrap();
+        let (m2, built2) = cache
+            .models(key, &metrics, || panic!("must not rebuild on hit"))
+            .unwrap();
+        assert!(built1 && !built2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.sizes(), (0, 0, 1));
+    }
+
+    #[test]
+    fn failed_model_builds_are_not_cached() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(6);
+        let err = cache.models(key, &metrics, || {
+            Err(crate::error::Error::Training("simulated divergence".into()))
+        });
+        assert!(err.is_err());
+        assert_eq!(cache.sizes(), (0, 0, 0));
+        // the next request retries the build instead of serving the error
+        let (_, built) = cache.models(key, &metrics, || Ok(demo_models(2.0))).unwrap();
+        assert!(built);
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn model_cache_stays_bounded() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        for seed in 0..(MAX_MODELS as u64 + 10) {
+            cache
+                .models(model_key(seed), &metrics, || Ok(demo_models(seed as f32)))
+                .unwrap();
+        }
+        let (_, _, models) = cache.sizes();
+        assert!(models <= MAX_MODELS, "{models} model pairs resident");
     }
 }

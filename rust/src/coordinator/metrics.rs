@@ -17,6 +17,14 @@ pub struct Metrics {
     /// the full grid prediction + front build.
     pub plane_cache_hits: AtomicU64,
     pub plane_cache_misses: AtomicU64,
+    /// Per-workload model cache hits/misses (host path): a hit reuses the
+    /// transferred/scratch-trained checkpoints; a miss pays online
+    /// profiling plus two host fits.
+    pub model_cache_hits: AtomicU64,
+    pub model_cache_misses: AtomicU64,
+    /// Host-native model fits performed (transfer or scratch; two per
+    /// model-cache miss — one per prediction target).
+    pub host_fits: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms).
@@ -28,9 +36,15 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Accumulate simulated profiling seconds. Rounds to the nearest
+    /// millisecond — truncation made many sub-millisecond additions
+    /// undercount to zero — and rejects negative durations loudly in
+    /// debug builds (saturating to zero in release instead of wrapping
+    /// a negative cast through u64).
     pub fn add_profiling_s(&self, s: f64) {
+        debug_assert!(s >= 0.0, "negative profiling duration: {s}");
         self.profiling_ms
-            .fetch_add((s * 1000.0) as u64, Ordering::Relaxed);
+            .fetch_add((s.max(0.0) * 1000.0).round() as u64, Ordering::Relaxed);
     }
 
     pub fn profiling_s(&self) -> f64 {
@@ -56,7 +70,7 @@ impl Metrics {
     pub fn render(&self) -> String {
         let (p50, p95, max) = self.latency_summary_ms();
         format!(
-            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | host fits: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
             self.requests_received.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
@@ -64,6 +78,9 @@ impl Metrics {
             self.reboots.load(Ordering::Relaxed),
             self.plane_cache_hits.load(Ordering::Relaxed),
             self.plane_cache_misses.load(Ordering::Relaxed),
+            self.model_cache_hits.load(Ordering::Relaxed),
+            self.model_cache_misses.load(Ordering::Relaxed),
+            self.host_fits.load(Ordering::Relaxed),
             self.profiling_s() / 60.0,
             p50,
             p95,
@@ -98,5 +115,20 @@ mod tests {
     fn empty_latencies_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_summary_ms(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn sub_millisecond_profiling_rounds_instead_of_truncating() {
+        // regression: `(s * 1000.0) as u64` truncated 0.6 ms to 0 per
+        // call, so streams of short profiling runs never accumulated
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.add_profiling_s(0.0006);
+        }
+        assert!((m.profiling_s() - 0.005).abs() < 1e-9, "{}", m.profiling_s());
+        // exact values stay exact
+        let m2 = Metrics::new();
+        m2.add_profiling_s(90.0);
+        assert!((m2.profiling_s() - 90.0).abs() < 1e-9);
     }
 }

@@ -39,7 +39,9 @@ impl Scenario {
 }
 
 /// How the coordinator solves an optimization request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` because the strategy is part of the host model-cache key
+/// (`coordinator::cache::ModelKey`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Profile every mode of the (subset) grid, pick the ground-truth
     /// optimum. 1200–1800 min of data collection (paper Table 1).

@@ -33,6 +33,7 @@ pub fn reinit(ctx: &mut ExpContext) -> Result<()> {
             let cfg = TransferConfig {
                 base: TrainConfig { epochs: 300, seed, ..Default::default() },
                 reinit_last_layer: reinit,
+                ..Default::default()
             };
             let (ck, _) = transfer(&ctx.rt, &reference, &sample, Target::Time, &cfg)?;
             out.push(ctx.val_mape(&ck, &corpus, Target::Time)?);

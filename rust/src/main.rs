@@ -231,9 +231,38 @@ fn xla_required(what: &str) -> Error {
     ))
 }
 
+/// Host-native `train-ref`: the same one-time offline bootstrap, driven
+/// by the pure-rust backprop trainer instead of the AOT artifacts.
 #[cfg(not(feature = "xla"))]
-fn cmd_train_ref(_args: &Args) -> Result<()> {
-    Err(xla_required("train-ref"))
+fn cmd_train_ref(args: &Args) -> Result<()> {
+    let wl = args.workload()?;
+    let epochs = args.usize_or("epochs", 150)?;
+    let corpus_size = args.usize_or("corpus-size", 4368)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let out = PathBuf::from(args.get_or("out", "checkpoints"));
+
+    let mut rng = Rng::new(seed);
+    let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+    let modes = if corpus_size >= grid.len() {
+        grid.modes
+    } else {
+        grid.sample(corpus_size, &mut rng)
+    };
+    println!("profiling {} modes of {} ...", modes.len(), wl.name());
+    let mut profiler = Profiler::new(TrainerSim::new(DeviceKind::OrinAgx.spec(), wl, seed));
+    let corpus = profiler.profile_modes(&modes)?;
+
+    println!("training reference models host-natively ({epochs} epochs) ...");
+    let reference = ReferenceModels::bootstrap_host(&corpus, epochs, seed)?;
+    std::fs::create_dir_all(&out)?;
+    reference.save(&out)?;
+    println!(
+        "saved reference models (time val-mse {:.4}, power val-mse {:.4}) to {}",
+        reference.time.val_loss,
+        reference.power.val_loss,
+        out.display()
+    );
+    Ok(())
 }
 
 #[cfg(feature = "xla")]
@@ -269,9 +298,59 @@ fn cmd_train_ref(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Host-native `transfer`: PowerTrain's profile-then-fine-tune recipe
+/// through `transfer_host` (freeze-then-finetune, pure rust).
 #[cfg(not(feature = "xla"))]
-fn cmd_transfer(_args: &Args) -> Result<()> {
-    Err(xla_required("transfer"))
+fn cmd_transfer(args: &Args) -> Result<()> {
+    use powertrain::train::{transfer::TransferConfig, Target, TrainConfig};
+    let device = args.device()?;
+    let wl = args.workload()?;
+    let n = args.usize_or("modes", 50)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
+    let out = PathBuf::from(args.get_or("out", "checkpoints"));
+    let loss = match args.get_or("loss", "mse").as_str() {
+        "mse" => powertrain::train::LossKind::Mse,
+        "mape" => powertrain::train::LossKind::Mape,
+        other => return Err(Error::Usage(format!("unknown loss '{other}'"))),
+    };
+
+    let reference = ReferenceModels::load(&ref_dir)?;
+
+    let mut rng = Rng::new(seed);
+    let grid = powertrain::coordinator::prediction_grid(device, None, seed);
+    let modes = grid.sample(n, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), wl, seed));
+    let corpus = profiler.profile_modes(&modes)?;
+    println!(
+        "profiled {n} modes ({:.1} simulated device-min)",
+        corpus.total_cost_s() / 60.0
+    );
+
+    let cfg = TransferConfig {
+        base: TrainConfig { epochs: 100, seed, loss, ..Default::default() },
+        ..Default::default()
+    };
+    let (time_ck, _) =
+        powertrain::train::transfer::transfer_host(&reference.time, &corpus, Target::Time, &cfg)?;
+    let (power_ck, _) = powertrain::train::transfer::transfer_host(
+        &reference.power,
+        &corpus,
+        Target::Power,
+        &cfg,
+    )?;
+
+    std::fs::create_dir_all(&out)?;
+    let tag = format!("{}_{}", device.name(), wl.arch.name());
+    time_ck.save(&out.join(format!("pt_{tag}_time.json")))?;
+    power_ck.save(&out.join(format!("pt_{tag}_power.json")))?;
+    println!(
+        "saved host-transferred models for {} on {} to {}",
+        wl.name(),
+        device.name(),
+        out.display()
+    );
+    Ok(())
 }
 
 #[cfg(feature = "xla")]

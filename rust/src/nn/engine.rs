@@ -354,7 +354,17 @@ impl HostEngine {
 /// Blocked `relu(a @ w^T + b)` over one tile: `a` is `[t, ins]`, `wt` is
 /// `[outs, ins]`, `h` receives `[t, outs]`. Output-neuron-major loop nest:
 /// each weight row is loaded once per tile and reused across all `t` rows.
-fn gemm_relu(a: &[f32], t: usize, ins: usize, wt: &[f32], b: &[f32], outs: usize, h: &mut [f32]) {
+/// Shared with the host backward pass (`nn::grad`), whose forward must
+/// match the engine bit-for-bit within a tile.
+pub(crate) fn gemm_relu(
+    a: &[f32],
+    t: usize,
+    ins: usize,
+    wt: &[f32],
+    b: &[f32],
+    outs: usize,
+    h: &mut [f32],
+) {
     for o in 0..outs {
         let w = &wt[o * ins..o * ins + ins];
         let bo = b[o];
@@ -367,8 +377,9 @@ fn gemm_relu(a: &[f32], t: usize, ins: usize, wt: &[f32], b: &[f32], outs: usize
 
 /// Unit-stride inner product with 8 independent accumulators so the
 /// reduction vectorizes (f32 adds are not reassociable otherwise).
+/// Shared with the host backward pass (`nn::grad`).
 #[inline]
-fn dot(a: &[f32], w: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], w: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), w.len());
     let mut acc = [0.0f32; 8];
     let ca = a.chunks_exact(8);

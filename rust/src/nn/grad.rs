@@ -1,0 +1,644 @@
+//! Host-native backward pass + Adam for the prediction MLP.
+//!
+//! The paper's core loop — transfer-learning the reference time/power
+//! models from ~50 profiled power modes (section 3.2, Table 1) — needs a
+//! training backend. The AOT artifacts provide one behind the `xla`
+//! feature; this module provides the *default* one: a hand-rolled
+//! reverse-mode pass for the fixed [4 → 256 → 128 → 64 → 1] stack so the
+//! dependency-free build runs profiling → transfer → prediction end to
+//! end.
+//!
+//! Design, shared with the inference engine (`nn::engine`):
+//!
+//! * **Transposed-weight layout** — trainable parameters, gradients and
+//!   Adam moments all live in the engine's `[outs, ins]` layout
+//!   ([`TransposedMlp`]), so every forward/backward inner product is a
+//!   unit-stride dual stream ([`crate::nn::engine::dot`] is reused
+//!   directly) and Adam is a flat elementwise sweep. Conversion to the
+//!   canonical row-major `MlpParams` happens only at checkpoint events
+//!   (O(params), never per step).
+//! * **Scratch arena** — activations, deltas and the output-gradient
+//!   buffer live in a caller-owned [`Tape`] sized once for the training
+//!   batch; a 50-row × 100-epoch fit performs zero steady-state heap
+//!   allocations.
+//! * **ReLU-gated backprop** — gates are recovered from the stored
+//!   post-activations (`h > 0`), matching the subgradient convention
+//!   `relu'(0) = 0` of the python reference.
+//!
+//! Differences vs the AOT train artifacts, by design: no dropout (the
+//! transfer corpora are ~50 rows, and determinism per seed is a test
+//! invariant) and no padding mask (the host controls the real batch
+//! length directly). Gradient correctness is property-tested against
+//! central finite differences of an independent f64 reference
+//! (`tests/property_host_training.rs`).
+
+use crate::nn::engine::{dot, gemm_relu};
+use crate::nn::{MlpParams, DIMS};
+
+/// Adam hyperparameters, mirroring `python/compile/kernels/ref.py`
+/// (paper Table 4: Adam @ lr 1e-3).
+pub const ADAM_LR: f64 = 1e-3;
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.999;
+pub const ADAM_EPS: f64 = 1e-8;
+
+/// An MLP-shaped value tree (parameters, gradients or Adam moments) in
+/// the inference engine's transposed `[outs, ins]` weight layout.
+#[derive(Debug, Clone)]
+pub struct TransposedMlp {
+    /// Per layer, weights with neuron `o`'s `ins` weights contiguous at
+    /// `wt[o*ins .. (o+1)*ins]`.
+    pub wt: [Vec<f32>; 4],
+    /// Per layer, biases (`outs` values).
+    pub b: [Vec<f32>; 4],
+}
+
+impl TransposedMlp {
+    /// All-zeros tree (gradient accumulators, Adam moments).
+    pub fn zeros() -> TransposedMlp {
+        let mut wt: [Vec<f32>; 4] = Default::default();
+        let mut b: [Vec<f32>; 4] = Default::default();
+        for layer in 0..4 {
+            wt[layer] = vec![0.0; DIMS[layer] * DIMS[layer + 1]];
+            b[layer] = vec![0.0; DIMS[layer + 1]];
+        }
+        TransposedMlp { wt, b }
+    }
+
+    /// Transpose canonical row-major `[ins, outs]` parameters into the
+    /// engine layout. O(params); done once per fit, never per step.
+    pub fn from_params(p: &MlpParams) -> TransposedMlp {
+        let mut t = TransposedMlp::zeros();
+        for layer in 0..4 {
+            let (ins, outs) = (DIMS[layer], DIMS[layer + 1]);
+            let w = &p.leaves[layer * 2];
+            debug_assert_eq!(w.len(), ins * outs);
+            for i in 0..ins {
+                for o in 0..outs {
+                    t.wt[layer][o * ins + i] = w[i * outs + o];
+                }
+            }
+            t.b[layer].copy_from_slice(&p.leaves[layer * 2 + 1]);
+        }
+        t
+    }
+
+    /// Transpose back into caller-owned canonical params without
+    /// allocating — the best-checkpoint path of the host trainer.
+    pub fn write_params(&self, p: &mut MlpParams) {
+        for layer in 0..4 {
+            let (ins, outs) = (DIMS[layer], DIMS[layer + 1]);
+            let w = &mut p.leaves[layer * 2];
+            for i in 0..ins {
+                for o in 0..outs {
+                    w[i * outs + o] = self.wt[layer][o * ins + i];
+                }
+            }
+            p.leaves[layer * 2 + 1].copy_from_slice(&self.b[layer]);
+        }
+    }
+
+    /// Allocating convenience wrapper over [`TransposedMlp::write_params`].
+    pub fn to_params(&self) -> MlpParams {
+        let mut p = MlpParams::zeros();
+        self.write_params(&mut p);
+        p
+    }
+
+    pub fn zero(&mut self) {
+        for l in 0..4 {
+            self.wt[l].fill(0.0);
+            self.b[l].fill(0.0);
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.wt
+            .iter()
+            .chain(self.b.iter())
+            .all(|v| v.iter().all(|x| x.is_finite()))
+    }
+}
+
+/// Caller-owned scratch arena for one forward/backward pass: post-ReLU
+/// activations (`h*`, which double as the gate record), pre-activation
+/// deltas (`d*`) and the network outputs. Sized once for the maximum
+/// batch; reused across every step and epoch.
+#[derive(Debug, Clone)]
+pub struct Tape {
+    cap: usize,
+    h1: Vec<f32>, // [cap, 256]
+    h2: Vec<f32>, // [cap, 128]
+    h3: Vec<f32>, // [cap, 64]
+    d1: Vec<f32>,
+    d2: Vec<f32>,
+    d3: Vec<f32>,
+    dy: Vec<f32>, // [cap] — dL/dŷ
+    /// Network outputs (standardized-target space), `[cap]`; rows `0..n`
+    /// are valid after a forward over `n` rows.
+    pub yhat: Vec<f32>,
+}
+
+impl Tape {
+    pub fn new(cap: usize) -> Tape {
+        assert!(cap > 0, "tape capacity must be positive");
+        Tape {
+            cap,
+            h1: vec![0.0; cap * DIMS[1]],
+            h2: vec![0.0; cap * DIMS[2]],
+            h3: vec![0.0; cap * DIMS[3]],
+            d1: vec![0.0; cap * DIMS[1]],
+            d2: vec![0.0; cap * DIMS[2]],
+            d3: vec![0.0; cap * DIMS[3]],
+            dy: vec![0.0; cap],
+            yhat: vec![0.0; cap],
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Loss driven through the backward pass. Mirrors the AOT train
+/// artifacts: MSE in standardized-target space (paper Table 4 default)
+/// or MAPE in raw units (cross-device transfer, paper section 4.3.4).
+#[derive(Debug, Clone, Copy)]
+pub enum HostLoss {
+    /// `ys` are standardized targets.
+    Mse,
+    /// `ys` are raw-unit targets; predictions are unscaled through the
+    /// target scaler's (mean, std) before the percentage error.
+    Mape { y_mean: f64, y_std: f64 },
+}
+
+/// Inference-mode batched forward: `xs` is row-major `[n, 4]`
+/// (standardized features), outputs land in `tape.yhat[..n]`. Identical
+/// per-row accumulation order to `nn::engine`'s tile kernel, so outputs
+/// match the engine bit-for-bit for `n` within one engine tile.
+pub fn forward(p: &TransposedMlp, xs: &[f32], n: usize, tape: &mut Tape) {
+    assert!(n <= tape.cap, "batch {n} exceeds tape capacity {}", tape.cap);
+    assert_eq!(xs.len(), n * DIMS[0], "xs must be [n, 4] row-major");
+    // layer 1: ins = 4
+    {
+        let (ins, outs) = (DIMS[0], DIMS[1]);
+        for o in 0..outs {
+            let w = &p.wt[0][o * ins..(o + 1) * ins];
+            let bo = p.b[0][o];
+            for r in 0..n {
+                let xr = &xs[r * ins..(r + 1) * ins];
+                let acc = bo + xr[0] * w[0] + xr[1] * w[1] + xr[2] * w[2] + xr[3] * w[3];
+                tape.h1[r * outs + o] = acc.max(0.0);
+            }
+        }
+    }
+    gemm_relu(&tape.h1, n, DIMS[1], &p.wt[1], &p.b[1], DIMS[2], &mut tape.h2);
+    gemm_relu(&tape.h2, n, DIMS[2], &p.wt[2], &p.b[2], DIMS[3], &mut tape.h3);
+    // layer 4: outs = 1, linear
+    {
+        let ins = DIMS[3];
+        let w = &p.wt[3][..ins];
+        let b0 = p.b[3][0];
+        for r in 0..n {
+            tape.yhat[r] = b0 + dot(&tape.h3[r * ins..(r + 1) * ins], w);
+        }
+    }
+}
+
+/// Forward + backward over one batch: fills `g` with the gradient of the
+/// mean loss over the `n` rows and returns the loss (accumulated in f64).
+/// `g` is zeroed first; the caller owns it so steady state allocates
+/// nothing.
+pub fn loss_and_grad(
+    p: &TransposedMlp,
+    xs: &[f32],
+    ys: &[f32],
+    n: usize,
+    loss: HostLoss,
+    tape: &mut Tape,
+    g: &mut TransposedMlp,
+) -> f64 {
+    assert!(n > 0, "empty batch");
+    assert!(ys.len() >= n, "ys shorter than batch");
+    forward(p, xs, n, tape);
+    g.zero();
+
+    // loss + dL/dŷ, matching ref.py's masked means (mask ≡ 1 here: the
+    // host controls the real batch length, no padding rows exist)
+    let inv_n = 1.0 / n as f64;
+    let mut total = 0.0f64;
+    match loss {
+        HostLoss::Mse => {
+            for r in 0..n {
+                let e = (tape.yhat[r] - ys[r]) as f64;
+                total += e * e;
+                tape.dy[r] = (2.0 * e * inv_n) as f32;
+            }
+        }
+        HostLoss::Mape { y_mean, y_std } => {
+            for r in 0..n {
+                let pred_raw = tape.yhat[r] as f64 * y_std + y_mean;
+                let denom = (ys[r] as f64).abs().max(1e-6);
+                let diff = pred_raw - ys[r] as f64;
+                total += 100.0 * diff.abs() / denom;
+                tape.dy[r] = (100.0 * diff.signum() * y_std / denom * inv_n) as f32;
+            }
+        }
+    }
+    let loss_val = total * inv_n;
+
+    // layer 4 backward (outs = 1, linear): d3 = dy·w4 gated by h3
+    {
+        let ins = DIMS[3];
+        let w = &p.wt[3][..ins];
+        let gw = &mut g.wt[3][..ins];
+        let mut gb = 0.0f32;
+        for r in 0..n {
+            let dyr = tape.dy[r];
+            gb += dyr;
+            let h = &tape.h3[r * ins..(r + 1) * ins];
+            let d = &mut tape.d3[r * ins..(r + 1) * ins];
+            for i in 0..ins {
+                gw[i] += dyr * h[i];
+                d[i] = if h[i] > 0.0 { dyr * w[i] } else { 0.0 };
+            }
+        }
+        g.b[3][0] = gb;
+    }
+    // layers 3 and 2: propagate through the transposed weights, gate on
+    // the stored post-activations
+    backward_layer(
+        n,
+        DIMS[2],
+        DIMS[3],
+        &tape.d3,
+        &tape.h2,
+        &p.wt[2],
+        &mut g.wt[2],
+        &mut g.b[2],
+        Some((&mut tape.d2, &tape.h2)),
+    );
+    backward_layer(
+        n,
+        DIMS[1],
+        DIMS[2],
+        &tape.d2,
+        &tape.h1,
+        &p.wt[1],
+        &mut g.wt[1],
+        &mut g.b[1],
+        Some((&mut tape.d1, &tape.h1)),
+    );
+    // layer 1: inputs are the features; no further propagation
+    backward_layer(
+        n,
+        DIMS[0],
+        DIMS[1],
+        &tape.d1,
+        xs,
+        &p.wt[0],
+        &mut g.wt[0],
+        &mut g.b[0],
+        None,
+    );
+    loss_val
+}
+
+/// One layer of reverse-mode: `d` is `[n, outs]` (grad w.r.t. this
+/// layer's pre-activations), `a_prev` is `[n, ins]` (previous
+/// post-activations / inputs). Accumulates `gw` (`[outs, ins]`
+/// transposed layout) and `gb`; when `prev` is given, computes the
+/// previous layer's pre-activation deltas, ReLU-gated by `h_prev > 0`.
+#[allow(clippy::too_many_arguments)]
+fn backward_layer(
+    n: usize,
+    ins: usize,
+    outs: usize,
+    d: &[f32],
+    a_prev: &[f32],
+    wt: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    prev: Option<(&mut Vec<f32>, &[f32])>,
+) {
+    // weight/bias gradients: output-neuron-major so each gw row is a
+    // unit-stride accumulator reused across all batch rows
+    for o in 0..outs {
+        let gwo = &mut gw[o * ins..(o + 1) * ins];
+        let mut gbo = 0.0f32;
+        for r in 0..n {
+            let dro = d[r * outs + o];
+            if dro == 0.0 {
+                continue; // ReLU-dead unit for this row
+            }
+            gbo += dro;
+            let ar = &a_prev[r * ins..(r + 1) * ins];
+            for i in 0..ins {
+                gwo[i] += dro * ar[i];
+            }
+        }
+        gb[o] += gbo;
+    }
+    if let Some((d_prev, h_prev)) = prev {
+        d_prev[..n * ins].fill(0.0);
+        for r in 0..n {
+            let dr = &d[r * outs..(r + 1) * outs];
+            let dp = &mut d_prev[r * ins..(r + 1) * ins];
+            for o in 0..outs {
+                let dro = dr[o];
+                if dro == 0.0 {
+                    continue;
+                }
+                let w = &wt[o * ins..(o + 1) * ins];
+                for i in 0..ins {
+                    dp[i] += dro * w[i];
+                }
+            }
+            let hp = &h_prev[r * ins..(r + 1) * ins];
+            for i in 0..ins {
+                if hp[i] <= 0.0 {
+                    dp[i] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Host Adam optimizer over [`TransposedMlp`] trees, mirroring
+/// `ref.adam_update` (bias-corrected, 1-based step count). Moments are
+/// allocated once; every step is an elementwise sweep with f64 scalar
+/// math rounded to f32 storage.
+#[derive(Debug, Clone)]
+pub struct HostAdam {
+    m: TransposedMlp,
+    v: TransposedMlp,
+    /// Per-layer applied-step counts. Kept per layer (not one shared
+    /// counter) so a layer that sat out a freeze phase gets textbook
+    /// bias correction from its own first update — with a shared count,
+    /// `1 − β₂^t` is already ~0.01 at t = 10, which would halve the
+    /// effective magnitude of a newly-unfrozen layer's first steps.
+    pub t: [u64; 4],
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl HostAdam {
+    pub fn new(lr: f64) -> HostAdam {
+        HostAdam {
+            m: TransposedMlp::zeros(),
+            v: TransposedMlp::zeros(),
+            t: [0; 4],
+            lr,
+            beta1: ADAM_B1,
+            beta2: ADAM_B2,
+            eps: ADAM_EPS,
+        }
+    }
+
+    /// Apply one Adam step to layers `first_layer..4` (0 = all layers;
+    /// 3 = the fresh head only — the freeze phase of host transfer).
+    /// Frozen layers keep their parameters, moments *and* step counts
+    /// untouched.
+    pub fn step(&mut self, p: &mut TransposedMlp, g: &TransposedMlp, first_layer: usize) {
+        assert!(first_layer < 4, "first_layer must be 0..=3");
+        for l in first_layer..4 {
+            self.t[l] += 1;
+            let bc1 = 1.0 - self.beta1.powi(self.t[l] as i32);
+            let bc2 = 1.0 - self.beta2.powi(self.t[l] as i32);
+            adam_sweep(
+                &mut p.wt[l], &g.wt[l], &mut self.m.wt[l], &mut self.v.wt[l],
+                self.lr, self.beta1, self.beta2, self.eps, bc1, bc2,
+            );
+            adam_sweep(
+                &mut p.b[l], &g.b[l], &mut self.m.b[l], &mut self.v.b[l],
+                self.lr, self.beta1, self.beta2, self.eps, bc1, bc2,
+            );
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_sweep(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f64,
+    b1: f64,
+    b2: f64,
+    eps: f64,
+    bc1: f64,
+    bc2: f64,
+) {
+    debug_assert!(p.len() == g.len() && p.len() == m.len() && p.len() == v.len());
+    for i in 0..p.len() {
+        let gi = g[i] as f64;
+        let mi = b1 * m[i] as f64 + (1.0 - b1) * gi;
+        let vi = b2 * v[i] as f64 + (1.0 - b2) * gi * gi;
+        m[i] = mi as f32;
+        v[i] = vi as f32;
+        p[i] = (p[i] as f64 - lr * (mi / bc1) / ((vi / bc2).sqrt() + eps)) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::host_mlp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transpose_round_trips_exactly() {
+        let mut rng = Rng::new(1);
+        let p = MlpParams::init_he(&mut rng);
+        let t = TransposedMlp::from_params(&p);
+        assert_eq!(t.to_params(), p);
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn forward_matches_scalar_oracle() {
+        let mut rng = Rng::new(2);
+        let p = MlpParams::init_he(&mut rng);
+        let t = TransposedMlp::from_params(&p);
+        let mut tape = Tape::new(16);
+        let xs: Vec<[f32; 4]> = (0..16)
+            .map(|_| {
+                [
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                ]
+            })
+            .collect();
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        forward(&t, &flat, 16, &mut tape);
+        for (r, x) in xs.iter().enumerate() {
+            let want = host_mlp::forward_one(&p, x);
+            let got = tape.yhat[r];
+            assert!(
+                (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+                "row {r}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_engine_bitwise_within_a_tile() {
+        let mut rng = Rng::new(3);
+        let p = MlpParams::init_he(&mut rng);
+        let t = TransposedMlp::from_params(&p);
+        let eng = crate::nn::engine::HostEngine::new(&p);
+        let n = 40; // within one 64-row engine tile
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+        let mut tape = Tape::new(n);
+        forward(&t, &xs, n, &mut tape);
+        let mut want = vec![0.0f32; n];
+        eng.forward_into(&xs, &mut want);
+        assert_eq!(&tape.yhat[..n], &want[..]);
+    }
+
+    #[test]
+    fn hand_computed_single_path_gradient() {
+        // one active path: ŷ = a·b·c·d·x0, all stages positive.
+        // L = (ŷ − y)² (batch of 1) ⇒ dL/dd = 2(ŷ−y)·a·b·c·x0, etc.
+        let (a, b, c, d, x0, y) = (0.5f32, 1.5f32, 2.0f32, 0.25f32, 3.0f32, 1.0f32);
+        let mut p = MlpParams::zeros();
+        p.leaves[0][0] = a; // w1[0,0] row-major [4,256]
+        p.leaves[2][0] = b; // w2[0,0]
+        p.leaves[4][0] = c;
+        p.leaves[6][0] = d;
+        let t = TransposedMlp::from_params(&p);
+        let mut tape = Tape::new(1);
+        let mut g = TransposedMlp::zeros();
+        let xs = [x0, 0.0, 0.0, 0.0];
+        let loss = loss_and_grad(&t, &xs, &[y], 1, HostLoss::Mse, &mut tape, &mut g);
+        let yhat = a * b * c * d * x0;
+        assert!((loss - ((yhat - y) as f64).powi(2)).abs() < 1e-9);
+        let e = 2.0 * (yhat - y);
+        // transposed layout: wt[l][o*ins + i]
+        assert!((g.wt[3][0] - e * (a * b * c * x0)).abs() < 1e-5, "dw4");
+        assert!((g.wt[2][0] - e * d * (a * b * x0)).abs() < 1e-5, "dw3");
+        assert!((g.wt[1][0] - e * d * c * (a * x0)).abs() < 1e-5, "dw2");
+        assert!((g.wt[0][0] - e * d * c * b * x0).abs() < 1e-5, "dw1");
+        assert!((g.b[3][0] - e).abs() < 1e-6, "db4");
+        // untouched units have exactly zero gradient
+        assert_eq!(g.wt[0][4], 0.0); // w1 neuron 1 (transposed row 1 start)
+        assert_eq!(g.b[0][1], 0.0);
+    }
+
+    #[test]
+    fn relu_gate_blocks_gradient() {
+        // negative first-layer weight ⇒ dead unit ⇒ no gradient reaches
+        // w1 (its pre-activation gate is closed), while b4 still learns
+        let mut p = MlpParams::zeros();
+        p.leaves[0][0] = -1.0;
+        p.leaves[2][0] = 1.0;
+        p.leaves[4][0] = 1.0;
+        p.leaves[6][0] = 1.0;
+        let t = TransposedMlp::from_params(&p);
+        let mut tape = Tape::new(1);
+        let mut g = TransposedMlp::zeros();
+        loss_and_grad(&t, &[5.0, 0.0, 0.0, 0.0], &[2.0], 1, HostLoss::Mse, &mut tape, &mut g);
+        assert_eq!(g.wt[0][0], 0.0, "gradient leaked through a closed gate");
+        assert!(g.b[3][0] != 0.0);
+    }
+
+    #[test]
+    fn mape_gradient_sign_and_scale() {
+        // ŷ_raw = b4·σ + μ; over-prediction ⇒ positive db4 = 100·σ/|y|/n
+        let p = MlpParams::zeros();
+        let mut t = TransposedMlp::from_params(&p);
+        t.b[3][0] = 2.0;
+        let (y_mean, y_std) = (10.0, 4.0);
+        let y_raw = 12.0f32; // ŷ_raw = 18 > y
+        let mut tape = Tape::new(1);
+        let mut g = TransposedMlp::zeros();
+        let loss = loss_and_grad(
+            &t,
+            &[0.0; 4],
+            &[y_raw],
+            1,
+            HostLoss::Mape { y_mean, y_std },
+            &mut tape,
+            &mut g,
+        );
+        assert!((loss - 100.0 * 6.0 / 12.0).abs() < 1e-6, "loss={loss}");
+        assert!((g.b[3][0] as f64 - 100.0 * y_std / 12.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn adam_converges_on_scalar_quadratic() {
+        // only b4 is live: L = (b4 − y)², Adam should walk b4 to y
+        let p = MlpParams::zeros();
+        let mut t = TransposedMlp::from_params(&p);
+        let mut adam = HostAdam::new(1e-2);
+        let mut tape = Tape::new(1);
+        let mut g = TransposedMlp::zeros();
+        let y = 0.8f32;
+        for _ in 0..600 {
+            loss_and_grad(&t, &[0.0; 4], &[y], 1, HostLoss::Mse, &mut tape, &mut g);
+            adam.step(&mut t, &g, 0);
+        }
+        assert!((t.b[3][0] - y).abs() < 1e-2, "b4={}", t.b[3][0]);
+    }
+
+    #[test]
+    fn freeze_leaves_body_untouched() {
+        let mut rng = Rng::new(9);
+        let p = MlpParams::init_he(&mut rng);
+        let mut t = TransposedMlp::from_params(&p);
+        let body_before: Vec<Vec<f32>> = (0..3).map(|l| t.wt[l].clone()).collect();
+        let head_before = t.wt[3].clone();
+        let mut adam = HostAdam::new(ADAM_LR);
+        let mut tape = Tape::new(4);
+        let mut g = TransposedMlp::zeros();
+        let xs: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+        for _ in 0..5 {
+            loss_and_grad(&t, &xs, &ys, 4, HostLoss::Mse, &mut tape, &mut g);
+            adam.step(&mut t, &g, 3); // head only
+        }
+        for l in 0..3 {
+            assert_eq!(t.wt[l], body_before[l], "frozen layer {l} moved");
+        }
+        assert_ne!(t.wt[3], head_before, "head did not train");
+    }
+
+    #[test]
+    fn batch_gradient_is_mean_of_row_gradients() {
+        let mut rng = Rng::new(11);
+        let p = MlpParams::init_he(&mut rng);
+        let t = TransposedMlp::from_params(&p);
+        let n = 6;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut tape = Tape::new(n);
+        let mut g_batch = TransposedMlp::zeros();
+        loss_and_grad(&t, &xs, &ys, n, HostLoss::Mse, &mut tape, &mut g_batch);
+        let mut g_sum = TransposedMlp::zeros();
+        let mut g_row = TransposedMlp::zeros();
+        for r in 0..n {
+            loss_and_grad(
+                &t, &xs[r * 4..(r + 1) * 4], &ys[r..r + 1], 1,
+                HostLoss::Mse, &mut tape, &mut g_row,
+            );
+            for l in 0..4 {
+                for (s, x) in g_sum.wt[l].iter_mut().zip(&g_row.wt[l]) {
+                    *s += x / n as f32;
+                }
+                for (s, x) in g_sum.b[l].iter_mut().zip(&g_row.b[l]) {
+                    *s += x / n as f32;
+                }
+            }
+        }
+        for l in 0..4 {
+            for (a, b) in g_batch.wt[l].iter().zip(&g_sum.wt[l]) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-3), "layer {l}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod checkpoint;
 pub mod engine;
+pub mod grad;
 pub mod host_mlp;
 
 use crate::util::rng::Rng;

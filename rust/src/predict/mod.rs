@@ -160,6 +160,20 @@ pub fn predict_modes_host(ckpt: &Checkpoint, modes: &[PowerMode]) -> Vec<f64> {
     GridPredictor::new(ckpt).predict(modes)
 }
 
+/// Host-path MAPE (%) of a checkpoint against a profiled corpus's
+/// recorded targets — the holdout-evaluation step of the host training /
+/// transfer loop (paper's headline accuracy metric), computed through
+/// the same folded engine that serves predictions.
+pub fn corpus_mape_host(
+    ckpt: &Checkpoint,
+    corpus: &crate::profiler::Corpus,
+    target: crate::train::Target,
+) -> f64 {
+    let modes: Vec<PowerMode> = corpus.records().iter().map(|r| r.mode).collect();
+    let preds = predict_modes_host(ckpt, &modes);
+    crate::util::stats::mape(&preds, &target.values(corpus))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +249,28 @@ mod tests {
         let p = GridPredictor::new(&ckpt);
         let fm = grid.feature_matrix();
         assert_eq!(p.predict(&grid.modes), p.predict_features(&fm));
+    }
+
+    #[test]
+    fn corpus_mape_host_matches_manual_computation() {
+        use crate::profiler::{Corpus, Record};
+        use crate::train::Target;
+        let ckpt = demo_ckpt();
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let mut corpus = Corpus::new(DeviceKind::OrinAgx, crate::workload::Workload::resnet());
+        for (i, pm) in grid.modes[..30].iter().enumerate() {
+            corpus.push(Record {
+                mode: *pm,
+                time_ms: 100.0 + i as f64,
+                power_mw: 20_000.0,
+                cost_s: 0.0,
+            });
+        }
+        let got = corpus_mape_host(&ckpt, &corpus, Target::Time);
+        let preds = predict_modes_host(&ckpt, &grid.modes[..30]);
+        let want = crate::util::stats::mape(&preds, &corpus.times_ms());
+        assert_eq!(got, want);
+        assert!(got.is_finite());
     }
 
     #[test]

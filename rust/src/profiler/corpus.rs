@@ -93,11 +93,25 @@ impl Corpus {
     }
 
     /// 90:10 train/validation split (paper's protocol).
+    ///
+    /// For any `0 < train_frac < 1` on a corpus of at least 2 records,
+    /// *both* splits are guaranteed non-empty: rounding alone would give
+    /// e.g. `len=5, frac=0.9 → n_train=5` and an empty validation split,
+    /// which made small transfer corpora silently validate on their own
+    /// training data downstream.
     pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Corpus, Corpus) {
         assert!((0.0..=1.0).contains(&train_frac));
         let mut idx: Vec<usize> = (0..self.len()).collect();
         rng.shuffle(&mut idx);
-        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let mut n_train = ((self.len() as f64) * train_frac).round() as usize;
+        if self.len() >= 2 {
+            if train_frac < 1.0 {
+                n_train = n_train.min(self.len() - 1);
+            }
+            if train_frac > 0.0 {
+                n_train = n_train.max(1);
+            }
+        }
         let mk = |ids: &[usize]| Corpus {
             device: self.device,
             workload: self.workload,
@@ -220,6 +234,38 @@ mod tests {
         for r in val.records() {
             assert!(!train.records().iter().any(|t| t.mode == r.mode));
         }
+    }
+
+    #[test]
+    fn split_never_leaves_a_side_empty_on_small_corpora() {
+        // regression: len=5 × 0.9 used to round to n_train=5 (empty val);
+        // the ~50-mode transfer corpora this pipeline trains on live in
+        // exactly this regime
+        for n in 2..=12 {
+            for &frac in &[0.1, 0.5, 0.9, 0.95] {
+                let c = demo_corpus(n);
+                let mut rng = Rng::new(n as u64);
+                let (train, val) = c.split(frac, &mut rng);
+                assert!(!train.is_empty(), "empty train at n={n} frac={frac}");
+                assert!(!val.is_empty(), "empty val at n={n} frac={frac}");
+                assert_eq!(train.len() + val.len(), n, "n={n} frac={frac}");
+            }
+        }
+        // the motivating case, exactly
+        let c = demo_corpus(5);
+        let mut rng = Rng::new(3);
+        let (train, val) = c.split(0.9, &mut rng);
+        assert_eq!((train.len(), val.len()), (4, 1));
+    }
+
+    #[test]
+    fn split_extremes_keep_whole_corpus_on_one_side() {
+        let c = demo_corpus(10);
+        let mut rng = Rng::new(1);
+        let (train, val) = c.split(1.0, &mut rng);
+        assert_eq!((train.len(), val.len()), (10, 0));
+        let (train, val) = c.split(0.0, &mut rng);
+        assert_eq!((train.len(), val.len()), (0, 10));
     }
 
     #[test]

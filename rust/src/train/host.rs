@@ -1,0 +1,350 @@
+//! Host-native training driver: the default-build counterpart of the
+//! AOT-artifact `Trainer`.
+//!
+//! [`HostTrainer::train_from`] mirrors `Trainer::train_from` exactly in
+//! its *semantics* — same corpus split, scalers fit on the training
+//! split only, same per-epoch shuffle, per-epoch validation with
+//! best-checkpoint selection on standardized-space MSE, same checkpoint
+//! provenance format — while the compute runs through the hand-rolled
+//! backward pass (`nn::grad`) instead of the PJRT artifacts. One fit
+//! allocates its working set (transposed params, gradients, Adam
+//! moments, tape, batch buffers) once; the epoch loop is allocation-free.
+//!
+//! [`HostTrainer::train_schedule`] generalizes the loop to a sequence of
+//! (epochs, first-trainable-layer) phases so transfer learning can
+//! freeze the pretrained body while the fresh head warms up
+//! (`train::transfer::transfer_host`), with best-checkpoint tracking and
+//! Adam state continuous across phases.
+//!
+//! Deliberate differences vs the artifact path, documented rather than
+//! hidden: no dropout (transfer corpora are ~50 rows; determinism per
+//! seed is a tested invariant) and no padding mask (the host passes the
+//! true batch length). Gradients are property-tested against central
+//! finite differences in `tests/property_host_training.rs`.
+
+use crate::error::{Error, Result};
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::grad::{self, HostAdam, HostLoss, Tape, TransposedMlp, ADAM_LR};
+use crate::nn::MlpParams;
+use crate::profiler::{Corpus, StandardScaler};
+use crate::train::{scale_features, LossKind, Target, TrainConfig, TrainingLog};
+use crate::util::rng::Rng;
+
+/// Training batch size, matching the AOT train artifact's batch
+/// (`manifest.train_batch`) so host and artifact fits see the same
+/// step/epoch structure.
+pub const HOST_TRAIN_BATCH: usize = 64;
+
+/// Pure-rust training driver. Construction is free; all state lives on
+/// the stack of a fit.
+#[derive(Debug, Clone, Copy)]
+pub struct HostTrainer {
+    /// Rows per optimizer step.
+    pub batch: usize,
+    /// Adam learning rate (paper Table 4: 1e-3).
+    pub lr: f64,
+}
+
+impl Default for HostTrainer {
+    fn default() -> Self {
+        HostTrainer { batch: HOST_TRAIN_BATCH, lr: ADAM_LR }
+    }
+}
+
+impl HostTrainer {
+    pub fn new() -> HostTrainer {
+        HostTrainer::default()
+    }
+
+    /// Train a prediction model from scratch (the paper's NN approach),
+    /// host-native.
+    pub fn train(
+        &self,
+        corpus: &Corpus,
+        target: Target,
+        cfg: &TrainConfig,
+    ) -> Result<(Checkpoint, TrainingLog)> {
+        let mut rng = Rng::new(cfg.seed);
+        let params = MlpParams::init_he(&mut rng);
+        self.train_from(params, corpus, target, cfg, &mut rng, "nn-scratch-host")
+    }
+
+    /// Core loop, shared with host transfer learning (which passes
+    /// pre-trained params and its own provenance tag). Single phase, all
+    /// layers trainable — the host mirror of `Trainer::train_from`.
+    pub fn train_from(
+        &self,
+        params: MlpParams,
+        corpus: &Corpus,
+        target: Target,
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+        provenance: &str,
+    ) -> Result<(Checkpoint, TrainingLog)> {
+        self.train_schedule(params, corpus, target, cfg, rng, provenance, &[(cfg.epochs, 0)])
+    }
+
+    /// Phased training: each `(epochs, first_layer)` entry runs that many
+    /// epochs with layers `first_layer..4` trainable (0 = all, 3 = head
+    /// only). Split, scalers, shuffle stream, Adam state and
+    /// best-checkpoint tracking are continuous across phases.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_schedule(
+        &self,
+        params: MlpParams,
+        corpus: &Corpus,
+        target: Target,
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+        provenance: &str,
+        phases: &[(usize, usize)],
+    ) -> Result<(Checkpoint, TrainingLog)> {
+        if corpus.len() < 2 {
+            return Err(Error::Training("corpus too small to train on".into()));
+        }
+        if phases.iter().map(|p| p.0).sum::<usize>() == 0 {
+            // never hand back an untrained (or surgery-damaged) checkpoint
+            // with val_loss = ∞ as if the fit succeeded
+            return Err(Error::Training("zero training epochs requested".into()));
+        }
+        let (train, val) = corpus.split(cfg.train_frac, rng);
+        let val = if val.is_empty() { train.clone() } else { val };
+
+        // scalers fit on the training split only (paper protocol)
+        let feat_rows: Vec<Vec<f64>> = train
+            .features()
+            .iter()
+            .map(|f| f.iter().map(|&x| x as f64).collect())
+            .collect();
+        let feature_scaler = StandardScaler::fit(&feat_rows);
+        let target_scaler = StandardScaler::fit1(&target.values(&train));
+
+        let xs_train = scale_features(&train, &feature_scaler);
+        let ys_train_raw = target.values(&train);
+        let xs_val = scale_features(&val, &feature_scaler);
+        let ys_val_raw = target.values(&val);
+
+        // the loss decides the target space the step sees, mirroring the
+        // artifact drivers: MSE trains standardized, MAPE trains raw
+        let host_loss = match cfg.loss {
+            LossKind::Mse => HostLoss::Mse,
+            LossKind::Mape => HostLoss::Mape {
+                y_mean: target_scaler.mean[0],
+                y_std: target_scaler.std[0],
+            },
+        };
+        let ys_step: Vec<f32> = match cfg.loss {
+            LossKind::Mse => ys_train_raw
+                .iter()
+                .map(|&y| target_scaler.transform1(y) as f32)
+                .collect(),
+            LossKind::Mape => ys_train_raw.iter().map(|&y| y as f32).collect(),
+        };
+
+        // the fit's whole working set, allocated once
+        let mut net = TransposedMlp::from_params(&params);
+        let mut grads = TransposedMlp::zeros();
+        let mut adam = HostAdam::new(self.lr);
+        let mut tape = Tape::new(self.batch);
+        let mut xbuf = vec![0.0f32; self.batch * 4];
+        let mut ybuf = vec![0.0f32; self.batch];
+        let mut order: Vec<usize> = (0..xs_train.len()).collect();
+
+        let mut log = TrainingLog {
+            train_loss: Vec::new(),
+            val_mse: Vec::new(),
+            val_mape: Vec::new(),
+            best_epoch: 0,
+            steps: 0,
+        };
+        let mut best_mse = f64::INFINITY;
+        let mut best_params = params;
+        let mut global_epoch = 0usize;
+
+        for &(phase_epochs, first_layer) in phases {
+            for _ in 0..phase_epochs {
+                rng.shuffle(&mut order);
+                let mut epoch_loss = 0.0f64;
+                let mut batches = 0.0f64;
+                for chunk in order.chunks(self.batch) {
+                    for (row, &i) in chunk.iter().enumerate() {
+                        xbuf[row * 4..(row + 1) * 4].copy_from_slice(&xs_train[i]);
+                        ybuf[row] = ys_step[i];
+                    }
+                    let n = chunk.len();
+                    let loss = grad::loss_and_grad(
+                        &net, &xbuf[..n * 4], &ybuf, n, host_loss, &mut tape, &mut grads,
+                    );
+                    adam.step(&mut net, &grads, first_layer);
+                    epoch_loss += loss;
+                    batches += 1.0;
+                    log.steps += 1;
+                }
+                log.train_loss.push(epoch_loss / batches.max(1.0));
+
+                // validation reuses the step's batch buffer — the whole
+                // epoch loop performs zero heap allocations
+                let (mse, mape) = evaluate_into(
+                    &net, &xs_val, &ys_val_raw, &target_scaler, &mut tape, &mut xbuf,
+                );
+                log.val_mse.push(mse);
+                log.val_mape.push(mape);
+                if mse < best_mse {
+                    best_mse = mse;
+                    net.write_params(&mut best_params);
+                    log.best_epoch = global_epoch;
+                }
+                global_epoch += 1;
+            }
+        }
+
+        if !best_params.is_finite() {
+            return Err(Error::Training("training diverged to non-finite params".into()));
+        }
+
+        Ok((
+            Checkpoint {
+                params: best_params,
+                feature_scaler,
+                target_scaler,
+                target: target.name().to_string(),
+                provenance: format!(
+                    "{provenance}: {} on {} ({} modes)",
+                    target.name(),
+                    corpus.workload.name(),
+                    corpus.len()
+                ),
+                val_loss: best_mse,
+            },
+            log,
+        ))
+    }
+}
+
+/// Host validation pass: (MSE in standardized space, MAPE % in raw
+/// units) over a feature/target set, chunked at the tape's capacity.
+/// Mirrors the artifact `evaluate`'s semantics (zero-truth rows are
+/// skipped from the MAPE like `stats::mape`).
+pub fn evaluate_host(
+    net: &TransposedMlp,
+    xs: &[[f32; 4]],
+    ys_raw: &[f64],
+    tscaler: &StandardScaler,
+    tape: &mut Tape,
+) -> (f64, f64) {
+    let mut flat = vec![0.0f32; tape.cap() * 4];
+    evaluate_into(net, xs, ys_raw, tscaler, tape, &mut flat)
+}
+
+/// [`evaluate_host`] with a caller-owned `[cap * 4]` row buffer — the
+/// trainer's per-epoch entry, so validation allocates nothing.
+fn evaluate_into(
+    net: &TransposedMlp,
+    xs: &[[f32; 4]],
+    ys_raw: &[f64],
+    tscaler: &StandardScaler,
+    tape: &mut Tape,
+    flat: &mut [f32],
+) -> (f64, f64) {
+    debug_assert_eq!(xs.len(), ys_raw.len());
+    let cap = tape.cap();
+    debug_assert!(flat.len() >= cap * 4);
+    let mut tot_mse = 0.0f64;
+    let mut tot_ape = 0.0f64;
+    let mut n_mse = 0usize;
+    let mut n_ape = 0usize;
+    for chunk_start in (0..xs.len()).step_by(cap) {
+        let n = cap.min(xs.len() - chunk_start);
+        for row in 0..n {
+            flat[row * 4..(row + 1) * 4].copy_from_slice(&xs[chunk_start + row]);
+        }
+        grad::forward(net, &flat[..n * 4], n, tape);
+        for row in 0..n {
+            let y = ys_raw[chunk_start + row];
+            let e = tape.yhat[row] as f64 - tscaler.transform1(y);
+            tot_mse += e * e;
+            n_mse += 1;
+            if y.abs() > 1e-9 {
+                let pred_raw = tscaler.inverse1(tape.yhat[row] as f64);
+                tot_ape += ((pred_raw - y) / y).abs();
+                n_ape += 1;
+            }
+        }
+    }
+    (
+        tot_mse / (n_mse.max(1) as f64),
+        100.0 * tot_ape / (n_ape.max(1) as f64),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerModeGrid};
+    use crate::profiler::Record;
+    use crate::sim::TrainerSim;
+    use crate::workload::Workload;
+
+    /// Noise-free ground-truth corpus, mirroring the integration suites.
+    fn truth_corpus(wl: Workload, n: usize, seed: u64) -> Corpus {
+        let spec = DeviceKind::OrinAgx.spec();
+        let sim = TrainerSim::new(spec, wl, seed);
+        let mut rng = Rng::new(seed ^ 0xc0ffee);
+        let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(n, &mut rng);
+        let mut c = Corpus::new(DeviceKind::OrinAgx, wl);
+        for pm in modes {
+            c.push(Record {
+                mode: pm,
+                time_ms: sim.true_minibatch_ms(&pm),
+                power_mw: sim.true_power_mw(&pm),
+                cost_s: 0.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn rejects_degenerate_corpus() {
+        let tiny = truth_corpus(Workload::resnet(), 1, 1);
+        let err = HostTrainer::new().train(&tiny, Target::Time, &TrainConfig::default());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn checkpoint_metadata_mirrors_artifact_trainer() {
+        let corpus = truth_corpus(Workload::resnet(), 40, 2);
+        let cfg = TrainConfig { epochs: 4, seed: 3, ..Default::default() };
+        let (ckpt, log) = HostTrainer::new().train(&corpus, Target::Power, &cfg).unwrap();
+        assert_eq!(ckpt.target, "power");
+        assert!(ckpt.provenance.starts_with("nn-scratch-host: power on resnet (40 modes)"));
+        assert!(ckpt.params.is_finite());
+        assert!(ckpt.val_loss.is_finite());
+        assert_eq!(log.train_loss.len(), 4);
+        assert_eq!(log.val_mse.len(), 4);
+        // 40 rows · 0.9 split = 36 train rows → 1 step/epoch at batch 64
+        assert_eq!(log.steps, 4);
+        assert!(log.best_epoch < 4);
+    }
+
+    #[test]
+    fn evaluate_host_matches_stats_mape() {
+        let corpus = truth_corpus(Workload::mobilenet(), 60, 4);
+        let cfg = TrainConfig { epochs: 6, seed: 5, ..Default::default() };
+        let (ckpt, _) = HostTrainer::new().train(&corpus, Target::Time, &cfg).unwrap();
+        let holdout = truth_corpus(Workload::mobilenet(), 50, 6);
+        let xs = scale_features(&holdout, &ckpt.feature_scaler);
+        let ys = Target::Time.values(&holdout);
+        let net = TransposedMlp::from_params(&ckpt.params);
+        let mut tape = Tape::new(HOST_TRAIN_BATCH);
+        let (_, eval_mape) = evaluate_host(&net, &xs, &ys, &ckpt.target_scaler, &mut tape);
+        let preds = crate::predict::predict_modes_host(
+            &ckpt,
+            &holdout.records().iter().map(|r| r.mode).collect::<Vec<_>>(),
+        );
+        let direct = crate::util::stats::mape(&preds, &ys);
+        assert!(
+            (eval_mape - direct).abs() < 0.5,
+            "evaluate {eval_mape:.2}% vs predict-derived {direct:.2}%"
+        );
+    }
+}

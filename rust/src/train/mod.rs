@@ -1,10 +1,17 @@
 //! Training drivers: reference-NN training and from-scratch NN baselines.
 //!
 //! The rust side owns all state (params, Adam moments, scalers, shuffling,
-//! best-checkpoint logic) and calls the AOT train/eval artifacts for the
-//! compute — one fused HLO executable per step, Python never involved.
+//! best-checkpoint logic). Two compute backends share those semantics:
+//!
+//! * [`host::HostTrainer`] — pure-rust backprop/Adam (`nn::grad`), the
+//!   backend of the default, dependency-free build; and
+//! * [`Trainer`] (feature `xla`) — one fused HLO executable per step
+//!   through the AOT train/eval artifacts, Python never involved.
 
+pub mod host;
 pub mod transfer;
+
+pub use host::HostTrainer;
 
 use crate::profiler::{Corpus, StandardScaler};
 

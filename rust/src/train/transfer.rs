@@ -5,21 +5,29 @@
 //! fresh one, and fine-tune on ~50 profiled power modes of the new
 //! workload / device. Both the time and the power model transfer the same
 //! way; the Nano cross-device transfer switches the loss to MAPE.
+//!
+//! Two backends share the recipe:
+//!
+//! * [`transfer_host`] — the default build's path, driving the pure-rust
+//!   backprop trainer (`train::HostTrainer`). It additionally warms the
+//!   fresh head up with the pretrained body *frozen* for
+//!   [`TransferConfig::freeze_epochs`] before unfreezing everything —
+//!   the freeze-then-finetune schedule keeps the random head's large
+//!   early gradients from scrambling the transferred features.
+//! * [`transfer`] (feature `xla`) — the AOT-artifact path. The fused
+//!   train-step executable updates every parameter, so it runs the
+//!   paper's plain surgery + fine-tune without the freeze phase.
 
-use crate::train::TrainConfig;
-
-#[cfg(feature = "xla")]
 use crate::error::Result;
-#[cfg(feature = "xla")]
 use crate::nn::checkpoint::Checkpoint;
-#[cfg(feature = "xla")]
 use crate::profiler::Corpus;
+use crate::train::{HostTrainer, Target, TrainConfig, TrainingLog};
+use crate::util::rng::Rng;
+
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 #[cfg(feature = "xla")]
-use crate::train::{Target, Trainer, TrainingLog};
-#[cfg(feature = "xla")]
-use crate::util::rng::Rng;
+use crate::train::Trainer;
 
 /// Transfer configuration.
 #[derive(Debug, Clone, Copy)]
@@ -28,15 +36,53 @@ pub struct TransferConfig {
     /// Reinitialize the last dense layer before fine-tuning (the paper's
     /// surgery; disabling it is the ablation in `experiments`).
     pub reinit_last_layer: bool,
+    /// Host path only: epochs the pretrained body stays frozen while the
+    /// fresh head trains (0 disables the phase). Clamped to
+    /// `base.epochs / 2` so the full-network fine-tune always gets at
+    /// least half the budget — small epoch budgets must not degenerate
+    /// to head-only training. Ignored by the artifact path, whose fused
+    /// step always updates every parameter.
+    pub freeze_epochs: usize,
 }
 
 impl Default for TransferConfig {
     fn default() -> Self {
-        TransferConfig { base: TrainConfig::default(), reinit_last_layer: true }
+        TransferConfig {
+            base: TrainConfig::default(),
+            reinit_last_layer: true,
+            freeze_epochs: 10,
+        }
     }
 }
 
-/// Fine-tune `reference` onto `corpus` (the new workload's ~50 modes).
+/// RNG domain tag so transfer draws an independent stream from scratch
+/// training at the same seed ("transfer" in ASCII).
+const TRANSFER_TAG: u64 = 0x7472_616e_7366_6572;
+
+/// Fine-tune `reference` onto `corpus` (the new workload's ~50 modes)
+/// with the pure-rust trainer — the default build's transfer path.
+pub fn transfer_host(
+    reference: &Checkpoint,
+    corpus: &Corpus,
+    target: Target,
+    cfg: &TransferConfig,
+) -> Result<(Checkpoint, TrainingLog)> {
+    let mut rng = Rng::new(cfg.base.seed ^ TRANSFER_TAG);
+    let mut params = reference.params.clone();
+    if cfg.reinit_last_layer {
+        params.reinit_last_layer(&mut rng);
+    }
+    let trainer = HostTrainer::new();
+    let provenance = format!("powertrain-transfer-host(from {})", reference.provenance);
+    // head-warmup gets at most half the epoch budget: the fine-tune of
+    // the whole network is the paper's recipe and must never be starved
+    // out by the freeze phase at small budgets
+    let freeze = cfg.freeze_epochs.min(cfg.base.epochs / 2);
+    let phases: &[(usize, usize)] = &[(freeze, 3), (cfg.base.epochs - freeze, 0)];
+    trainer.train_schedule(params, corpus, target, &cfg.base, &mut rng, &provenance, phases)
+}
+
+/// Fine-tune `reference` onto `corpus` through the AOT train artifacts.
 #[cfg(feature = "xla")]
 pub fn transfer(
     rt: &Runtime,
@@ -45,7 +91,7 @@ pub fn transfer(
     target: Target,
     cfg: &TransferConfig,
 ) -> Result<(Checkpoint, TrainingLog)> {
-    let mut rng = Rng::new(cfg.base.seed ^ 0x7472_616e_7366_6572); // "transfer"
+    let mut rng = Rng::new(cfg.base.seed ^ TRANSFER_TAG);
     let mut params = reference.params.clone();
     if cfg.reinit_last_layer {
         params.reinit_last_layer(&mut rng);

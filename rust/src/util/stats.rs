@@ -18,18 +18,35 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated quantile, q in [0, 1].
+///
+/// Non-finite inputs are handled explicitly instead of panicking: the
+/// sort uses `f64::total_cmp` (a single NaN — e.g. the MAPE of a
+/// diverged checkpoint in an experiments table — used to panic the
+/// whole report through `partial_cmp().unwrap()`). NaN entries carry no
+/// order information and are filtered out; ±inf entries are *kept* — a
+/// diverged metric must stay visible in tail quantiles, so they take
+/// their natural place in the order (interpolation against a non-finite
+/// neighbor degrades to nearest-rank rather than manufacturing NaN).
+/// An all-NaN input propagates NaN; an empty input stays 0.0 (the
+/// historical convention callers rely on).
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!((0.0..=1.0).contains(&q), "quantile q={q}");
     if xs.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN; // every entry was NaN: propagate, don't invent
+    }
+    v.sort_unstable_by(f64::total_cmp);
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
-    if lo == hi {
+    if lo == hi || v[lo] == v[hi] {
         v[lo]
+    } else if !v[lo].is_finite() || !v[hi].is_finite() {
+        // nearest rank: inf − inf interpolation would produce NaN
+        if pos - lo as f64 >= 0.5 { v[hi] } else { v[lo] }
     } else {
         v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
     }
@@ -134,6 +151,33 @@ mod tests {
         assert_eq!(quantile(&xs, 1.0), 4.0);
         let unsorted = [4.0, 1.0, 3.0, 2.0];
         assert!((median(&unsorted) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_survives_non_finite_inputs() {
+        // regression (mirrors PR 1's Pareto NaN fix): a NaN entry used to
+        // panic via partial_cmp().unwrap(); now NaN is excluded from the
+        // order statistics
+        assert_eq!(median(&[1.0, f64::NAN, 3.0]), 2.0);
+        let m = median_iqr(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(m.median, 2.0);
+        // ±inf stays visible in the order statistics (a diverged metric
+        // must not be silently dropped from tail quantiles)
+        assert_eq!(median(&[f64::INFINITY, 1.0, 3.0]), 3.0);
+        assert_eq!(quantile(&[f64::INFINITY, 1.0, 3.0], 1.0), f64::INFINITY);
+        assert_eq!(quantile(&[f64::INFINITY], 0.5), f64::INFINITY);
+        assert_eq!(
+            quantile(&[f64::INFINITY, f64::INFINITY, 1.0], 0.9),
+            f64::INFINITY
+        );
+        // interpolation against a non-finite neighbor is nearest-rank,
+        // never NaN
+        assert_eq!(median(&[f64::NEG_INFINITY, 4.0]), 4.0);
+        assert_eq!(quantile(&[f64::NEG_INFINITY, 4.0], 0.2), f64::NEG_INFINITY);
+        // nothing orderable left: propagate NaN explicitly
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // empty input keeps the historical 0.0 convention
+        assert_eq!(quantile(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! Uses a reduced prediction grid + transfer epochs so the suite stays
 //! fast; the federated_fleet example runs the full-scale version.
 //!
-//! Gated on the `xla` feature: the host-fallback serving paths are
-//! covered by `coordinator::tests` and run in every build.
+//! Gated on the `xla` feature: the host-native serving paths are
+//! covered by `coordinator::tests` and `integration_host_coordinator`
+//! and run in every build.
 
 #![cfg(feature = "xla")]
 

@@ -1,0 +1,154 @@
+//! Integration: the serving coordinator end-to-end in the *default*
+//! (no-`xla`) build — the acceptance path of the host-native training
+//! subsystem. Real host-bootstrapped reference models, then
+//! `Strategy::PowerTrain(50)` served entirely on host: online profiling
+//! → host transfer of both targets → grid prediction → in-budget Pareto
+//! recommendation, with the transferred planes flowing through the
+//! shared `PlaneCache`.
+//!
+//! Scales are reduced (hundreds of reference modes, tens of epochs) to
+//! keep `cargo test` fast; the bench + examples run larger versions.
+
+use std::sync::atomic::Ordering;
+
+use powertrain::coordinator::{
+    handle_request_host, serve, CoordinatorConfig, Metrics, PlaneCache, ReferenceModels,
+    Request, Scenario,
+};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::profiler::Profiler;
+use powertrain::sim::TrainerSim;
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+/// Shared, lazily-built host reference models: trained once per test
+/// binary run via `OnceLock` (in-process, not a temp-dir cache, so a
+/// numerics change in `HostTrainer` can never serve stale checkpoints
+/// from an earlier run).
+fn reference() -> ReferenceModels {
+    static REF: std::sync::OnceLock<ReferenceModels> = std::sync::OnceLock::new();
+    REF.get_or_init(|| {
+        let mut rng = Rng::new(1);
+        let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(400, &mut rng);
+        let mut profiler = Profiler::new(TrainerSim::new(
+            DeviceKind::OrinAgx.spec(),
+            Workload::resnet(),
+            1,
+        ));
+        let corpus = profiler.profile_modes(&modes).unwrap();
+        ReferenceModels::bootstrap_host(&corpus, 60, 1).unwrap()
+    })
+    .clone()
+}
+
+fn test_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        transfer_epochs: 60,
+        prediction_grid: Some(400),
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn powertrain_request_end_to_end_on_host() {
+    let reference = reference();
+    let metrics = Metrics::new();
+    let cache = PlaneCache::new();
+    let req = Request {
+        id: 1,
+        device: DeviceKind::OrinAgx,
+        workload: Workload::mobilenet(),
+        power_budget_w: 30.0,
+        scenario: Scenario::FederatedLearning,
+        seed: 11,
+    };
+    let resp = handle_request_host(&cache, &reference, &test_cfg(), &metrics, &req).unwrap();
+    assert_eq!(resp.strategy, "powertrain-50(host)");
+    assert!(resp.predicted_power_w <= 30.0 + 1e-9, "prediction violates budget");
+    // a genuinely transfer-learned power model keeps the *observed*
+    // power near the budget too, not wildly above it (tolerance a bit
+    // looser than the artifact suite: reduced reference/transfer scales)
+    assert!(
+        resp.observed_power_w <= 30.0 * 1.35,
+        "observed {:.1} W >> budget",
+        resp.observed_power_w
+    );
+    assert!(resp.observed_time_ms > 0.0);
+    assert!(resp.profiling_cost_s > 0.0, "transfer profiling must be accounted");
+    assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 50);
+    assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn cross_device_host_request_uses_device_grid() {
+    let reference = reference();
+    let metrics = Metrics::new();
+    let cache = PlaneCache::new();
+    let req = Request {
+        id: 2,
+        device: DeviceKind::OrinNano,
+        workload: Workload::mobilenet(),
+        power_budget_w: 10.0,
+        scenario: Scenario::ContinuousLearning,
+        seed: 12,
+    };
+    let cfg = CoordinatorConfig { prediction_grid: None, ..test_cfg() };
+    let resp = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
+    // the chosen mode must be valid on the Nano
+    resp.chosen_mode.validate(DeviceKind::OrinNano.spec()).unwrap();
+    assert!(resp.observed_power_w < 15.0);
+}
+
+#[test]
+fn infeasible_budget_reported_as_error_on_host() {
+    let reference = reference();
+    let metrics = Metrics::new();
+    let cache = PlaneCache::new();
+    let req = Request {
+        id: 3,
+        device: DeviceKind::OrinAgx,
+        workload: Workload::bert(),
+        power_budget_w: 2.0, // below idle power
+        scenario: Scenario::FederatedLearning,
+        seed: 13,
+    };
+    assert!(handle_request_host(&cache, &reference, &test_cfg(), &metrics, &req).is_err());
+}
+
+#[test]
+fn host_serve_mixes_strategies_and_reports_metrics() {
+    let reference = reference();
+    let cfg = CoordinatorConfig { workers: 2, ..test_cfg() };
+    let requests: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            device: DeviceKind::OrinAgx,
+            workload: if i % 2 == 0 { Workload::mobilenet() } else { Workload::lstm() },
+            power_budget_w: 30.0 + 5.0 * i as f64,
+            scenario: if i == 3 { Scenario::FineTuning } else { Scenario::FederatedLearning },
+            seed: 100 + (i % 2), // two distinct (workload, seed) pairs repeat
+        })
+        .collect();
+    let (responses, metrics) = serve(&cfg, &reference, requests).unwrap();
+    assert_eq!(responses.len(), 4);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+    assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 4);
+    for r in &responses {
+        let strat = &r.strategy;
+        assert!(
+            strat == "powertrain-50(host)" || strat == "nn-100(host)",
+            "unexpected strategy {strat}"
+        );
+        assert!(r.predicted_power_w <= 30.0 + 5.0 * r.id as f64 + 1e-9);
+    }
+    let (p50, _, _) = metrics.latency_summary_ms();
+    assert!(p50 > 0.0);
+    // the render string surfaces the new counters
+    let rendered = metrics.render();
+    assert!(rendered.contains("host fits"), "{rendered}");
+    assert!(rendered.contains("model cache"), "{rendered}");
+}
