@@ -15,13 +15,20 @@
 //!      (requests/s);
 //!   8. host-native transfer learning of one model from a 50-mode corpus
 //!      (items = epochs, so ns/item reads as ns/epoch; median_ns is the
-//!      end-to-end fit time).
+//!      end-to-end fit time);
+//!   9. a 512-request burst of one identical workload streamed through
+//!      the full coordinator service (priority queue + singleflight +
+//!      pre-warmed shared cache): ns/item measures the steady-state
+//!      service overhead per request, directly comparable to bench 7's
+//!      cache-hit number (acceptance: within 10%).
 //!
 //! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
 //! so successive PRs can track the perf trajectory.
 
+use std::sync::Arc;
+
 use powertrain::coordinator::{
-    self, CoordinatorConfig, PlaneCache, ReferenceModels, Request, Scenario,
+    self, Coordinator, CoordinatorConfig, Job, PlaneCache, ReferenceModels, Request, Scenario,
 };
 use powertrain::device::{DeviceKind, PowerModeGrid, ProfilingPlan};
 use powertrain::nn::{checkpoint::Checkpoint, host_mlp, MlpParams};
@@ -206,6 +213,33 @@ fn main() {
             coordinator::handle_request_host(&cache, &reference, &cfg, &metrics, &req)
                 .unwrap()
                 .id
+        });
+
+        // burst of identical requests through the full streaming service:
+        // the shared cache is pre-warmed (the fit itself is measured by
+        // serve_cold/train benches), so every burst request is a
+        // singleflight-coalesced cache hit and ns/item measures the
+        // steady-state service overhead — queue, scheduling, channel,
+        // worker dispatch — on top of the pure hit path. Acceptance:
+        // throughput within 10% of serve_cachehit_18096 (items = 1
+        // request in both, so ns/item is directly comparable).
+        let burst_cfg = CoordinatorConfig { workers: 4, ..cfg.clone() };
+        let shared = Arc::new(PlaneCache::new());
+        coordinator::handle_request_host(&shared, &reference, &burst_cfg, &metrics, &req)
+            .unwrap();
+        const BURST: usize = 512;
+        b.bench_items("coordinator/serve_burst_identical", BURST as f64, || {
+            let (coordinator, submitter) =
+                Coordinator::start_with_cache(&burst_cfg, &reference, Arc::clone(&shared))
+                    .unwrap();
+            for i in 0..BURST {
+                submitter
+                    .send(Job::immediate(Request { id: i as u64, ..req.clone() }))
+                    .unwrap();
+            }
+            drop(submitter);
+            let (responses, _) = coordinator.finish().unwrap();
+            responses.len()
         });
     }
 

@@ -1,5 +1,5 @@
 //! Grid-resident serving state: the coordinator's cache of prediction
-//! planes and Pareto fronts.
+//! planes and Pareto fronts, with *singleflight* acquisition.
 //!
 //! The paper's deployment query — "best power mode under budget B" — is
 //! asked over a fixed grid with fixed reference models; only the budget
@@ -23,24 +23,40 @@
 //!   path: the transferred checkpoints' fingerprints key them, so
 //!   per-workload planes cache (and evict) alongside reference planes;
 //! * [`PlaneCache`] — the bounded, thread-safe maps, shared by all
-//!   workers of a [`serve`](crate::coordinator::serve) call.
+//!   workers of a coordinator service
+//!   ([`Coordinator`](crate::coordinator::Coordinator) / legacy
+//!   [`serve`](crate::coordinator::serve) call).
+//!
+//! **Singleflight**: each map slot is either `Ready` (the built value) or
+//! `InFlight` (a condvar the leader signals on completion). The first
+//! requester of a key becomes the *leader* and builds outside the map
+//! lock — misses on different keys still profile/train in parallel —
+//! while every concurrent requester of the *same* key blocks on the
+//! flight instead of duplicating the work. A burst of N identical
+//! workloads therefore costs exactly one host fit: one model-cache miss,
+//! N−1 hits (of which the overlapping ones are also counted as
+//! `singleflight_waits`). A failed build publishes its error to the
+//! waiters (re-running a deterministic build would fail identically),
+//! is removed from the map so a *later* request retries fresh, and a
+//! *panicking* build is converted into a failed flight by a drop guard
+//! so waiters never hang on a slot nobody owns.
 //!
 //! A cache-hit request therefore costs one fingerprint pass, one map
 //! lookup and one `partition_point` binary search over the cached front —
-//! O(log front) instead of O(grid × params). Builds run outside the lock:
-//! two workers missing the same key concurrently each build (the build is
-//! deterministic per key, so the results are identical) and first insert
-//! wins. [`Metrics`] counts hits and misses so degraded cache behaviour
-//! is visible in the serve report.
+//! O(log front) instead of O(grid × params). [`Metrics`] counts hits,
+//! misses and coalesced waits so degraded cache behaviour is visible in
+//! the serve report.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::{Metrics, Strategy};
 use crate::device::{DeviceKind, FeatureMatrix, PowerModeGrid};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::nn::checkpoint::Checkpoint;
 use crate::pareto::ParetoFront;
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 use crate::workload::Workload;
 
 /// Bound on resident planes/grids/models. Fleets have a handful of device
@@ -168,13 +184,214 @@ pub struct ServePlane {
     pub front: ParetoFront,
 }
 
+// ---------------------------------------------------------------------
+// singleflight machinery
+
+/// One in-flight build. The leader publishes exactly once; waiters block
+/// on `cv` until then.
+#[derive(Debug)]
+struct Flight<V> {
+    done: Mutex<Option<FlightResult<V>>>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+enum FlightResult<V> {
+    Ready(Arc<V>),
+    /// The leader's build failed (or panicked). Waiters surface this
+    /// message instead of hanging — or re-running a deterministic build
+    /// that would fail identically.
+    Failed(String),
+}
+
+impl<V> Clone for FlightResult<V> {
+    fn clone(&self) -> Self {
+        match self {
+            FlightResult::Ready(v) => FlightResult::Ready(Arc::clone(v)),
+            FlightResult::Failed(m) => FlightResult::Failed(m.clone()),
+        }
+    }
+}
+
+impl<V> Flight<V> {
+    fn new() -> Arc<Flight<V>> {
+        Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn publish(&self, result: FlightResult<V>) {
+        *lock_unpoisoned(&self.done) = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> FlightResult<V> {
+        let mut done = lock_unpoisoned(&self.done);
+        loop {
+            if let Some(r) = done.as_ref() {
+                return r.clone();
+            }
+            done = wait_unpoisoned(&self.cv, done);
+        }
+    }
+}
+
+/// A map slot: the built value, or the flight concurrent requesters of
+/// the same key coalesce onto.
+#[derive(Debug)]
+enum Slot<V> {
+    Ready(Arc<V>),
+    InFlight(Arc<Flight<V>>),
+}
+
+/// What the map lookup found for this requester.
+enum Found<V> {
+    Hit(Arc<V>),
+    Wait(Arc<Flight<V>>),
+    Lead(Arc<Flight<V>>),
+}
+
+/// Hit/miss/coalesce counters for one cache map.
+struct CacheCounters<'a> {
+    hits: &'a AtomicU64,
+    misses: &'a AtomicU64,
+    waits: &'a AtomicU64,
+}
+
+/// Removes the leader's `InFlight` slot and fails the flight if the build
+/// panicked — waiters get an error instead of blocking forever, and the
+/// key is free for a later request to retry.
+struct FlightGuard<'a, K: Copy + Eq + std::hash::Hash, V> {
+    map: &'a Mutex<HashMap<K, Slot<V>>>,
+    key: K,
+    flight: &'a Arc<Flight<V>>,
+    armed: bool,
+}
+
+impl<K: Copy + Eq + std::hash::Hash, V> Drop for FlightGuard<'_, K, V> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        lock_unpoisoned(self.map).remove(&self.key);
+        self.flight
+            .publish(FlightResult::Failed("builder panicked".into()));
+    }
+}
+
+/// The singleflight get-or-build at the heart of every [`PlaneCache`]
+/// map. Returns the resident value plus whether *this call* led the
+/// build (callers report one-time costs only when they actually paid
+/// them). `build` must be deterministic for the key.
+fn get_or_build<K, V>(
+    map: &Mutex<HashMap<K, Slot<V>>>,
+    cap: usize,
+    key: K,
+    counters: Option<CacheCounters<'_>>,
+    build: impl FnOnce() -> Result<V>,
+) -> Result<(Arc<V>, bool)>
+where
+    K: Copy + Eq + std::hash::Hash,
+{
+    let found = {
+        let mut m = lock_unpoisoned(map);
+        let existing = match m.get(&key) {
+            Some(Slot::Ready(v)) => Some(Found::Hit(Arc::clone(v))),
+            Some(Slot::InFlight(f)) => Some(Found::Wait(Arc::clone(f))),
+            None => None,
+        };
+        match existing {
+            Some(f) => f,
+            None => {
+                // the map grows only here, so the bound is enforced here
+                evict_if_full(&mut m, cap);
+                let f = Flight::new();
+                m.insert(key, Slot::InFlight(Arc::clone(&f)));
+                Found::Lead(f)
+            }
+        }
+    };
+
+    let flight = match found {
+        Found::Hit(v) => {
+            if let Some(c) = &counters {
+                c.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok((v, false));
+        }
+        Found::Wait(f) => {
+            // the wait is counted up front (the coalescing happened);
+            // the hit only once the flight actually delivers a value —
+            // a waiter on a failed build served nothing from cache
+            if let Some(c) = &counters {
+                c.waits.fetch_add(1, Ordering::Relaxed);
+            }
+            return match f.wait() {
+                FlightResult::Ready(v) => {
+                    if let Some(c) = &counters {
+                        c.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok((v, false))
+                }
+                FlightResult::Failed(msg) => Err(Error::Coordinator(format!(
+                    "coalesced onto an in-flight build that failed: {msg}"
+                ))),
+            };
+        }
+        Found::Lead(f) => {
+            if let Some(c) = &counters {
+                c.misses.fetch_add(1, Ordering::Relaxed);
+            }
+            f
+        }
+    };
+
+    // leader: build outside the map lock so misses on *different* keys
+    // profile/train in parallel; the guard converts a panic into a
+    // failed flight
+    let mut guard = FlightGuard { map, key, flight: &flight, armed: true };
+    let result = build();
+    guard.armed = false;
+    drop(guard);
+    match result {
+        Ok(v) => {
+            let v = Arc::new(v);
+            lock_unpoisoned(map).insert(key, Slot::Ready(Arc::clone(&v)));
+            flight.publish(FlightResult::Ready(Arc::clone(&v)));
+            Ok((v, true))
+        }
+        Err(e) => {
+            // not cached: a *later* request retries the build fresh
+            lock_unpoisoned(map).remove(&key);
+            flight.publish(FlightResult::Failed(e.to_string()));
+            Err(e)
+        }
+    }
+}
+
+/// Keep `map` bounded: if inserting a new key would exceed `cap`, drop
+/// one resident `Ready` entry (arbitrary — the maps are small and churn
+/// only on pathological streams, so LRU bookkeeping isn't worth its lock
+/// time). In-flight slots are never evicted: their waiters are blocked
+/// on them and their leaders are mid-build.
+fn evict_if_full<K: Copy + Eq + std::hash::Hash, V>(map: &mut HashMap<K, Slot<V>>, cap: usize) {
+    if map.len() >= cap {
+        let victim = map.iter().find_map(|(k, slot)| match slot {
+            Slot::Ready(_) => Some(*k),
+            Slot::InFlight(_) => None,
+        });
+        if let Some(k) = victim {
+            map.remove(&k);
+        }
+    }
+}
+
 /// The coordinator-level cache: grids shared across model pairs, planes
-/// shared across requests. Cheap to share (`Arc`) across worker threads.
+/// shared across requests, all acquired singleflight. Cheap to share
+/// (`Arc`) across worker threads.
 #[derive(Debug, Default)]
 pub struct PlaneCache {
-    grids: Mutex<HashMap<GridKey, Arc<GridEntry>>>,
-    planes: Mutex<HashMap<PlaneKey, Arc<ServePlane>>>,
-    models: Mutex<HashMap<ModelKey, Arc<HostModels>>>,
+    grids: Mutex<HashMap<GridKey, Slot<GridEntry>>>,
+    planes: Mutex<HashMap<PlaneKey, Slot<ServePlane>>>,
+    models: Mutex<HashMap<ModelKey, Slot<HostModels>>>,
 }
 
 impl PlaneCache {
@@ -182,94 +399,78 @@ impl PlaneCache {
         PlaneCache::default()
     }
 
-    /// Grid + feature matrix for `key`, building (outside the lock) on
-    /// miss. `build` must be deterministic for the key.
+    /// Grid + feature matrix for `key`, building (outside the lock,
+    /// singleflight) on miss. `build` must be deterministic for the key.
     pub fn grid(&self, key: GridKey, build: impl FnOnce() -> GridEntry) -> Arc<GridEntry> {
-        if let Some(hit) = self.grids.lock().unwrap().get(&key) {
-            return Arc::clone(hit);
-        }
-        let built = Arc::new(build());
-        let mut map = self.grids.lock().unwrap();
-        evict_if_full(&mut map, MAX_GRIDS, &key);
-        Arc::clone(map.entry(key).or_insert(built))
+        get_or_build(&self.grids, MAX_GRIDS, key, None, || Ok(build()))
+            .map(|(g, _)| g)
+            // only reachable when a coalesced leader panicked mid-build;
+            // propagate that as a panic here too (workers catch it)
+            .unwrap_or_else(|e| panic!("grid build failed: {e}"))
     }
 
-    /// Serve plane for `key`, building (outside the lock) on miss and
-    /// recording the hit/miss in `metrics`.
+    /// Serve plane for `key`, building (outside the lock, singleflight)
+    /// on miss and recording the hit/miss/wait in `metrics`.
     pub fn plane(
         &self,
         key: PlaneKey,
         metrics: &Metrics,
         build: impl FnOnce() -> ServePlane,
     ) -> Arc<ServePlane> {
-        use std::sync::atomic::Ordering;
-        if let Some(hit) = self.planes.lock().unwrap().get(&key) {
-            metrics.plane_cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(hit);
-        }
-        metrics.plane_cache_misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(build());
-        let mut map = self.planes.lock().unwrap();
-        evict_if_full(&mut map, MAX_PLANES, &key);
-        Arc::clone(map.entry(key).or_insert(built))
+        let counters = CacheCounters {
+            hits: &metrics.plane_cache_hits,
+            misses: &metrics.plane_cache_misses,
+            waits: &metrics.singleflight_waits,
+        };
+        get_or_build(&self.planes, MAX_PLANES, key, Some(counters), || Ok(build()))
+            .map(|(p, _)| p)
+            // only reachable when a coalesced leader panicked mid-build;
+            // propagate that as a panic here too (workers catch it)
+            .unwrap_or_else(|e| panic!("plane build failed: {e}"))
     }
 
-    /// Host-trained model pair for `key`, building (outside the lock, so
-    /// concurrent misses on *different* keys profile/train in parallel)
-    /// on miss. Returns the resident entry plus whether *this call* paid
-    /// the build — callers report profiling cost only when they actually
-    /// profiled. A fallible build is not cached: the error propagates and
-    /// the next request retries.
+    /// Host-trained model pair for `key`, singleflight: the first
+    /// requester builds (outside the lock, so concurrent misses on
+    /// *different* keys profile/train in parallel) while concurrent
+    /// requesters of the same key block on the in-flight fit instead of
+    /// duplicating it. Returns the resident entry plus whether *this
+    /// call* paid the build — callers report profiling cost only when
+    /// they actually profiled. A fallible build is not cached: the
+    /// leader's error propagates as-is, waiters receive it re-wrapped as
+    /// `Error::Coordinator` carrying the leader's rendered message
+    /// (`Error` isn't `Clone`, so the variant cannot cross the flight;
+    /// classify coalesced failures by message, not variant), and the
+    /// next request retries fresh.
     pub fn models(
         &self,
         key: ModelKey,
         metrics: &Metrics,
         build: impl FnOnce() -> Result<HostModels>,
     ) -> Result<(Arc<HostModels>, bool)> {
-        use std::sync::atomic::Ordering;
-        if let Some(hit) = self.models.lock().unwrap().get(&key) {
-            metrics.model_cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((Arc::clone(hit), false));
-        }
-        metrics.model_cache_misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(build()?);
-        let mut map = self.models.lock().unwrap();
-        evict_if_full(&mut map, MAX_MODELS, &key);
-        // first insert wins; the build is deterministic per key, so a
-        // racing worker's entry is bit-identical anyway
-        Ok((Arc::clone(map.entry(key).or_insert(built)), true))
+        let counters = CacheCounters {
+            hits: &metrics.model_cache_hits,
+            misses: &metrics.model_cache_misses,
+            waits: &metrics.singleflight_waits,
+        };
+        get_or_build(&self.models, MAX_MODELS, key, Some(counters), build)
     }
 
     /// (resident grids, resident planes, resident model pairs) — for
     /// reporting/tests.
     pub fn sizes(&self) -> (usize, usize, usize) {
         (
-            self.grids.lock().unwrap().len(),
-            self.planes.lock().unwrap().len(),
-            self.models.lock().unwrap().len(),
+            lock_unpoisoned(&self.grids).len(),
+            lock_unpoisoned(&self.planes).len(),
+            lock_unpoisoned(&self.models).len(),
         )
-    }
-}
-
-/// Keep `map` bounded: if inserting a *new* key would exceed `cap`, drop
-/// one resident entry (arbitrary — the maps are small and churn only on
-/// pathological streams, so LRU bookkeeping isn't worth its lock time).
-fn evict_if_full<K: Copy + Eq + std::hash::Hash, V>(
-    map: &mut HashMap<K, V>,
-    cap: usize,
-    incoming: &K,
-) {
-    if map.len() >= cap && !map.contains_key(incoming) {
-        if let Some(k) = map.keys().next().copied() {
-            map.remove(&k);
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::Ordering;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::time::Duration;
 
     fn entry(n: usize) -> GridEntry {
         let full = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
@@ -434,5 +635,90 @@ mod tests {
         }
         let (_, _, models) = cache.sizes();
         assert!(models <= MAX_MODELS, "{models} model pairs resident");
+    }
+
+    #[test]
+    fn concurrent_identical_keys_coalesce_to_exactly_one_build() {
+        // the singleflight guarantee the coordinator's burst behaviour
+        // rests on: N threads racing on one ModelKey perform ONE build
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(9);
+        let builds = AtomicUsize::new(0);
+        const N: usize = 8;
+        std::thread::scope(|s| {
+            for _ in 0..N {
+                s.spawn(|| {
+                    let (m, _) = cache
+                        .models(key, &metrics, || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // hold the flight open long enough that the
+                            // other threads must coalesce, not rebuild
+                            std::thread::sleep(Duration::from_millis(100));
+                            Ok(demo_models(3.0))
+                        })
+                        .unwrap();
+                    assert_eq!(m.profiling_cost_s, 120.0);
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "burst must cost one build");
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), N as u64 - 1);
+        // waits ≤ hits: every waiter is a hit, late arrivals hit Ready
+        assert!(metrics.singleflight_waits.load(Ordering::Relaxed) <= N as u64 - 1);
+        assert_eq!(cache.sizes(), (0, 0, 1));
+    }
+
+    #[test]
+    fn waiters_surface_leader_failure_without_rebuilding() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(10);
+        let in_build = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                cache.models(key, &metrics, || {
+                    in_build.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(150));
+                    Err(crate::error::Error::Training("diverged".into()))
+                })
+            });
+            let waiter = s.spawn(|| {
+                // enter only once the leader is provably mid-build
+                while !in_build.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+                cache.models(key, &metrics, || panic!("waiter must not build"))
+            });
+            assert!(leader.join().unwrap().is_err());
+            let err = waiter.join().unwrap().unwrap_err();
+            assert!(
+                err.to_string().contains("coalesced"),
+                "waiter should report the coalesced failure, got: {err}"
+            );
+        });
+        // the failed key is gone; a later request retries fresh
+        assert_eq!(cache.sizes(), (0, 0, 0));
+        let (_, built) = cache.models(key, &metrics, || Ok(demo_models(4.0))).unwrap();
+        assert!(built);
+    }
+
+    #[test]
+    fn panicking_build_fails_the_flight_and_frees_the_key() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(11);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.models(key, &metrics, || -> Result<HostModels> {
+                panic!("simulated builder crash")
+            })
+        }));
+        assert!(res.is_err(), "the panic must propagate to the leader");
+        // the drop guard removed the in-flight slot: nothing resident,
+        // and a later request becomes a fresh leader instead of hanging
+        assert_eq!(cache.sizes(), (0, 0, 0));
+        let (_, built) = cache.models(key, &metrics, || Ok(demo_models(5.0))).unwrap();
+        assert!(built);
     }
 }

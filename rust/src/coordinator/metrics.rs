@@ -1,8 +1,19 @@
 //! Coordinator metrics: thread-safe counters and latency histograms for
-//! the serving loop (throughput / latency reporting of the e2e driver).
+//! the serving loop (throughput / latency reporting of the e2e driver),
+//! plus the per-request failure ledger the streaming service reports —
+//! a partially-failed batch is never silent: every failed request id and
+//! its error message are recorded here and surfaced by `cmd_serve`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::error::Error;
+use crate::util::sync::lock_unpoisoned;
+
+/// Cap on the completion-order ledger (diagnostics/tests observable).
+/// Long-lived services complete unboundedly many requests; the ledger
+/// keeps only the first window while the counters keep counting.
+const MAX_COMPLETION_LEDGER: usize = 4096;
 
 /// Monotonic counters + latency samples. Shared across workers via `Arc`.
 #[derive(Debug, Default)]
@@ -10,6 +21,9 @@ pub struct Metrics {
     pub requests_received: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_failed: AtomicU64,
+    /// Requests rejected by the pipeline's admission stage (malformed
+    /// budget etc.) before any profiling or fitting work was spent.
+    pub admission_rejected: AtomicU64,
     pub modes_profiled: AtomicU64,
     pub reboots: AtomicU64,
     /// Grid-resident serve-plane cache hits/misses (host path): a hit
@@ -22,13 +36,31 @@ pub struct Metrics {
     /// profiling plus two host fits.
     pub model_cache_hits: AtomicU64,
     pub model_cache_misses: AtomicU64,
+    /// Requests that found their key's build already in flight and
+    /// blocked on it instead of duplicating the work (singleflight).
+    /// Counted when the coalescing happens; the matching cache *hit* is
+    /// only counted if the awaited build actually delivers a value.
+    pub singleflight_waits: AtomicU64,
     /// Host-native model fits performed (transfer or scratch; two per
     /// model-cache miss — one per prediction target).
     pub host_fits: AtomicU64,
+    /// Requests whose response was produced after their (simulated)
+    /// arrival-relative deadline had already passed.
+    pub deadline_misses: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms).
     latencies_ms: Mutex<Vec<f64>>,
+    /// Request ids in the order their responses were produced (the
+    /// scheduler's observable behaviour: priority tests and diagnostics
+    /// read this). Bounded: recording stops at
+    /// [`MAX_COMPLETION_LEDGER`] so a long-lived service doesn't grow
+    /// one u64 per request forever; `requests_completed` keeps counting.
+    completed_ids: Mutex<Vec<u64>>,
+    /// Every failed request: (id, rendered error). The streaming service
+    /// records each failure here so a partially-failed batch reports all
+    /// of them, not just the first.
+    failures: Mutex<Vec<(u64, String)>>,
 }
 
 impl Metrics {
@@ -52,12 +84,48 @@ impl Metrics {
     }
 
     pub fn observe_latency_ms(&self, ms: f64) {
-        self.latencies_ms.lock().unwrap().push(ms);
+        lock_unpoisoned(&self.latencies_ms).push(ms);
+    }
+
+    /// Record a produced response: bumps `requests_completed` and appends
+    /// the id to the (bounded) completion-order ledger.
+    pub fn record_completion(&self, id: u64) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        let mut ids = lock_unpoisoned(&self.completed_ids);
+        if ids.len() < MAX_COMPLETION_LEDGER {
+            ids.push(id);
+        }
+    }
+
+    /// Request ids in the order their responses were produced (first
+    /// [`MAX_COMPLETION_LEDGER`] completions only).
+    pub fn completion_order(&self) -> Vec<u64> {
+        lock_unpoisoned(&self.completed_ids).clone()
+    }
+
+    /// Record a failed request: bumps `requests_failed` and remembers the
+    /// id + message so the batch report can surface every failure.
+    pub fn record_failure(&self, id: u64, err: &Error) {
+        self.requests_failed.fetch_add(1, Ordering::Relaxed);
+        lock_unpoisoned(&self.failures).push((id, err.to_string()));
+    }
+
+    /// Every recorded failure as (request id, error message), ordered by
+    /// request id.
+    pub fn failed_requests(&self) -> Vec<(u64, String)> {
+        let mut v = lock_unpoisoned(&self.failures).clone();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    /// Ids of every failed request, ascending.
+    pub fn failed_ids(&self) -> Vec<u64> {
+        self.failed_requests().into_iter().map(|(id, _)| id).collect()
     }
 
     /// (p50, p95, max) latency in ms.
     pub fn latency_summary_ms(&self) -> (f64, f64, f64) {
-        let lat = self.latencies_ms.lock().unwrap();
+        let lat = lock_unpoisoned(&self.latencies_ms);
         if lat.is_empty() {
             return (0.0, 0.0, 0.0);
         }
@@ -69,23 +137,32 @@ impl Metrics {
 
     pub fn render(&self) -> String {
         let (p50, p95, max) = self.latency_summary_ms();
-        format!(
-            "requests: {} received, {} completed, {} failed | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | host fits: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+        let mut out = format!(
+            "requests: {} received, {} completed, {} failed, {} rejected | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | singleflight waits: {} | host fits: {} | deadline misses: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
             self.requests_received.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
+            self.admission_rejected.load(Ordering::Relaxed),
             self.modes_profiled.load(Ordering::Relaxed),
             self.reboots.load(Ordering::Relaxed),
             self.plane_cache_hits.load(Ordering::Relaxed),
             self.plane_cache_misses.load(Ordering::Relaxed),
             self.model_cache_hits.load(Ordering::Relaxed),
             self.model_cache_misses.load(Ordering::Relaxed),
+            self.singleflight_waits.load(Ordering::Relaxed),
             self.host_fits.load(Ordering::Relaxed),
+            self.deadline_misses.load(Ordering::Relaxed),
             self.profiling_s() / 60.0,
             p50,
             p95,
             max,
-        )
+        );
+        let failed = self.failed_requests();
+        if !failed.is_empty() {
+            let ids: Vec<String> = failed.iter().map(|(id, _)| id.to_string()).collect();
+            out.push_str(&format!(" | failed ids: [{}]", ids.join(", ")));
+        }
+        out
     }
 }
 
@@ -97,7 +174,8 @@ mod tests {
     fn counters_and_latency() {
         let m = Metrics::new();
         m.requests_received.fetch_add(3, Ordering::Relaxed);
-        m.requests_completed.fetch_add(2, Ordering::Relaxed);
+        m.record_completion(0);
+        m.record_completion(1);
         m.add_profiling_s(90.0);
         m.observe_latency_ms(10.0);
         m.observe_latency_ms(20.0);
@@ -107,6 +185,7 @@ mod tests {
         assert!(p95 > 20.0 && p95 <= 120.0);
         assert_eq!(max, 120.0);
         assert!((m.profiling_s() - 90.0).abs() < 0.01);
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 2);
         let r = m.render();
         assert!(r.contains("3 received"));
     }
@@ -130,5 +209,49 @@ mod tests {
         let m2 = Metrics::new();
         m2.add_profiling_s(90.0);
         assert!((m2.profiling_s() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failures_are_all_reported_in_id_order() {
+        let m = Metrics::new();
+        m.record_failure(9, &Error::Optimization("no feasible mode".into()));
+        m.record_failure(2, &Error::Usage("bad budget".into()));
+        assert_eq!(m.requests_failed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failed_ids(), vec![2, 9]);
+        let failed = m.failed_requests();
+        assert!(failed[0].1.contains("bad budget"));
+        assert!(failed[1].1.contains("no feasible mode"));
+        // the render string surfaces every failed id, not just the first
+        let r = m.render();
+        assert!(r.contains("failed ids: [2, 9]"), "{r}");
+    }
+
+    #[test]
+    fn completion_order_is_recorded() {
+        let m = Metrics::new();
+        m.record_completion(5);
+        m.record_completion(1);
+        m.record_completion(3);
+        assert_eq!(m.completion_order(), vec![5, 1, 3]);
+    }
+
+    #[test]
+    fn completion_ledger_is_bounded_but_counter_keeps_counting() {
+        let m = Metrics::new();
+        for id in 0..(MAX_COMPLETION_LEDGER as u64 + 5) {
+            m.record_completion(id);
+        }
+        assert_eq!(m.completion_order().len(), MAX_COMPLETION_LEDGER);
+        assert_eq!(
+            m.requests_completed.load(Ordering::Relaxed),
+            MAX_COMPLETION_LEDGER as u64 + 5
+        );
+    }
+
+    #[test]
+    fn no_failures_means_no_failed_ids_in_render() {
+        let m = Metrics::new();
+        assert!(m.failed_ids().is_empty());
+        assert!(!m.render().contains("failed ids"));
     }
 }

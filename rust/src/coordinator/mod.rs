@@ -1,63 +1,67 @@
 //! L3 coordinator: the edge power-mode recommendation service.
 //!
 //! Models the deployment the paper motivates (sections 1, 1.5): DNN
-//! training workloads arrive dynamically at a fleet of Jetson devices; for
-//! each request the coordinator profiles ~50 power modes on the target
-//! device, transfer-learns the reference time/power models, predicts the
-//! whole power-mode grid through the AOT artifacts, builds the Pareto
-//! front, and returns the power mode that minimizes training time within
-//! the request's power budget.
+//! training workloads *arrive dynamically* at a fleet of Jetson devices;
+//! for each request the coordinator profiles ~50 power modes on the
+//! target device, transfer-learns the reference time/power models,
+//! predicts the whole power-mode grid, builds the Pareto front, and
+//! returns the power mode that minimizes training time within the
+//! request's power budget.
+//!
+//! The coordinator is a layered service, one module per concern:
+//!
+//! * [`queue`] — streaming ingress: [`Job`]s carry simulated arrival
+//!   times, optional deadlines and scenario-derived priorities; workers
+//!   pull in priority/EDF order, so short federated/continuous-learning
+//!   rounds overtake queued brute-force profiling jobs;
+//! * [`pipeline`] — the staged request pipeline (admission →
+//!   grid/feature-matrix resolution → model acquisition → plane
+//!   resolution → Pareto query → response), each stage with a narrow
+//!   typed interface; [`HostPipeline`] bundles the per-worker context;
+//! * [`cache`] — grid-resident serving state with *singleflight*
+//!   acquisition: a burst of N identical workloads costs exactly one
+//!   host fit, concurrent requesters coalesce onto the in-flight build;
+//! * [`service`] — the long-lived [`Coordinator`]: worker pool,
+//!   cloneable [`Submitter`] (channel-style streaming submission),
+//!   deterministic id-sorted response collection, panic/poison
+//!   containment; the batch [`serve`] wrapper rides on top;
+//! * [`policy`] / [`metrics`] — paper-Table-1 strategy + priority
+//!   mapping, and the shared counters (cache hits, singleflight waits,
+//!   deadline misses, per-request failure ledger).
 //!
 //! Threading: PJRT clients are not `Send`, so each worker thread owns its
-//! own `Runtime`; requests flow through a shared queue and responses are
-//! collected on a channel. Python never runs here.
+//! own `Runtime`; requests flow through the shared priority queue and
+//! responses are collected on a channel. Python never runs here.
 //!
 //! Host-native serving: when the AOT artifacts are unavailable (built
 //! without the `xla` feature, or `Runtime` construction fails at serve
-//! time) [`handle_request_host`] runs the *same* per-scenario strategy
-//! dispatch as the artifact path — `Strategy::PowerTrain(n)` profiles `n`
-//! modes on the simulated device, transfer-learns both reference models
-//! with the pure-rust trainer (`train::transfer::transfer_host` over
-//! `nn::grad`), `Strategy::NnProfiled(n)` trains from scratch
-//! (`train::HostTrainer`), and `Strategy::BruteForce` profiles the whole
-//! grid. The default build therefore serves the paper's full loop —
-//! profile → transfer → grid prediction → in-budget Pareto
-//! recommendation — not a degraded reference-checkpoint approximation.
-//!
-//! Grid-resident serving: the host path keeps its expensive state — the
-//! device grid, the shared SoA feature matrix, the per-workload
-//! transferred model pairs, both raw-unit prediction planes and the
-//! Pareto front — resident in a [`PlaneCache`] shared by all workers
-//! (see [`cache`]). Host training is deterministic per [`ModelKey`], so
-//! cached model pairs are provably what a rebuild would produce;
-//! transferred checkpoints then key planes by content fingerprint
-//! exactly like reference checkpoints do. Steady-state requests that
-//! only vary the power budget answer with a binary search over the
-//! cached front, O(log front) instead of profiling + fitting + O(grid ×
-//! params).
+//! time) workers run the *same* per-scenario strategy dispatch through
+//! the pure-rust trainer — see [`pipeline`] — so the default build
+//! serves the paper's full loop: profile → transfer → grid prediction →
+//! in-budget Pareto recommendation.
 
 pub mod cache;
 pub mod metrics;
+pub mod pipeline;
 pub mod policy;
+pub mod queue;
+pub mod service;
 
 pub use cache::{GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane};
 pub use metrics::Metrics;
+#[cfg(feature = "xla")]
+pub use pipeline::handle_request;
+pub use pipeline::{handle_request_host, HostPipeline};
 pub use policy::{Scenario, Strategy};
+pub use queue::{Job, RequestQueue};
+pub use service::{serve, Coordinator, Submitter};
 
-use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
 
 use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::nn::checkpoint::Checkpoint;
-use crate::pareto::{ParetoFront, Point};
-use crate::predict::GridPredictor;
-use crate::profiler::{Corpus, Profiler};
-use crate::sim::TrainerSim;
-use crate::train::transfer::{transfer_host, TransferConfig};
+use crate::profiler::Corpus;
 use crate::train::{HostTrainer, Target, TrainConfig};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
@@ -65,10 +69,11 @@ use crate::workload::Workload;
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 #[cfg(feature = "xla")]
-use crate::train::{transfer::transfer, Trainer};
+use crate::train::Trainer;
 
 /// An arriving request: optimize this workload on this device under this
-/// power budget.
+/// power budget. Streaming metadata (arrival time, deadline, priority)
+/// rides on [`Job`], which wraps a `Request` for the ingress queue.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -121,10 +126,9 @@ impl ReferenceModels {
     }
 
     /// Content fingerprints of (time, power) — the model half of the
-    /// plane-cache key. O(params); compute once per worker/serve call
-    /// (the models are immutable while serving) and pass to
-    /// [`handle_request_host_keyed`] so cache hits don't re-hash 42k
-    /// parameters per request.
+    /// plane-cache key. O(params); [`HostPipeline`] computes this once
+    /// per worker (the models are immutable while serving) so cache hits
+    /// don't re-hash 42k parameters per request.
     pub fn fingerprints(&self) -> (u64, u64) {
         (self.time.fingerprint(), self.power.fingerprint())
     }
@@ -180,319 +184,6 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Serve one request end-to-end on a given runtime. This is the heart of
-/// the coordinator; the threaded service wraps it.
-#[cfg(feature = "xla")]
-pub fn handle_request(
-    rt: &Runtime,
-    reference: &ReferenceModels,
-    cfg: &CoordinatorConfig,
-    metrics: &Metrics,
-    req: &Request,
-) -> Result<Response> {
-    let t0 = Instant::now();
-    metrics.requests_received.fetch_add(1, Ordering::Relaxed);
-
-    let spec = req.device.spec();
-    let strategy = Strategy::for_scenario(req.scenario);
-
-    // 1. online profiling of a small random mode sample on the target
-    let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
-    let n_profile = strategy.profiling_modes(grid.len()).min(grid.len());
-    let mut rng = Rng::new(req.seed);
-    let sample = grid.sample(n_profile, &mut rng);
-    let mut profiler = Profiler::new(TrainerSim::new(spec, req.workload, req.seed));
-    let corpus = profiler.profile_modes(&sample)?;
-    metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
-    metrics.add_profiling_s(corpus.total_cost_s());
-
-    // 2. obtain time/power prediction models per the scenario's strategy
-    let (time_ckpt, power_ckpt, strat_name) = match strategy {
-        Strategy::PowerTrain(_) => {
-            let tcfg = TransferConfig {
-                base: TrainConfig {
-                    epochs: cfg.transfer_epochs,
-                    seed: req.seed,
-                    ..Default::default()
-                },
-                ..Default::default()
-            };
-            let (t, _) = transfer(rt, &reference.time, &corpus, Target::Time, &tcfg)?;
-            let (p, _) = transfer(rt, &reference.power, &corpus, Target::Power, &tcfg)?;
-            (t, p, strategy.to_string())
-        }
-        Strategy::NnProfiled(_) => {
-            let trainer = Trainer::new(rt);
-            let ncfg = TrainConfig {
-                epochs: cfg.transfer_epochs,
-                seed: req.seed,
-                ..Default::default()
-            };
-            let (t, _) = trainer.train(&corpus, Target::Time, &ncfg)?;
-            let (p, _) = trainer.train(&corpus, Target::Power, &ncfg)?;
-            (t, p, strategy.to_string())
-        }
-        Strategy::BruteForce => {
-            // observed Pareto over the full profiled grid; no models
-            return finish_brute_force(req, &grid, profiler, metrics, t0);
-        }
-    };
-
-    // 3. predict the full grid through the AOT artifacts and build the
-    //    predicted Pareto front (paper Fig 10)
-    let times = crate::predict::predict_modes(rt, &time_ckpt, &grid.modes)?;
-    let powers = crate::predict::predict_modes(rt, &power_ckpt, &grid.modes)?;
-    finish_predicted(
-        req,
-        &grid,
-        &times,
-        &powers,
-        strat_name,
-        corpus.total_cost_s(),
-        metrics,
-        t0,
-    )
-}
-
-/// Serve one request end-to-end without the PJRT runtime — the default
-/// build's native path, same strategy dispatch as [`handle_request`]:
-///
-/// * `Strategy::PowerTrain(n)` — profile `n` modes via the simulated
-///   [`Profiler`], transfer-learn both reference models on host
-///   (`transfer_host`), predict the grid, Pareto-optimize;
-/// * `Strategy::NnProfiled(n)` — same, training from scratch
-///   ([`HostTrainer`]) instead of transferring;
-/// * `Strategy::BruteForce` — profile the whole grid, observed optimum.
-///
-/// Grid-resident: the per-workload model pair is cached under
-/// [`ModelKey`] (host fits are deterministic per key), and everything
-/// budget-independent — grid, shared SoA feature matrix, both prediction
-/// planes, Pareto front — lives in `cache` keyed by grid identity plus
-/// the content fingerprints of the *transferred* checkpoints, exactly as
-/// reference planes are keyed. The first request per workload pays
-/// profiling + two fits + the plane build; every later one answers via
-/// [`ParetoFront::optimize`]'s binary search over the cached front.
-pub fn handle_request_host(
-    cache: &PlaneCache,
-    reference: &ReferenceModels,
-    cfg: &CoordinatorConfig,
-    metrics: &Metrics,
-    req: &Request,
-) -> Result<Response> {
-    handle_request_host_keyed(cache, reference, reference.fingerprints(), cfg, metrics, req)
-}
-
-/// [`handle_request_host`] with the reference fingerprints precomputed —
-/// the steady-state entry `serve` workers use (models are immutable for
-/// the whole call), so a cache hit is a map lookup plus a binary search
-/// with no per-request O(params) hashing. `ref_fps` must be
-/// `reference.fingerprints()` for the same models; a mismatched pair
-/// would key models and planes under the wrong references.
-pub fn handle_request_host_keyed(
-    cache: &PlaneCache,
-    reference: &ReferenceModels,
-    ref_fps: (u64, u64),
-    cfg: &CoordinatorConfig,
-    metrics: &Metrics,
-    req: &Request,
-) -> Result<Response> {
-    let t0 = Instant::now();
-    metrics.requests_received.fetch_add(1, Ordering::Relaxed);
-
-    let strategy = Strategy::for_scenario(req.scenario);
-    if let Strategy::BruteForce = strategy {
-        let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
-        let profiler = Profiler::new(TrainerSim::new(req.device.spec(), req.workload, req.seed));
-        return finish_brute_force(req, &grid, profiler, metrics, t0);
-    }
-
-    let gkey = GridKey::for_request(req.device, cfg.prediction_grid, req.seed);
-    let mkey = ModelKey {
-        grid: gkey,
-        workload: req.workload,
-        seed: req.seed,
-        strategy,
-        epochs: cfg.transfer_epochs,
-        ref_time_fp: ref_fps.0,
-        ref_power_fp: ref_fps.1,
-    };
-    // one lazy grid resolver shared by both miss paths, so they can
-    // never drift apart on how the grid is built
-    let grid_entry = || {
-        cache.grid(gkey, || {
-            GridEntry::new(prediction_grid(req.device, cfg.prediction_grid, req.seed))
-        })
-    };
-    let (models, built) = cache.models(mkey, metrics, || {
-        train_host_models(&grid_entry().grid, reference, cfg, metrics, req, strategy)
-    })?;
-
-    let pkey = PlaneKey { grid: gkey, time_fp: models.time_fp, power_fp: models.power_fp };
-    let plane = cache.plane(pkey, metrics, || {
-        build_plane(grid_entry(), &models.time, &models.power)
-    });
-
-    // steady-state request cost: one binary search over the cached front.
-    // Profiling cost is charged to the request that actually profiled;
-    // model-cache hits spent zero device-seconds.
-    let chosen = plane.front.optimize(req.power_budget_w * 1000.0)?;
-    let profiling_cost_s = if built { models.profiling_cost_s } else { 0.0 };
-    respond(req, chosen, format!("{strategy}(host)"), profiling_cost_s, metrics, t0)
-}
-
-/// The model-cache-miss work: online profiling of the strategy's mode
-/// sample on the simulated target, then two host fits (transfer for
-/// PowerTrain, from-scratch for NnProfiled). Deterministic in the
-/// [`ModelKey`] inputs — same seed, workload, grid, references and
-/// epochs reproduce bit-identical checkpoints.
-fn train_host_models(
-    grid: &PowerModeGrid,
-    reference: &ReferenceModels,
-    cfg: &CoordinatorConfig,
-    metrics: &Metrics,
-    req: &Request,
-    strategy: Strategy,
-) -> Result<HostModels> {
-    let n_profile = strategy.profiling_modes(grid.len()).min(grid.len());
-    let mut rng = Rng::new(req.seed);
-    let sample = grid.sample(n_profile, &mut rng);
-    let mut profiler = Profiler::new(TrainerSim::new(req.device.spec(), req.workload, req.seed));
-    let corpus = profiler.profile_modes(&sample)?;
-    metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
-    metrics.add_profiling_s(corpus.total_cost_s());
-
-    let base = TrainConfig { epochs: cfg.transfer_epochs, seed: req.seed, ..Default::default() };
-    let (time, power) = match strategy {
-        Strategy::PowerTrain(_) => {
-            let tcfg = TransferConfig { base, ..Default::default() };
-            let (t, _) = transfer_host(&reference.time, &corpus, Target::Time, &tcfg)?;
-            let (p, _) = transfer_host(&reference.power, &corpus, Target::Power, &tcfg)?;
-            (t, p)
-        }
-        Strategy::NnProfiled(_) => {
-            let trainer = HostTrainer::new();
-            let (t, _) = trainer.train(&corpus, Target::Time, &base)?;
-            let (p, _) = trainer.train(&corpus, Target::Power, &base)?;
-            (t, p)
-        }
-        Strategy::BruteForce => unreachable!("brute force never trains models"),
-    };
-    metrics.host_fits.fetch_add(2, Ordering::Relaxed);
-    Ok(HostModels::new(time, power, corpus.total_cost_s()))
-}
-
-/// The cold-path work a plane-cache miss pays once per (grid, model-pair):
-/// two affine-folded engine builds, two forward passes over the grid's
-/// shared feature matrix, one Pareto sort. `time`/`power` are whichever
-/// checkpoints the plane is keyed by — transferred per-workload models on
-/// the host path, reference models elsewhere.
-fn build_plane(grid: Arc<GridEntry>, time: &Checkpoint, power: &Checkpoint) -> ServePlane {
-    let times = GridPredictor::new(time).predict_features(&grid.features);
-    let powers = GridPredictor::new(power).predict_features(&grid.features);
-    let points: Vec<Point> = grid
-        .grid
-        .modes
-        .iter()
-        .zip(times.iter().zip(&powers))
-        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
-        .collect();
-    let front = ParetoFront::build(&points);
-    ServePlane { grid, times, powers, front }
-}
-
-/// Shared tail of the per-request predicted path (xla transfer serving):
-/// Pareto build, budget optimization, post-hoc observation, metrics.
-/// The host path goes through the plane cache instead and only shares
-/// [`respond`].
-#[cfg(feature = "xla")]
-#[allow(clippy::too_many_arguments)]
-fn finish_predicted(
-    req: &Request,
-    grid: &PowerModeGrid,
-    times: &[f64],
-    powers: &[f64],
-    strategy: String,
-    profiling_cost_s: f64,
-    metrics: &Metrics,
-    t0: Instant,
-) -> Result<Response> {
-    let points: Vec<Point> = grid
-        .modes
-        .iter()
-        .zip(times.iter().zip(powers))
-        .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
-        .collect();
-    let front = ParetoFront::build(&points);
-
-    // optimize: fastest predicted mode within the budget
-    let chosen = front.optimize(req.power_budget_w * 1000.0)?;
-    respond(req, chosen, strategy, profiling_cost_s, metrics, t0)
-}
-
-/// Common response tail: observable ground truth at the chosen mode (for
-/// reporting/validation), latency + completion metrics.
-fn respond(
-    req: &Request,
-    chosen: Point,
-    strategy: String,
-    profiling_cost_s: f64,
-    metrics: &Metrics,
-    t0: Instant,
-) -> Result<Response> {
-    let sim = TrainerSim::new(req.device.spec(), req.workload, req.seed ^ 0xfeed);
-    let obs_t = sim.true_minibatch_ms(&chosen.mode);
-    let obs_p = sim.true_power_mw(&chosen.mode);
-
-    let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    metrics.observe_latency_ms(latency_ms);
-    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-
-    Ok(Response {
-        id: req.id,
-        strategy,
-        chosen_mode: chosen.mode,
-        predicted_time_ms: chosen.time,
-        predicted_power_w: chosen.power_mw / 1000.0,
-        observed_time_ms: obs_t,
-        observed_power_w: obs_p / 1000.0,
-        profiling_cost_s,
-        latency_ms,
-    })
-}
-
-fn finish_brute_force(
-    req: &Request,
-    grid: &PowerModeGrid,
-    mut profiler: Profiler,
-    metrics: &Metrics,
-    t0: Instant,
-) -> Result<Response> {
-    let corpus = profiler.profile_modes(&grid.modes)?;
-    metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
-    metrics.add_profiling_s(corpus.total_cost_s());
-    let points: Vec<Point> = corpus
-        .records()
-        .iter()
-        .map(|r| Point { mode: r.mode, time: r.time_ms, power_mw: r.power_mw })
-        .collect();
-    let front = ParetoFront::build(&points);
-    let chosen = front.optimize(req.power_budget_w * 1000.0)?;
-    let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    metrics.observe_latency_ms(latency_ms);
-    metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-    Ok(Response {
-        id: req.id,
-        strategy: "brute-force".into(),
-        chosen_mode: chosen.mode,
-        predicted_time_ms: chosen.time,
-        predicted_power_w: chosen.power_mw / 1000.0,
-        observed_time_ms: chosen.time,
-        observed_power_w: chosen.power_mw / 1000.0,
-        profiling_cost_s: corpus.total_cost_s(),
-        latency_ms,
-    })
-}
-
 /// True when [`prediction_grid`] ignores `seed` for this (device,
 /// override) pair — the single source of truth the cache's
 /// [`GridKey`] canonicalization relies on. Keep in lockstep with
@@ -521,130 +212,17 @@ pub fn prediction_grid(device: DeviceKind, override_n: Option<usize>, seed: u64)
     PowerModeGrid::random_subset(device, n, &mut rng)
 }
 
-/// Multi-worker serving: spawns `cfg.workers` threads, each with its own
-/// PJRT runtime, pulling from a shared queue. Returns responses in
-/// completion order together with the shared metrics. Workers whose
-/// runtime cannot be constructed (or builds without the `xla` feature)
-/// serve through the host-native path instead — the same profile →
-/// transfer → predict loop, computed by the pure-rust trainer and the
-/// batched host engine.
-pub fn serve(
-    cfg: &CoordinatorConfig,
-    reference: &ReferenceModels,
-    requests: Vec<Request>,
-) -> Result<(Vec<Response>, Arc<Metrics>)> {
-    let metrics = Arc::new(Metrics::new());
-    // one plane cache for the whole serve call: workers share grids,
-    // feature matrices, prediction planes and Pareto fronts
-    let cache = Arc::new(PlaneCache::new());
-    let queue: Arc<Mutex<VecDeque<Request>>> =
-        Arc::new(Mutex::new(requests.into_iter().collect()));
-    let (tx, rx) = mpsc::channel::<Result<Response>>();
-
-    let mut handles = Vec::new();
-    for worker_id in 0..cfg.workers.max(1) {
-        let queue = Arc::clone(&queue);
-        let metrics = Arc::clone(&metrics);
-        let cache = Arc::clone(&cache);
-        let tx = tx.clone();
-        let cfg = cfg.clone();
-        let reference = reference.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("pt-worker-{worker_id}"))
-                .spawn(move || {
-                    // reference models are immutable for the whole serve
-                    // call: hash them once, not per request
-                    let ref_fps = reference.fingerprints();
-                    // each worker owns its own non-Send PJRT runtime;
-                    // without one it serves through the host engine
-                    #[cfg(feature = "xla")]
-                    let rt = match Runtime::new(&cfg.artifacts_dir) {
-                        Ok(rt) => Some(rt),
-                        Err(e) => {
-                            // the switch must be visible, not silent: every
-                            // request on this worker now profiles + transfers
-                            // through the pure-rust trainer instead of the
-                            // AOT artifacts
-                            eprintln!(
-                                "pt-worker-{worker_id}: artifacts unavailable ({e}); \
-                                 serving via the host-native training path"
-                            );
-                            None
-                        }
-                    };
-                    loop {
-                        let req = { queue.lock().unwrap().pop_front() };
-                        let Some(req) = req else { break };
-                        #[cfg(feature = "xla")]
-                        let res = match rt.as_ref() {
-                            Some(rt) => handle_request(rt, &reference, &cfg, &metrics, &req),
-                            None => handle_request_host_keyed(
-                                &cache, &reference, ref_fps, &cfg, &metrics, &req,
-                            ),
-                        };
-                        #[cfg(not(feature = "xla"))]
-                        let res = handle_request_host_keyed(
-                            &cache, &reference, ref_fps, &cfg, &metrics, &req,
-                        );
-                        if res.is_err() {
-                            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
-                        }
-                        if tx.send(res).is_err() {
-                            break;
-                        }
-                    }
-                })
-                .map_err(|e| Error::Coordinator(format!("spawn failed: {e}")))?,
-        );
-    }
-    drop(tx);
-
-    let mut responses = Vec::new();
-    let mut first_err: Option<Error> = None;
-    for res in rx {
-        match res {
-            Ok(r) => responses.push(r),
-            Err(e) => {
-                if first_err.is_none() {
-                    first_err = Some(e);
-                }
-            }
-        }
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    if responses.is_empty() {
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-    }
-    Ok((responses, metrics))
-}
-
+/// Shared fixtures for the coordinator's unit suites (pipeline, service):
+/// cheap untrained-but-plausible reference checkpoints and a reduced
+/// config so `cargo test` stays fast; the integration suite runs
+/// realistic scales.
 #[cfg(test)]
-mod tests {
+pub(crate) mod test_support {
     use super::*;
     use crate::nn::MlpParams;
     use crate::profiler::StandardScaler;
 
-    #[test]
-    fn prediction_grid_sizes() {
-        assert_eq!(prediction_grid(DeviceKind::OrinAgx, None, 1).len(), 4368);
-        assert_eq!(prediction_grid(DeviceKind::XavierAgx, None, 1).len(), 1000);
-        assert_eq!(prediction_grid(DeviceKind::OrinNano, None, 1).len(), 180);
-        assert_eq!(prediction_grid(DeviceKind::OrinAgx, Some(200), 1).len(), 200);
-    }
-
-    #[test]
-    fn prediction_grid_deterministic_per_seed() {
-        let a = prediction_grid(DeviceKind::XavierAgx, None, 7);
-        let b = prediction_grid(DeviceKind::XavierAgx, None, 7);
-        assert_eq!(a.modes, b.modes);
-    }
-
-    fn host_reference() -> ReferenceModels {
+    pub fn host_reference() -> ReferenceModels {
         let mut rng = Rng::new(17);
         let ck = |target: &str| Checkpoint {
             params: MlpParams::init_he(&mut rng),
@@ -660,211 +238,32 @@ mod tests {
         ReferenceModels { time: ck("time"), power: ck("power") }
     }
 
-    /// Reduced fine-tuning epochs so the unit suite stays fast; the
-    /// integration suite runs realistic scales.
-    fn host_cfg(grid: usize) -> CoordinatorConfig {
+    /// Reduced fine-tuning epochs so the unit suite stays fast.
+    pub fn host_cfg(grid: usize) -> CoordinatorConfig {
         CoordinatorConfig {
             prediction_grid: Some(grid),
             transfer_epochs: 6,
             ..Default::default()
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
 
     #[test]
-    fn host_powertrain_request_runs_the_full_loop() {
-        let reference = host_reference();
-        let cfg = host_cfg(300);
-        let metrics = Metrics::new();
-        let cache = PlaneCache::new();
-        let req = Request {
-            id: 9,
-            device: DeviceKind::OrinAgx,
-            workload: Workload::mobilenet(),
-            power_budget_w: 1e6, // any front point qualifies
-            scenario: Scenario::FederatedLearning,
-            seed: 5,
-        };
-        let resp = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
-        // the paper loop actually ran: 50 modes profiled, both targets
-        // transfer-learned on host, cost accounted on the request
-        assert_eq!(resp.strategy, "powertrain-50(host)");
-        assert!(resp.profiling_cost_s > 0.0);
-        assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 50);
-        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
-        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
-        resp.chosen_mode.validate(DeviceKind::OrinAgx.spec()).unwrap();
-        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 0);
+    fn prediction_grid_sizes() {
+        assert_eq!(prediction_grid(DeviceKind::OrinAgx, None, 1).len(), 4368);
+        assert_eq!(prediction_grid(DeviceKind::XavierAgx, None, 1).len(), 1000);
+        assert_eq!(prediction_grid(DeviceKind::OrinNano, None, 1).len(), 180);
+        assert_eq!(prediction_grid(DeviceKind::OrinAgx, Some(200), 1).len(), 200);
     }
 
     #[test]
-    fn nn_profiled_strategy_trains_from_scratch_on_host() {
-        let reference = host_reference();
-        let cfg = host_cfg(200);
-        let metrics = Metrics::new();
-        let cache = PlaneCache::new();
-        let req = Request {
-            id: 1,
-            device: DeviceKind::OrinAgx,
-            workload: Workload::lstm(),
-            power_budget_w: 1e6,
-            scenario: Scenario::FineTuning, // → NnProfiled(100)
-            seed: 6,
-        };
-        let resp = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
-        assert_eq!(resp.strategy, "nn-100(host)");
-        assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 100);
-        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
-    }
-
-    #[test]
-    fn cache_hit_is_bit_identical_and_counted() {
-        let reference = host_reference();
-        let cfg = host_cfg(300);
-        let metrics = Metrics::new();
-        let req = |id: u64| Request {
-            id,
-            device: DeviceKind::OrinAgx,
-            workload: Workload::mobilenet(),
-            power_budget_w: 1e6,
-            scenario: Scenario::FederatedLearning,
-            seed: 5,
-        };
-        // uncached baseline on its own fresh cache
-        let fresh = PlaneCache::new();
-        let uncached = handle_request_host(&fresh, &reference, &cfg, &metrics, &req(0)).unwrap();
-        // cold miss then hit on a shared cache
-        let cache = PlaneCache::new();
-        let cold = handle_request_host(&cache, &reference, &cfg, &metrics, &req(1)).unwrap();
-        let hit = handle_request_host(&cache, &reference, &cfg, &metrics, &req(2)).unwrap();
-        assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 2);
-        assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 2);
-        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 1);
-        // host fits are deterministic per key, so a cached answer is
-        // byte-identical to the uncached one in every model-derived field
-        // (id and wall-clock latency are per-request by construction)
-        for r in [&cold, &hit] {
-            assert_eq!(r.chosen_mode, uncached.chosen_mode);
-            assert_eq!(r.strategy, uncached.strategy);
-            assert_eq!(r.predicted_time_ms.to_bits(), uncached.predicted_time_ms.to_bits());
-            assert_eq!(r.predicted_power_w.to_bits(), uncached.predicted_power_w.to_bits());
-            assert_eq!(r.observed_time_ms.to_bits(), uncached.observed_time_ms.to_bits());
-            assert_eq!(r.observed_power_w.to_bits(), uncached.observed_power_w.to_bits());
-        }
-        // profiling happened exactly once per *fresh* model build; the
-        // cache hit spent zero simulated device-seconds
-        assert_eq!(cold.profiling_cost_s.to_bits(), uncached.profiling_cost_s.to_bits());
-        assert!(cold.profiling_cost_s > 0.0);
-        assert_eq!(hit.profiling_cost_s, 0.0);
-    }
-
-    #[test]
-    fn budget_only_requests_share_one_plane_and_one_fit() {
-        let reference = host_reference();
-        let cfg = host_cfg(400);
-        let metrics = Metrics::new();
-        let cache = PlaneCache::new();
-        for (i, budget_w) in [1e6, 40.0, 25.0, 60.0, 1e6].iter().enumerate() {
-            let req = Request {
-                id: i as u64,
-                device: DeviceKind::OrinAgx,
-                workload: Workload::lstm(),
-                power_budget_w: *budget_w,
-                scenario: Scenario::ContinuousLearning,
-                seed: 8,
-            };
-            match handle_request_host(&cache, &reference, &cfg, &metrics, &req) {
-                Ok(resp) => assert!(
-                    resp.predicted_power_w <= budget_w + 1e-9,
-                    "budget {budget_w} W violated: {}",
-                    resp.predicted_power_w
-                ),
-                // an infeasible budget is still answered from the cached
-                // plane (the lookup precedes the optimize)
-                Err(Error::Optimization(_)) => {}
-                Err(e) => panic!("unexpected error: {e}"),
-            }
-        }
-        // one profiling run + one transfer pair + one plane build; four
-        // O(log front) answers
-        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 4);
-        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
-        assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 50);
-        assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 4);
-        assert_eq!(cache.sizes(), (1, 1, 1));
-    }
-
-    #[test]
-    fn distinct_workloads_get_distinct_transferred_planes() {
-        // transferred checkpoints flow through the plane cache by content
-        // fingerprint, so two workloads on the same grid coexist — planes
-        // cache alongside each other instead of colliding
-        let reference = host_reference();
-        let cfg = host_cfg(250);
-        let metrics = Metrics::new();
-        let cache = PlaneCache::new();
-        let req = |id: u64, wl: Workload| Request {
-            id,
-            device: DeviceKind::OrinAgx,
-            workload: wl,
-            power_budget_w: 1e6,
-            scenario: Scenario::ContinuousLearning,
-            seed: 12,
-        };
-        let a = handle_request_host(&cache, &reference, &cfg, &metrics, &req(0, Workload::lstm()))
-            .unwrap();
-        let b =
-            handle_request_host(&cache, &reference, &cfg, &metrics, &req(1, Workload::bert()))
-                .unwrap();
-        // one shared grid, two model pairs, two planes
-        assert_eq!(cache.sizes(), (1, 2, 2));
-        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 2);
-        // per-workload models genuinely differ
-        assert!(
-            a.predicted_time_ms.to_bits() != b.predicted_time_ms.to_bits()
-                || a.predicted_power_w.to_bits() != b.predicted_power_w.to_bits(),
-            "two workloads produced identical planes"
-        );
-        // and re-asking workload A hits both caches
-        handle_request_host(&cache, &reference, &cfg, &metrics, &req(2, Workload::lstm()))
-            .unwrap();
-        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 1);
-        assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 1);
-    }
-
-    #[test]
-    fn host_serve_processes_queue_without_artifacts() {
-        let reference = host_reference();
-        let cfg = CoordinatorConfig {
-            artifacts_dir: PathBuf::from("definitely-missing-artifacts"),
-            prediction_grid: Some(200),
-            transfer_epochs: 4,
-            workers: 2,
-        };
-        let requests: Vec<Request> = (0..4)
-            .map(|i| Request {
-                id: i,
-                device: DeviceKind::OrinAgx,
-                workload: Workload::lstm(),
-                power_budget_w: 1e6,
-                scenario: Scenario::ContinuousLearning,
-                seed: 40 + i,
-            })
-            .collect();
-        let (responses, metrics) = serve(&cfg, &reference, requests).unwrap();
-        assert_eq!(responses.len(), 4);
-        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
-        ids.sort_unstable();
-        assert_eq!(ids, vec![0, 1, 2, 3]);
-        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 4);
-        // every distinct seed transfers its own model pair host-natively
-        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 8);
-        for r in &responses {
-            assert_eq!(r.strategy, "powertrain-50(host)");
-        }
+    fn prediction_grid_deterministic_per_seed() {
+        let a = prediction_grid(DeviceKind::XavierAgx, None, 7);
+        let b = prediction_grid(DeviceKind::XavierAgx, None, 7);
+        assert_eq!(a.modes, b.modes);
     }
 }

@@ -18,6 +18,30 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Every scenario, in paper Table 1 order.
+    pub const ALL: [Scenario; 4] = [
+        Scenario::OneTimeTraining,
+        Scenario::FineTuning,
+        Scenario::ContinuousLearning,
+        Scenario::FederatedLearning,
+    ];
+
+    /// Scheduling class for the coordinator's ingress queue (higher pops
+    /// first). Short, frequent jobs — federated rounds, continuous-
+    /// learning updates, whose whole point is a fast turnaround on a
+    /// 50-mode profile + transfer — overtake the long tail: a queued
+    /// brute-force profiling job (one-time training, 1200–1800 min of
+    /// data collection per paper Table 1) must never head-of-line-block
+    /// them on a busy fleet.
+    pub fn priority(self) -> u8 {
+        match self {
+            Scenario::FederatedLearning => 3,
+            Scenario::ContinuousLearning => 2,
+            Scenario::FineTuning => 1,
+            Scenario::OneTimeTraining => 0,
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Scenario> {
         match s {
             "one-time" => Some(Scenario::OneTimeTraining),
@@ -104,13 +128,18 @@ mod tests {
 
     #[test]
     fn scenario_names_round_trip() {
-        for s in [
-            Scenario::OneTimeTraining,
-            Scenario::FineTuning,
-            Scenario::ContinuousLearning,
-            Scenario::FederatedLearning,
-        ] {
+        for s in Scenario::ALL {
             assert_eq!(Scenario::parse(s.name()), Some(s));
         }
+    }
+
+    #[test]
+    fn short_scenarios_outrank_long_ones() {
+        // the scheduling invariant the streaming queue relies on: both
+        // PowerTrain short-job scenarios strictly outrank fine-tuning,
+        // which strictly outranks brute-force one-time training
+        assert!(Scenario::FederatedLearning.priority() > Scenario::FineTuning.priority());
+        assert!(Scenario::ContinuousLearning.priority() > Scenario::FineTuning.priority());
+        assert!(Scenario::FineTuning.priority() > Scenario::OneTimeTraining.priority());
     }
 }

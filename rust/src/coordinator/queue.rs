@@ -1,0 +1,392 @@
+//! Streaming ingress: a deadline-aware priority queue of arriving jobs.
+//!
+//! The coordinator no longer consumes a pre-materialized `Vec<Request>`:
+//! callers stream [`Job`]s — a request plus its *simulated arrival time*,
+//! an optional latency deadline, and a scenario-derived scheduling
+//! priority — and workers pull from this queue. Scheduling order among
+//! the jobs whose arrival instant has passed is
+//!
+//! 1. **priority class** (see
+//!    [`Scenario::priority`](crate::coordinator::Scenario::priority)):
+//!    short federated /
+//!    continuous-learning rounds overtake queued brute-force profiling
+//!    jobs instead of head-of-line blocking behind them;
+//! 2. **earliest absolute deadline** within a class (EDF; best-effort
+//!    jobs order last);
+//! 3. **submission order** as the final tie-break, so equal jobs stay
+//!    FIFO and the schedule is deterministic.
+//!
+//! Jobs whose arrival lies in the future are parked in a separate
+//! min-heap and promoted when their instant passes; a worker popping an
+//! empty-but-alive queue blocks on a condvar (with a timeout at the next
+//! pending arrival). [`RequestQueue::close`] ends the stream: workers
+//! drain what remains, then `pop` returns `None`.
+//!
+//! All locking is poison-recovering (`util::sync`): a worker that panics
+//! while holding the queue lock no longer wedges every other worker —
+//! the survivors recover the guard and keep draining.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Request;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
+
+/// One scheduled unit of work: a request plus its streaming metadata.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub request: Request,
+    /// Simulated arrival instant, in ms since the queue epoch (the
+    /// coordinator's start). The queue holds the job back until then.
+    pub arrival_ms: u64,
+    /// Latency budget from arrival to response, in ms. `None` = best
+    /// effort. Misses are counted in `Metrics::deadline_misses`.
+    pub deadline_ms: Option<u64>,
+    /// Scheduling class, derived from the request's scenario (higher
+    /// pops first).
+    pub priority: u8,
+}
+
+impl Job {
+    /// A job that arrives now, best-effort, with the scenario's priority.
+    pub fn immediate(request: Request) -> Job {
+        Job::arriving(request, 0)
+    }
+
+    /// A job with a simulated arrival offset from the queue epoch.
+    pub fn arriving(request: Request, arrival_ms: u64) -> Job {
+        let priority = request.scenario.priority();
+        Job { request, arrival_ms, deadline_ms: None, priority }
+    }
+
+    /// Attach an arrival-relative deadline.
+    pub fn with_deadline(mut self, deadline_ms: u64) -> Job {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Absolute deadline on the queue clock (`u64::MAX` = best effort).
+    pub fn absolute_deadline_ms(&self) -> u64 {
+        self.deadline_ms
+            .map_or(u64::MAX, |d| self.arrival_ms.saturating_add(d))
+    }
+}
+
+/// Heap entry for an arrived job. Max-heap order = scheduling order:
+/// priority desc, absolute deadline asc, submission sequence asc.
+#[derive(Debug)]
+struct Scheduled {
+    priority: u8,
+    deadline_abs_ms: u64,
+    seq: u64,
+    job: Job,
+}
+
+impl Scheduled {
+    fn rank(&self) -> (u8, std::cmp::Reverse<u64>, std::cmp::Reverse<u64>) {
+        (
+            self.priority,
+            std::cmp::Reverse(self.deadline_abs_ms),
+            std::cmp::Reverse(self.seq),
+        )
+    }
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank() == other.rank()
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.rank().cmp(&other.rank())
+    }
+}
+
+/// Heap entry for a not-yet-arrived job. Max-heap inverted so the
+/// *earliest* arrival pops first.
+#[derive(Debug)]
+struct Pending {
+    arrival_ms: u64,
+    seq: u64,
+    job: Job,
+}
+
+impl Pending {
+    fn rank(&self) -> (std::cmp::Reverse<u64>, std::cmp::Reverse<u64>) {
+        (std::cmp::Reverse(self.arrival_ms), std::cmp::Reverse(self.seq))
+    }
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank() == other.rank()
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.rank().cmp(&other.rank())
+    }
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    ready: BinaryHeap<Scheduled>,
+    pending: BinaryHeap<Pending>,
+    closed: bool,
+    seq: u64,
+}
+
+/// The shared ingress queue. Submitters push [`Job`]s (possibly with
+/// future arrival instants); workers [`pop`](RequestQueue::pop) in
+/// priority/deadline order.
+#[derive(Debug)]
+pub struct RequestQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    epoch: Instant,
+}
+
+impl Default for RequestQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Milliseconds since the queue epoch — the simulated arrival clock
+    /// jobs are timed against.
+    pub fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Enqueue one job. Returns `false` (dropping the job) if the queue
+    /// has been closed.
+    pub fn submit(&self, job: Job) -> bool {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.closed {
+            return false;
+        }
+        st.seq += 1;
+        let seq = st.seq;
+        if job.arrival_ms <= self.now_ms() {
+            st.ready.push(Scheduled {
+                priority: job.priority,
+                deadline_abs_ms: job.absolute_deadline_ms(),
+                seq,
+                job,
+            });
+        } else {
+            st.pending.push(Pending { arrival_ms: job.arrival_ms, seq, job });
+        }
+        drop(st);
+        self.cv.notify_all();
+        true
+    }
+
+    /// End the stream: no further submissions are accepted; workers
+    /// drain what is already queued (including future arrivals), then
+    /// `pop` returns `None`.
+    pub fn close(&self) {
+        lock_unpoisoned(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        lock_unpoisoned(&self.state).closed
+    }
+
+    /// Jobs currently queued (arrived + future).
+    pub fn len(&self) -> usize {
+        let st = lock_unpoisoned(&self.state);
+        st.ready.len() + st.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking pop of the next schedulable job: the highest-priority
+    /// *arrived* job, earliest deadline then FIFO within a class. Blocks
+    /// while the queue is open but nothing has arrived yet; returns
+    /// `None` once the queue is closed and fully drained.
+    pub fn pop(&self) -> Option<Job> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            let now = self.now_ms();
+            // promote every parked job whose simulated arrival has passed
+            loop {
+                match st.pending.peek() {
+                    Some(p) if p.arrival_ms <= now => {}
+                    _ => break,
+                }
+                let p = st.pending.pop().expect("peeked entry must pop");
+                st.ready.push(Scheduled {
+                    priority: p.job.priority,
+                    deadline_abs_ms: p.job.absolute_deadline_ms(),
+                    seq: p.seq,
+                    job: p.job,
+                });
+            }
+            if let Some(s) = st.ready.pop() {
+                return Some(s.job);
+            }
+            if let Some(p) = st.pending.peek() {
+                // nothing arrived yet: sleep until the next arrival (or a
+                // submission/close wakes us earlier)
+                let wait_ms = p.arrival_ms.saturating_sub(now).max(1);
+                let (guard, _) =
+                    wait_timeout_unpoisoned(&self.cv, st, Duration::from_millis(wait_ms));
+                st = guard;
+                continue;
+            }
+            if st.closed {
+                return None;
+            }
+            st = wait_unpoisoned(&self.cv, st);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scenario;
+    use crate::device::DeviceKind;
+    use crate::workload::Workload;
+
+    fn req(id: u64, scenario: Scenario) -> Request {
+        Request {
+            id,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 30.0,
+            scenario,
+            seed: id,
+        }
+    }
+
+    fn drain_ids(q: &RequestQueue) -> Vec<u64> {
+        q.close();
+        let mut ids = Vec::new();
+        while let Some(j) = q.pop() {
+            ids.push(j.request.id);
+        }
+        ids
+    }
+
+    #[test]
+    fn short_jobs_overtake_queued_brute_force() {
+        let q = RequestQueue::new();
+        // a brute-force profiling job is queued first...
+        assert!(q.submit(Job::immediate(req(0, Scenario::OneTimeTraining))));
+        // ...then short jobs arrive behind it
+        assert!(q.submit(Job::immediate(req(1, Scenario::FederatedLearning))));
+        assert!(q.submit(Job::immediate(req(2, Scenario::ContinuousLearning))));
+        assert!(q.submit(Job::immediate(req(3, Scenario::FineTuning))));
+        assert_eq!(drain_ids(&q), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn earliest_deadline_first_within_a_class() {
+        let q = RequestQueue::new();
+        q.submit(Job::immediate(req(0, Scenario::FederatedLearning)).with_deadline(500));
+        q.submit(Job::immediate(req(1, Scenario::FederatedLearning)).with_deadline(100));
+        q.submit(Job::immediate(req(2, Scenario::FederatedLearning))); // best effort: last
+        q.submit(Job::immediate(req(3, Scenario::FederatedLearning)).with_deadline(300));
+        assert_eq!(drain_ids(&q), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn fifo_within_equal_priority_and_deadline() {
+        let q = RequestQueue::new();
+        for id in 0..5 {
+            q.submit(Job::immediate(req(id, Scenario::ContinuousLearning)));
+        }
+        assert_eq!(drain_ids(&q), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn future_arrivals_are_held_back() {
+        let q = RequestQueue::new();
+        // high-priority job 80 ms in the future, low-priority job now:
+        // the low-priority one must pop first — priority applies among
+        // *arrived* jobs, not against jobs that do not exist yet
+        q.submit(Job::arriving(req(0, Scenario::FederatedLearning), 80));
+        q.submit(Job::immediate(req(1, Scenario::OneTimeTraining)));
+        q.close();
+        assert_eq!(q.pop().map(|j| j.request.id), Some(1));
+        // the second pop blocks until the simulated arrival passes
+        assert_eq!(q.pop().map(|j| j.request.id), Some(0));
+        assert!(q.now_ms() >= 80, "popped before its simulated arrival");
+        assert_eq!(q.pop().map(|j| j.request.id), None);
+    }
+
+    #[test]
+    fn close_drains_then_returns_none() {
+        let q = RequestQueue::new();
+        q.submit(Job::immediate(req(0, Scenario::FineTuning)));
+        q.close();
+        // closed queues reject new work...
+        assert!(!q.submit(Job::immediate(req(1, Scenario::FineTuning))));
+        // ...but still drain what was queued
+        assert_eq!(q.pop().map(|j| j.request.id), Some(0));
+        assert_eq!(q.pop().map(|j| j.request.id), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_blocks_until_submission() {
+        let q = RequestQueue::new();
+        std::thread::scope(|s| {
+            let popper = s.spawn(|| q.pop().map(|j| j.request.id));
+            std::thread::sleep(Duration::from_millis(30));
+            q.submit(Job::immediate(req(7, Scenario::FederatedLearning)));
+            assert_eq!(popper.join().unwrap(), Some(7));
+        });
+    }
+
+    #[test]
+    fn poisoned_queue_lock_is_recovered() {
+        // satellite regression: a worker that panics while holding the
+        // queue mutex used to poison it, and every later `.lock().unwrap()`
+        // cascaded — wedging all surviving workers. The queue now recovers
+        // the guard and keeps serving.
+        let q = RequestQueue::new();
+        assert!(q.submit(Job::immediate(req(1, Scenario::FederatedLearning))));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = q.state.lock().unwrap();
+            panic!("worker died holding the queue lock");
+        }));
+        assert!(res.is_err());
+        assert!(q.state.lock().is_err(), "lock must actually be poisoned");
+        // survivors still submit, pop in priority order, and drain
+        assert!(q.submit(Job::immediate(req(2, Scenario::OneTimeTraining))));
+        q.close();
+        assert_eq!(q.pop().map(|j| j.request.id), Some(1));
+        assert_eq!(q.pop().map(|j| j.request.id), Some(2));
+        assert_eq!(q.pop().map(|j| j.request.id), None);
+    }
+}

@@ -1,0 +1,392 @@
+//! The long-lived coordinator service: worker pool + streaming ingress +
+//! response collection.
+//!
+//! [`Coordinator::start`] spawns `cfg.workers` threads sharing one
+//! [`PlaneCache`], one [`Metrics`] and one deadline-aware priority
+//! [`RequestQueue`], and returns a cloneable [`Submitter`] — the
+//! channel-style submission handle. Callers *stream* [`Job`]s (requests
+//! with simulated arrival times, optional deadlines, scenario-derived
+//! priorities) instead of collecting a `Vec<Request>` upfront; when the
+//! last `Submitter` clone drops, the queue closes, workers drain what
+//! remains and [`Coordinator::finish`] returns every response **sorted
+//! by request id** (stable CLI/table output regardless of completion
+//! order) plus the shared metrics.
+//!
+//! Failure semantics: a per-request error never aborts the batch and is
+//! never silently dropped — each one is recorded in
+//! `Metrics::failed_requests` (id + message) and counted; `finish`
+//! returns `Err` only when *no* request succeeded. A request handler
+//! that panics is caught (`catch_unwind`), converted into a failed
+//! response, and the worker keeps serving; combined with the queue's
+//! poison-recovering locks, one bad request can no longer wedge the
+//! fleet.
+//!
+//! Workers whose PJRT runtime cannot be constructed (or builds without
+//! the `xla` feature) serve through the host-native [`HostPipeline`] —
+//! the same profile → transfer → predict loop, computed by the pure-rust
+//! trainer and the batched host engine.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::coordinator::pipeline::HostPipeline;
+use crate::coordinator::queue::{Job, RequestQueue};
+use crate::coordinator::{
+    CoordinatorConfig, Metrics, PlaneCache, ReferenceModels, Request, Response,
+};
+use crate::error::{Error, Result};
+
+#[cfg(feature = "xla")]
+use crate::coordinator::pipeline::handle_request;
+#[cfg(feature = "xla")]
+use crate::runtime::Runtime;
+
+/// The queue plus the live-submitter count that decides when it closes.
+#[derive(Debug)]
+struct Ingress {
+    queue: RequestQueue,
+    submitters: AtomicUsize,
+}
+
+/// Cloneable streaming submission handle. Clones share the coordinator's
+/// ingress queue (hand them to producer threads); when the **last** clone
+/// drops, the stream closes and workers drain what remains — the same
+/// lifecycle as an `mpsc::Sender`.
+#[derive(Debug)]
+pub struct Submitter {
+    ingress: Arc<Ingress>,
+}
+
+impl Clone for Submitter {
+    fn clone(&self) -> Submitter {
+        self.ingress.submitters.fetch_add(1, Ordering::SeqCst);
+        Submitter { ingress: Arc::clone(&self.ingress) }
+    }
+}
+
+impl Drop for Submitter {
+    fn drop(&mut self) {
+        if self.ingress.submitters.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.ingress.queue.close();
+        }
+    }
+}
+
+impl Submitter {
+    /// Stream one job into the coordinator.
+    pub fn send(&self, job: Job) -> Result<()> {
+        if self.ingress.queue.submit(job) {
+            Ok(())
+        } else {
+            Err(Error::Coordinator("coordinator ingress is closed".into()))
+        }
+    }
+
+    /// Submit a request that arrives now, best-effort, with its
+    /// scenario's priority.
+    pub fn send_request(&self, request: Request) -> Result<()> {
+        self.send(Job::immediate(request))
+    }
+
+    /// Milliseconds since the coordinator started — the clock job
+    /// arrival offsets are interpreted against.
+    pub fn now_ms(&self) -> u64 {
+        self.ingress.queue.now_ms()
+    }
+}
+
+/// A running coordinator service. Obtain one (plus its [`Submitter`])
+/// from [`Coordinator::start`]; stream jobs; then call
+/// [`Coordinator::finish`] to collect the responses.
+pub struct Coordinator {
+    metrics: Arc<Metrics>,
+    cache: Arc<PlaneCache>,
+    handles: Vec<JoinHandle<()>>,
+    rx: mpsc::Receiver<(u64, Result<Response>)>,
+}
+
+impl Coordinator {
+    /// Spawn the worker pool with a fresh plane cache.
+    pub fn start(
+        cfg: &CoordinatorConfig,
+        reference: &ReferenceModels,
+    ) -> Result<(Coordinator, Submitter)> {
+        Coordinator::start_with_cache(cfg, reference, Arc::new(PlaneCache::new()))
+    }
+
+    /// Spawn the worker pool over an externally owned cache — warm
+    /// restarts and benches reuse resident grids/models/planes across
+    /// coordinator lifetimes.
+    pub fn start_with_cache(
+        cfg: &CoordinatorConfig,
+        reference: &ReferenceModels,
+        cache: Arc<PlaneCache>,
+    ) -> Result<(Coordinator, Submitter)> {
+        let metrics = Arc::new(Metrics::new());
+        let ingress = Arc::new(Ingress {
+            queue: RequestQueue::new(),
+            submitters: AtomicUsize::new(1),
+        });
+        let (tx, rx) = mpsc::channel::<(u64, Result<Response>)>();
+        let mut handles = Vec::new();
+        for worker_id in 0..cfg.workers.max(1) {
+            let ingress = Arc::clone(&ingress);
+            let metrics = Arc::clone(&metrics);
+            let cache = Arc::clone(&cache);
+            let tx = tx.clone();
+            let cfg = cfg.clone();
+            let reference = reference.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("pt-worker-{worker_id}"))
+                .spawn(move || {
+                    worker_loop(worker_id, &ingress, &cache, &reference, &cfg, &metrics, &tx)
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // close the stream so already-spawned workers exit
+                    // instead of blocking on a queue nobody will close
+                    ingress.queue.close();
+                    return Err(Error::Coordinator(format!("spawn failed: {e}")));
+                }
+            }
+        }
+        Ok((Coordinator { metrics, cache, handles, rx }, Submitter { ingress }))
+    }
+
+    /// The shared metrics (live — counters advance while workers run).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The shared plane cache.
+    pub fn cache(&self) -> Arc<PlaneCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Wait for the stream to end and every in-flight request to finish,
+    /// then return all responses **sorted by request id** plus the shared
+    /// metrics. Per-request failures are recorded in
+    /// `Metrics::failed_requests`; `Err` is returned only when no request
+    /// succeeded (the lowest-id failure, deterministically).
+    ///
+    /// Drop every [`Submitter`] clone before (or while) calling this —
+    /// the stream only ends when the last one drops.
+    pub fn finish(self) -> Result<(Vec<Response>, Arc<Metrics>)> {
+        let Coordinator { metrics, handles, rx, .. } = self;
+        let mut responses = Vec::new();
+        let mut failures: Vec<(u64, Error)> = Vec::new();
+        for (id, res) in rx {
+            match res {
+                Ok(r) => responses.push(r),
+                Err(e) => failures.push((id, e)),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        // deterministic output: order by request id, not completion order
+        responses.sort_by_key(|r| r.id);
+        if responses.is_empty() {
+            failures.sort_by_key(|(id, _)| *id);
+            if let Some((_, e)) = failures.into_iter().next() {
+                return Err(e);
+            }
+        }
+        Ok((responses, metrics))
+    }
+}
+
+/// One worker: pull jobs in priority/deadline order, run the pipeline
+/// (artifact-backed when a runtime is available, host-native otherwise),
+/// convert panics into failed responses, account deadline misses.
+fn worker_loop(
+    worker_id: usize,
+    ingress: &Ingress,
+    cache: &PlaneCache,
+    reference: &ReferenceModels,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    tx: &mpsc::Sender<(u64, Result<Response>)>,
+) {
+    // per-worker context: reference fingerprints hash once, not per request
+    let pipeline = HostPipeline::new(cache, reference, cfg, metrics);
+    // each worker owns its own non-Send PJRT runtime; without one it
+    // serves through the host engine
+    #[cfg(feature = "xla")]
+    let rt = match Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            // the switch must be visible, not silent: every request on
+            // this worker now profiles + transfers through the pure-rust
+            // trainer instead of the AOT artifacts
+            eprintln!(
+                "pt-worker-{worker_id}: artifacts unavailable ({e}); \
+                 serving via the host-native training path"
+            );
+            None
+        }
+    };
+    while let Some(job) = ingress.queue.pop() {
+        let req = &job.request;
+        #[cfg(feature = "xla")]
+        let res = match rt.as_ref() {
+            Some(rt) => catch_unwind(AssertUnwindSafe(|| {
+                handle_request(rt, reference, cfg, metrics, req)
+            }))
+            .unwrap_or_else(|p| Err(panic_error(worker_id, &*p))),
+            None => catch_unwind(AssertUnwindSafe(|| pipeline.handle(req)))
+                .unwrap_or_else(|p| Err(panic_error(worker_id, &*p))),
+        };
+        #[cfg(not(feature = "xla"))]
+        let res = catch_unwind(AssertUnwindSafe(|| pipeline.handle(req)))
+            .unwrap_or_else(|p| Err(panic_error(worker_id, &*p)));
+        // deadline accounting on the simulated arrival clock: a response
+        // produced after `arrival + deadline` is a miss (best-effort jobs
+        // have an unreachable u64::MAX absolute deadline)
+        if res.is_ok() && ingress.queue.now_ms() > job.absolute_deadline_ms() {
+            metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Err(e) = &res {
+            metrics.record_failure(req.id, e);
+        }
+        if tx.send((req.id, res)).is_err() {
+            break;
+        }
+    }
+}
+
+/// Render a caught panic payload as a coordinator error.
+fn panic_error(worker_id: usize, payload: &(dyn std::any::Any + Send)) -> Error {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into());
+    Error::Coordinator(format!("pt-worker-{worker_id}: request handler panicked: {msg}"))
+}
+
+/// Batch compatibility wrapper over the streaming service: submit every
+/// request as an immediately-arriving, best-effort job, close the
+/// stream, and collect. Responses come back sorted by request id; every
+/// per-request failure is recorded in `Metrics` (ids + messages) rather
+/// than silently dropped, and `Err` is returned only when no request
+/// succeeded.
+pub fn serve(
+    cfg: &CoordinatorConfig,
+    reference: &ReferenceModels,
+    requests: Vec<Request>,
+) -> Result<(Vec<Response>, Arc<Metrics>)> {
+    let (coordinator, submitter) = Coordinator::start(cfg, reference)?;
+    for req in requests {
+        submitter.send_request(req)?;
+    }
+    drop(submitter);
+    coordinator.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::{host_cfg, host_reference};
+    use crate::coordinator::Scenario;
+    use crate::device::DeviceKind;
+    use crate::workload::Workload;
+    use std::path::PathBuf;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn host_serve_processes_queue_without_artifacts() {
+        let reference = host_reference();
+        let cfg = CoordinatorConfig {
+            artifacts_dir: PathBuf::from("definitely-missing-artifacts"),
+            prediction_grid: Some(200),
+            transfer_epochs: 4,
+            workers: 2,
+        };
+        let requests: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                device: DeviceKind::OrinAgx,
+                workload: Workload::lstm(),
+                power_budget_w: 1e6,
+                scenario: Scenario::ContinuousLearning,
+                seed: 40 + i,
+            })
+            .collect();
+        let (responses, metrics) = serve(&cfg, &reference, requests).unwrap();
+        assert_eq!(responses.len(), 4);
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        // responses are sorted by id regardless of completion order
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 4);
+        // every distinct seed transfers its own model pair host-natively
+        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 8);
+        for r in &responses {
+            assert_eq!(r.strategy, "powertrain-50(host)");
+        }
+    }
+
+    #[test]
+    fn streaming_submitters_can_be_cloned_across_threads() {
+        let reference = host_reference();
+        let cfg = host_cfg(150);
+        let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let sub = submitter.clone();
+                s.spawn(move || {
+                    for i in 0..3u64 {
+                        sub.send_request(Request {
+                            id: t * 3 + i,
+                            device: DeviceKind::OrinAgx,
+                            workload: Workload::mobilenet(),
+                            power_budget_w: 1e6,
+                            scenario: Scenario::FederatedLearning,
+                            seed: 60 + t, // one fit per producer thread
+                        })
+                        .unwrap();
+                    }
+                });
+            }
+        });
+        drop(submitter); // last live handle: closes the stream
+        let (responses, metrics) = coordinator.finish().unwrap();
+        assert_eq!(responses.len(), 6);
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        // two distinct (workload, seed) keys → two fits, four cache hits
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn all_failed_batch_returns_lowest_id_error() {
+        let reference = host_reference();
+        let cfg = host_cfg(100);
+        let bad = |id: u64| Request {
+            id,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: -1.0, // admission-rejected
+            scenario: Scenario::FederatedLearning,
+            seed: 9,
+        };
+        let err = serve(&cfg, &reference, vec![bad(4), bad(2)]).unwrap_err();
+        assert!(
+            err.to_string().contains("request 2"),
+            "expected the lowest-id failure, got: {err}"
+        );
+    }
+
+    #[test]
+    fn empty_request_stream_is_ok() {
+        let reference = host_reference();
+        let cfg = host_cfg(100);
+        let (responses, metrics) = serve(&cfg, &reference, Vec::new()).unwrap();
+        assert!(responses.is_empty());
+        assert_eq!(metrics.requests_received.load(Ordering::Relaxed), 0);
+    }
+}

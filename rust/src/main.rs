@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use powertrain::coordinator::{
-    serve, CoordinatorConfig, Metrics, ReferenceModels, Request, Scenario,
+    Coordinator, CoordinatorConfig, Job, Metrics, ReferenceModels, Request, Scenario,
 };
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::error::{Error, Result};
@@ -132,7 +132,11 @@ COMMANDS
   optimize                   recommend a power mode under a power budget
       --ref-dir DIR   --workload W   --device D   --budget WATTS
   serve                      coordinator demo: synthetic request arrivals
+                             streamed through the priority/deadline queue
       --requests N (6)   --workers N (1)   --ref-dir DIR
+      --gap-ms N (0)             inter-arrival gap (simulated, per request)
+      --deadline-ms N (0=none)   per-request latency deadline
+      --scenario S (federated)   one-time|fine-tuning|continuous|federated|mix
   experiment <id|all>        regenerate paper exhibits; ids:
                              table1-4 fig2a fig2b fig2c fig6 fig7 fig8
                              fig9a-e fig10-14
@@ -445,7 +449,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 6)?;
     let workers = args.usize_or("workers", 1)?;
     let seed = args.usize_or("seed", 42)? as u64;
+    let gap_ms = args.usize_or("gap-ms", 0)? as u64;
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u64; // 0 = best effort
     let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
+    // scenario choice resolved up front so flag errors surface before
+    // the worker pool spins up
+    let scenarios: Vec<Scenario> = match args.get_or("scenario", "federated").as_str() {
+        "mix" => Scenario::ALL.to_vec(),
+        s => vec![Scenario::parse(s).ok_or_else(|| {
+            Error::Usage(format!(
+                "unknown scenario '{s}' (one-time|fine-tuning|continuous|federated|mix)"
+            ))
+        })?],
+    };
 
     let reference = ReferenceModels::load(&ref_dir).map_err(|e| {
         Error::Usage(format!(
@@ -459,30 +475,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    // synthetic arrival trace: mixed workloads, devices and budgets
+    println!(
+        "streaming {n} synthetic requests into {workers} worker(s) (gap {gap_ms} ms, deadline {}) ...",
+        if deadline_ms > 0 { format!("{deadline_ms} ms") } else { "none".into() }
+    );
+    let t0 = std::time::Instant::now();
+    let (coordinator, submitter) = Coordinator::start(&cfg, &reference)?;
+
+    // synthetic arrival trace: mixed workloads, devices and budgets,
+    // streamed through the priority/deadline queue (simulated arrival
+    // i × gap; the queue holds each job back until its instant passes)
     let mut rng = Rng::new(seed);
     let workloads = Workload::default_five();
     let devices = [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
-    let requests: Vec<Request> = (0..n)
-        .map(|i| {
-            let device = devices[rng.below(devices.len())];
-            let budget_cap = device.spec().peak_power_w * 0.85;
-            Request {
-                id: i as u64,
-                device,
-                workload: workloads[rng.below(workloads.len())],
-                power_budget_w: rng.uniform_range(12.0, budget_cap.max(13.0)),
-                scenario: Scenario::FederatedLearning,
-                seed: seed + i as u64,
-            }
-        })
-        .collect();
-
-    println!("serving {n} synthetic requests on {workers} worker(s) ...");
-    let t0 = std::time::Instant::now();
-    let (responses, metrics) = serve(&cfg, &reference, requests)?;
+    for i in 0..n {
+        let device = devices[rng.below(devices.len())];
+        let budget_cap = device.spec().peak_power_w * 0.85;
+        let request = Request {
+            id: i as u64,
+            device,
+            workload: workloads[rng.below(workloads.len())],
+            power_budget_w: rng.uniform_range(12.0, budget_cap.max(13.0)),
+            scenario: scenarios[rng.below(scenarios.len())],
+            seed: seed + i as u64,
+        };
+        let mut job = Job::arriving(request, i as u64 * gap_ms);
+        if deadline_ms > 0 {
+            job = job.with_deadline(deadline_ms);
+        }
+        submitter.send(job)?;
+    }
+    drop(submitter); // close the stream: workers drain and exit
+    let (responses, metrics) = coordinator.finish()?;
     let wall = t0.elapsed().as_secs_f64();
 
+    // responses arrive sorted by request id, so this table is stable
+    // across runs regardless of worker completion order
     let mut t = TextTable::new(&[
         "id", "strategy", "mode", "pred ms", "obs ms", "obs W", "latency ms",
     ]);
@@ -498,6 +526,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    let failed = metrics.failed_requests();
+    if !failed.is_empty() {
+        println!("failed requests ({}):", failed.len());
+        for (id, msg) in &failed {
+            println!("  #{id}: {msg}");
+        }
+    }
     println!("{}", metrics.render());
     println!(
         "throughput: {:.2} requests/s over {:.1}s wall",

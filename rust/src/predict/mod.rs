@@ -152,6 +152,44 @@ impl GridPredictor {
     }
 }
 
+/// Paired time+power predictor over one shared feature matrix — the
+/// serve-plane build path of the coordinator pipeline. Keeps the two
+/// folded engines together as a unit and shares one f32 output scratch
+/// between them, so building a plane allocates a single staging buffer
+/// instead of one per model.
+#[derive(Debug, Clone)]
+pub struct PlanePredictor {
+    time: GridPredictor,
+    power: GridPredictor,
+}
+
+impl PlanePredictor {
+    pub fn new(time: &Checkpoint, power: &Checkpoint) -> PlanePredictor {
+        PlanePredictor {
+            time: GridPredictor::new(time),
+            power: GridPredictor::new(power),
+        }
+    }
+
+    /// Raw-unit (times, powers) parallel to the matrix rows — bitwise
+    /// identical to running the two [`GridPredictor`]s independently
+    /// (property-tested), just without the second scratch allocation.
+    pub fn predict_features(&self, features: &FeatureMatrix) -> (Vec<f64>, Vec<f64>) {
+        let n = features.len();
+        let mut times = Vec::with_capacity(n);
+        let mut powers = Vec::with_capacity(n);
+        if n == 0 {
+            return (times, powers);
+        }
+        let mut scratch = vec![0.0f32; n];
+        self.time.engine.forward_cols_into(features.cols(), &mut scratch);
+        times.extend(scratch.iter().map(|&v| v as f64));
+        self.power.engine.forward_cols_into(features.cols(), &mut scratch);
+        powers.extend(scratch.iter().map(|&v| v as f64));
+        (times, powers)
+    }
+}
+
 /// Pure-rust fallback prediction (no XLA) — used for verification, by
 /// baselines that don't warrant an artifact round-trip, and by the
 /// coordinator when artifacts are unavailable. One engine build per call;
@@ -271,6 +309,26 @@ mod tests {
         let want = crate::util::stats::mape(&preds, &corpus.times_ms());
         assert_eq!(got, want);
         assert!(got.is_finite());
+    }
+
+    #[test]
+    fn plane_predictor_matches_independent_grid_predictors_exactly() {
+        // the paired path shares a scratch buffer but must stay bitwise
+        // identical to two independent predictions
+        let mut rng = Rng::new(9);
+        let time_ckpt = demo_ckpt();
+        let mut power_ckpt = demo_ckpt();
+        power_ckpt.params = MlpParams::init_he(&mut rng);
+        power_ckpt.target_scaler = StandardScaler { mean: vec![25_000.0], std: vec![9_000.0] };
+        let grid = PowerModeGrid::paper_subset(DeviceKind::OrinAgx);
+        let fm = grid.feature_matrix();
+        let (times, powers) = PlanePredictor::new(&time_ckpt, &power_ckpt).predict_features(&fm);
+        assert_eq!(times, GridPredictor::new(&time_ckpt).predict_features(&fm));
+        assert_eq!(powers, GridPredictor::new(&power_ckpt).predict_features(&fm));
+        // empty matrices degrade cleanly
+        let empty = FeatureMatrix::from_modes(&[]);
+        let (t, p) = PlanePredictor::new(&time_ckpt, &power_ckpt).predict_features(&empty);
+        assert!(t.is_empty() && p.is_empty());
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! Poison-recovering lock helpers for the serving stack.
+//!
+//! A worker thread that panics while holding a shared `Mutex` poisons it;
+//! every later `.lock().unwrap()` then panics too, so one bad request
+//! could cascade into killing every worker and wedging the whole serve
+//! call. The coordinator's shared state (queues, caches, metric vectors)
+//! is kept consistent at every await-free critical section — each guard
+//! scope either completes its update or leaves the structure as it found
+//! it — so recovering the guard from a `PoisonError` is sound: the data
+//! is valid, only the "a panic happened" flag is set. These helpers make
+//! that recovery the default and keep the intent greppable.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` that survives a poisoned mutex.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` that survives a poisoned mutex.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recovers_after_poisoning() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let res = catch_unwind(AssertUnwindSafe(move || {
+            let _g = m2.lock().unwrap();
+            panic!("holder dies");
+        }));
+        assert!(res.is_err());
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // the recovered guard still reads and writes coherent data
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_returns_on_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, timeout) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(5));
+        assert!(timeout.timed_out());
+    }
+}

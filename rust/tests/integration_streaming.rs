@@ -1,0 +1,186 @@
+//! Integration: the streaming coordinator service — singleflight
+//! fitting under concurrent identical load, priority/deadline
+//! scheduling, deterministic response ordering, and the per-request
+//! failure ledger.
+//!
+//! Reference models are cheap untrained checkpoints (the fit dynamics
+//! under test are the coordinator's, not the models'); scales are
+//! reduced so `cargo test` stays fast.
+
+use std::sync::atomic::Ordering;
+
+use powertrain::coordinator::{
+    serve, Coordinator, CoordinatorConfig, Job, ReferenceModels, Request, Scenario,
+};
+use powertrain::device::DeviceKind;
+use powertrain::error::Error;
+use powertrain::nn::{checkpoint::Checkpoint, MlpParams};
+use powertrain::profiler::StandardScaler;
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+fn reference() -> ReferenceModels {
+    let mut rng = Rng::new(17);
+    let ck = |target: &str| Checkpoint {
+        params: MlpParams::init_he(&mut rng),
+        feature_scaler: StandardScaler {
+            mean: vec![6.0, 1400.0, 800.0, 2000.0],
+            std: vec![3.5, 600.0, 350.0, 1100.0],
+        },
+        target_scaler: StandardScaler { mean: vec![30_000.0], std: vec![9_000.0] },
+        target: target.into(),
+        provenance: "streaming-test".into(),
+        val_loss: 0.0,
+    };
+    ReferenceModels { time: ck("time"), power: ck("power") }
+}
+
+fn cfg(grid: usize, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        prediction_grid: Some(grid),
+        transfer_epochs: 6,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn request(id: u64, scenario: Scenario, seed: u64) -> Request {
+    Request {
+        id,
+        device: DeviceKind::OrinAgx,
+        workload: Workload::mobilenet(),
+        power_budget_w: 1e6, // any front point qualifies
+        scenario,
+        seed,
+    }
+}
+
+/// Acceptance: a burst of N identical concurrent requests performs
+/// exactly ONE host fit pair (singleflight) and N−1 cache hits, with all
+/// responses bit-identical and exactly one request charged the profiling
+/// cost.
+#[test]
+fn burst_of_identical_requests_costs_exactly_one_fit() {
+    const N: u64 = 8;
+    let reference = reference();
+    let c = cfg(300, N as usize); // one worker per request: maximal overlap
+    let (coordinator, submitter) = Coordinator::start(&c, &reference).unwrap();
+    for i in 0..N {
+        submitter.send_request(request(i, Scenario::FederatedLearning, 5)).unwrap();
+    }
+    drop(submitter);
+    let (responses, metrics) = coordinator.finish().unwrap();
+    assert_eq!(responses.len(), N as usize);
+
+    // exactly one model build: one miss, one 50-mode profiling run, one
+    // transfer pair — no matter how the N workers interleaved
+    assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), N - 1);
+    assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 50);
+    assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), N - 1);
+
+    // responses are sorted by id and bit-identical across the burst
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..N).collect::<Vec<_>>());
+    for r in &responses[1..] {
+        assert_eq!(r.chosen_mode, responses[0].chosen_mode);
+        assert_eq!(r.predicted_time_ms.to_bits(), responses[0].predicted_time_ms.to_bits());
+        assert_eq!(r.predicted_power_w.to_bits(), responses[0].predicted_power_w.to_bits());
+    }
+    // profiling cost is charged to exactly the request that led the fit
+    let paid = responses.iter().filter(|r| r.profiling_cost_s > 0.0).count();
+    assert_eq!(paid, 1, "exactly one request must be charged the profiling cost");
+}
+
+/// A short federated request submitted *after* a brute-force profiling
+/// job overtakes it: both are parked with the same future arrival, so
+/// the single worker sees them together and must pop by priority.
+#[test]
+fn federated_request_overtakes_queued_brute_force() {
+    let reference = reference();
+    let c = cfg(60, 1);
+    let (coordinator, submitter) = Coordinator::start(&c, &reference).unwrap();
+    // generous arrival margin: both jobs are enqueued (microseconds)
+    // long before they become schedulable (400 ms)
+    submitter
+        .send(Job::arriving(request(0, Scenario::OneTimeTraining, 3), 400))
+        .unwrap();
+    submitter
+        .send(Job::arriving(request(1, Scenario::FederatedLearning, 3), 400))
+        .unwrap();
+    drop(submitter);
+    let (responses, metrics) = coordinator.finish().unwrap();
+    assert_eq!(responses.len(), 2);
+    // the scheduler's observable decision: federated completed first
+    assert_eq!(metrics.completion_order(), vec![1, 0]);
+    // but the returned batch is id-sorted regardless
+    assert_eq!(responses[0].id, 0);
+    assert_eq!(responses[0].strategy, "brute-force");
+    assert_eq!(responses[1].id, 1);
+    assert_eq!(responses[1].strategy, "powertrain-50(host)");
+}
+
+/// Satellite regression: per-request errors beyond the first used to be
+/// dropped and a partially-failed batch still looked fully Ok. Every
+/// failure id + message is now in the metrics ledger.
+#[test]
+fn partial_failures_are_all_reported() {
+    let reference = reference();
+    let c = cfg(200, 2);
+    let requests = vec![
+        request(0, Scenario::FederatedLearning, 7),
+        // infeasible budget: fails at the Pareto query
+        Request { power_budget_w: 2.0, ..request(1, Scenario::FederatedLearning, 7) },
+        // malformed budget: rejected at admission
+        Request { power_budget_w: -1.0, ..request(2, Scenario::FederatedLearning, 7) },
+        request(3, Scenario::FederatedLearning, 8),
+    ];
+    let (responses, metrics) = serve(&c, &reference, requests).unwrap();
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 3], "failed requests must not produce responses");
+    // BOTH failures are recorded, id-ordered, with their messages
+    assert_eq!(metrics.failed_ids(), vec![1, 2]);
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.admission_rejected.load(Ordering::Relaxed), 1);
+    let failed = metrics.failed_requests();
+    assert!(failed.iter().all(|(_, msg)| !msg.is_empty()));
+    // and the render line surfaces them for cmd_serve output
+    assert!(metrics.render().contains("failed ids: [1, 2]"), "{}", metrics.render());
+}
+
+#[test]
+fn all_failed_batch_is_an_error() {
+    let reference = reference();
+    let c = cfg(100, 1);
+    let err = serve(
+        &c,
+        &reference,
+        vec![Request { power_budget_w: f64::NAN, ..request(0, Scenario::FederatedLearning, 3) }],
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::Usage(_)), "admission rejection expected: {err}");
+}
+
+/// Deadline accounting: a cold fit cannot possibly finish within a 0 ms
+/// deadline, while a best-effort job never counts as a miss.
+#[test]
+fn deadline_misses_are_counted() {
+    let reference = reference();
+    let c = CoordinatorConfig { transfer_epochs: 30, ..cfg(400, 1) };
+    let (coordinator, submitter) = Coordinator::start(&c, &reference).unwrap();
+    submitter
+        .send(Job::immediate(request(0, Scenario::FederatedLearning, 21)).with_deadline(0))
+        .unwrap();
+    // best-effort control on the same (already warm) model key
+    submitter.send(Job::immediate(request(1, Scenario::FederatedLearning, 21))).unwrap();
+    // a generous deadline the warm cache-hit path easily meets
+    submitter
+        .send(Job::immediate(request(2, Scenario::FederatedLearning, 21)).with_deadline(60_000))
+        .unwrap();
+    drop(submitter);
+    let (responses, metrics) = coordinator.finish().unwrap();
+    assert_eq!(responses.len(), 3);
+    assert_eq!(metrics.deadline_misses.load(Ordering::Relaxed), 1);
+}
