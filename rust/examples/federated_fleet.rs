@@ -6,20 +6,26 @@
 //! stream of training-round requests for different DNN workloads, each
 //! with its own power budget (battery / thermal constraints). For every
 //! request the coordinator profiles 50 power modes on the target device,
-//! transfer-learns the reference models, predicts the device's grid
-//! through the AOT artifacts, and returns the fastest in-budget mode.
+//! transfer-learns the reference models host-natively, predicts the
+//! device's grid through the batched host engine, and returns the
+//! fastest in-budget mode. Every executed round then reports its
+//! observed outcome back through the lifecycle feedback lane, so the
+//! fleet's models accumulate ground-truth corpora and their drift state
+//! is monitored continuously (no drift is injected here — see the
+//! `continuous_learning` example for a full drift-and-refit run).
 //! The run reports per-request results, budget compliance, decision
 //! latency and service throughput.
+//!
+//! Host-native: runs in the default, dependency-free build.
 //!
 //! Run with:  cargo run --release --example federated_fleet
 //!            (set FLEET_REQUESTS / FLEET_WORKERS to scale)
 
 use powertrain::coordinator::{
-    serve, CoordinatorConfig, ReferenceModels, Request, Scenario,
+    Coordinator, CoordinatorConfig, Feedback, LifecycleConfig, ReferenceModels, Request, Scenario,
 };
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::profiler::Profiler;
-use powertrain::runtime::Runtime;
 use powertrain::sim::TrainerSim;
 use powertrain::util::rng::Rng;
 use powertrain::util::stats;
@@ -34,10 +40,9 @@ fn main() -> powertrain::Result<()> {
     let n_requests = env_usize("FLEET_REQUESTS", 9);
     let workers = env_usize("FLEET_WORKERS", 1);
 
-    // ---- bootstrap the reference models (one-time, offline) ------------
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    // ---- bootstrap the reference models (one-time, offline, host) ------
     let mut rng = Rng::new(1);
-    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(1500, &mut rng);
+    let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(1000, &mut rng);
     let mut profiler = Profiler::new(TrainerSim::new(
         DeviceKind::OrinAgx.spec(),
         Workload::resnet(),
@@ -45,7 +50,7 @@ fn main() -> powertrain::Result<()> {
     ));
     println!("bootstrapping reference models on {} ResNet modes ...", modes.len());
     let ref_corpus = profiler.profile_modes(&modes)?;
-    let reference = ReferenceModels::bootstrap(&rt, &ref_corpus, 120, 1)?;
+    let reference = ReferenceModels::bootstrap_host(&ref_corpus, 100, 1)?;
 
     // ---- synthetic federated round arrivals -----------------------------
     let workloads = Workload::default_five();
@@ -72,9 +77,29 @@ fn main() -> powertrain::Result<()> {
         .collect();
 
     println!("\nserving {n_requests} federated training-round requests on {workers} worker(s)\n");
-    let cfg = CoordinatorConfig { workers, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        workers,
+        lifecycle: Some(LifecycleConfig::default()),
+        ..Default::default()
+    };
     let t0 = std::time::Instant::now();
-    let (mut responses, metrics) = serve(&cfg, &reference, requests.clone())?;
+    let (coordinator, submitter) = Coordinator::start(&cfg, &reference)?;
+    for req in &requests {
+        submitter.send_request(req.clone())?;
+    }
+    // each round executes as recommended; its observed outcome flows back
+    // through the feedback lane and banks into that model's corpus
+    let mut responses = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let Some((_, res)) = coordinator.recv_result() else { break };
+        if let Ok(resp) = res {
+            let req = requests[resp.id as usize].clone();
+            submitter.report(Feedback::from_response(req, &resp))?;
+            responses.push(resp);
+        }
+    }
+    drop(submitter);
+    let (_, metrics) = coordinator.finish()?;
     let wall = t0.elapsed().as_secs_f64();
     responses.sort_by_key(|r| r.id);
 

@@ -1,0 +1,75 @@
+//! CI bench-regression gate.
+//!
+//! Compares a live `BENCH_hotpaths.json` (written by `cargo bench
+//! --bench bench_hotpaths`) against the committed `BENCH_baseline.json`
+//! and exits non-zero when a tracked hot path regressed beyond the
+//! tolerance or disappeared from the run. Dependency-free (the bundled
+//! `util::json` parser); the comparison rules live — unit-tested — in
+//! `util::bench::gate`.
+//!
+//! Usage: bench_gate <baseline.json> <current.json> [tolerance]
+//!   tolerance: allowed fractional slowdown, default 0.30 (= +30%)
+//!
+//! Baseline refresh: see README "Bench baseline".
+
+use std::process::ExitCode;
+
+use powertrain::util::bench::{gate, GATE_DEFAULT_TOLERANCE};
+use powertrain::util::json::Value;
+
+fn run(args: &[String]) -> Result<bool, String> {
+    let (baseline_path, current_path) = match (args.first(), args.get(1)) {
+        (Some(b), Some(c)) => (b, c),
+        _ => {
+            return Err("usage: bench_gate <baseline.json> <current.json> [tolerance]".into());
+        }
+    };
+    let tolerance = match args.get(2) {
+        None => GATE_DEFAULT_TOLERANCE,
+        Some(t) => t
+            .parse::<f64>()
+            .map_err(|_| format!("tolerance must be a number, got '{t}'"))?,
+    };
+    let load = |path: &str| -> Result<Value, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Value::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))
+    };
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    let report = gate(&baseline, &current, tolerance).map_err(|e| e.to_string())?;
+
+    println!(
+        "bench gate: {} tracked bench(es), tolerance +{:.0}%",
+        report.checked,
+        tolerance * 100.0
+    );
+    for line in &report.lines {
+        println!("  {line}");
+    }
+    if report.passed() {
+        println!("bench gate: PASS");
+        Ok(true)
+    } else {
+        for f in &report.failures {
+            eprintln!("bench gate: {f}");
+        }
+        eprintln!(
+            "bench gate: FAIL ({} problem(s)). If the slowdown is intended, refresh \
+             BENCH_baseline.json per the README's baseline-refresh procedure.",
+            report.failures.len()
+        );
+        Ok(false)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(msg) => {
+            eprintln!("bench gate: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

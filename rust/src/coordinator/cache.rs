@@ -27,6 +27,16 @@
 //!   ([`Coordinator`](crate::coordinator::Coordinator) / legacy
 //!   [`serve`](crate::coordinator::serve) call).
 //!
+//! **Versioned publishes**: model slots additionally support atomic
+//! *republication* ([`PlaneCache::publish_models`]) — the model
+//! lifecycle's background warm refit swaps a Ready slot for a refreshed
+//! pair stamped with the next version and drops the superseded planes
+//! ([`PlaneCache::invalidate_planes`]), while
+//! [`PlaneCache::peek_models`] lets the feedback lane read the resident
+//! pair without ever building or blocking. Serving stays tear-free by
+//! construction: planes are keyed by the checkpoint fingerprints of
+//! whichever model pair a request resolved.
+//!
 //! **Singleflight**: each map slot is either `Ready` (the built value) or
 //! `InFlight` (a condvar the leader signals on completion). The first
 //! requester of a key becomes the *leader* and builds outside the map
@@ -51,7 +61,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::coordinator::{Metrics, Strategy};
+use crate::coordinator::{Metrics, Request, Strategy};
 use crate::device::{DeviceKind, FeatureMatrix, PowerModeGrid};
 use crate::error::{Error, Result};
 use crate::nn::checkpoint::Checkpoint;
@@ -132,9 +142,39 @@ pub struct ModelKey {
     pub ref_power_fp: u64,
 }
 
+impl ModelKey {
+    /// The cache identity of the model pair serving `req` — the single
+    /// derivation shared by the pipeline's model-acquisition stage and
+    /// the lifecycle's feedback lane, so an observed outcome can never be
+    /// attributed to a different entry than the one that served the
+    /// request. `prediction_grid` / `epochs` come from the coordinator
+    /// config; `ref_fps` are the reference checkpoints' content
+    /// fingerprints.
+    pub fn for_request(
+        req: &Request,
+        strategy: Strategy,
+        prediction_grid: Option<usize>,
+        epochs: usize,
+        ref_fps: (u64, u64),
+    ) -> ModelKey {
+        ModelKey {
+            grid: GridKey::for_request(req.device, prediction_grid, req.seed),
+            workload: req.workload,
+            seed: req.seed,
+            strategy,
+            epochs,
+            ref_time_fp: ref_fps.0,
+            ref_power_fp: ref_fps.1,
+        }
+    }
+}
+
 /// A host-trained (time, power) checkpoint pair plus the bookkeeping the
 /// serve path reports: the checkpoints' content fingerprints (the plane
-/// key halves) and what the one-time profiling cost to build them was.
+/// key halves), what the one-time profiling cost to build them was, the
+/// fit-time validation MAPEs (the drift monitor's baseline) and the
+/// publication version (1 = first fit; warm refits bump it via
+/// [`PlaneCache::publish_models`]).
 #[derive(Debug, Clone)]
 pub struct HostModels {
     pub time: Checkpoint,
@@ -143,12 +183,46 @@ pub struct HostModels {
     pub power_fp: u64,
     /// Simulated device-seconds of online profiling this fit consumed.
     pub profiling_cost_s: f64,
+    /// Fit-time validation MAPE (%) per target at the best epoch — the
+    /// accuracy this pair shipped with, and the baseline serving-time
+    /// drift is measured against. `NaN` when unknown (the lifecycle then
+    /// falls back to its absolute floor threshold).
+    pub val_mape_time_pct: f64,
+    pub val_mape_power_pct: f64,
+    /// Monotonic publication version within a Ready slot's lifetime:
+    /// fresh builds carry 1, each [`PlaneCache::publish_models`] stamps
+    /// `previous + 1`. (Eviction forgets history — the lifecycle's
+    /// per-model tracker owns cross-eviction monotonicity.)
+    pub version: u64,
 }
 
 impl HostModels {
     pub fn new(time: Checkpoint, power: Checkpoint, profiling_cost_s: f64) -> HostModels {
         let (time_fp, power_fp) = (time.fingerprint(), power.fingerprint());
-        HostModels { time, power, time_fp, power_fp, profiling_cost_s }
+        HostModels {
+            time,
+            power,
+            time_fp,
+            power_fp,
+            profiling_cost_s,
+            val_mape_time_pct: f64::NAN,
+            val_mape_power_pct: f64::NAN,
+            version: 1,
+        }
+    }
+
+    /// Attach the fit-time validation MAPEs (%) — the drift baseline.
+    pub fn with_validation(mut self, time_pct: f64, power_pct: f64) -> HostModels {
+        self.val_mape_time_pct = time_pct;
+        self.val_mape_power_pct = power_pct;
+        self
+    }
+
+    /// The worse of the pair's fit-time validation MAPEs, NaN-tolerant
+    /// (`NaN` only when *both* are unknown): a recommendation is wrong if
+    /// either model is wrong, so drift thresholds key off the weaker fit.
+    pub fn baseline_mape_pct(&self) -> f64 {
+        self.val_mape_time_pct.max(self.val_mape_power_pct)
     }
 }
 
@@ -301,7 +375,8 @@ where
         match existing {
             Some(f) => f,
             None => {
-                // the map grows only here, so the bound is enforced here
+                // every map-growing path (here and `publish_models`'s
+                // re-insert arm) enforces the bound before inserting
                 evict_if_full(&mut m, cap);
                 let f = Flight::new();
                 m.insert(key, Slot::InFlight(Arc::clone(&f)));
@@ -453,6 +528,69 @@ impl PlaneCache {
             waits: &metrics.singleflight_waits,
         };
         get_or_build(&self.models, MAX_MODELS, key, Some(counters), build)
+    }
+
+    /// Resident model pair for `key` **without** building or waiting:
+    /// `None` when the key is absent or its build is still in flight.
+    /// The lifecycle's feedback lane reads through this — an observation
+    /// must never trigger (or block on) a fit.
+    pub fn peek_models(&self, key: &ModelKey) -> Option<Arc<HostModels>> {
+        match lock_unpoisoned(&self.models).get(key) {
+            Some(Slot::Ready(v)) => Some(Arc::clone(v)),
+            _ => None,
+        }
+    }
+
+    /// Atomically publish a refreshed model pair (a warm refit) for
+    /// `key`. The Ready slot is replaced under the map lock in one
+    /// operation and the new entry is stamped with `previous version + 1`
+    /// (1 if the slot was empty), so the slot's version sequence is
+    /// monotonic and a concurrent request observes either the old pair or
+    /// the new pair — never a torn state. (Planes are keyed by the pair's
+    /// checkpoint fingerprints: whichever pair a request resolved, the
+    /// plane it then resolves was predicted by exactly that pair.)
+    ///
+    /// Returns the resident entry, or `None` when the slot is currently
+    /// `InFlight`: a fresh build owns the key, its waiters are parked on
+    /// the flight, and clobbering the slot would orphan them — the
+    /// caller treats the refit as superseded and may retry later.
+    pub fn publish_models(&self, key: ModelKey, mut models: HostModels) -> Option<Arc<HostModels>> {
+        let mut m = lock_unpoisoned(&self.models);
+        match m.get(&key) {
+            Some(Slot::InFlight(_)) => return None,
+            Some(Slot::Ready(prev)) => models.version = prev.version + 1,
+            None => {
+                // evicted mid-refit: the publish re-inserts a fresh key,
+                // so it must honor the same bound as get_or_build
+                evict_if_full(&mut m, MAX_MODELS);
+                models.version = 1;
+            }
+        }
+        let arc = Arc::new(models);
+        m.insert(key, Slot::Ready(Arc::clone(&arc)));
+        Some(arc)
+    }
+
+    /// Drop every resident plane predicted by the checkpoint pair
+    /// `(time_fp, power_fp)` — the invalidation a model republish
+    /// performs so superseded planes free their memory immediately
+    /// instead of lingering until eviction. In-flight plane builds are
+    /// left alone: each was keyed by whichever model pair its request
+    /// resolved, so it stays self-consistent. Returns how many planes
+    /// were dropped.
+    pub fn invalidate_planes(&self, time_fp: u64, power_fp: u64) -> usize {
+        let mut m = lock_unpoisoned(&self.planes);
+        let victims: Vec<PlaneKey> = m
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready(_) if k.time_fp == time_fp && k.power_fp == power_fp => Some(*k),
+                _ => None,
+            })
+            .collect();
+        for k in &victims {
+            m.remove(k);
+        }
+        victims.len()
     }
 
     /// (resident grids, resident planes, resident model pairs) — for
@@ -635,6 +773,89 @@ mod tests {
         }
         let (_, _, models) = cache.sizes();
         assert!(models <= MAX_MODELS, "{models} model pairs resident");
+    }
+
+    #[test]
+    fn peek_never_builds_and_sees_only_ready_slots() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(20);
+        assert!(cache.peek_models(&key).is_none());
+        let (built, _) = cache.models(key, &metrics, || Ok(demo_models(1.0))).unwrap();
+        let peeked = cache.peek_models(&key).expect("ready slot is peekable");
+        assert!(Arc::ptr_eq(&built, &peeked));
+        // peeking is not a hit/miss event
+        assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn publish_stamps_monotonic_versions() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(21);
+        let (v1, _) = cache.models(key, &metrics, || Ok(demo_models(1.0))).unwrap();
+        assert_eq!(v1.version, 1, "fresh builds are version 1");
+        let v2 = cache.publish_models(key, demo_models(2.0)).unwrap();
+        assert_eq!(v2.version, 2);
+        let v3 = cache.publish_models(key, demo_models(3.0)).unwrap();
+        assert_eq!(v3.version, 3);
+        // the published pair is what later requests resolve, with no build
+        let (resident, built) = cache
+            .models(key, &metrics, || panic!("published slot must hit"))
+            .unwrap();
+        assert!(!built);
+        assert!(Arc::ptr_eq(&resident, &v3));
+        // publishing into an empty slot restarts the slot's sequence at 1
+        let other = model_key(22);
+        assert_eq!(cache.publish_models(other, demo_models(4.0)).unwrap().version, 1);
+    }
+
+    #[test]
+    fn publish_never_clobbers_an_inflight_build() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(23);
+        let in_build = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                cache.models(key, &metrics, || {
+                    in_build.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(120));
+                    Ok(demo_models(5.0))
+                })
+            });
+            while !in_build.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            // a refit landing mid-build is refused: the flight's waiters
+            // must receive the leader's publication, not be orphaned
+            assert!(cache.publish_models(key, demo_models(6.0)).is_none());
+            let (m, built) = leader.join().unwrap().unwrap();
+            assert!(built);
+            assert_eq!(m.version, 1, "the leader's build is the resident entry");
+            assert!(Arc::ptr_eq(&cache.peek_models(&key).unwrap(), &m));
+        });
+    }
+
+    #[test]
+    fn invalidate_planes_drops_only_the_superseded_pair() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let gkey = GridKey::for_request(DeviceKind::OrinAgx, None, 1);
+        let g = cache.grid(gkey, || entry(30));
+        let old = PlaneKey { grid: gkey, time_fp: 10, power_fp: 11 };
+        let other = PlaneKey { grid: gkey, time_fp: 12, power_fp: 13 };
+        cache.plane(old, &metrics, || plane_over(Arc::clone(&g)));
+        cache.plane(other, &metrics, || plane_over(Arc::clone(&g)));
+        assert_eq!(cache.invalidate_planes(10, 11), 1);
+        let (_, planes, _) = cache.sizes();
+        assert_eq!(planes, 1, "only the superseded pair's plane is dropped");
+        // the surviving plane still hits
+        cache.plane(other, &metrics, || panic!("must not rebuild"));
+        // and the dropped key rebuilds on next touch
+        cache.plane(old, &metrics, || plane_over(Arc::clone(&g)));
+        assert_eq!(metrics.plane_cache_misses.load(Ordering::Relaxed), 3);
     }
 
     #[test]

@@ -1,0 +1,815 @@
+//! Model lifecycle: the serve → observe → refit loop.
+//!
+//! A transferred model pair is only as good as the workload it was fit
+//! on stays representative. The paper's continuous-learning and
+//! federated scenarios (Table 1) deliver a *stream* of training rounds
+//! whose executed outcomes are exactly the ground truth needed to detect
+//! when a cached model has drifted — minibatch time/power distributions
+//! shift with thermal state and workload phase (Prashanthi et al.,
+//! "Characterizing the Performance of Accelerated Jetson Edge Devices
+//! for Training DNN Models"). This module closes that loop:
+//!
+//! 1. **Feedback lane** — callers report observed `(mode, time_ms,
+//!    power_mw)` outcomes of executed rounds ([`Feedback`], surfaced as
+//!    [`Submitter::report`](crate::coordinator::Submitter::report)).
+//!    Each observation is attributed to the [`ModelKey`] that served the
+//!    round (the same derivation the pipeline uses, so attribution can't
+//!    drift), banked into a bounded per-model
+//!    [`RollingCorpus`] (recency window + reservoir), and scored
+//!    against the resident model's predictions.
+//! 2. **Drift monitor** — a per-model [`DriftMonitor`] tracks the
+//!    rolling raw-unit MAPE of cached predictions vs. observations with
+//!    hysteresis: it trips `Fresh/Suspect → Stale` only when the rolling
+//!    MAPE *strictly exceeds* the trip threshold (by default
+//!    [`LifecycleConfig::drift_factor`] × the pair's fit-time validation
+//!    MAPE, floored at [`LifecycleConfig::floor_mape_pct`]) over at
+//!    least [`LifecycleConfig::min_observations`] observations; between
+//!    the recover and trip thresholds it reports `Suspect` without
+//!    tripping, so boundary MAPE cannot flap the state; and once `Stale`
+//!    it stays `Stale` until a refit actually publishes — recovery
+//!    without refreshing the weights would be wishful.
+//! 3. **Non-blocking warm refit** — a trip enqueues the key to a
+//!    background refit worker (one per lifecycle; the `refit_inflight`
+//!    marker makes the enqueue singleflight — repeated drifted
+//!    observations cost one refit, not one per observation). The worker
+//!    warm-starts from the *current* checkpoints
+//!    ([`refit_host`]: no surgery, no freeze, short epoch budget) on the
+//!    rolling corpus, then atomically republishes the pair with the next
+//!    version ([`PlaneCache::publish_models`]) and drops the superseded
+//!    planes ([`PlaneCache::invalidate_planes`]). Serving never blocks
+//!    on a refit — workers keep answering from the old version until the
+//!    publish lands (counted as `stale_served`) — and never observes a
+//!    torn model/plane pair, because planes are keyed by the checkpoint
+//!    fingerprints of whichever pair a request resolved.
+//!
+//! Everything is deterministic given the observation stream: corpora
+//! sample reservoir slots from a seeded [`Rng`](crate::util::rng::Rng),
+//! refits derive their seed from the key and the outgoing version, and
+//! `HostTrainer` fits are bit-deterministic per seed.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::cache::{HostModels, ModelKey, PlaneCache};
+use crate::coordinator::{
+    CoordinatorConfig, Metrics, ReferenceModels, Request, Response, Strategy,
+};
+use crate::device::PowerMode;
+use crate::error::{Error, Result};
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::host_mlp;
+use crate::profiler::{Record, RollingCorpus};
+use crate::train::transfer::refit_host;
+use crate::train::{Target, TrainConfig};
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
+
+/// A refit needs a train/validation split, so fewer resident
+/// observations than this keeps a stale model waiting for more feedback.
+const MIN_REFIT_ROWS: usize = 2;
+
+/// Lifecycle tuning. The defaults suit the simulated fleet; `serve
+/// --drift-mape` maps to [`LifecycleConfig::trip_override_pct`].
+#[derive(Debug, Clone, Copy)]
+pub struct LifecycleConfig {
+    /// Trip when the rolling MAPE exceeds `drift_factor ×` the pair's
+    /// fit-time validation MAPE (the accuracy it shipped with).
+    pub drift_factor: f64,
+    /// Absolute floor (percent) under the factor rule — small fit-time
+    /// MAPEs must not make ordinary simulator noise look like drift.
+    pub floor_mape_pct: f64,
+    /// Absolute trip threshold override (percent); when set, the factor
+    /// and floor are ignored.
+    pub trip_override_pct: Option<f64>,
+    /// Observations required in the rolling window before drift can trip.
+    pub min_observations: usize,
+    /// Hysteresis: the monitor reports `Fresh` again only below
+    /// `recover_ratio × trip`; between the two it reports `Suspect`
+    /// without tripping.
+    pub recover_ratio: f64,
+    /// Rolling APE window per model (observations).
+    pub window: usize,
+    /// Rolling feedback corpus: total capacity and the always-kept
+    /// recency prefix (see [`RollingCorpus`]).
+    pub corpus_cap: usize,
+    pub corpus_recent: usize,
+    /// Warm-refit epoch budget — short by design: the fit starts from
+    /// the deployed weights.
+    pub refit_epochs: usize,
+    /// Artificial latency (ms) added to each background refit. 0 in
+    /// production; tests and demos raise it so "serving never blocks on
+    /// a refit" is deterministically observable.
+    pub refit_delay_ms: u64,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            drift_factor: 2.0,
+            floor_mape_pct: 10.0,
+            trip_override_pct: None,
+            min_observations: 8,
+            recover_ratio: 0.5,
+            window: 64,
+            corpus_cap: 128,
+            corpus_recent: 64,
+            refit_epochs: 40,
+            refit_delay_ms: 0,
+        }
+    }
+}
+
+impl LifecycleConfig {
+    /// Resolve the (trip, recover, min-observations) thresholds for a
+    /// model with the given fit-time baseline MAPE (%). A `NaN` baseline
+    /// (validation MAPE unknown) degrades to the absolute floor.
+    pub fn thresholds(&self, baseline_mape_pct: f64) -> DriftThresholds {
+        let trip_pct = match self.trip_override_pct {
+            Some(t) => t,
+            // f64::max ignores NaN, so an unknown baseline yields the floor
+            None => (self.drift_factor * baseline_mape_pct).max(self.floor_mape_pct),
+        };
+        DriftThresholds {
+            trip_pct,
+            recover_pct: trip_pct * self.recover_ratio,
+            min_observations: self.min_observations,
+        }
+    }
+}
+
+/// Resolved drift thresholds for one model (see
+/// [`LifecycleConfig::thresholds`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftThresholds {
+    pub trip_pct: f64,
+    pub recover_pct: f64,
+    pub min_observations: usize,
+}
+
+/// Drift state of one served model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelState {
+    /// Rolling MAPE below the recover threshold (or not enough
+    /// observations yet): the model explains what it serves.
+    Fresh,
+    /// Rolling MAPE between the recover and trip thresholds: degraded
+    /// but within hysteresis — watched, not refit.
+    Suspect,
+    /// Rolling MAPE tripped the threshold: a warm refit is (or will be)
+    /// in flight; served responses count as `stale_served` until the new
+    /// version publishes.
+    Stale,
+}
+
+impl ModelState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelState::Fresh => "fresh",
+            ModelState::Suspect => "suspect",
+            ModelState::Stale => "stale",
+        }
+    }
+}
+
+/// The pure drift state machine: a bounded window of per-observation
+/// APE samples (%) and the `Fresh|Suspect|Stale` state with hysteresis.
+/// Kept free of locks, clocks and models so the transition rules are
+/// directly unit-testable with exact inputs.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    state: ModelState,
+    window: VecDeque<f64>,
+    cap: usize,
+}
+
+impl DriftMonitor {
+    pub fn new(window: usize) -> DriftMonitor {
+        DriftMonitor {
+            state: ModelState::Fresh,
+            window: VecDeque::with_capacity(window.max(1) + 1),
+            cap: window.max(1),
+        }
+    }
+
+    pub fn state(&self) -> ModelState {
+        self.state
+    }
+
+    /// Mean APE (%) over the rolling window; `NaN` when empty.
+    pub fn rolling_mape_pct(&self) -> f64 {
+        if self.window.is_empty() {
+            return f64::NAN;
+        }
+        self.window.iter().sum::<f64>() / self.window.len() as f64
+    }
+
+    /// Record one observation's APE (%) and advance the state machine.
+    /// Returns `true` exactly when this observation tripped
+    /// `Fresh/Suspect → Stale`.
+    ///
+    /// Rules (all on the rolling mean, `m`):
+    /// * fewer than `min_observations` samples → state unchanged. The
+    ///   quorum is clamped to the window capacity: a window smaller than
+    ///   `min_observations` can never fill past its cap, and an
+    ///   unreachable quorum would silently disable drift detection
+    ///   forever;
+    /// * `Stale` is latched: it clears only via [`DriftMonitor::reset`]
+    ///   (a refit published) — observations cannot talk a stale model
+    ///   fresh again;
+    /// * otherwise `m > trip` (strictly) → `Stale`; `m > recover` →
+    ///   `Suspect`; else `Fresh`. Exactly-at-threshold is *not* a trip,
+    ///   and the `(recover, trip]` band absorbs boundary oscillation
+    ///   without flapping.
+    pub fn observe_ape_pct(&mut self, ape_pct: f64, th: &DriftThresholds) -> bool {
+        self.window.push_back(ape_pct);
+        if self.window.len() > self.cap {
+            self.window.pop_front();
+        }
+        if self.window.len() < th.min_observations.min(self.cap) {
+            return false;
+        }
+        let m = self.rolling_mape_pct();
+        match self.state {
+            ModelState::Stale => false,
+            ModelState::Fresh | ModelState::Suspect => {
+                if m > th.trip_pct {
+                    self.state = ModelState::Stale;
+                    true
+                } else {
+                    self.state = if m > th.recover_pct {
+                        ModelState::Suspect
+                    } else {
+                        ModelState::Fresh
+                    };
+                    false
+                }
+            }
+        }
+    }
+
+    /// A refit published: back to `Fresh` with an empty window (old APEs
+    /// were measured against the superseded weights).
+    pub fn reset(&mut self) {
+        self.state = ModelState::Fresh;
+        self.window.clear();
+    }
+
+    /// Downgrade a latched `Stale` to `Suspect` (a refit was superseded
+    /// rather than published) so a later threshold breach can re-trip.
+    fn soften(&mut self) {
+        if self.state == ModelState::Stale {
+            self.state = ModelState::Suspect;
+        }
+    }
+}
+
+/// One observed outcome of an executed training round, reported back
+/// through the feedback lane.
+#[derive(Debug, Clone)]
+pub struct Feedback {
+    /// The request whose recommendation the round executed — its
+    /// identity resolves the [`ModelKey`] the outcome is attributed to.
+    pub request: Request,
+    /// Power mode the round actually ran in.
+    pub mode: PowerMode,
+    /// Observed mean minibatch time (ms).
+    pub time_ms: f64,
+    /// Observed mean power (mW).
+    pub power_mw: f64,
+}
+
+impl Feedback {
+    /// Feedback echoing the coordinator's own post-hoc observation — the
+    /// common case when the round executed as recommended.
+    pub fn from_response(request: Request, resp: &Response) -> Feedback {
+        Feedback {
+            request,
+            mode: resp.chosen_mode,
+            time_ms: resp.observed_time_ms,
+            power_mw: resp.observed_power_w * 1000.0,
+        }
+    }
+}
+
+/// Externally visible lifecycle status of one served model (reports,
+/// examples, tests).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelStatus {
+    pub state: ModelState,
+    /// Publication version (1 = first fit; bumped per published refit).
+    /// 0 only when feedback arrived before any fit existed.
+    pub version: u64,
+    /// Rolling MAPE (%) over the feedback window; `NaN` before the first
+    /// scored observation.
+    pub rolling_mape_pct: f64,
+    /// Feedback observations attributed to this model so far.
+    pub observations: u64,
+    /// The trip threshold (%) currently in force.
+    pub trip_pct: f64,
+}
+
+/// Per-model lifecycle bookkeeping.
+#[derive(Debug)]
+struct Tracker {
+    monitor: DriftMonitor,
+    /// Authoritative monotonic version (survives cache eviction, unlike
+    /// the slot's own counter).
+    version: u64,
+    /// Fit-time validation MAPE baseline (`NaN` until a model is seen).
+    baseline_mape_pct: f64,
+    corpus: RollingCorpus,
+    observations: u64,
+    /// Singleflight marker: at most one queued/running refit per model.
+    refit_inflight: bool,
+}
+
+/// The lifecycle manager: per-model drift trackers, the feedback entry
+/// point, and the background refit worker. One per
+/// [`Coordinator`](crate::coordinator::Coordinator) (shared by its
+/// workers and submitters via `Arc`), or embed one directly next to a
+/// [`PlaneCache`] for library use.
+#[derive(Debug)]
+pub struct Lifecycle {
+    cfg: LifecycleConfig,
+    prediction_grid: Option<usize>,
+    transfer_epochs: usize,
+    ref_fps: (u64, u64),
+    cache: Arc<PlaneCache>,
+    metrics: Arc<Metrics>,
+    trackers: Mutex<HashMap<ModelKey, Tracker>>,
+    /// `None` once shut down (or if the worker failed to spawn).
+    refit_tx: Mutex<Option<mpsc::Sender<ModelKey>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    /// Queued + running refits, for [`Lifecycle::wait_idle`].
+    pending: Mutex<u64>,
+    pending_cv: Condvar,
+}
+
+impl Lifecycle {
+    /// Build the manager and spawn its background refit worker. `coord`
+    /// supplies the model-key derivation inputs (prediction grid,
+    /// transfer epochs); `reference` supplies the fingerprints.
+    pub fn start(
+        cfg: LifecycleConfig,
+        coord: &CoordinatorConfig,
+        reference: &ReferenceModels,
+        cache: Arc<PlaneCache>,
+        metrics: Arc<Metrics>,
+    ) -> Arc<Lifecycle> {
+        let (tx, rx) = mpsc::channel::<ModelKey>();
+        let lifecycle = Arc::new(Lifecycle {
+            cfg,
+            prediction_grid: coord.prediction_grid,
+            transfer_epochs: coord.transfer_epochs,
+            ref_fps: reference.fingerprints(),
+            cache,
+            metrics,
+            trackers: Mutex::new(HashMap::new()),
+            refit_tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(None),
+            pending: Mutex::new(0),
+            pending_cv: Condvar::new(),
+        });
+        let for_worker = Arc::clone(&lifecycle);
+        let spawned = std::thread::Builder::new()
+            .name("pt-refit".into())
+            .spawn(move || {
+                for key in rx {
+                    // a panicking refit must not kill the worker: clear
+                    // the singleflight marker so a later trip retries
+                    if catch_unwind(AssertUnwindSafe(|| for_worker.refit(key))).is_err() {
+                        for_worker.clear_inflight(&key);
+                    }
+                    for_worker.finish_pending();
+                }
+            });
+        match spawned {
+            Ok(h) => *lock_unpoisoned(&lifecycle.worker) = Some(h),
+            Err(e) => {
+                // degraded but visible: drift is still tracked and
+                // reported, refreshes just never run
+                eprintln!("pt-refit: could not spawn the refit worker ({e}); warm refits disabled");
+                *lock_unpoisoned(&lifecycle.refit_tx) = None;
+            }
+        }
+        lifecycle
+    }
+
+    /// The [`ModelKey`] serving `req` — `None` for brute-force rounds,
+    /// which carry no model to age.
+    pub fn key_for(&self, req: &Request) -> Option<ModelKey> {
+        let strategy = Strategy::for_scenario(req.scenario);
+        if matches!(strategy, Strategy::BruteForce) {
+            return None;
+        }
+        Some(ModelKey::for_request(
+            req,
+            strategy,
+            self.prediction_grid,
+            self.transfer_epochs,
+            self.ref_fps,
+        ))
+    }
+
+    /// Feed one executed round's observed outcome into the lifecycle:
+    /// bank it in the model's rolling corpus, score it against the
+    /// resident predictions, advance the drift monitor, and (on a trip)
+    /// enqueue exactly one background warm refit. Cheap — two scalar
+    /// forward passes plus map updates — and never builds or blocks on a
+    /// fit, so callers may report from the serving path.
+    pub fn observe(&self, fb: &Feedback) -> Result<()> {
+        if !(fb.time_ms.is_finite() && fb.time_ms > 0.0)
+            || !(fb.power_mw.is_finite() && fb.power_mw > 0.0)
+        {
+            return Err(Error::Coordinator(format!(
+                "feedback for request {} rejected: observed time/power must be positive \
+                 and finite, got {} ms / {} mW",
+                fb.request.id, fb.time_ms, fb.power_mw
+            )));
+        }
+        let Some(key) = self.key_for(&fb.request) else {
+            return Ok(()); // brute-force: observed optimum, no model to age
+        };
+        // resolve the resident pair before taking the tracker lock (the
+        // cache lock is never held together with the tracker lock)
+        let models = self.cache.peek_models(&key);
+        self.metrics.feedback_observations.fetch_add(1, Ordering::Relaxed);
+
+        let mut trackers = lock_unpoisoned(&self.trackers);
+        let tracker = trackers.entry(key).or_insert_with(|| Tracker {
+            monitor: DriftMonitor::new(self.cfg.window),
+            version: models.as_ref().map_or(0, |m| m.version),
+            baseline_mape_pct: f64::NAN,
+            corpus: RollingCorpus::new(
+                fb.request.device,
+                fb.request.workload,
+                self.cfg.corpus_cap,
+                self.cfg.corpus_recent,
+                fb.request.seed,
+            ),
+            observations: 0,
+            refit_inflight: false,
+        });
+        tracker.observations += 1;
+        // ground truth banks even before a model exists — it's the
+        // corpus a future refit trains on (feedback costs no profiling)
+        tracker.corpus.push(Record {
+            mode: fb.mode,
+            time_ms: fb.time_ms,
+            power_mw: fb.power_mw,
+            cost_s: 0.0,
+        });
+        let Some(models) = models else {
+            return Ok(());
+        };
+        if tracker.version < models.version {
+            tracker.version = models.version;
+        }
+        if tracker.baseline_mape_pct.is_nan() {
+            tracker.baseline_mape_pct = models.baseline_mape_pct();
+        }
+
+        let ape_t = ape_pct(predict_one(&models.time, &fb.mode), fb.time_ms);
+        let ape_p = ape_pct(predict_one(&models.power, &fb.mode), fb.power_mw);
+        let th = self.cfg.thresholds(tracker.baseline_mape_pct);
+        // the pair drifts when either model does: score the worse APE
+        if tracker.monitor.observe_ape_pct(ape_t.max(ape_p), &th) {
+            self.metrics.drift_trips.fetch_add(1, Ordering::Relaxed);
+        }
+        if tracker.monitor.state() == ModelState::Stale
+            && !tracker.refit_inflight
+            && tracker.corpus.len() >= MIN_REFIT_ROWS
+            && self.enqueue_refit(key)
+        {
+            tracker.refit_inflight = true;
+        }
+        Ok(())
+    }
+
+    /// Lifecycle status of the model serving `req` (brute-force → `None`;
+    /// a model that was fit but never observed reports `Fresh` at its
+    /// resident version).
+    pub fn status(&self, req: &Request) -> Option<ModelStatus> {
+        let key = self.key_for(req)?;
+        {
+            let trackers = lock_unpoisoned(&self.trackers);
+            if let Some(t) = trackers.get(&key) {
+                let th = self.cfg.thresholds(t.baseline_mape_pct);
+                return Some(ModelStatus {
+                    state: t.monitor.state(),
+                    version: t.version,
+                    rolling_mape_pct: t.monitor.rolling_mape_pct(),
+                    observations: t.observations,
+                    trip_pct: th.trip_pct,
+                });
+            }
+        }
+        self.cache.peek_models(&key).map(|m| ModelStatus {
+            state: ModelState::Fresh,
+            version: m.version,
+            rolling_mape_pct: f64::NAN,
+            observations: 0,
+            trip_pct: self.cfg.thresholds(m.baseline_mape_pct()).trip_pct,
+        })
+    }
+
+    /// Pipeline hook: a response was produced from `key`'s resident
+    /// model; count it as `stale_served` if the monitor currently marks
+    /// that model `Stale`.
+    pub(crate) fn note_served(&self, key: &ModelKey) {
+        let trackers = lock_unpoisoned(&self.trackers);
+        if let Some(t) = trackers.get(key) {
+            if t.monitor.state() == ModelState::Stale {
+                self.metrics.stale_served.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Block until no refit is queued or running — deterministic
+    /// sequencing for tests, demos and shutdown.
+    pub fn wait_idle(&self) {
+        let mut p = lock_unpoisoned(&self.pending);
+        while *p > 0 {
+            p = wait_unpoisoned(&self.pending_cv, p);
+        }
+    }
+
+    /// Close the refit queue, drain what's enqueued, and join the
+    /// worker. Idempotent; called by
+    /// [`Coordinator::finish`](crate::coordinator::Coordinator::finish).
+    pub fn shutdown(&self) {
+        drop(lock_unpoisoned(&self.refit_tx).take());
+        let handle = lock_unpoisoned(&self.worker).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn enqueue_refit(&self, key: ModelKey) -> bool {
+        let tx = lock_unpoisoned(&self.refit_tx);
+        let Some(tx) = tx.as_ref() else {
+            return false;
+        };
+        if tx.send(key).is_err() {
+            return false;
+        }
+        *lock_unpoisoned(&self.pending) += 1;
+        true
+    }
+
+    fn finish_pending(&self) {
+        let mut p = lock_unpoisoned(&self.pending);
+        *p = p.saturating_sub(1);
+        if *p == 0 {
+            self.pending_cv.notify_all();
+        }
+    }
+
+    fn clear_inflight(&self, key: &ModelKey) {
+        if let Some(t) = lock_unpoisoned(&self.trackers).get_mut(key) {
+            t.refit_inflight = false;
+        }
+    }
+
+    /// The background refit of one model: snapshot the rolling corpus,
+    /// fine-tune both targets from the *current* checkpoints at the
+    /// short epoch budget (no locks held while training), then publish
+    /// the new version atomically and invalidate the superseded planes.
+    fn refit(&self, key: ModelKey) {
+        let snapshot = {
+            let trackers = lock_unpoisoned(&self.trackers);
+            trackers.get(&key).map(|t| t.corpus.snapshot())
+        };
+        let current = self.cache.peek_models(&key);
+        let (Some(corpus), Some(current)) = (snapshot, current) else {
+            // evicted mid-flight (or tracker vanished): nothing to refresh
+            self.clear_inflight(&key);
+            return;
+        };
+        if self.cfg.refit_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.cfg.refit_delay_ms));
+        }
+        // version in the seed: successive refits of one key draw
+        // independent shuffle/split streams, deterministically
+        let base = TrainConfig {
+            epochs: self.cfg.refit_epochs.max(1),
+            seed: key.seed ^ current.version.rotate_left(32),
+            ..Default::default()
+        };
+        let refreshed = refit_host(&current.time, &corpus, Target::Time, &base).and_then(
+            |(time, tlog)| {
+                refit_host(&current.power, &corpus, Target::Power, &base).map(|(power, plog)| {
+                    HostModels::new(time, power, 0.0)
+                        .with_validation(tlog.best_val_mape(), plog.best_val_mape())
+                })
+            },
+        );
+        match refreshed {
+            Ok(models) => match self.cache.publish_models(key, models) {
+                Some(published) => {
+                    self.cache.invalidate_planes(current.time_fp, current.power_fp);
+                    self.metrics.refits.fetch_add(1, Ordering::Relaxed);
+                    let mut trackers = lock_unpoisoned(&self.trackers);
+                    if let Some(t) = trackers.get_mut(&key) {
+                        // max, not +1: a concurrent observe may already
+                        // have adopted the published version
+                        t.version = t.version.max(published.version);
+                        t.baseline_mape_pct = published.baseline_mape_pct();
+                        t.monitor.reset();
+                        t.refit_inflight = false;
+                    }
+                }
+                None => {
+                    // a fresh build owns the slot (evicted and re-requested
+                    // mid-refit): our refresh is superseded — soften to
+                    // Suspect so a later breach re-trips against the new fit
+                    let mut trackers = lock_unpoisoned(&self.trackers);
+                    if let Some(t) = trackers.get_mut(&key) {
+                        t.monitor.soften();
+                        t.refit_inflight = false;
+                    }
+                }
+            },
+            Err(e) => {
+                // stays Stale; the next observation re-enqueues a retry
+                eprintln!(
+                    "pt-refit: warm refit failed for workload {} (seed {}): {e}; \
+                     model stays stale until retried",
+                    key.workload.name(),
+                    key.seed
+                );
+                self.clear_inflight(&key);
+            }
+        }
+    }
+}
+
+/// Scalar raw-unit prediction of one checkpoint at one mode — the
+/// feedback lane's per-observation path (~42k MACs; no engine build, so
+/// observations are cheap enough to score inline).
+fn predict_one(ckpt: &Checkpoint, mode: &PowerMode) -> f64 {
+    let feats = mode.features();
+    let raw = [feats[0] as f64, feats[1] as f64, feats[2] as f64, feats[3] as f64];
+    let z = ckpt.feature_scaler.transform_row(&raw);
+    let zf = [z[0] as f32, z[1] as f32, z[2] as f32, z[3] as f32];
+    ckpt.target_scaler
+        .inverse1(host_mlp::forward_one(&ckpt.params, &zf) as f64)
+}
+
+/// Absolute percentage error of a prediction against a (validated
+/// non-zero) observation.
+fn ape_pct(pred: f64, obs: f64) -> f64 {
+    100.0 * ((pred - obs) / obs).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn th(trip: f64, recover: f64, min_obs: usize) -> DriftThresholds {
+        DriftThresholds { trip_pct: trip, recover_pct: recover, min_observations: min_obs }
+    }
+
+    #[test]
+    fn no_trip_below_min_observations() {
+        let mut m = DriftMonitor::new(8);
+        let t = th(50.0, 25.0, 4);
+        for _ in 0..3 {
+            assert!(!m.observe_ape_pct(400.0, &t), "must not trip before min_observations");
+            assert_eq!(m.state(), ModelState::Fresh);
+        }
+        // the 4th observation reaches the quorum and trips
+        assert!(m.observe_ape_pct(400.0, &t));
+        assert_eq!(m.state(), ModelState::Stale);
+    }
+
+    #[test]
+    fn stale_trips_strictly_above_threshold() {
+        // exactly-at-threshold is NOT a trip: with APE samples of exactly
+        // 50 (mean exactly 50.0, binary-exact), a 50.0 trip stays un-tripped
+        let mut m = DriftMonitor::new(8);
+        let t = th(50.0, 25.0, 2);
+        for _ in 0..6 {
+            assert!(!m.observe_ape_pct(50.0, &t));
+        }
+        assert_eq!(m.state(), ModelState::Suspect, "at-threshold sits in the suspect band");
+        // one sample above pushes the mean strictly past the trip
+        assert!(m.observe_ape_pct(120.0, &t));
+        assert_eq!(m.state(), ModelState::Stale);
+    }
+
+    #[test]
+    fn boundary_mape_does_not_flap() {
+        // oscillating inside the (recover, trip] hysteresis band must
+        // never trip nor report Fresh — that's the flap the band absorbs
+        let mut m = DriftMonitor::new(4);
+        let t = th(50.0, 25.0, 2);
+        let mut trips = 0;
+        for i in 0..40 {
+            let ape = if i % 2 == 0 { 30.0 } else { 48.0 };
+            if m.observe_ape_pct(ape, &t) {
+                trips += 1;
+            }
+            if i >= 1 {
+                assert_eq!(m.state(), ModelState::Suspect, "sample {i}");
+            }
+        }
+        assert_eq!(trips, 0, "boundary oscillation must not trip");
+        // and dropping clearly below the recover threshold reports Fresh
+        for _ in 0..8 {
+            m.observe_ape_pct(5.0, &t);
+        }
+        assert_eq!(m.state(), ModelState::Fresh);
+    }
+
+    #[test]
+    fn stale_is_latched_until_reset() {
+        let mut m = DriftMonitor::new(4);
+        let t = th(50.0, 25.0, 2);
+        for _ in 0..4 {
+            m.observe_ape_pct(90.0, &t);
+        }
+        assert_eq!(m.state(), ModelState::Stale);
+        // perfect observations cannot talk a stale model fresh again
+        for _ in 0..10 {
+            assert!(!m.observe_ape_pct(0.0, &t), "latched stale must not re-trip");
+        }
+        assert_eq!(m.state(), ModelState::Stale);
+        // only a published refit resets
+        m.reset();
+        assert_eq!(m.state(), ModelState::Fresh);
+        assert!(m.rolling_mape_pct().is_nan(), "window cleared with the reset");
+    }
+
+    #[test]
+    fn soften_downgrades_only_stale() {
+        let mut m = DriftMonitor::new(4);
+        let t = th(50.0, 25.0, 1);
+        m.observe_ape_pct(90.0, &t);
+        assert_eq!(m.state(), ModelState::Stale);
+        m.soften();
+        assert_eq!(m.state(), ModelState::Suspect);
+        m.soften();
+        assert_eq!(m.state(), ModelState::Suspect);
+        // and a suspect model can re-trip
+        for _ in 0..4 {
+            m.observe_ape_pct(200.0, &t);
+        }
+        assert_eq!(m.state(), ModelState::Stale);
+    }
+
+    #[test]
+    fn thresholds_resolve_factor_floor_and_override() {
+        let cfg = LifecycleConfig {
+            drift_factor: 2.0,
+            floor_mape_pct: 10.0,
+            trip_override_pct: None,
+            recover_ratio: 0.5,
+            ..Default::default()
+        };
+        // factor rule above the floor
+        let t = cfg.thresholds(8.0);
+        assert_eq!(t.trip_pct, 16.0);
+        assert_eq!(t.recover_pct, 8.0);
+        // floor wins over a tiny baseline
+        assert_eq!(cfg.thresholds(1.0).trip_pct, 10.0);
+        // NaN baseline (no fit-time validation) degrades to the floor
+        assert_eq!(cfg.thresholds(f64::NAN).trip_pct, 10.0);
+        // explicit override wins over everything
+        let over = LifecycleConfig { trip_override_pct: Some(33.0), ..cfg };
+        assert_eq!(over.thresholds(8.0).trip_pct, 33.0);
+        assert_eq!(over.thresholds(f64::NAN).trip_pct, 33.0);
+    }
+
+    #[test]
+    fn quorum_clamps_to_the_window_capacity() {
+        // regression: window 4 < min_observations 8 used to make the
+        // quorum unreachable — the monitor never evaluated and a wildly
+        // drifted model stayed Fresh forever
+        let mut m = DriftMonitor::new(4);
+        let t = th(50.0, 25.0, 8);
+        for _ in 0..3 {
+            assert!(!m.observe_ape_pct(400.0, &t));
+        }
+        // the window fills at 4 samples: the clamped quorum is met, trips
+        assert!(m.observe_ape_pct(400.0, &t));
+        assert_eq!(m.state(), ModelState::Stale);
+    }
+
+    #[test]
+    fn rolling_window_is_bounded() {
+        let mut m = DriftMonitor::new(4);
+        let t = th(1e9, 1e9, 1); // never trips
+        for _ in 0..10 {
+            m.observe_ape_pct(100.0, &t);
+        }
+        // four old samples of 100 must be fully displaced by four of 0
+        for _ in 0..4 {
+            m.observe_ape_pct(0.0, &t);
+        }
+        assert_eq!(m.rolling_mape_pct(), 0.0);
+    }
+}

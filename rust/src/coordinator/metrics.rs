@@ -47,6 +47,20 @@ pub struct Metrics {
     /// Requests whose response was produced after their (simulated)
     /// arrival-relative deadline had already passed.
     pub deadline_misses: AtomicU64,
+    /// Observed round outcomes accepted by the model-lifecycle feedback
+    /// lane (brute-force rounds carry no model to age and are not
+    /// counted).
+    pub feedback_observations: AtomicU64,
+    /// Fresh/Suspect → Stale transitions of the drift monitor: a cached
+    /// model's rolling raw-unit MAPE against observed outcomes crossed
+    /// its trip threshold.
+    pub drift_trips: AtomicU64,
+    /// Background warm refits that completed and published a new model
+    /// version (and invalidated the superseded planes).
+    pub refits: AtomicU64,
+    /// Requests answered from a model the drift monitor currently marks
+    /// `Stale` — the staleness exposure while a warm refit is in flight.
+    pub stale_served: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms).
@@ -59,7 +73,9 @@ pub struct Metrics {
     completed_ids: Mutex<Vec<u64>>,
     /// Every failed request: (id, rendered error). The streaming service
     /// records each failure here so a partially-failed batch reports all
-    /// of them, not just the first.
+    /// of them, not just the first. Bounded like `completed_ids`
+    /// (first [`MAX_COMPLETION_LEDGER`] failures); `requests_failed`
+    /// keeps counting.
     failures: Mutex<Vec<(u64, String)>>,
 }
 
@@ -104,10 +120,17 @@ impl Metrics {
     }
 
     /// Record a failed request: bumps `requests_failed` and remembers the
-    /// id + message so the batch report can surface every failure.
+    /// id + message so the batch report can surface every failure. Like
+    /// the completion ledger, the detail list is bounded at
+    /// [`MAX_COMPLETION_LEDGER`] entries — a long-lived service under a
+    /// failing stream must not grow one `String` per failure forever —
+    /// while the counter keeps counting.
     pub fn record_failure(&self, id: u64, err: &Error) {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
-        lock_unpoisoned(&self.failures).push((id, err.to_string()));
+        let mut failures = lock_unpoisoned(&self.failures);
+        if failures.len() < MAX_COMPLETION_LEDGER {
+            failures.push((id, err.to_string()));
+        }
     }
 
     /// Every recorded failure as (request id, error message), ordered by
@@ -138,7 +161,7 @@ impl Metrics {
     pub fn render(&self) -> String {
         let (p50, p95, max) = self.latency_summary_ms();
         let mut out = format!(
-            "requests: {} received, {} completed, {} failed, {} rejected | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | singleflight waits: {} | host fits: {} | deadline misses: {} | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+            "requests: {} received, {} completed, {} failed, {} rejected | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | singleflight waits: {} | host fits: {} | deadline misses: {} | lifecycle: {} observations, {} drift trips, {} refits, {} stale-served | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
             self.requests_received.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
@@ -152,6 +175,10 @@ impl Metrics {
             self.singleflight_waits.load(Ordering::Relaxed),
             self.host_fits.load(Ordering::Relaxed),
             self.deadline_misses.load(Ordering::Relaxed),
+            self.feedback_observations.load(Ordering::Relaxed),
+            self.drift_trips.load(Ordering::Relaxed),
+            self.refits.load(Ordering::Relaxed),
+            self.stale_served.load(Ordering::Relaxed),
             self.profiling_s() / 60.0,
             p50,
             p95,
@@ -236,6 +263,19 @@ mod tests {
     }
 
     #[test]
+    fn failure_ledger_is_bounded_but_counter_keeps_counting() {
+        let m = Metrics::new();
+        for id in 0..(MAX_COMPLETION_LEDGER as u64 + 3) {
+            m.record_failure(id, &Error::Optimization("infeasible".into()));
+        }
+        assert_eq!(m.failed_requests().len(), MAX_COMPLETION_LEDGER);
+        assert_eq!(
+            m.requests_failed.load(Ordering::Relaxed),
+            MAX_COMPLETION_LEDGER as u64 + 3
+        );
+    }
+
+    #[test]
     fn completion_ledger_is_bounded_but_counter_keeps_counting() {
         let m = Metrics::new();
         for id in 0..(MAX_COMPLETION_LEDGER as u64 + 5) {
@@ -245,6 +285,20 @@ mod tests {
         assert_eq!(
             m.requests_completed.load(Ordering::Relaxed),
             MAX_COMPLETION_LEDGER as u64 + 5
+        );
+    }
+
+    #[test]
+    fn lifecycle_counters_are_rendered() {
+        let m = Metrics::new();
+        m.feedback_observations.fetch_add(12, Ordering::Relaxed);
+        m.drift_trips.fetch_add(1, Ordering::Relaxed);
+        m.refits.fetch_add(1, Ordering::Relaxed);
+        m.stale_served.fetch_add(3, Ordering::Relaxed);
+        let r = m.render();
+        assert!(
+            r.contains("lifecycle: 12 observations, 1 drift trips, 1 refits, 3 stale-served"),
+            "{r}"
         );
     }
 

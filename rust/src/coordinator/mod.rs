@@ -25,9 +25,16 @@
 //!   cloneable [`Submitter`] (channel-style streaming submission),
 //!   deterministic id-sorted response collection, panic/poison
 //!   containment; the batch [`serve`] wrapper rides on top;
+//! * [`lifecycle`] — the serve → observe → refit loop: a feedback lane
+//!   for executed-round outcomes ([`Submitter::report`]), per-model
+//!   drift monitors (rolling raw-unit MAPE with hysteresis,
+//!   `Fresh|Suspect|Stale`), and a background worker that warm-refits
+//!   drifted models from their rolling feedback corpus and republishes
+//!   them versioned — serving never blocks on a refit and never sees a
+//!   torn model/plane pair;
 //! * [`policy`] / [`metrics`] — paper-Table-1 strategy + priority
 //!   mapping, and the shared counters (cache hits, singleflight waits,
-//!   deadline misses, per-request failure ledger).
+//!   deadline misses, drift trips/refits, per-request failure ledger).
 //!
 //! Threading: PJRT clients are not `Send`, so each worker thread owns its
 //! own `Runtime`; requests flow through the shared priority queue and
@@ -41,6 +48,7 @@
 //! in-budget Pareto recommendation.
 
 pub mod cache;
+pub mod lifecycle;
 pub mod metrics;
 pub mod pipeline;
 pub mod policy;
@@ -48,6 +56,9 @@ pub mod queue;
 pub mod service;
 
 pub use cache::{GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane};
+pub use lifecycle::{
+    DriftMonitor, Feedback, Lifecycle, LifecycleConfig, ModelState, ModelStatus,
+};
 pub use metrics::Metrics;
 #[cfg(feature = "xla")]
 pub use pipeline::handle_request;
@@ -171,6 +182,12 @@ pub struct CoordinatorConfig {
     /// device's paper subset (Orin) / a random subset of comparable size.
     pub prediction_grid: Option<usize>,
     pub workers: usize,
+    /// Model-lifecycle management (feedback lane, drift monitoring,
+    /// background warm refits). `None` (the default) disables the whole
+    /// subsystem: no tracker state, no refit worker, and
+    /// [`Submitter::report`] rejects feedback — exactly the pre-lifecycle
+    /// behaviour.
+    pub lifecycle: Option<lifecycle::LifecycleConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -180,6 +197,7 @@ impl Default for CoordinatorConfig {
             transfer_epochs: 300,
             prediction_grid: None,
             workers: 1,
+            lifecycle: None,
         }
     }
 }

@@ -37,7 +37,10 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::cache::{GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane};
+use crate::coordinator::cache::{
+    GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane,
+};
+use crate::coordinator::lifecycle::Lifecycle;
 use crate::coordinator::{
     prediction_grid, CoordinatorConfig, Metrics, ReferenceModels, Request, Response, Strategy,
 };
@@ -86,6 +89,11 @@ pub struct HostPipeline<'a> {
     ref_fps: (u64, u64),
     cfg: &'a CoordinatorConfig,
     metrics: &'a Metrics,
+    /// Model-lifecycle manager, when the service runs with one: the
+    /// pipeline reports which model pair served each request so
+    /// staleness exposure (`stale_served`) is accounted where it
+    /// happens.
+    lifecycle: Option<&'a Lifecycle>,
 }
 
 impl<'a> HostPipeline<'a> {
@@ -95,7 +103,20 @@ impl<'a> HostPipeline<'a> {
         cfg: &'a CoordinatorConfig,
         metrics: &'a Metrics,
     ) -> HostPipeline<'a> {
-        HostPipeline { cache, reference, ref_fps: reference.fingerprints(), cfg, metrics }
+        HostPipeline {
+            cache,
+            reference,
+            ref_fps: reference.fingerprints(),
+            cfg,
+            metrics,
+            lifecycle: None,
+        }
+    }
+
+    /// Attach the lifecycle manager (drift/staleness accounting).
+    pub fn with_lifecycle(mut self, lifecycle: &'a Lifecycle) -> HostPipeline<'a> {
+        self.lifecycle = Some(lifecycle);
+        self
     }
 
     /// Run one request through every stage.
@@ -105,9 +126,26 @@ impl<'a> HostPipeline<'a> {
         if let Strategy::BruteForce = admitted.strategy {
             return self.brute_force(&admitted, &grid);
         }
-        let (models, built) = self.acquire_models(&admitted, &grid)?;
+        // the single shared key derivation (`ModelKey::for_request`) is
+        // also what the lifecycle's feedback lane resolves, so observed
+        // outcomes are always attributed to the entry that served them
+        let key = ModelKey::for_request(
+            admitted.req,
+            admitted.strategy,
+            self.cfg.prediction_grid,
+            self.cfg.transfer_epochs,
+            self.ref_fps,
+        );
+        debug_assert_eq!(key.grid, grid.key, "model key must live on the resolved grid");
+        let (models, built) = self.acquire_models(&admitted, &grid, key)?;
         let plane = self.resolve_plane(&grid, &models);
         let chosen = pareto_query(&plane.front, admitted.req.power_budget_w)?;
+        // counted only once a response is certain (`respond` is
+        // infallible): `stale_served` measures answers actually produced
+        // from a condemned model, not failed attempts that touched one
+        if let Some(lifecycle) = self.lifecycle {
+            lifecycle.note_served(&key);
+        }
         // profiling cost is charged to the request that actually led the
         // fit; coalesced/cached requests spent zero device-seconds
         let profiling_cost_s = if built { models.profiling_cost_s } else { 0.0 };
@@ -148,18 +186,12 @@ impl<'a> HostPipeline<'a> {
         &self,
         a: &Admitted<'_>,
         g: &ResolvedGrid,
+        key: ModelKey,
     ) -> Result<(Arc<HostModels>, bool)> {
-        let key = ModelKey {
-            grid: g.key,
-            workload: a.req.workload,
-            seed: a.req.seed,
-            strategy: a.strategy,
-            epochs: self.cfg.transfer_epochs,
-            ref_time_fp: self.ref_fps.0,
-            ref_power_fp: self.ref_fps.1,
-        };
         self.cache.models(key, self.metrics, || {
-            train_host_models(&g.entry.grid, self.reference, self.cfg, self.metrics, a.req, a.strategy)
+            train_host_models(
+                &g.entry.grid, self.reference, self.cfg, self.metrics, a.req, a.strategy,
+            )
         })
     }
 
@@ -237,23 +269,27 @@ fn train_host_models(
     metrics.add_profiling_s(corpus.total_cost_s());
 
     let base = TrainConfig { epochs: cfg.transfer_epochs, seed: req.seed, ..Default::default() };
-    let (time, power) = match strategy {
+    let (time, tlog, power, plog) = match strategy {
         Strategy::PowerTrain(_) => {
             let tcfg = TransferConfig { base, ..Default::default() };
-            let (t, _) = transfer_host(&reference.time, &corpus, Target::Time, &tcfg)?;
-            let (p, _) = transfer_host(&reference.power, &corpus, Target::Power, &tcfg)?;
-            (t, p)
+            let (t, tl) = transfer_host(&reference.time, &corpus, Target::Time, &tcfg)?;
+            let (p, pl) = transfer_host(&reference.power, &corpus, Target::Power, &tcfg)?;
+            (t, tl, p, pl)
         }
         Strategy::NnProfiled(_) => {
             let trainer = HostTrainer::new();
-            let (t, _) = trainer.train(&corpus, Target::Time, &base)?;
-            let (p, _) = trainer.train(&corpus, Target::Power, &base)?;
-            (t, p)
+            let (t, tl) = trainer.train(&corpus, Target::Time, &base)?;
+            let (p, pl) = trainer.train(&corpus, Target::Power, &base)?;
+            (t, tl, p, pl)
         }
         Strategy::BruteForce => unreachable!("brute force never trains models"),
     };
     metrics.host_fits.fetch_add(2, Ordering::Relaxed);
-    Ok(HostModels::new(time, power, corpus.total_cost_s()))
+    // the fit-time validation MAPEs ride along as the drift monitor's
+    // baseline: serving-time feedback is judged against the accuracy the
+    // pair actually shipped with
+    Ok(HostModels::new(time, power, corpus.total_cost_s())
+        .with_validation(tlog.best_val_mape(), plog.best_val_mape()))
 }
 
 /// The cold-path work a plane-cache miss pays once per (grid, model-pair):

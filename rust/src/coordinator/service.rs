@@ -31,6 +31,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
+use crate::coordinator::lifecycle::{Feedback, Lifecycle};
 use crate::coordinator::pipeline::HostPipeline;
 use crate::coordinator::queue::{Job, RequestQueue};
 use crate::coordinator::{
@@ -53,16 +54,23 @@ struct Ingress {
 /// Cloneable streaming submission handle. Clones share the coordinator's
 /// ingress queue (hand them to producer threads); when the **last** clone
 /// drops, the stream closes and workers drain what remains — the same
-/// lifecycle as an `mpsc::Sender`.
+/// lifecycle as an `mpsc::Sender`. When the coordinator runs with model
+/// lifecycle management, the submitter is also the *feedback* handle:
+/// [`Submitter::report`] feeds executed-round outcomes back into the
+/// drift monitors.
 #[derive(Debug)]
 pub struct Submitter {
     ingress: Arc<Ingress>,
+    lifecycle: Option<Arc<Lifecycle>>,
 }
 
 impl Clone for Submitter {
     fn clone(&self) -> Submitter {
         self.ingress.submitters.fetch_add(1, Ordering::SeqCst);
-        Submitter { ingress: Arc::clone(&self.ingress) }
+        Submitter {
+            ingress: Arc::clone(&self.ingress),
+            lifecycle: self.lifecycle.clone(),
+        }
     }
 }
 
@@ -95,6 +103,24 @@ impl Submitter {
     pub fn now_ms(&self) -> u64 {
         self.ingress.queue.now_ms()
     }
+
+    /// Report the observed outcome of an *executed* round back into the
+    /// model lifecycle (drift monitoring + refit corpora). Processed
+    /// synchronously — a couple of scalar forward passes plus map
+    /// updates; never blocks on (or triggers) a model fit in the caller.
+    /// Errors when the coordinator was started without
+    /// [`CoordinatorConfig::lifecycle`] or when the observation itself is
+    /// malformed.
+    pub fn report(&self, feedback: Feedback) -> Result<()> {
+        match &self.lifecycle {
+            Some(l) => l.observe(&feedback),
+            None => Err(Error::Coordinator(
+                "feedback lane disabled: start the coordinator with \
+                 CoordinatorConfig::lifecycle = Some(..)"
+                    .into(),
+            )),
+        }
+    }
 }
 
 /// A running coordinator service. Obtain one (plus its [`Submitter`])
@@ -103,6 +129,7 @@ impl Submitter {
 pub struct Coordinator {
     metrics: Arc<Metrics>,
     cache: Arc<PlaneCache>,
+    lifecycle: Option<Arc<Lifecycle>>,
     handles: Vec<JoinHandle<()>>,
     rx: mpsc::Receiver<(u64, Result<Response>)>,
 }
@@ -125,6 +152,11 @@ impl Coordinator {
         cache: Arc<PlaneCache>,
     ) -> Result<(Coordinator, Submitter)> {
         let metrics = Arc::new(Metrics::new());
+        // the lifecycle manager (and its refit worker) exists only when
+        // configured; everything downstream treats None as "subsystem off"
+        let lifecycle = cfg.lifecycle.map(|lcfg| {
+            Lifecycle::start(lcfg, cfg, reference, Arc::clone(&cache), Arc::clone(&metrics))
+        });
         let ingress = Arc::new(Ingress {
             queue: RequestQueue::new(),
             submitters: AtomicUsize::new(1),
@@ -132,16 +164,28 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<(u64, Result<Response>)>();
         let mut handles = Vec::new();
         for worker_id in 0..cfg.workers.max(1) {
-            let ingress = Arc::clone(&ingress);
-            let metrics = Arc::clone(&metrics);
-            let cache = Arc::clone(&cache);
-            let tx = tx.clone();
-            let cfg = cfg.clone();
-            let reference = reference.clone();
+            // per-worker clones under fresh names: the originals stay
+            // usable in the spawn-failure arm below
+            let w_ingress = Arc::clone(&ingress);
+            let w_metrics = Arc::clone(&metrics);
+            let w_cache = Arc::clone(&cache);
+            let w_lifecycle = lifecycle.clone();
+            let w_tx = tx.clone();
+            let w_cfg = cfg.clone();
+            let w_reference = reference.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("pt-worker-{worker_id}"))
                 .spawn(move || {
-                    worker_loop(worker_id, &ingress, &cache, &reference, &cfg, &metrics, &tx)
+                    worker_loop(
+                        worker_id,
+                        &w_ingress,
+                        &w_cache,
+                        w_lifecycle.as_deref(),
+                        &w_reference,
+                        &w_cfg,
+                        &w_metrics,
+                        &w_tx,
+                    )
                 });
             match spawned {
                 Ok(h) => handles.push(h),
@@ -149,11 +193,15 @@ impl Coordinator {
                     // close the stream so already-spawned workers exit
                     // instead of blocking on a queue nobody will close
                     ingress.queue.close();
+                    if let Some(l) = &lifecycle {
+                        l.shutdown();
+                    }
                     return Err(Error::Coordinator(format!("spawn failed: {e}")));
                 }
             }
         }
-        Ok((Coordinator { metrics, cache, handles, rx }, Submitter { ingress }))
+        let submitter = Submitter { ingress, lifecycle: lifecycle.clone() };
+        Ok((Coordinator { metrics, cache, lifecycle, handles, rx }, submitter))
     }
 
     /// The shared metrics (live — counters advance while workers run).
@@ -166,6 +214,23 @@ impl Coordinator {
         Arc::clone(&self.cache)
     }
 
+    /// The model-lifecycle manager, when the coordinator runs with one
+    /// (status inspection, `wait_idle` sequencing in tests/demos).
+    pub fn lifecycle(&self) -> Option<Arc<Lifecycle>> {
+        self.lifecycle.clone()
+    }
+
+    /// Receive the next completed result (blocking), *before*
+    /// [`Coordinator::finish`]: interactive callers — `serve --feedback`,
+    /// the examples' round loops — observe each response while the
+    /// stream is still open so they can execute the round and
+    /// [`Submitter::report`] its outcome. Returns `None` once every
+    /// worker has exited. Results consumed here are not returned again
+    /// by `finish`.
+    pub fn recv_result(&self) -> Option<(u64, Result<Response>)> {
+        self.rx.recv().ok()
+    }
+
     /// Wait for the stream to end and every in-flight request to finish,
     /// then return all responses **sorted by request id** plus the shared
     /// metrics. Per-request failures are recorded in
@@ -175,7 +240,7 @@ impl Coordinator {
     /// Drop every [`Submitter`] clone before (or while) calling this —
     /// the stream only ends when the last one drops.
     pub fn finish(self) -> Result<(Vec<Response>, Arc<Metrics>)> {
-        let Coordinator { metrics, handles, rx, .. } = self;
+        let Coordinator { metrics, handles, rx, lifecycle, .. } = self;
         let mut responses = Vec::new();
         let mut failures: Vec<(u64, Error)> = Vec::new();
         for (id, res) in rx {
@@ -186,6 +251,11 @@ impl Coordinator {
         }
         for h in handles {
             let _ = h.join();
+        }
+        // drain + join the background refit worker so in-flight refits
+        // land (and count) before the final metrics are reported
+        if let Some(l) = &lifecycle {
+            l.shutdown();
         }
         // deterministic output: order by request id, not completion order
         responses.sort_by_key(|r| r.id);
@@ -202,17 +272,22 @@ impl Coordinator {
 /// One worker: pull jobs in priority/deadline order, run the pipeline
 /// (artifact-backed when a runtime is available, host-native otherwise),
 /// convert panics into failed responses, account deadline misses.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     ingress: &Ingress,
     cache: &PlaneCache,
+    lifecycle: Option<&Lifecycle>,
     reference: &ReferenceModels,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
     tx: &mpsc::Sender<(u64, Result<Response>)>,
 ) {
     // per-worker context: reference fingerprints hash once, not per request
-    let pipeline = HostPipeline::new(cache, reference, cfg, metrics);
+    let mut pipeline = HostPipeline::new(cache, reference, cfg, metrics);
+    if let Some(l) = lifecycle {
+        pipeline = pipeline.with_lifecycle(l);
+    }
     // each worker owns its own non-Send PJRT runtime; without one it
     // serves through the host engine
     #[cfg(feature = "xla")]
@@ -305,6 +380,7 @@ mod tests {
             prediction_grid: Some(200),
             transfer_epochs: 4,
             workers: 2,
+            ..Default::default()
         };
         let requests: Vec<Request> = (0..4)
             .map(|i| Request {
@@ -379,6 +455,73 @@ mod tests {
             err.to_string().contains("request 2"),
             "expected the lowest-id failure, got: {err}"
         );
+    }
+
+    #[test]
+    fn feedback_requires_a_lifecycle() {
+        let reference = host_reference();
+        let cfg = host_cfg(100); // lifecycle: None
+        let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
+        assert!(coordinator.lifecycle().is_none());
+        let req = Request {
+            id: 0,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 30.0,
+            scenario: Scenario::FederatedLearning,
+            seed: 1,
+        };
+        let fb = crate::coordinator::Feedback {
+            request: req,
+            mode: crate::device::PowerMode::maxn(DeviceKind::OrinAgx.spec()),
+            time_ms: 100.0,
+            power_mw: 20_000.0,
+        };
+        let err = submitter.report(fb).unwrap_err();
+        assert!(err.to_string().contains("feedback lane disabled"), "{err}");
+        drop(submitter);
+        coordinator.finish().unwrap();
+    }
+
+    #[test]
+    fn feedback_flows_into_the_lifecycle() {
+        let reference = host_reference();
+        let cfg = CoordinatorConfig {
+            lifecycle: Some(crate::coordinator::LifecycleConfig::default()),
+            ..host_cfg(150)
+        };
+        let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
+        let lifecycle = coordinator.lifecycle().expect("lifecycle enabled");
+        let metrics = coordinator.metrics();
+        let req = Request {
+            id: 0,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::ContinuousLearning,
+            seed: 77,
+        };
+        submitter.send_request(req.clone()).unwrap();
+        let (_, res) = coordinator.recv_result().expect("one response");
+        let resp = res.unwrap();
+        // echo the coordinator's own observation back as feedback
+        submitter
+            .report(crate::coordinator::Feedback::from_response(req.clone(), &resp))
+            .unwrap();
+        assert_eq!(metrics.feedback_observations.load(Ordering::Relaxed), 1);
+        let status = lifecycle.status(&req).expect("tracked model");
+        assert_eq!(status.version, 1);
+        assert_eq!(status.observations, 1);
+        assert!(status.rolling_mape_pct.is_finite());
+        // malformed observations are rejected loudly
+        let bad = crate::coordinator::Feedback {
+            time_ms: f64::NAN,
+            ..crate::coordinator::Feedback::from_response(req.clone(), &resp)
+        };
+        assert!(submitter.report(bad).is_err());
+        assert_eq!(metrics.feedback_observations.load(Ordering::Relaxed), 1);
+        drop(submitter);
+        coordinator.finish().unwrap();
     }
 
     #[test]

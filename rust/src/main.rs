@@ -16,7 +16,8 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use powertrain::coordinator::{
-    Coordinator, CoordinatorConfig, Job, Metrics, ReferenceModels, Request, Scenario,
+    Coordinator, CoordinatorConfig, Feedback, Job, LifecycleConfig, Metrics, ReferenceModels,
+    Request, Scenario,
 };
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::error::{Error, Result};
@@ -137,6 +138,16 @@ COMMANDS
       --gap-ms N (0)             inter-arrival gap (simulated, per request)
       --deadline-ms N (0=none)   per-request latency deadline
       --scenario S (federated)   one-time|fine-tuning|continuous|federated|mix
+      --feedback                 enable the model lifecycle: rounds of ONE
+                                 workload stream through one model, each
+                                 executed round reports its outcome back;
+                                 from the midpoint on the workload drifts
+                                 (+80% time / +30% power), so the model
+                                 trips the monitor and warm-refits in the
+                                 background
+      --drift-mape PCT (0=auto)  absolute drift trip threshold in percent
+                                 (auto = 2x the fit-time validation MAPE,
+                                 floored at 10%)
   experiment <id|all>        regenerate paper exhibits; ids:
                              table1-4 fig2a fig2b fig2c fig6 fig7 fig8
                              fig9a-e fig10-14
@@ -451,6 +462,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 42)? as u64;
     let gap_ms = args.usize_or("gap-ms", 0)? as u64;
     let deadline_ms = args.usize_or("deadline-ms", 0)? as u64; // 0 = best effort
+    let feedback = args.get("feedback").is_some();
+    let drift_mape = args.f64_or("drift-mape", 0.0)?; // 0 = factor-based auto
     let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
     // scenario choice resolved up front so flag errors surface before
     // the worker pool spins up
@@ -472,12 +485,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = CoordinatorConfig {
         artifacts_dir: args.artifacts_dir(),
         workers,
+        lifecycle: feedback.then(|| LifecycleConfig {
+            trip_override_pct: (drift_mape > 0.0).then_some(drift_mape),
+            // demo-scale quorum/window: the trace is tens of rounds, not
+            // the hundreds a production stream delivers
+            min_observations: 3,
+            window: 8,
+            ..Default::default()
+        }),
         ..Default::default()
     };
 
     println!(
-        "streaming {n} synthetic requests into {workers} worker(s) (gap {gap_ms} ms, deadline {}) ...",
-        if deadline_ms > 0 { format!("{deadline_ms} ms") } else { "none".into() }
+        "streaming {n} synthetic requests into {workers} worker(s) (gap {gap_ms} ms, deadline {}, feedback {}) ...",
+        if deadline_ms > 0 { format!("{deadline_ms} ms") } else { "none".into() },
+        if feedback { "on" } else { "off" },
     );
     let t0 = std::time::Instant::now();
     let (coordinator, submitter) = Coordinator::start(&cfg, &reference)?;
@@ -488,25 +510,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let workloads = Workload::default_five();
     let devices = [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
+    // feedback mode models Table 1's continuous rounds: ONE workload on
+    // ONE device retrained round after round under a shared seed, so
+    // every observation lands on the same ModelKey and the rolling MAPE
+    // can actually accumulate to a trip. (Per-request random
+    // workload/device/seed would scatter one observation per key —
+    // nothing would ever reach the quorum.)
+    let fixed = feedback.then(|| {
+        (devices[rng.below(devices.len())], workloads[rng.below(workloads.len())])
+    });
+    let mut trace: Vec<Request> = Vec::with_capacity(n);
     for i in 0..n {
-        let device = devices[rng.below(devices.len())];
+        let device = fixed.map_or_else(|| devices[rng.below(devices.len())], |(d, _)| d);
         let budget_cap = device.spec().peak_power_w * 0.85;
         let request = Request {
             id: i as u64,
             device,
-            workload: workloads[rng.below(workloads.len())],
+            workload: fixed
+                .map_or_else(|| workloads[rng.below(workloads.len())], |(_, w)| w),
             power_budget_w: rng.uniform_range(12.0, budget_cap.max(13.0)),
             scenario: scenarios[rng.below(scenarios.len())],
-            seed: seed + i as u64,
+            seed: if feedback { seed } else { seed + i as u64 },
         };
+        trace.push(request.clone());
         let mut job = Job::arriving(request, i as u64 * gap_ms);
         if deadline_ms > 0 {
             job = job.with_deadline(deadline_ms);
         }
         submitter.send(job)?;
     }
-    drop(submitter); // close the stream: workers drain and exit
-    let (responses, metrics) = coordinator.finish()?;
+    let (responses, metrics) = if feedback {
+        // observe each response as it completes and report the executed
+        // round's outcome back through the feedback lane; from the
+        // midpoint on, the simulated workload drifts (+80% time, +30%
+        // power), so the served model's rolling MAPE climbs, trips the
+        // drift monitor and warm-refits in the background while later
+        // requests keep being served
+        let mut collected = Vec::with_capacity(n);
+        for _ in 0..n {
+            let Some((_, res)) = coordinator.recv_result() else {
+                break; // all workers exited early
+            };
+            let Ok(resp) = res else {
+                continue; // failures stay in the metrics ledger
+            };
+            let req = trace[resp.id as usize].clone();
+            let drifted = resp.id as usize >= n / 2;
+            let fb = Feedback {
+                request: req,
+                mode: resp.chosen_mode,
+                time_ms: resp.observed_time_ms * if drifted { 1.8 } else { 1.0 },
+                power_mw: resp.observed_power_w * 1000.0 * if drifted { 1.3 } else { 1.0 },
+            };
+            if let Err(e) = submitter.report(fb) {
+                eprintln!("feedback for request {} rejected: {e}", resp.id);
+            }
+            collected.push(resp);
+        }
+        drop(submitter); // close the stream: workers drain and exit
+        // finish() joins the refit worker too, so any tripped refit lands
+        // (and is counted) before the report prints
+        let (_, metrics) = coordinator.finish()?;
+        collected.sort_by_key(|r| r.id);
+        (collected, metrics)
+    } else {
+        drop(submitter); // close the stream: workers drain and exit
+        coordinator.finish()?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     // responses arrive sorted by request id, so this table is stable

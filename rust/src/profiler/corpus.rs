@@ -1,7 +1,13 @@
 //! Profiling corpus: the (power mode -> time, power) dataset the prediction
 //! models train and validate on, with CSV persistence and the sampling
 //! strategies the paper uses (all / uniform-N / random-N, 90:10 splits).
+//!
+//! [`RollingCorpus`] is the *online* variant: a bounded
+//! recency-window-plus-reservoir store for serving-time feedback
+//! observations, the ground-truth corpus the coordinator's model
+//! lifecycle refits from.
 
+use std::collections::VecDeque;
 use std::path::Path;
 
 use crate::device::{DeviceKind, PowerMode};
@@ -156,9 +162,10 @@ impl Corpus {
         if t.rows.is_empty() {
             return Err(Error::csv("empty corpus"));
         }
-        let device = DeviceKind::parse(&t.rows[0][t.col("device")?])
+        let (c_device, c_workload) = (t.col("device")?, t.col("workload")?);
+        let device = DeviceKind::parse(&t.rows[0][c_device])
             .ok_or_else(|| Error::csv("unknown device"))?;
-        let workload = Workload::parse(&t.rows[0][t.col("workload")?])
+        let workload = Workload::parse(&t.rows[0][c_workload])
             .ok_or_else(|| Error::csv("unknown workload"))?;
         let mut corpus = Corpus::new(device, workload);
         let (c_cores, c_cpu, c_gpu, c_mem) = (
@@ -166,6 +173,24 @@ impl Corpus {
         );
         let (c_time, c_pow, c_cost) = (t.col("time_ms")?, t.col("power_mw")?, t.col("cost_s")?);
         for i in 0..t.rows.len() {
+            // a corpus is one (device, workload) pair by construction;
+            // a row disagreeing with the header means the file was
+            // concatenated/edited and must not silently train a model
+            // under the wrong identity
+            if DeviceKind::parse(&t.rows[i][c_device]) != Some(device) {
+                return Err(Error::csv(format!(
+                    "corpus row {i}: device '{}' disagrees with header device '{}'",
+                    t.rows[i][c_device],
+                    device.name()
+                )));
+            }
+            if Workload::parse(&t.rows[i][c_workload]) != Some(workload) {
+                return Err(Error::csv(format!(
+                    "corpus row {i}: workload '{}' disagrees with header workload '{}'",
+                    t.rows[i][c_workload],
+                    workload.name()
+                )));
+            }
             corpus.push(Record {
                 mode: PowerMode {
                     cores: t.f64_at(i, c_cores)? as u32,
@@ -179,6 +204,137 @@ impl Corpus {
             });
         }
         Ok(corpus)
+    }
+}
+
+/// Bounded rolling observation store: the feedback lane's per-model
+/// ground-truth corpus.
+///
+/// Serving-time observations arrive as an unbounded stream; a refit
+/// wants (a) *what the workload does now* — so the newest
+/// `recent` records are always kept verbatim — and (b) enough history to
+/// not collapse onto the last few modes — so records aging out of the
+/// recency window are offered to a uniform reservoir sample (capacity
+/// `cap − recent`, classic algorithm R over the evicted stream). Memory
+/// is therefore O(`cap`) regardless of stream length, deterministically
+/// per seed.
+///
+/// Cost accounting: [`RollingCorpus::total_cost_s`] is **recomputed from
+/// the resident records** on every call. An incrementally-decremented
+/// running total drifts under eviction (subtract the wrong record once
+/// and the error is permanent); recomputing over ≤ `cap` records is
+/// cheap and self-healing, and the invariant `total_cost_s() ==
+/// snapshot().total_cost_s()` is a tested property.
+#[derive(Debug, Clone)]
+pub struct RollingCorpus {
+    device: DeviceKind,
+    workload: Workload,
+    recent: VecDeque<Record>,
+    reservoir: Vec<Record>,
+    recent_cap: usize,
+    reservoir_cap: usize,
+    /// Records ever offered to the reservoir (drives acceptance odds).
+    evicted: u64,
+    rng: Rng,
+}
+
+impl RollingCorpus {
+    /// `cap` bounds the whole store; the newest `recent` records are kept
+    /// exactly (clamped into `1..=cap`), the rest of the capacity holds
+    /// the reservoir over older history.
+    pub fn new(
+        device: DeviceKind,
+        workload: Workload,
+        cap: usize,
+        recent: usize,
+        seed: u64,
+    ) -> RollingCorpus {
+        let cap = cap.max(1);
+        let recent_cap = recent.clamp(1, cap);
+        RollingCorpus {
+            device,
+            workload,
+            recent: VecDeque::with_capacity(recent_cap + 1),
+            reservoir: Vec::new(),
+            recent_cap,
+            reservoir_cap: cap - recent_cap,
+            evicted: 0,
+            rng: Rng::new(seed ^ 0x726f_6c6c), // "roll"
+        }
+    }
+
+    pub fn device(&self) -> DeviceKind {
+        self.device
+    }
+
+    pub fn workload(&self) -> Workload {
+        self.workload
+    }
+
+    /// Resident records (recency window + reservoir).
+    pub fn len(&self) -> usize {
+        self.recent.len() + self.reservoir.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recent.is_empty() && self.reservoir.is_empty()
+    }
+
+    /// Observations ever pushed (resident or not).
+    pub fn seen(&self) -> u64 {
+        self.evicted + self.recent.len() as u64
+    }
+
+    /// Record one observation. The newest `recent` records are always
+    /// resident; the one aging out is offered to the reservoir.
+    pub fn push(&mut self, r: Record) {
+        self.recent.push_back(r);
+        if self.recent.len() > self.recent_cap {
+            let old = self.recent.pop_front().expect("recency window is non-empty");
+            self.offer_to_reservoir(old);
+        }
+    }
+
+    fn offer_to_reservoir(&mut self, r: Record) {
+        self.evicted += 1;
+        if self.reservoir_cap == 0 {
+            return;
+        }
+        if self.reservoir.len() < self.reservoir_cap {
+            self.reservoir.push(r);
+            return;
+        }
+        // algorithm R: the i-th evicted record replaces a uniformly
+        // random slot with probability cap/i, keeping the reservoir a
+        // uniform sample of the whole evicted stream
+        let j = self.rng.below(self.evicted as usize);
+        if j < self.reservoir_cap {
+            self.reservoir[j] = r;
+        }
+    }
+
+    /// Materialize the resident window as a trainable [`Corpus`]
+    /// (reservoir history first, then the recency window oldest→newest).
+    pub fn snapshot(&self) -> Corpus {
+        let mut c = Corpus::new(self.device, self.workload);
+        for r in &self.reservoir {
+            c.push(*r);
+        }
+        for r in &self.recent {
+            c.push(*r);
+        }
+        c
+    }
+
+    /// Total profiling cost of the *resident* records, recomputed (see
+    /// the type docs for why this is never an incrementally-updated
+    /// counter).
+    pub fn total_cost_s(&self) -> f64 {
+        self.reservoir
+            .iter()
+            .chain(self.recent.iter())
+            .map(|r| r.cost_s)
+            .sum()
     }
 }
 
@@ -301,5 +457,125 @@ mod tests {
     fn cost_accumulates() {
         let c = demo_corpus(10);
         assert!((c.total_cost_s() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_table_rejects_rows_disagreeing_with_header_device() {
+        // regression: a concatenated/edited CSV whose later rows carry a
+        // different device used to load silently under the header's
+        // identity — the model then trained on another device's telemetry
+        let c = demo_corpus(6);
+        let mut t = c.to_table();
+        let c_dev = t.col("device").unwrap();
+        t.rows[3][c_dev] = "xavier".into();
+        let err = Corpus::from_table(&t).unwrap_err();
+        assert!(
+            err.to_string().contains("row 3") && err.to_string().contains("device"),
+            "{err}"
+        );
+
+        let mut t = c.to_table();
+        let c_wl = t.col("workload").unwrap();
+        t.rows[5][c_wl] = "bert/glue".into();
+        let err = Corpus::from_table(&t).unwrap_err();
+        assert!(err.to_string().contains("row 5"), "{err}");
+
+        // an untampered table still round-trips
+        let back = Corpus::from_table(&c.to_table()).unwrap();
+        assert_eq!(back.device, c.device);
+        assert_eq!(back.workload, c.workload);
+        assert_eq!(back.len(), c.len());
+    }
+
+    fn obs(i: usize) -> Record {
+        let spec = DeviceKind::OrinAgx.spec();
+        Record {
+            mode: PowerMode {
+                cores: 1 + (i % 12) as u32,
+                cpu_khz: spec.cpu_khz[i % spec.cpu_khz.len()],
+                gpu_khz: spec.gpu_khz[i % spec.gpu_khz.len()],
+                mem_khz: spec.mem_khz[i % spec.mem_khz.len()],
+            },
+            time_ms: 100.0 + i as f64,
+            power_mw: 20_000.0,
+            cost_s: 0.5 + (i % 7) as f64,
+        }
+    }
+
+    #[test]
+    fn rolling_corpus_stays_bounded_and_keeps_the_recency_window() {
+        let mut rc =
+            RollingCorpus::new(DeviceKind::OrinAgx, Workload::resnet(), 16, 8, 42);
+        for i in 0..500 {
+            rc.push(obs(i));
+        }
+        assert!(rc.len() <= 16, "{} resident", rc.len());
+        assert_eq!(rc.seen(), 500);
+        let snap = rc.snapshot();
+        assert_eq!(snap.len(), rc.len());
+        // the newest 8 observations are resident verbatim, newest last
+        let tail: Vec<f64> = snap.records()[snap.len() - 8..]
+            .iter()
+            .map(|r| r.time_ms)
+            .collect();
+        let want: Vec<f64> = (492..500).map(|i| 100.0 + i as f64).collect();
+        assert_eq!(tail, want);
+        // the reservoir holds *older* history, not duplicates of the tail
+        for r in &snap.records()[..snap.len() - 8] {
+            assert!(r.time_ms < 100.0 + 492.0);
+        }
+    }
+
+    #[test]
+    fn rolling_corpus_cost_is_recomputed_not_drifted() {
+        // regression guard for the satellite bug: eviction must not be
+        // paired with an incremental cost decrement that can drift — the
+        // resident total always equals the sum over the resident records
+        let mut rc =
+            RollingCorpus::new(DeviceKind::OrinAgx, Workload::resnet(), 12, 4, 7);
+        for i in 0..300 {
+            rc.push(obs(i));
+            let direct: f64 = rc.snapshot().records().iter().map(|r| r.cost_s).sum();
+            assert!(
+                (rc.total_cost_s() - direct).abs() < 1e-9,
+                "cost drifted at push {i}: {} vs {direct}",
+                rc.total_cost_s()
+            );
+        }
+    }
+
+    #[test]
+    fn rolling_corpus_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut rc =
+                RollingCorpus::new(DeviceKind::OrinAgx, Workload::resnet(), 10, 4, seed);
+            for i in 0..200 {
+                rc.push(obs(i));
+            }
+            rc.snapshot()
+                .records()
+                .iter()
+                .map(|r| r.time_ms)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "different seeds should sample differently");
+    }
+
+    #[test]
+    fn rolling_corpus_degenerate_capacities_clamp() {
+        // cap 0 → 1-record recency window, no reservoir; recent > cap →
+        // recency clamped to cap
+        let mut rc = RollingCorpus::new(DeviceKind::OrinAgx, Workload::resnet(), 0, 0, 1);
+        for i in 0..10 {
+            rc.push(obs(i));
+        }
+        assert_eq!(rc.len(), 1);
+        assert_eq!(rc.snapshot().records()[0].time_ms, 109.0);
+        let mut rc = RollingCorpus::new(DeviceKind::OrinAgx, Workload::resnet(), 4, 99, 1);
+        for i in 0..10 {
+            rc.push(obs(i));
+        }
+        assert_eq!(rc.len(), 4);
     }
 }

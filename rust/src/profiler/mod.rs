@@ -8,7 +8,7 @@
 pub mod corpus;
 pub mod scaler;
 
-pub use corpus::{Corpus, Record};
+pub use corpus::{Corpus, Record, RollingCorpus};
 pub use scaler::StandardScaler;
 
 use crate::device::{PowerMode, ProfilingPlan};

@@ -14,7 +14,14 @@
 //! (epochs, first-trainable-layer) phases so transfer learning can
 //! freeze the pretrained body while the fresh head warms up
 //! (`train::transfer::transfer_host`), with best-checkpoint tracking and
-//! Adam state continuous across phases.
+//! Adam state continuous across phases. The same `train_from` entry also
+//! backs `train::transfer::refit_host`, the model-lifecycle warm refresh:
+//! a deployed checkpoint's weights re-enter the loop as the starting
+//! point and fine-tune on a small serving-time feedback corpus at a
+//! short epoch budget — nothing here distinguishes a refit from any
+//! other warm start, which is exactly why refits inherit the
+//! determinism, divergence-rejection and best-checkpoint guarantees
+//! below.
 //!
 //! Deliberate differences vs the artifact path, documented rather than
 //! hidden: no dropout (transfer corpora are ~50 rows; determinism per

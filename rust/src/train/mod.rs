@@ -86,6 +86,17 @@ pub struct TrainingLog {
     pub steps: usize,
 }
 
+impl TrainingLog {
+    /// Validation MAPE (%) at the best-checkpoint epoch — the raw-unit
+    /// accuracy of the weights actually shipped, and the baseline the
+    /// model-lifecycle drift monitor compares serving-time feedback
+    /// against. `NaN` when the log is empty (callers treat an unknown
+    /// baseline as "fall back to the absolute floor threshold").
+    pub fn best_val_mape(&self) -> f64 {
+        self.val_mape.get(self.best_epoch).copied().unwrap_or(f64::NAN)
+    }
+}
+
 /// Builds per-step literals and drives the artifacts.
 #[cfg(feature = "xla")]
 pub struct Trainer<'rt> {

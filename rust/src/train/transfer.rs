@@ -17,6 +17,12 @@
 //! * [`transfer`] (feature `xla`) — the AOT-artifact path. The fused
 //!   train-step executable updates every parameter, so it runs the
 //!   paper's plain surgery + fine-tune without the freeze phase.
+//!
+//! A third, *online* entry point rides on the same trainer:
+//! [`refit_host`] warm-starts from an already-deployed checkpoint (no
+//! surgery, no freeze) to absorb serving-time feedback — the background
+//! refresh the coordinator's model lifecycle performs when a cached
+//! model drifts.
 
 use crate::error::Result;
 use crate::nn::checkpoint::Checkpoint;
@@ -59,6 +65,42 @@ impl Default for TransferConfig {
 /// training at the same seed ("transfer" in ASCII).
 const TRANSFER_TAG: u64 = 0x7472_616e_7366_6572;
 
+/// RNG domain tag for warm refits ("refit" in ASCII), so a refit at the
+/// same seed draws an independent shuffle/split stream from the original
+/// transfer.
+const REFIT_TAG: u64 = 0x72_6566_6974;
+
+/// Warm-refit an already-deployed checkpoint on a fresh observation
+/// corpus — the model-lifecycle refresh path
+/// (`coordinator::lifecycle`).
+///
+/// Unlike [`transfer_host`], there is **no layer surgery and no freeze
+/// phase**: the current weights (and their accumulated transfer) are the
+/// starting point, and every layer fine-tunes from epoch 0. The caller
+/// passes a *short* epoch budget (`TrainConfig::epochs`, typically a
+/// fraction of the original transfer budget) because the fit starts a
+/// few gradient steps from a good optimum. Scalers are refit on the new
+/// corpus, so a refit tracks distribution shift in the features/targets
+/// as well as in the mapping; a refit that diverges returns `Err`
+/// instead of publishing non-finite weights.
+pub fn refit_host(
+    current: &Checkpoint,
+    corpus: &Corpus,
+    target: Target,
+    cfg: &TrainConfig,
+) -> Result<(Checkpoint, TrainingLog)> {
+    let mut rng = Rng::new(cfg.seed ^ REFIT_TAG);
+    let trainer = HostTrainer::new();
+    trainer.train_from(
+        current.params.clone(),
+        corpus,
+        target,
+        cfg,
+        &mut rng,
+        "powertrain-refit-host",
+    )
+}
+
 /// Fine-tune `reference` onto `corpus` (the new workload's ~50 modes)
 /// with the pure-rust trainer — the default build's transfer path.
 pub fn transfer_host(
@@ -80,6 +122,69 @@ pub fn transfer_host(
     let freeze = cfg.freeze_epochs.min(cfg.base.epochs / 2);
     let phases: &[(usize, usize)] = &[(freeze, 3), (cfg.base.epochs - freeze, 0)];
     trainer.train_schedule(params, corpus, target, &cfg.base, &mut rng, &provenance, phases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceKind, PowerModeGrid};
+    use crate::profiler::Record;
+    use crate::sim::TrainerSim;
+    use crate::workload::Workload;
+
+    /// Noise-free ground-truth corpus with an optional drift factor on
+    /// the time channel (what a lifecycle refit sees after the workload
+    /// shifted).
+    fn truth_corpus(n: usize, seed: u64, time_factor: f64) -> Corpus {
+        let spec = DeviceKind::OrinAgx.spec();
+        let sim = TrainerSim::new(spec, Workload::mobilenet(), seed);
+        let mut rng = Rng::new(seed ^ 0xfee1);
+        let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(n, &mut rng);
+        let mut c = Corpus::new(DeviceKind::OrinAgx, Workload::mobilenet());
+        for pm in modes {
+            c.push(Record {
+                mode: pm,
+                time_ms: sim.true_minibatch_ms(&pm) * time_factor,
+                power_mw: sim.true_power_mw(&pm),
+                cost_s: 0.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn refit_tracks_drifted_targets_and_is_deterministic() {
+        // deploy a model on the clean distribution...
+        let clean = truth_corpus(40, 3, 1.0);
+        let cfg = TrainConfig { epochs: 30, seed: 5, ..Default::default() };
+        let (deployed, _) = HostTrainer::new().train(&clean, Target::Time, &cfg).unwrap();
+
+        // ...then the workload drifts: observed times grow by 60%
+        let drifted = truth_corpus(40, 3, 1.6);
+        let short = TrainConfig { epochs: 25, seed: 5, ..Default::default() };
+        let (refit, log) = refit_host(&deployed, &drifted, Target::Time, &short).unwrap();
+        assert!(refit.provenance.starts_with("powertrain-refit-host"));
+        assert!(log.best_val_mape().is_finite());
+
+        // the refit must explain the drifted data better than the stale
+        // deployed model does
+        let holdout = truth_corpus(30, 9, 1.6);
+        let stale_mape = crate::predict::corpus_mape_host(&deployed, &holdout, Target::Time);
+        let fresh_mape = crate::predict::corpus_mape_host(&refit, &holdout, Target::Time);
+        assert!(
+            fresh_mape < stale_mape,
+            "refit must track the drift: stale {stale_mape:.1}% vs refit {fresh_mape:.1}%"
+        );
+
+        // refits are bit-deterministic per seed (the lifecycle's cache
+        // soundness rests on this)
+        let (again, _) = refit_host(&deployed, &drifted, Target::Time, &short).unwrap();
+        assert_eq!(refit.fingerprint(), again.fingerprint());
+        // and a refit at a different seed draws an independent stream
+        let other = TrainConfig { seed: 6, ..short };
+        let (different, _) = refit_host(&deployed, &drifted, Target::Time, &other).unwrap();
+        assert_ne!(refit.fingerprint(), different.fingerprint());
+    }
 }
 
 /// Fine-tune `reference` onto `corpus` through the AOT train artifacts.

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use super::json::Value;
 use super::stats;
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -193,6 +193,108 @@ impl Bencher {
     }
 }
 
+// ---------------------------------------------------------------------
+// bench-regression gate
+
+/// Default regression tolerance: a tracked hot path may be up to 30%
+/// slower than its committed baseline before the gate fails.
+pub const GATE_DEFAULT_TOLERANCE: f64 = 0.30;
+
+/// Outcome of comparing one bench report against a committed baseline
+/// (see [`gate`]).
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    /// Benches compared (present in both documents).
+    pub checked: usize,
+    /// Human-readable failure lines: regressions beyond tolerance and
+    /// baseline benches missing from the current run.
+    pub failures: Vec<String>,
+    /// One status line per bench, for the CI log.
+    pub lines: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Collect `name -> ns_per_item` from a `powertrain-bench-v1` document.
+fn bench_map(doc: &Value) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for b in doc.req("benches")?.as_arr()? {
+        let name = b.req("name")?.as_str()?.to_string();
+        let ns = b.req("ns_per_item")?.as_f64()?;
+        out.push((name, ns));
+    }
+    Ok(out)
+}
+
+/// The CI bench-regression gate: compare a current `BENCH_hotpaths.json`
+/// document against the committed `BENCH_baseline.json`.
+///
+/// Rules:
+/// * every bench id in the **baseline** must appear in the current run —
+///   a silently dropped bench would blind the gate, so missing ⇒ fail;
+/// * a tracked bench **regresses** when its current ns/item exceeds
+///   `baseline × (1 + tolerance)` — strictly, so exactly-at-tolerance
+///   passes;
+/// * benches only in the current run are reported but never fail (new
+///   benches land one PR before their baseline refresh);
+/// * non-finite or non-positive baselines are configuration errors
+///   (`Err`), not pass/fail outcomes.
+pub fn gate(baseline: &Value, current: &Value, tolerance: f64) -> Result<GateReport> {
+    if !(tolerance.is_finite() && tolerance >= 0.0) {
+        return Err(Error::Json(format!("invalid gate tolerance {tolerance}")));
+    }
+    let base = bench_map(baseline)?;
+    let cur = bench_map(current)?;
+    let mut report = GateReport { checked: 0, failures: Vec::new(), lines: Vec::new() };
+    for (name, base_ns) in &base {
+        if !(base_ns.is_finite() && *base_ns > 0.0) {
+            return Err(Error::Json(format!(
+                "baseline bench '{name}' has invalid ns_per_item {base_ns}"
+            )));
+        }
+        let Some((_, cur_ns)) = cur.iter().find(|(n, _)| n == name) else {
+            report.failures.push(format!(
+                "MISSING   {name}: tracked in the baseline but absent from the current run \
+                 (a dropped bench blinds the gate)"
+            ));
+            continue;
+        };
+        report.checked += 1;
+        let ratio = cur_ns / base_ns;
+        let line = format!(
+            "{:<44} baseline {:>10}  current {:>10}  ({:+.1}%)",
+            name,
+            fmt_ns(*base_ns),
+            fmt_ns(*cur_ns),
+            (ratio - 1.0) * 100.0
+        );
+        if ratio > 1.0 + tolerance {
+            report.failures.push(format!(
+                "REGRESSED {name}: {} -> {} ({:+.1}%, tolerance +{:.0}%)",
+                fmt_ns(*base_ns),
+                fmt_ns(*cur_ns),
+                (ratio - 1.0) * 100.0,
+                tolerance * 100.0
+            ));
+            report.lines.push(format!("FAIL {line}"));
+        } else {
+            report.lines.push(format!("ok   {line}"));
+        }
+    }
+    for (name, _) in &cur {
+        if !base.iter().any(|(n, _)| n == name) {
+            report.lines.push(format!(
+                "new  {name:<44} (not in baseline; refresh to start tracking it)"
+            ));
+        }
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +344,98 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50us");
         assert_eq!(fmt_ns(2.5e6), "2.50ms");
         assert_eq!(fmt_ns(3.0e9), "3.000s");
+    }
+
+    /// A `powertrain-bench-v1` document with the given (name, ns/item)
+    /// entries — the shape both `BENCH_baseline.json` and the live
+    /// `BENCH_hotpaths.json` share.
+    fn bench_doc(entries: &[(&str, f64)]) -> Value {
+        Value::obj(vec![
+            ("kind", Value::Str("powertrain-bench-v1".into())),
+            (
+                "benches",
+                Value::Arr(
+                    entries
+                        .iter()
+                        .map(|(name, ns)| {
+                            Value::obj(vec![
+                                ("name", Value::Str((*name).to_string())),
+                                ("ns_per_item", Value::Num(*ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = bench_doc(&[("a/fast", 100.0), ("b/slow", 1e6)]);
+        // +29% and -40%: both inside a 30% tolerance
+        let cur = bench_doc(&[("a/fast", 129.0), ("b/slow", 0.6e6)]);
+        let r = gate(&base, &cur, GATE_DEFAULT_TOLERANCE).unwrap();
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.checked, 2);
+        // exactly at tolerance passes (strictly-greater fails)
+        let at = bench_doc(&[("a/fast", 130.0), ("b/slow", 1e6)]);
+        assert!(gate(&base, &at, 0.30).unwrap().passed());
+    }
+
+    #[test]
+    fn gate_fails_beyond_tolerance() {
+        let base = bench_doc(&[("a/fast", 100.0), ("b/slow", 1e6)]);
+        let cur = bench_doc(&[("a/fast", 150.0), ("b/slow", 1e6)]);
+        let r = gate(&base, &cur, 0.30).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("REGRESSED a/fast"), "{}", r.failures[0]);
+        assert!(r.failures[0].contains("+50.0%"), "{}", r.failures[0]);
+        // the healthy bench still reports ok
+        assert!(r.lines.iter().any(|l| l.starts_with("ok   b/slow")), "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_fails_on_missing_tracked_bench() {
+        let base = bench_doc(&[("a/fast", 100.0), ("b/gone", 200.0)]);
+        let cur = bench_doc(&[("a/fast", 100.0)]);
+        let r = gate(&base, &cur, 0.30).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("MISSING   b/gone"), "{}", r.failures[0]);
+        assert_eq!(r.checked, 1);
+    }
+
+    #[test]
+    fn gate_tolerates_untracked_new_benches() {
+        let base = bench_doc(&[("a/fast", 100.0)]);
+        let cur = bench_doc(&[("a/fast", 90.0), ("c/new", 5.0)]);
+        let r = gate(&base, &cur, 0.30).unwrap();
+        assert!(r.passed());
+        assert!(r.lines.iter().any(|l| l.contains("new  c/new")), "{:?}", r.lines);
+    }
+
+    #[test]
+    fn gate_rejects_malformed_inputs() {
+        let good = bench_doc(&[("a", 1.0)]);
+        assert!(gate(&Value::obj(vec![]), &good, 0.3).is_err(), "no benches array");
+        assert!(gate(&bench_doc(&[("a", 0.0)]), &good, 0.3).is_err(), "zero baseline");
+        assert!(gate(&bench_doc(&[("a", f64::NAN)]), &good, 0.3).is_err(), "NaN baseline");
+        assert!(gate(&good, &good, f64::NAN).is_err(), "NaN tolerance");
+        assert!(gate(&good, &good, -0.1).is_err(), "negative tolerance");
+    }
+
+    #[test]
+    fn gate_round_trips_through_saved_json() {
+        // the live path: a Bencher-written file vs a baseline document
+        let mut b = Bencher::quick();
+        b.bench_items("alpha", 100.0, || 1u8);
+        let path = std::env::temp_dir().join("pt_bench_gate").join("cur.json");
+        b.save_json(&path).unwrap();
+        let cur = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let alpha_ns = b.results()[0].ns_per_item();
+        let base = bench_doc(&[("alpha", alpha_ns * 2.0)]); // generous baseline
+        let r = gate(&base, &cur, GATE_DEFAULT_TOLERANCE).unwrap();
+        assert!(r.passed(), "{:?}", r.failures);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 }

@@ -50,6 +50,7 @@ fn test_cfg() -> CoordinatorConfig {
         transfer_epochs: 60,
         prediction_grid: Some(400),
         workers: 1,
+        ..Default::default()
     }
 }
 

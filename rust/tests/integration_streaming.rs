@@ -10,7 +10,8 @@
 use std::sync::atomic::Ordering;
 
 use powertrain::coordinator::{
-    serve, Coordinator, CoordinatorConfig, Job, ReferenceModels, Request, Scenario,
+    serve, Coordinator, CoordinatorConfig, Feedback, Job, LifecycleConfig, ModelState,
+    ReferenceModels, Request, Scenario,
 };
 use powertrain::device::DeviceKind;
 use powertrain::error::Error;
@@ -161,6 +162,118 @@ fn all_failed_batch_is_an_error() {
     )
     .unwrap_err();
     assert!(matches!(err, Error::Usage(_)), "admission rejection expected: {err}");
+}
+
+/// Tentpole acceptance: the full serve → observe → refit loop. Drifted
+/// feedback flips a served model Fresh→Stale; exactly ONE background
+/// warm refit runs (the in-flight marker makes enqueueing singleflight,
+/// however many drifted observations arrive); serving continues —
+/// un-blocked — while the refit is deliberately held open (asserted via
+/// completion order: the concurrent requests finish before the refit
+/// publishes, still answered by the old version bit-for-bit); and once
+/// the refit lands, responses come from the new model version with the
+/// dependent plane invalidated and rebuilt (plane fingerprints change).
+#[test]
+fn drifted_feedback_triggers_one_warm_refit_without_blocking_serving() {
+    let reference = reference();
+    let c = CoordinatorConfig {
+        lifecycle: Some(LifecycleConfig {
+            trip_override_pct: Some(25.0),
+            min_observations: 4,
+            window: 8,
+            refit_epochs: 50,
+            // hold the refit open long enough that the concurrent
+            // requests below *must* complete while it is in flight —
+            // "serving never blocks on a refit" becomes deterministic
+            refit_delay_ms: 400,
+            ..Default::default()
+        }),
+        ..cfg(200, 2)
+    };
+    let (coordinator, submitter) = Coordinator::start(&c, &reference).unwrap();
+    let lifecycle = coordinator.lifecycle().expect("lifecycle enabled");
+    let metrics = coordinator.metrics();
+    let req = |id: u64| request(id, Scenario::ContinuousLearning, 9);
+
+    // round 1: the cold fit — version 1 serves
+    submitter.send_request(req(0)).unwrap();
+    let first = coordinator.recv_result().expect("worker alive").1.unwrap();
+    assert_eq!(lifecycle.status(&req(0)).expect("model resident").version, 1);
+
+    // drifted outcomes: observed values are 2× the predictions (guarded
+    // positive — feedback validates its inputs), so every scored APE is
+    // ≥50% — strictly above the 25% trip threshold
+    for _ in 0..6 {
+        submitter
+            .report(Feedback {
+                request: req(0),
+                mode: first.chosen_mode,
+                time_ms: (first.predicted_time_ms * 2.0).abs().max(1.0),
+                power_mw: (first.predicted_power_w * 1000.0 * 2.0).abs().max(1.0),
+            })
+            .unwrap();
+    }
+    // exactly one trip despite 3 post-quorum breaching observations
+    // (singleflight: the in-flight marker absorbs the rest)
+    assert_eq!(metrics.drift_trips.load(Ordering::Relaxed), 1);
+    let status = lifecycle.status(&req(0)).unwrap();
+    assert_eq!(status.state, ModelState::Stale);
+    assert_eq!(status.version, 1, "still the old version until the refit publishes");
+
+    // serving continues while the (held) refit trains: these cache hits
+    // must all complete first, answered by the old version bit-for-bit
+    for id in 1..=4 {
+        submitter.send_request(req(id)).unwrap();
+    }
+    let mut during = Vec::new();
+    for _ in 0..4 {
+        during.push(coordinator.recv_result().unwrap().1.unwrap());
+    }
+    assert_eq!(
+        metrics.refits.load(Ordering::Relaxed),
+        0,
+        "completion order: all 4 requests finished before the held refit published"
+    );
+    for r in &during {
+        assert_eq!(
+            r.predicted_time_ms.to_bits(),
+            first.predicted_time_ms.to_bits(),
+            "pre-publish responses must come from the old version"
+        );
+    }
+    // staleness exposure is accounted where it happened
+    assert_eq!(metrics.stale_served.load(Ordering::Relaxed), 4);
+
+    // let the background refit land
+    lifecycle.wait_idle();
+    assert_eq!(metrics.refits.load(Ordering::Relaxed), 1, "exactly one refit");
+    let status = lifecycle.status(&req(0)).unwrap();
+    assert_eq!(status.state, ModelState::Fresh, "published refit resets the monitor");
+    assert_eq!(status.version, 2, "version is bumped monotonically");
+
+    // post-refit: the same key now resolves the new version; its plane
+    // key moved with the checkpoint fingerprints, so the old plane was
+    // invalidated and a fresh one is built — and predictions change
+    // (the refit trained toward the 2× observations)
+    let planes_before = metrics.plane_cache_misses.load(Ordering::Relaxed);
+    submitter.send_request(req(5)).unwrap();
+    let after = coordinator.recv_result().unwrap().1.unwrap();
+    assert_ne!(
+        after.predicted_time_ms.to_bits(),
+        first.predicted_time_ms.to_bits(),
+        "post-refit predictions must come from the refitted model"
+    );
+    assert_eq!(
+        metrics.plane_cache_misses.load(Ordering::Relaxed),
+        planes_before + 1,
+        "the dependent plane was invalidated atomically and rebuilt for the new version"
+    );
+    assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 1, "no re-fit on serve");
+    assert_eq!(metrics.feedback_observations.load(Ordering::Relaxed), 6);
+
+    drop(submitter);
+    let (_, metrics) = coordinator.finish().unwrap();
+    assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 6);
 }
 
 /// Deadline accounting: a cold fit cannot possibly finish within a 0 ms
