@@ -12,7 +12,9 @@
 //!   7. coordinator serving over the full 18,096-mode Orin grid: the cold
 //!      per-request pipeline (which now includes online profiling and a
 //!      host transfer of both models) vs the grid-resident cache hit
-//!      (requests/s);
+//!      (requests/s), plus the same burst under a 10% transient-fault
+//!      plan (`serve_faulty_10pct`: retry machinery + fault consultation
+//!      on the hot path);
 //!   8. host-native transfer learning of one model from a 50-mode corpus
 //!      (items = epochs, so ns/item reads as ns/epoch; median_ns is the
 //!      end-to-end fit time);
@@ -241,6 +243,43 @@ fn main() {
             let (responses, _) = coordinator.finish().unwrap();
             responses.len()
         });
+
+        // resilient serving under a 10% transient-fault plan: the same
+        // pre-warmed burst, but every 10th request takes an injected
+        // transient failure on its first attempt and goes through the
+        // retry loop (deterministic backoff included — retry latency IS
+        // the cost of faults), and any cold build under this plan would
+        // roll a 10% profiling failure. ns/item measures steady-state
+        // service overhead at a 10% fault rate, directly comparable to
+        // serve_burst_identical.
+        {
+            use powertrain::sim::{FaultInjector, FaultPlan};
+            const FAULTY: usize = 128;
+            let plan = FaultPlan {
+                seed: 9,
+                profiling_fail_pct: 0.1,
+                profiling_streak: 1,
+                panic_request_ids: (0..FAULTY as u64).step_by(10).collect(),
+                ..FaultPlan::default()
+            };
+            let faulty_cfg = CoordinatorConfig {
+                faults: Some(Arc::new(FaultInjector::new(plan))),
+                ..burst_cfg.clone()
+            };
+            b.bench_items("coordinator/serve_faulty_10pct", FAULTY as f64, || {
+                let (coordinator, submitter) =
+                    Coordinator::start_with_cache(&faulty_cfg, &reference, Arc::clone(&shared))
+                        .unwrap();
+                for i in 0..FAULTY {
+                    submitter
+                        .send(Job::immediate(Request { id: i as u64, ..req.clone() }))
+                        .unwrap();
+                }
+                drop(submitter);
+                let (responses, _) = coordinator.finish().unwrap();
+                responses.len()
+            });
+        }
     }
 
     #[cfg(feature = "xla")]

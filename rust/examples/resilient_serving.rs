@@ -1,0 +1,184 @@
+//! Resilient serving under a scripted fault plan: the coordinator keeps
+//! answering while the world misbehaves.
+//!
+//! A deterministic [`FaultPlan`] injects, in one run:
+//!
+//! * transient fit failures (every cold build fails once, then clears) —
+//!   absorbed by the retry loop with deterministic backoff;
+//! * one permanently failing model key — after three failed builds its
+//!   circuit breaker opens, later requests are shed without burning a
+//!   build, and every one of them is still answered by the ridge rung of
+//!   the graceful-degradation ladder (`served = degraded-ridge`);
+//! * an injected worker panic — caught, converted to a transient error,
+//!   retried transparently to a primary answer;
+//! * a fan failure mid-run — the thermal guard sees the episode one
+//!   telemetry slice late, so one uncapped hot slice trips the throttle:
+//!   that round's *observed* time comes back dilated by 1/0.7, the
+//!   dilated feedback trips the drift monitor, a background warm refit
+//!   republishes the model, and follow-up requests are budget-clamped to
+//!   the fan-off sustainable ceiling until the fan recovers.
+//!
+//! Host-native: runs in the default, dependency-free build.
+//!
+//! Run with:  cargo run --release --example resilient_serving
+
+use powertrain::coordinator::{
+    Coordinator, CoordinatorConfig, Feedback, LifecycleConfig, ReferenceModels, Request, Scenario,
+    ThermalConfig,
+};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::profiler::Profiler;
+use powertrain::sim::{FaultInjector, FaultPlan, TrainerSim};
+use powertrain::util::rng::Rng;
+use powertrain::util::table::TextTable;
+use powertrain::workload::Workload;
+
+fn main() -> powertrain::Result<()> {
+    let device = DeviceKind::OrinAgx;
+    let wl = Workload::mobilenet();
+
+    // ---- offline: reference models on ResNet (host-native) -------------
+    let mut rng = Rng::new(11);
+    let ref_modes = PowerModeGrid::paper_subset(device).sample(800, &mut rng);
+    let mut profiler = Profiler::new(TrainerSim::new(device.spec(), Workload::resnet(), 11));
+    println!("bootstrapping reference models on {} ResNet modes ...", ref_modes.len());
+    let ref_corpus = profiler.profile_modes(&ref_modes)?;
+    let reference = ReferenceModels::bootstrap_host(&ref_corpus, 80, 11)?;
+
+    // ---- the fault plan --------------------------------------------------
+    // Deterministic: every decision hashes (plan seed, fault domain,
+    // operation key, attempt), so the same plan + request stream always
+    // produces the same outcomes — `serve --faults plan.json` replays it.
+    let plan = FaultPlan {
+        seed: 41,
+        fit_fail_pct: 1.0, // every cold build fails once…
+        fit_streak: 1,     // …and deterministically clears on the retry
+        permanent_fit_seeds: vec![99],
+        panic_request_ids: vec![7],
+        // fan fails at t=960 s of device time and stays down a while
+        // (the stream below reaches 960 s on its eighth served round)
+        fan_off_s: vec![(960.0, 2400.0)],
+        ..FaultPlan::default()
+    };
+    println!("fault plan: {}\n", plan.to_json().to_string());
+
+    let cfg = CoordinatorConfig {
+        transfer_epochs: 100,
+        workers: 1, // serialize the stream so the narrative clock is exact
+        faults: Some(std::sync::Arc::new(FaultInjector::new(plan))),
+        // each served round advances device time by one 120 s slice
+        thermal: Some(ThermalConfig { slice_s: 120.0 }),
+        lifecycle: Some(LifecycleConfig {
+            trip_override_pct: Some(25.0),
+            min_observations: 2,
+            window: 4,
+            refit_epochs: 60,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let (coordinator, submitter) = Coordinator::start(&cfg, &reference)?;
+    let lifecycle = coordinator.lifecycle().expect("lifecycle enabled");
+    let thermal = coordinator.thermal().expect("thermal guard enabled");
+
+    // ---- the stream ------------------------------------------------------
+    // (label, id, seed): seed 99 is the permanently broken key; id 7
+    // panics; seeds 31/32 hit only the transient first-build failure;
+    // seed 40 is the long-lived key that rides through the fan episode.
+    let stream: Vec<(&str, u64, u64)> = vec![
+        ("broken build #1", 1, 99),
+        ("broken build #2", 2, 99),
+        ("broken build #3", 3, 99), // breaker opens here
+        ("breaker sheds", 4, 99),
+        ("worker panic", 7, 31),
+        ("transient fit", 8, 32),
+        ("fan-on round", 20, 40),
+        ("fan dies here", 21, 40), // uncapped hot slice: throttle trips
+        ("clamped round", 22, 40),
+        ("clamped round", 23, 40),
+    ];
+    let mut t = TextTable::new(&[
+        "round", "id", "served", "strategy", "mode", "pred W", "ceil W", "temp C",
+    ]);
+    let mut throttled_resp = None;
+    for &(label, id, seed) in &stream {
+        let req = Request {
+            id,
+            device,
+            workload: wl,
+            power_budget_w: 50.0,
+            scenario: Scenario::ContinuousLearning,
+            seed,
+        };
+        submitter.send_request(req.clone())?;
+        let Some((_, res)) = coordinator.recv_result() else { break };
+        let resp = match res {
+            Ok(r) => r,
+            Err(e) => {
+                println!("request {id}: {e}");
+                continue;
+            }
+        };
+        t.row(vec![
+            label.into(),
+            id.to_string(),
+            resp.provenance.label().into(),
+            resp.strategy.clone(),
+            resp.chosen_mode.label(),
+            format!("{:.1}", resp.predicted_power_w),
+            format!("{:.1}", thermal.ceiling_mw() / 1000.0),
+            format!("{:.1}", thermal.temp_c()),
+        ]);
+        if thermal.throttled() && throttled_resp.is_none() {
+            // the throttled round's observation is dilated ground truth:
+            // report it as executed-round feedback, twice (two rounds ran
+            // at that mode while hot) — enough to trip the drift monitor
+            throttled_resp = Some((req.clone(), resp.clone()));
+            for _ in 0..2 {
+                submitter.report(Feedback {
+                    request: req.clone(),
+                    mode: resp.chosen_mode,
+                    time_ms: resp.observed_time_ms,
+                    power_mw: resp.observed_power_w * 1000.0,
+                })?;
+            }
+        }
+    }
+
+    // let the thermally-tripped warm refit land, then serve the key again
+    lifecycle.wait_idle();
+    if let Some((req, _)) = &throttled_resp {
+        let status = lifecycle.status(req).expect("tracked model");
+        println!(
+            "thermal drift: state={} version={} (refit from the dilated corpus)",
+            status.state.name(),
+            status.version
+        );
+        submitter.send_request(Request { id: 30, ..req.clone() })?;
+        if let Some((_, Ok(r))) = coordinator.recv_result() {
+            t.row(vec![
+                "post-refit".into(),
+                "30".into(),
+                r.provenance.label().into(),
+                r.strategy.clone(),
+                r.chosen_mode.label(),
+                format!("{:.1}", r.predicted_power_w),
+                format!("{:.1}", thermal.ceiling_mw() / 1000.0),
+                format!("{:.1}", thermal.temp_c()),
+            ]);
+        }
+    }
+
+    let open = coordinator.cache().open_breakers();
+    drop(submitter);
+    let (_, metrics) = coordinator.finish()?;
+    println!("{}", t.render());
+    println!("open breakers: {} (the permanently failing key)", open.len());
+    println!("{}", metrics.render());
+    println!(
+        "(every request was answered: permanent failures degrade down the ladder instead \
+         of erroring, transients retry, and the fan-off episode clamps budgets to the \
+         sustainable ceiling while dilated observations trip a warm refit)"
+    );
+    Ok(())
+}

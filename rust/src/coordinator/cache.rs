@@ -57,6 +57,7 @@
 //! misses and coalesced waits so degraded cache behaviour is visible in
 //! the serve report.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -76,6 +77,10 @@ use crate::workload::Workload;
 const MAX_GRIDS: usize = 64;
 const MAX_PLANES: usize = 64;
 const MAX_MODELS: usize = 64;
+
+/// Bound on tracked circuit breakers. When full, healthy (`Closed` with
+/// zero failures) entries are dropped; tripped breakers keep their state.
+const MAX_BREAKERS: usize = 256;
 
 /// Identity of the grid a request's predictions are computed over.
 ///
@@ -224,6 +229,64 @@ impl HostModels {
     pub fn baseline_mape_pct(&self) -> f64 {
         self.val_mape_time_pct.max(self.val_mape_power_pct)
     }
+
+    /// Recompute both checkpoints' content fingerprints and compare with
+    /// the stored ones. The serve path runs this before caching a freshly
+    /// built pair whenever corruption is suspected: a mismatched
+    /// fingerprint means the checkpoint bytes changed between fit and
+    /// publish (bit-rot, a torn write), and serving it would attribute
+    /// predictions to the wrong model identity.
+    pub fn verify_integrity(&self) -> Result<()> {
+        let (time_fp, power_fp) = (self.time.fingerprint(), self.power.fingerprint());
+        if time_fp != self.time_fp || power_fp != self.power_fp {
+            return Err(Error::Artifact(format!(
+                "checkpoint fingerprint mismatch after fit: time {time_fp:#x} vs stored {:#x}, \
+                 power {power_fp:#x} vs stored {:#x}",
+                self.time_fp, self.power_fp
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-ModelKey circuit breaker
+
+/// Circuit-breaker thresholds for the model-build path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive failed *leader* builds that open the circuit.
+    pub failure_threshold: u32,
+    /// Acquisitions an `Open` breaker rejects before letting the next one
+    /// through as a Half-Open probe. The cooldown is counted in rejected
+    /// attempts, not wall time: the queue clock is wall-clock and thus
+    /// nondeterministic, and chaos runs must replay bit-identically.
+    pub cooldown_rejections: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, cooldown_rejections: 8 }
+    }
+}
+
+/// Public view of a breaker's coarse state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Internal breaker state machine. `Closed` admits and counts consecutive
+/// leader failures; `Open` rejects while counting down its cooldown;
+/// `HalfOpen` means one probe build is in flight and everyone else is
+/// rejected until it resolves.
+#[derive(Debug, Clone, Copy)]
+enum Breaker {
+    Closed { failures: u32 },
+    Open { rejected: u32 },
+    HalfOpen,
 }
 
 /// Device-level grid state shared across model pairs: the mode list and
@@ -467,11 +530,40 @@ pub struct PlaneCache {
     grids: Mutex<HashMap<GridKey, Slot<GridEntry>>>,
     planes: Mutex<HashMap<PlaneKey, Slot<ServePlane>>>,
     models: Mutex<HashMap<ModelKey, Slot<HostModels>>>,
+    /// Per-ModelKey circuit breakers guarding the (expensive) model-build
+    /// path: a key whose builds keep failing is rejected up front instead
+    /// of re-paying profiling + fit for a deterministic failure.
+    breakers: Mutex<HashMap<ModelKey, Breaker>>,
+    breaker_cfg: BreakerConfig,
+}
+
+/// Records a breaker failure if the guarded build panics: without this, a
+/// panicking probe would wedge its key `HalfOpen` forever (every later
+/// caller rejected with "probe in flight" and no probe alive).
+struct BreakerPanicGuard<'a> {
+    cache: &'a PlaneCache,
+    key: ModelKey,
+    metrics: &'a Metrics,
+    led: &'a Cell<bool>,
+    armed: bool,
+}
+
+impl Drop for BreakerPanicGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed && self.led.get() {
+            self.cache.note_build_outcome(self.key, false, true, self.metrics);
+        }
+    }
 }
 
 impl PlaneCache {
     pub fn new() -> PlaneCache {
         PlaneCache::default()
+    }
+
+    /// Cache with custom circuit-breaker thresholds (tests, chaos tuning).
+    pub fn with_breaker(cfg: BreakerConfig) -> PlaneCache {
+        PlaneCache { breaker_cfg: cfg, ..Default::default() }
     }
 
     /// Grid + feature matrix for `key`, building (outside the lock,
@@ -516,18 +608,136 @@ impl PlaneCache {
     /// (`Error` isn't `Clone`, so the variant cannot cross the flight;
     /// classify coalesced failures by message, not variant), and the
     /// next request retries fresh.
+    /// Acquisition is additionally guarded by `key`'s circuit breaker:
+    /// after [`BreakerConfig::failure_threshold`] consecutive failed
+    /// leader builds the breaker opens and requests are rejected with
+    /// [`Error::CircuitOpen`] *before* touching the flight machinery;
+    /// after [`BreakerConfig::cooldown_rejections`] rejections one caller
+    /// is let through as a Half-Open probe whose outcome closes or
+    /// re-opens the circuit. Only leader failures count — a waiter
+    /// surfacing its leader's failure is the same event, and counting it
+    /// twice would open the breaker early.
     pub fn models(
         &self,
         key: ModelKey,
         metrics: &Metrics,
         build: impl FnOnce() -> Result<HostModels>,
     ) -> Result<(Arc<HostModels>, bool)> {
+        if let Some(rejection) = self.breaker_admit(key, metrics) {
+            return Err(rejection);
+        }
         let counters = CacheCounters {
             hits: &metrics.model_cache_hits,
             misses: &metrics.model_cache_misses,
             waits: &metrics.singleflight_waits,
         };
-        get_or_build(&self.models, MAX_MODELS, key, Some(counters), build)
+        let led = Cell::new(false);
+        let mut panic_guard =
+            BreakerPanicGuard { cache: self, key, metrics, led: &led, armed: true };
+        let result = get_or_build(&self.models, MAX_MODELS, key, Some(counters), || {
+            led.set(true);
+            build()
+        });
+        panic_guard.armed = false;
+        drop(panic_guard);
+        self.note_build_outcome(key, result.is_ok(), led.get(), metrics);
+        result
+    }
+
+    /// Consult `key`'s breaker before touching the model map. `Some(err)`
+    /// = rejected without attempting the build; `None` = admitted (and,
+    /// for a cooled-down `Open` breaker, this caller just became the
+    /// Half-Open probe).
+    fn breaker_admit(&self, key: ModelKey, metrics: &Metrics) -> Option<Error> {
+        let mut breakers = lock_unpoisoned(&self.breakers);
+        if !breakers.contains_key(&key) && breakers.len() >= MAX_BREAKERS {
+            breakers.retain(|_, b| !matches!(b, Breaker::Closed { failures: 0 }));
+        }
+        let state = breakers.entry(key).or_insert(Breaker::Closed { failures: 0 });
+        match state {
+            Breaker::Closed { .. } => None,
+            Breaker::HalfOpen => Some(Error::CircuitOpen(format!(
+                "model build for workload '{}' (seed {}) is half-open with a probe in flight",
+                key.workload.name(),
+                key.seed
+            ))),
+            Breaker::Open { rejected } => {
+                if *rejected >= self.breaker_cfg.cooldown_rejections {
+                    *state = Breaker::HalfOpen;
+                    metrics.breaker_transitions.fetch_add(1, Ordering::Relaxed);
+                    None
+                } else {
+                    *rejected += 1;
+                    Some(Error::CircuitOpen(format!(
+                        "model build for workload '{}' (seed {}) failed {} consecutive times; \
+                         cooling down ({}/{} rejections)",
+                        key.workload.name(),
+                        key.seed,
+                        self.breaker_cfg.failure_threshold,
+                        rejected,
+                        self.breaker_cfg.cooldown_rejections
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Fold one acquisition outcome into `key`'s breaker. `led` is
+    /// whether this caller actually ran the build closure (leader) as
+    /// opposed to hitting cache or coalescing onto another flight.
+    fn note_build_outcome(&self, key: ModelKey, ok: bool, led: bool, metrics: &Metrics) {
+        let mut breakers = lock_unpoisoned(&self.breakers);
+        let Some(state) = breakers.get_mut(&key) else { return };
+        if ok {
+            match state {
+                Breaker::Closed { failures: 0 } => {}
+                Breaker::Closed { failures } => *failures = 0,
+                // a successful probe — or a hit against a pair the
+                // lifecycle published while the circuit was tripped —
+                // proves the key healthy again
+                Breaker::HalfOpen | Breaker::Open { .. } => {
+                    *state = Breaker::Closed { failures: 0 };
+                    metrics.breaker_transitions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        } else if led {
+            match state {
+                Breaker::Closed { failures } => {
+                    *failures += 1;
+                    if *failures >= self.breaker_cfg.failure_threshold {
+                        *state = Breaker::Open { rejected: 0 };
+                        metrics.breaker_transitions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Breaker::HalfOpen => {
+                    *state = Breaker::Open { rejected: 0 };
+                    metrics.breaker_transitions.fetch_add(1, Ordering::Relaxed);
+                }
+                Breaker::Open { .. } => {}
+            }
+        }
+        // waiter failures (!led) don't count: the leader's failure
+        // already did
+    }
+
+    /// Coarse state of `key`'s breaker, `None` if never consulted.
+    pub fn breaker_state(&self, key: &ModelKey) -> Option<BreakerState> {
+        lock_unpoisoned(&self.breakers).get(key).map(|b| match b {
+            Breaker::Closed { .. } => BreakerState::Closed,
+            Breaker::Open { .. } => BreakerState::Open,
+            Breaker::HalfOpen => BreakerState::HalfOpen,
+        })
+    }
+
+    /// Every key whose breaker is currently tripped (Open or Half-Open).
+    pub fn open_breakers(&self) -> Vec<ModelKey> {
+        lock_unpoisoned(&self.breakers)
+            .iter()
+            .filter_map(|(k, b)| match b {
+                Breaker::Open { .. } | Breaker::HalfOpen => Some(*k),
+                Breaker::Closed { .. } => None,
+            })
+            .collect()
     }
 
     /// Resident model pair for `key` **without** building or waiting:
@@ -923,6 +1133,154 @@ mod tests {
         assert_eq!(cache.sizes(), (0, 0, 0));
         let (_, built) = cache.models(key, &metrics, || Ok(demo_models(4.0))).unwrap();
         assert!(built);
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_then_probes_and_closes() {
+        let cache = PlaneCache::new(); // thresholds: 3 failures, 8 rejections
+        let metrics = Metrics::new();
+        let key = model_key(30);
+        for i in 0..3 {
+            let err = cache
+                .models(key, &metrics, || {
+                    Err(crate::error::Error::Training(format!("injected failure {i}")))
+                })
+                .unwrap_err();
+            assert!(matches!(err, crate::error::Error::Training(_)));
+        }
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Open));
+        assert_eq!(cache.open_breakers().len(), 1);
+        // while open, acquisitions are rejected before the build runs
+        for _ in 0..8 {
+            let err = cache
+                .models(key, &metrics, || unreachable!("breaker must reject before the build"))
+                .unwrap_err();
+            assert!(matches!(err, crate::error::Error::CircuitOpen(_)), "{err}");
+        }
+        // the cooled-down breaker lets the next caller probe; a successful
+        // probe closes the circuit
+        let (_, built) = cache.models(key, &metrics, || Ok(demo_models(7.0))).unwrap();
+        assert!(built);
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Closed));
+        assert!(cache.open_breakers().is_empty());
+        // Closed -> Open, Open -> HalfOpen, HalfOpen -> Closed
+        assert_eq!(metrics.breaker_transitions.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn failed_probe_reopens_the_breaker() {
+        let cache =
+            PlaneCache::with_breaker(BreakerConfig { failure_threshold: 2, cooldown_rejections: 1 });
+        let metrics = Metrics::new();
+        let key = model_key(31);
+        for _ in 0..2 {
+            let _ = cache.models(key, &metrics, || {
+                Err(crate::error::Error::Training("still broken".into()))
+            });
+        }
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Open));
+        let _ = cache
+            .models(key, &metrics, || unreachable!("cooling down"))
+            .unwrap_err();
+        // probe fails -> straight back to Open, not Closed-with-one-failure
+        let err = cache
+            .models(key, &metrics, || Err(crate::error::Error::Training("probe fails".into())))
+            .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Training(_)));
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Open));
+        // Closed->Open, Open->HalfOpen, HalfOpen->Open
+        assert_eq!(metrics.breaker_transitions.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_failure_count() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(32);
+        for round in 0..3 {
+            // 2 failures (below the threshold of 3), then a success
+            for _ in 0..2 {
+                let _ = cache.models(key, &metrics, || {
+                    Err(crate::error::Error::Training("flaky".into()))
+                });
+            }
+            let (_, built) = cache
+                .models(key, &metrics, || Ok(demo_models(round as f32)))
+                .unwrap();
+            assert!(built);
+            assert_eq!(cache.breaker_state(&key), Some(BreakerState::Closed));
+            // drop the cached pair so the next round rebuilds
+            lock_unpoisoned(&cache.models).remove(&key);
+        }
+        assert_eq!(metrics.breaker_transitions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn waiter_failures_do_not_count_toward_the_breaker() {
+        let cache =
+            PlaneCache::with_breaker(BreakerConfig { failure_threshold: 2, cooldown_rejections: 8 });
+        let metrics = Metrics::new();
+        let key = model_key(33);
+        let in_build = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                cache.models(key, &metrics, || {
+                    in_build.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(150));
+                    Err(crate::error::Error::Training("diverged".into()))
+                })
+            });
+            let waiter = s.spawn(|| {
+                while !in_build.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+                cache.models(key, &metrics, || unreachable!("waiter must coalesce"))
+            });
+            assert!(leader.join().unwrap().is_err());
+            assert!(waiter.join().unwrap().is_err());
+        });
+        // one build failed once: the leader's failure counts, the waiter's
+        // surfaced copy of it must not (else bursts double-count straight
+        // past the threshold)
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Closed));
+        assert!(cache.open_breakers().is_empty());
+    }
+
+    #[test]
+    fn panicking_probe_reopens_instead_of_wedging_half_open() {
+        let cache =
+            PlaneCache::with_breaker(BreakerConfig { failure_threshold: 1, cooldown_rejections: 0 });
+        let metrics = Metrics::new();
+        let key = model_key(34);
+        let _ = cache.models(key, &metrics, || {
+            Err(crate::error::Error::Training("opens immediately".into()))
+        });
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Open));
+        // cooldown 0: the next caller probes right away — and panics
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.models(key, &metrics, || -> Result<HostModels> {
+                panic!("probe crashed")
+            })
+        }));
+        assert!(res.is_err());
+        // the panic guard recorded the failure: back to Open, not stuck
+        // HalfOpen with no probe alive
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Open));
+        // and the key still recovers once the fault clears
+        let _ = cache.models(key, &metrics, || Ok(demo_models(8.0))).unwrap();
+        assert_eq!(cache.breaker_state(&key), Some(BreakerState::Closed));
+    }
+
+    #[test]
+    fn verify_integrity_detects_fingerprint_mismatch() {
+        let good = demo_models(1.0);
+        assert!(good.verify_integrity().is_ok());
+        let mut corrupted = demo_models(1.0);
+        corrupted.time_fp ^= 0xdead_beef;
+        let err = corrupted.verify_integrity().unwrap_err();
+        assert!(matches!(err, crate::error::Error::Artifact(_)));
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
     }
 
     #[test]

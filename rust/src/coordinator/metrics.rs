@@ -61,6 +61,18 @@ pub struct Metrics {
     /// Requests answered from a model the drift monitor currently marks
     /// `Stale` — the staleness exposure while a warm refit is in flight.
     pub stale_served: AtomicU64,
+    /// Transient pipeline-stage failures that were retried (each backoff
+    /// sleep counts once).
+    pub retries: AtomicU64,
+    /// Circuit-breaker coarse-state changes (Closed -> Open,
+    /// Open -> Half-Open probe, Half-Open -> Closed / back to Open).
+    pub breaker_transitions: AtomicU64,
+    /// Responses served by the graceful-degradation ladder (Ridge or NPE
+    /// fallback) instead of the primary NN model pair.
+    pub degraded_served: AtomicU64,
+    /// Rising edges of the thermal guard's throttle state (the device
+    /// crossed its trip temperature under sustained serve load).
+    pub thermal_throttle_events: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms).
@@ -120,7 +132,8 @@ impl Metrics {
     }
 
     /// Record a failed request: bumps `requests_failed` and remembers the
-    /// id + message so the batch report can surface every failure. Like
+    /// id + a `[class kind]`-prefixed message so the batch report can
+    /// surface every failure and chaos runs can grep by error kind. Like
     /// the completion ledger, the detail list is bounded at
     /// [`MAX_COMPLETION_LEDGER`] entries — a long-lived service under a
     /// failing stream must not grow one `String` per failure forever —
@@ -129,7 +142,7 @@ impl Metrics {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
         let mut failures = lock_unpoisoned(&self.failures);
         if failures.len() < MAX_COMPLETION_LEDGER {
-            failures.push((id, err.to_string()));
+            failures.push((id, format!("[{} {}] {}", err.class(), err.kind(), err)));
         }
     }
 
@@ -161,7 +174,7 @@ impl Metrics {
     pub fn render(&self) -> String {
         let (p50, p95, max) = self.latency_summary_ms();
         let mut out = format!(
-            "requests: {} received, {} completed, {} failed, {} rejected | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | singleflight waits: {} | host fits: {} | deadline misses: {} | lifecycle: {} observations, {} drift trips, {} refits, {} stale-served | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
+            "requests: {} received, {} completed, {} failed, {} rejected | modes profiled: {} | reboots: {} | plane cache: {} hits / {} misses | model cache: {} hits / {} misses | singleflight waits: {} | host fits: {} | deadline misses: {} | lifecycle: {} observations, {} drift trips, {} refits, {} stale-served | resilience: {} retries, {} breaker transitions, {} degraded served, {} thermal throttles | simulated profiling: {:.1} min | latency ms (p50/p95/max): {:.0}/{:.0}/{:.0}",
             self.requests_received.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_failed.load(Ordering::Relaxed),
@@ -179,6 +192,10 @@ impl Metrics {
             self.drift_trips.load(Ordering::Relaxed),
             self.refits.load(Ordering::Relaxed),
             self.stale_served.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.breaker_transitions.load(Ordering::Relaxed),
+            self.degraded_served.load(Ordering::Relaxed),
+            self.thermal_throttle_events.load(Ordering::Relaxed),
             self.profiling_s() / 60.0,
             p50,
             p95,
@@ -298,6 +315,31 @@ mod tests {
         let r = m.render();
         assert!(
             r.contains("lifecycle: 12 observations, 1 drift trips, 1 refits, 3 stale-served"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn failure_ledger_tags_error_class_and_kind() {
+        let m = Metrics::new();
+        m.record_failure(4, &Error::Training("fit diverged".into()));
+        m.record_failure(7, &Error::CircuitOpen("model build cooling down".into()));
+        let failed = m.failed_requests();
+        assert!(failed[0].1.starts_with("[transient training]"), "{}", failed[0].1);
+        assert!(failed[0].1.contains("fit diverged"));
+        assert!(failed[1].1.starts_with("[permanent circuit-open]"), "{}", failed[1].1);
+    }
+
+    #[test]
+    fn resilience_counters_are_rendered() {
+        let m = Metrics::new();
+        m.retries.fetch_add(5, Ordering::Relaxed);
+        m.breaker_transitions.fetch_add(3, Ordering::Relaxed);
+        m.degraded_served.fetch_add(2, Ordering::Relaxed);
+        m.thermal_throttle_events.fetch_add(1, Ordering::Relaxed);
+        let r = m.render();
+        assert!(
+            r.contains("resilience: 5 retries, 3 breaker transitions, 2 degraded served, 1 thermal throttles"),
             "{r}"
         );
     }

@@ -55,24 +55,29 @@ pub mod policy;
 pub mod queue;
 pub mod service;
 
-pub use cache::{GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane};
+pub use cache::{
+    BreakerConfig, BreakerState, GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey,
+    ServePlane,
+};
 pub use lifecycle::{
     DriftMonitor, Feedback, Lifecycle, LifecycleConfig, ModelState, ModelStatus,
 };
 pub use metrics::Metrics;
 #[cfg(feature = "xla")]
 pub use pipeline::handle_request;
-pub use pipeline::{handle_request_host, HostPipeline};
-pub use policy::{Scenario, Strategy};
+pub use pipeline::{handle_request_host, HostPipeline, ThermalConfig, ThermalGuard};
+pub use policy::{RetryPolicy, Scenario, Strategy};
 pub use queue::{Job, RequestQueue};
 pub use service::{serve, Coordinator, Submitter};
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
 use crate::error::Result;
 use crate::nn::checkpoint::Checkpoint;
 use crate::profiler::Corpus;
+use crate::sim::FaultInjector;
 use crate::train::{HostTrainer, Target, TrainConfig};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
@@ -96,11 +101,44 @@ pub struct Request {
     pub seed: u64,
 }
 
+/// How a response was produced: by the primary NN model pair, or by a
+/// rung of the graceful-degradation ladder after the primary path failed.
+/// Degraded answers are still *answers* — a resilient coordinator never
+/// leaves a trainable request without a power mode — but callers can see
+/// exactly how much model quality backs each one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// The scenario's primary strategy (transferred / scratch NN pair).
+    Primary,
+    /// Ridge linear fallback fit on a small freshly profiled subset.
+    DegradedRidge,
+    /// Analytic NPE power estimate + clock-monotone time proxy — no
+    /// profiling at all (the last rung).
+    DegradedNpe,
+}
+
+impl Provenance {
+    pub fn is_degraded(&self) -> bool {
+        !matches!(self, Provenance::Primary)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Provenance::Primary => "primary",
+            Provenance::DegradedRidge => "degraded-ridge",
+            Provenance::DegradedNpe => "degraded-npe",
+        }
+    }
+}
+
 /// The coordinator's answer.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub strategy: String,
+    /// Which serving path produced this answer (primary model pair vs a
+    /// degradation-ladder rung).
+    pub provenance: Provenance,
     pub chosen_mode: PowerMode,
     /// Predictions at the chosen mode.
     pub predicted_time_ms: f64,
@@ -188,6 +226,20 @@ pub struct CoordinatorConfig {
     /// [`Submitter::report`] rejects feedback — exactly the pre-lifecycle
     /// behaviour.
     pub lifecycle: Option<lifecycle::LifecycleConfig>,
+    /// Retry policy for transient pipeline-stage failures (always on;
+    /// without an injector or real faults it simply never fires).
+    pub retry: RetryPolicy,
+    /// Deterministic fault injector for chaos runs (`serve --faults`).
+    /// `None` (the default) injects nothing and leaves serving
+    /// bit-identical to a build without the harness.
+    pub faults: Option<Arc<FaultInjector>>,
+    /// Thermal guard: when set, sustained serve load advances a shared
+    /// [`ThermalModel`](crate::sim::thermal::ThermalModel), the Pareto
+    /// query is capped at the current `max_sustainable_mw()`, and
+    /// throttling shifts the simulated ground truth so the lifecycle's
+    /// drift monitor sees the episode. `None` (the default) = the paper's
+    /// fan-at-max configuration, no guard.
+    pub thermal: Option<ThermalConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -198,6 +250,9 @@ impl Default for CoordinatorConfig {
             prediction_grid: None,
             workers: 1,
             lifecycle: None,
+            retry: RetryPolicy::default(),
+            faults: None,
+            thermal: None,
         }
     }
 }

@@ -32,17 +32,32 @@
 //! checkpoints. The first request per workload pays profiling + two fits
 //! + the plane build; every later one answers via `ParetoFront::optimize`'s
 //! binary search over the cached front.
+//!
+//! Resilience: scripted faults from a [`FaultInjector`] fire inside the
+//! cache-miss build (transient profiling/fit failures, permanent per-key
+//! failures, checkpoint corruption caught by the integrity check), the
+//! serving loop retries transients against [`handle_attempt`]'s attempt
+//! counter, and [`HostPipeline::degrade`] walks a Ridge-fallback → NPE
+//! ladder so every request still gets *an* answer — tagged with its
+//! [`Provenance`]. An optional [`ThermalGuard`] caps Pareto budgets at
+//! the sustainable power envelope and shifts the observed ground truth
+//! while the simulated die throttles.
+//!
+//! [`handle_attempt`]: HostPipeline::handle_attempt
 
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::baselines::linreg::Ridge;
+use crate::baselines::npe::npe_estimate_mw;
 use crate::coordinator::cache::{
     GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey, ServePlane,
 };
 use crate::coordinator::lifecycle::Lifecycle;
 use crate::coordinator::{
-    prediction_grid, CoordinatorConfig, Metrics, ReferenceModels, Request, Response, Strategy,
+    prediction_grid, CoordinatorConfig, Metrics, Provenance, ReferenceModels, Request, Response,
+    Strategy,
 };
 use crate::device::PowerMode;
 use crate::error::{Error, Result};
@@ -50,10 +65,12 @@ use crate::nn::checkpoint::Checkpoint;
 use crate::pareto::{ParetoFront, Point};
 use crate::predict::PlanePredictor;
 use crate::profiler::Profiler;
-use crate::sim::TrainerSim;
+use crate::sim::thermal::ThermalModel;
+use crate::sim::{FaultInjector, TrainerSim};
 use crate::train::transfer::{transfer_host, TransferConfig};
 use crate::train::{HostTrainer, Target, TrainConfig};
 use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
 
 #[cfg(feature = "xla")]
 use crate::device::PowerModeGrid;
@@ -78,6 +95,127 @@ struct ResolvedGrid {
     entry: Arc<GridEntry>,
 }
 
+/// Clock-clamp factor while thermally throttled: minibatches stretch by
+/// `1/THROTTLE_FACTOR` and draw drops by `THROTTLE_FACTOR` (the same
+/// scaling the trainer sim's scripted throttle fault applies), which is
+/// what lets the lifecycle drift monitor notice a throttling device
+/// through ordinary serving feedback.
+const THROTTLE_FACTOR: f64 = 0.7;
+
+/// Throttle-recovery hysteresis (°C below the trip point): once tripped,
+/// the guard holds the throttled state until the die cools this far below
+/// `throttle_c`, like a real DVFS governor — no flapping at the limit.
+const RECOVER_MARGIN_C: f64 = 10.0;
+
+/// Modes the Ridge degradation rung profiles: enough for a stable
+/// closed-form fit on 4 features, a fraction of the primary path's 50.
+const RIDGE_FALLBACK_MODES: usize = 8;
+
+/// Ridge regularizer for the degradation rung.
+const RIDGE_FALLBACK_LAMBDA: f64 = 1e-6;
+
+/// Seed salt separating the fallback's profiling stream from the primary
+/// path's: a fault plan keyed on the request seed must not
+/// deterministically replay against the rescue attempt.
+const FALLBACK_SALT: u64 = 0x6465_6772_6164_6531; // "degrade1"
+
+/// Thermal-guard tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ThermalConfig {
+    /// Simulated seconds of sustained training each served response
+    /// represents on the guard's clock (one "serve slice").
+    pub slice_s: f64,
+}
+
+impl Default for ThermalConfig {
+    fn default() -> Self {
+        ThermalConfig { slice_s: 30.0 }
+    }
+}
+
+/// Serving-side thermal state shared by all pipeline workers: a
+/// [`ThermalModel`] advanced one slice per response at the chosen mode's
+/// *true* draw, plus the throttle latch. Fault plans script fan-off
+/// episodes through it; the Pareto query caps budgets at
+/// [`ThermalGuard::ceiling_mw`].
+#[derive(Debug)]
+pub struct ThermalGuard {
+    state: Mutex<GuardState>,
+    slice_s: f64,
+    faults: Option<Arc<FaultInjector>>,
+}
+
+#[derive(Debug)]
+struct GuardState {
+    model: ThermalModel,
+    clock_s: f64,
+    throttled: bool,
+}
+
+impl ThermalGuard {
+    pub fn new(cfg: ThermalConfig, faults: Option<Arc<FaultInjector>>) -> ThermalGuard {
+        ThermalGuard {
+            state: Mutex::new(GuardState {
+                model: ThermalModel::default(),
+                clock_s: 0.0,
+                throttled: false,
+            }),
+            slice_s: cfg.slice_s,
+            faults,
+        }
+    }
+
+    fn fan_off_at(&self, t_s: f64) -> bool {
+        self.faults.as_ref().is_some_and(|inj| inj.fan_off_at(t_s))
+    }
+
+    /// Power ceiling (mW) the Pareto query must respect right now. Uses
+    /// the fan state as of the *last* advance: the guard learns about a
+    /// fan failure the way a real board does — from telemetry after it
+    /// already ran a slice hot — so an episode's onset always slips one
+    /// overdrawn slice past the clamp (which is what trips the throttle).
+    pub fn ceiling_mw(&self) -> f64 {
+        lock_unpoisoned(&self.state).model.max_sustainable_mw()
+    }
+
+    /// Advance the guard by one serve slice at `power_mw` sustained true
+    /// draw. Returns whether the device is throttled for this slice;
+    /// rising edges bump `thermal_throttle_events`.
+    pub fn advance(&self, power_mw: f64, metrics: &Metrics) -> bool {
+        let mut st = lock_unpoisoned(&self.state);
+        // a throttled device really does draw less: clamped clocks cut
+        // the integrated power, which is how it eventually cools
+        let draw = if st.throttled { power_mw * THROTTLE_FACTOR } else { power_mw };
+        st.clock_s += self.slice_s;
+        let fan_on = !self.fan_off_at(st.clock_s);
+        st.model.fan_max = fan_on;
+        st.model.advance(draw, self.slice_s);
+        let was = st.throttled;
+        let now = st.model.would_throttle()
+            || (was && st.model.temp_c() >= st.model.throttle_c - RECOVER_MARGIN_C);
+        if now && !was {
+            metrics.thermal_throttle_events.fetch_add(1, Ordering::Relaxed);
+        }
+        st.throttled = now;
+        now
+    }
+
+    /// Current throttle latch (without advancing).
+    pub fn throttled(&self) -> bool {
+        lock_unpoisoned(&self.state).throttled
+    }
+
+    /// Current die temperature (°C).
+    pub fn temp_c(&self) -> f64 {
+        lock_unpoisoned(&self.state).model.temp_c()
+    }
+
+    /// Simulated sustained-serving clock (seconds).
+    pub fn clock_s(&self) -> f64 {
+        lock_unpoisoned(&self.state).clock_s
+    }
+}
+
 /// The per-worker host serving context: everything a pipeline run needs,
 /// bundled once instead of threaded as loose arguments. Construct one
 /// per worker (or per one-shot call via [`handle_request_host`]); the
@@ -94,6 +232,10 @@ pub struct HostPipeline<'a> {
     /// staleness exposure (`stale_served`) is accounted where it
     /// happens.
     lifecycle: Option<&'a Lifecycle>,
+    /// Thermal guard, when the service runs with one: caps the Pareto
+    /// query at the sustainable ceiling and advances the die temperature
+    /// one slice per response.
+    thermal: Option<&'a ThermalGuard>,
 }
 
 impl<'a> HostPipeline<'a> {
@@ -110,6 +252,7 @@ impl<'a> HostPipeline<'a> {
             cfg,
             metrics,
             lifecycle: None,
+            thermal: None,
         }
     }
 
@@ -119,12 +262,32 @@ impl<'a> HostPipeline<'a> {
         self
     }
 
-    /// Run one request through every stage.
+    /// Attach the thermal guard (budget clamp + per-response advance).
+    pub fn with_thermal(mut self, thermal: &'a ThermalGuard) -> HostPipeline<'a> {
+        self.thermal = Some(thermal);
+        self
+    }
+
+    /// Run one request through every stage (first attempt).
     pub fn handle(&self, req: &Request) -> Result<Response> {
-        let admitted = self.admit(req)?;
+        self.handle_attempt(req, 0)
+    }
+
+    /// Run one attempt of a request through every stage. `attempt` is
+    /// the serving loop's retry counter: it selects which scripted
+    /// transient faults fire (a retry outlasting a fault's streak
+    /// deterministically clears it) and keeps `requests_received`
+    /// counting requests, not attempts.
+    pub fn handle_attempt(&self, req: &Request, attempt: u32) -> Result<Response> {
+        let admitted = self.admit(req, attempt)?;
+        if let Some(inj) = &self.cfg.faults {
+            if inj.panics_on(req.id, attempt) {
+                panic!("injected fault-plan panic while handling request {}", req.id);
+            }
+        }
         let grid = self.resolve_grid(&admitted);
         if let Strategy::BruteForce = admitted.strategy {
-            return self.brute_force(&admitted, &grid);
+            return self.brute_force(&admitted, &grid, attempt);
         }
         // the single shared key derivation (`ModelKey::for_request`) is
         // also what the lifecycle's feedback lane resolves, so observed
@@ -137,10 +300,10 @@ impl<'a> HostPipeline<'a> {
             self.ref_fps,
         );
         debug_assert_eq!(key.grid, grid.key, "model key must live on the resolved grid");
-        let (models, built) = self.acquire_models(&admitted, &grid, key)?;
+        let (models, built) = self.acquire_models(&admitted, &grid, key, attempt)?;
         let plane = self.resolve_plane(&grid, &models);
-        let chosen = pareto_query(&plane.front, admitted.req.power_budget_w)?;
-        // counted only once a response is certain (`respond` is
+        let chosen = pareto_query(&plane.front, self.effective_budget_mw(admitted.req))?;
+        // counted only once a response is certain (`finish` is
         // infallible): `stale_served` measures answers actually produced
         // from a condemned model, not failed attempts that touched one
         if let Some(lifecycle) = self.lifecycle {
@@ -149,22 +312,158 @@ impl<'a> HostPipeline<'a> {
         // profiling cost is charged to the request that actually led the
         // fit; coalesced/cached requests spent zero device-seconds
         let profiling_cost_s = if built { models.profiling_cost_s } else { 0.0 };
-        Ok(respond(
+        Ok(self.finish(
             admitted.req,
             chosen,
             format!("{}(host)", admitted.strategy),
             profiling_cost_s,
-            self.metrics,
             admitted.t0,
+            Provenance::Primary,
         ))
     }
 
-    /// Stage 1 — admission: count the arrival, reject malformed requests
-    /// before any profiling or fitting work is spent, resolve the
-    /// scenario's strategy (paper Table 1).
-    fn admit<'r>(&self, req: &'r Request) -> Result<Admitted<'r>> {
+    /// The graceful-degradation ladder, run by the serving loop once the
+    /// primary path has failed for good (permanent error, or a transient
+    /// one with the retry budget or deadline exhausted): a cheap Ridge
+    /// fit over a freshly profiled mode handful, then a profiling-free
+    /// NPE estimate. Failures that are the request's own fault —
+    /// malformed budget, infeasible optimization — are *not* degraded:
+    /// the error is the correct answer. If the whole ladder fails, the
+    /// original (root-cause) error is returned, not the last rung's.
+    pub fn degrade(&self, req: &Request, err: Error) -> Result<Response> {
+        if matches!(err, Error::Usage(_) | Error::Optimization(_)) {
+            return Err(err);
+        }
+        if let Ok(resp) = self.ridge_fallback(req) {
+            return Ok(resp);
+        }
+        match self.npe_fallback(req) {
+            Ok(resp) => Ok(resp),
+            Err(_) => Err(err),
+        }
+    }
+
+    /// Rung 1: profile a small mode handful under a salted seed stream
+    /// and fit closed-form Ridge models for both targets — orders of
+    /// magnitude cheaper than the NN path and immune to fit divergence,
+    /// at the cost of linear-model accuracy.
+    fn ridge_fallback(&self, req: &Request) -> Result<Response> {
         let t0 = Instant::now();
-        admit_request(req, self.metrics)?;
+        let gkey = GridKey::for_request(req.device, self.cfg.prediction_grid, req.seed);
+        let entry = self.cache.grid(gkey, || {
+            GridEntry::new(prediction_grid(req.device, self.cfg.prediction_grid, req.seed))
+        });
+        let n = RIDGE_FALLBACK_MODES.min(entry.grid.len());
+        let mut rng = Rng::new(req.seed ^ FALLBACK_SALT);
+        let sample = entry.grid.sample(n, &mut rng);
+        let mut sim = TrainerSim::new(req.device.spec(), req.workload, req.seed ^ FALLBACK_SALT);
+        if let Some(inj) = &self.cfg.faults {
+            // the rescue profiling run is a real device operation too —
+            // it rolls its own (salted) fault key rather than replaying
+            // or dodging the primary path's
+            if inj.profiling_fails(req.seed ^ FALLBACK_SALT, 0) {
+                return Err(Error::Profiling(format!(
+                    "injected profiling failure during ridge fallback for request {}",
+                    req.id
+                )));
+            }
+            sim = sim.with_faults(inj.trainer_faults());
+        }
+        let mut profiler = Profiler::new(sim);
+        let corpus = profiler.profile_modes(&sample)?;
+        self.metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
+        self.metrics.add_profiling_s(corpus.total_cost_s());
+        let time = Ridge::fit(&corpus, Target::Time, RIDGE_FALLBACK_LAMBDA);
+        let power = Ridge::fit(&corpus, Target::Power, RIDGE_FALLBACK_LAMBDA);
+        let times = time.predict_modes(&entry.grid.modes);
+        let powers = power.predict_modes(&entry.grid.modes);
+        let points: Vec<Point> = entry
+            .grid
+            .modes
+            .iter()
+            .zip(times.iter().zip(&powers))
+            .map(|(m, (&t, &p))| Point { mode: *m, time: t, power_mw: p })
+            .collect();
+        let chosen = ParetoFront::build(&points).optimize(self.effective_budget_mw(req))?;
+        Ok(self.finish(
+            req,
+            chosen,
+            "ridge(degraded)".into(),
+            corpus.total_cost_s(),
+            t0,
+            Provenance::DegradedRidge,
+        ))
+    }
+
+    /// Rung 2: no profiling at all — analytic NPE power estimates plus a
+    /// clock-monotone time proxy. The proxy is not a calibrated time
+    /// prediction (it only orders modes by effective compute rate), so
+    /// `predicted_time_ms` is indicative; the power budget is still
+    /// honored through the NPE axis.
+    fn npe_fallback(&self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        let gkey = GridKey::for_request(req.device, self.cfg.prediction_grid, req.seed);
+        let entry = self.cache.grid(gkey, || {
+            GridEntry::new(prediction_grid(req.device, self.cfg.prediction_grid, req.seed))
+        });
+        let spec = req.device.spec();
+        let points: Vec<Point> = entry
+            .grid
+            .modes
+            .iter()
+            .map(|m| Point {
+                mode: *m,
+                time: npe_time_proxy_ms(m),
+                power_mw: npe_estimate_mw(spec, m),
+            })
+            .collect();
+        let chosen = ParetoFront::build(&points).optimize(self.effective_budget_mw(req))?;
+        Ok(self.finish(req, chosen, "npe(degraded)".into(), 0.0, t0, Provenance::DegradedNpe))
+    }
+
+    /// The budget the Pareto query actually sees: the request's, capped
+    /// at the thermal guard's sustainable ceiling.
+    fn effective_budget_mw(&self, req: &Request) -> f64 {
+        let budget_mw = req.power_budget_w * 1000.0;
+        match self.thermal {
+            Some(guard) => budget_mw.min(guard.ceiling_mw()),
+            None => budget_mw,
+        }
+    }
+
+    /// The response tail owning the cross-cutting serving concerns: the
+    /// thermal guard advances one slice at the chosen mode's *true* draw
+    /// (prediction error is exactly how a clamped budget can still
+    /// overshoot the ceiling), and degraded provenance is counted.
+    fn finish(
+        &self,
+        req: &Request,
+        chosen: Point,
+        strategy: String,
+        profiling_cost_s: f64,
+        t0: Instant,
+        provenance: Provenance,
+    ) -> Response {
+        let throttled = match self.thermal {
+            Some(guard) => {
+                let sim = TrainerSim::new(req.device.spec(), req.workload, req.seed ^ 0xfeed);
+                guard.advance(sim.true_power_mw(&chosen.mode), self.metrics)
+            }
+            None => false,
+        };
+        if provenance.is_degraded() {
+            self.metrics.degraded_served.fetch_add(1, Ordering::Relaxed);
+        }
+        respond(req, chosen, strategy, profiling_cost_s, self.metrics, t0, provenance, throttled)
+    }
+
+    /// Stage 1 — admission: count the arrival (first attempts only —
+    /// retries are not new requests), reject malformed requests before
+    /// any profiling or fitting work is spent, resolve the scenario's
+    /// strategy (paper Table 1).
+    fn admit<'r>(&self, req: &'r Request, attempt: u32) -> Result<Admitted<'r>> {
+        let t0 = Instant::now();
+        admit_request(req, self.metrics, attempt == 0)?;
         Ok(Admitted { req, strategy: Strategy::for_scenario(req.scenario), t0 })
     }
 
@@ -187,10 +486,11 @@ impl<'a> HostPipeline<'a> {
         a: &Admitted<'_>,
         g: &ResolvedGrid,
         key: ModelKey,
+        attempt: u32,
     ) -> Result<(Arc<HostModels>, bool)> {
         self.cache.models(key, self.metrics, || {
             train_host_models(
-                &g.entry.grid, self.reference, self.cfg, self.metrics, a.req, a.strategy,
+                &g.entry.grid, self.reference, self.cfg, self.metrics, a.req, a.strategy, attempt,
             )
         })
     }
@@ -205,24 +505,54 @@ impl<'a> HostPipeline<'a> {
     }
 
     /// The brute-force lane (one-time training): skips the model/plane
-    /// stages and profiles the whole grid for the observed optimum.
-    fn brute_force(&self, a: &Admitted<'_>, g: &ResolvedGrid) -> Result<Response> {
-        brute_force_response(a.req, &g.entry.grid.modes, self.metrics, a.t0)
+    /// stages and profiles the whole grid for the observed optimum. The
+    /// responses it produces stay on the primary provenance, but its
+    /// profiling run is fault-injectable and its budget thermally capped
+    /// like any other lane's.
+    fn brute_force(&self, a: &Admitted<'_>, g: &ResolvedGrid, attempt: u32) -> Result<Response> {
+        let resp = brute_force_response(
+            a.req,
+            &g.entry.grid.modes,
+            self.metrics,
+            a.t0,
+            self.effective_budget_mw(a.req),
+            self.cfg.faults.as_deref(),
+            attempt,
+        )?;
+        if let Some(guard) = self.thermal {
+            let sim = TrainerSim::new(a.req.device.spec(), a.req.workload, a.req.seed ^ 0xfeed);
+            guard.advance(sim.true_power_mw(&resp.chosen_mode), self.metrics);
+        }
+        Ok(resp)
     }
 }
 
-/// Stage 5 — the budget query: fastest predicted mode within the budget,
-/// an O(log front) binary search over the cached front.
-fn pareto_query(front: &ParetoFront, power_budget_w: f64) -> Result<Point> {
-    front.optimize(power_budget_w * 1000.0)
+/// Stage 5 — the budget query: fastest predicted mode within the
+/// (thermally capped) budget, an O(log front) binary search over the
+/// cached front.
+fn pareto_query(front: &ParetoFront, budget_mw: f64) -> Result<Point> {
+    front.optimize(budget_mw)
+}
+
+/// NPE-rung time proxy: inverse effective compute rate over the three
+/// clock domains, GPU-weighted like the training workloads themselves.
+/// Deliberately uncalibrated — the Pareto front only needs it to *order*
+/// modes so faster in-budget modes win.
+fn npe_time_proxy_ms(pm: &PowerMode) -> f64 {
+    let gpu = pm.gpu_khz as f64;
+    let mem = pm.mem_khz as f64;
+    let cpu = pm.cpu_khz as f64 * pm.cores as f64;
+    1e9 * (0.6 / gpu + 0.25 / mem + 0.15 / cpu)
 }
 
 /// The admission check shared by the host pipeline and the xla lane:
-/// count the arrival, reject malformed budgets before any profiling or
-/// fitting work is spent. Both lanes therefore classify and count
-/// rejections identically.
-fn admit_request(req: &Request, metrics: &Metrics) -> Result<()> {
-    metrics.requests_received.fetch_add(1, Ordering::Relaxed);
+/// count the arrival (when `count_arrival`; retry attempts pass false),
+/// reject malformed budgets before any profiling or fitting work is
+/// spent. Both lanes therefore classify and count rejections identically.
+fn admit_request(req: &Request, metrics: &Metrics, count_arrival: bool) -> Result<()> {
+    if count_arrival {
+        metrics.requests_received.fetch_add(1, Ordering::Relaxed);
+    }
     if !req.power_budget_w.is_finite() || req.power_budget_w <= 0.0 {
         metrics.admission_rejected.fetch_add(1, Ordering::Relaxed);
         return Err(Error::Usage(format!(
@@ -251,7 +581,10 @@ pub fn handle_request_host(
 /// sample on the simulated target, then two host fits (transfer for
 /// PowerTrain, from-scratch for NnProfiled). Deterministic in the
 /// [`ModelKey`] inputs — same seed, workload, grid, references and
-/// epochs reproduce bit-identical checkpoints.
+/// epochs reproduce bit-identical checkpoints. Scripted faults fire
+/// here, in strict order: transient profiling failure, permanent fit
+/// failure, transient fit failure, then (post-fit) checkpoint
+/// corruption caught by the integrity check before anything is cached.
 fn train_host_models(
     grid: &crate::device::PowerModeGrid,
     reference: &ReferenceModels,
@@ -259,11 +592,36 @@ fn train_host_models(
     metrics: &Metrics,
     req: &Request,
     strategy: Strategy,
+    attempt: u32,
 ) -> Result<HostModels> {
+    if let Some(inj) = &cfg.faults {
+        if inj.profiling_fails(req.seed, attempt) {
+            return Err(Error::Profiling(format!(
+                "injected transient profiling failure for request {} (attempt {attempt})",
+                req.id
+            )));
+        }
+        if inj.fit_fails_permanently(req.seed) {
+            return Err(Error::Artifact(format!(
+                "injected permanent fit failure for model seed {}",
+                req.seed
+            )));
+        }
+        if inj.fit_fails(req.seed, attempt) {
+            return Err(Error::Training(format!(
+                "injected transient fit failure for request {} (attempt {attempt})",
+                req.id
+            )));
+        }
+    }
     let n_profile = strategy.profiling_modes(grid.len()).min(grid.len());
     let mut rng = Rng::new(req.seed);
+    let mut sim = TrainerSim::new(req.device.spec(), req.workload, req.seed);
+    if let Some(inj) = &cfg.faults {
+        sim = sim.with_faults(inj.trainer_faults());
+    }
     let sample = grid.sample(n_profile, &mut rng);
-    let mut profiler = Profiler::new(TrainerSim::new(req.device.spec(), req.workload, req.seed));
+    let mut profiler = Profiler::new(sim);
     let corpus = profiler.profile_modes(&sample)?;
     metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
     metrics.add_profiling_s(corpus.total_cost_s());
@@ -288,8 +646,17 @@ fn train_host_models(
     // the fit-time validation MAPEs ride along as the drift monitor's
     // baseline: serving-time feedback is judged against the accuracy the
     // pair actually shipped with
-    Ok(HostModels::new(time, power, corpus.total_cost_s())
-        .with_validation(tlog.best_val_mape(), plog.best_val_mape()))
+    let mut models = HostModels::new(time, power, corpus.total_cost_s())
+        .with_validation(tlog.best_val_mape(), plog.best_val_mape());
+    if let Some(inj) = &cfg.faults {
+        if inj.corrupts_checkpoint(req.seed) {
+            // scripted bit-rot between fit and publish: the integrity
+            // check must catch it here, before the pair can be cached
+            models.time_fp ^= 0xbad_c0de;
+            models.verify_integrity()?;
+        }
+    }
+    Ok(models)
 }
 
 /// The cold-path work a plane-cache miss pays once per (grid, model-pair):
@@ -312,7 +679,11 @@ fn build_plane(grid: Arc<GridEntry>, time: &Checkpoint, power: &Checkpoint) -> S
 
 /// Stage 6 — the response tail shared by every lane: observable ground
 /// truth at the chosen mode (for reporting/validation), latency +
-/// completion metrics.
+/// completion metrics. While the device throttles, the ground truth
+/// itself shifts — clamped clocks stretch minibatches by
+/// `1/THROTTLE_FACTOR` and cut draw by `THROTTLE_FACTOR` — which the
+/// lifecycle's feedback lane sees as drift.
+#[allow(clippy::too_many_arguments)]
 fn respond(
     req: &Request,
     chosen: Point,
@@ -320,10 +691,16 @@ fn respond(
     profiling_cost_s: f64,
     metrics: &Metrics,
     t0: Instant,
+    provenance: Provenance,
+    throttled: bool,
 ) -> Response {
     let sim = TrainerSim::new(req.device.spec(), req.workload, req.seed ^ 0xfeed);
-    let obs_t = sim.true_minibatch_ms(&chosen.mode);
-    let obs_p = sim.true_power_mw(&chosen.mode);
+    let mut obs_t = sim.true_minibatch_ms(&chosen.mode);
+    let mut obs_p = sim.true_power_mw(&chosen.mode);
+    if throttled {
+        obs_t /= THROTTLE_FACTOR;
+        obs_p *= THROTTLE_FACTOR;
+    }
 
     let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
     metrics.observe_latency_ms(latency_ms);
@@ -332,6 +709,7 @@ fn respond(
     Response {
         id: req.id,
         strategy,
+        provenance,
         chosen_mode: chosen.mode,
         predicted_time_ms: chosen.time,
         predicted_power_w: chosen.power_mw / 1000.0,
@@ -343,14 +721,28 @@ fn respond(
 }
 
 /// Brute-force tail shared by the host lane and the xla path: profile
-/// every mode, pick the observed in-budget optimum.
+/// every mode, pick the observed in-budget optimum. `budget_mw` is the
+/// caller's effective (possibly thermally capped) budget.
 fn brute_force_response(
     req: &Request,
     modes: &[PowerMode],
     metrics: &Metrics,
     t0: Instant,
+    budget_mw: f64,
+    faults: Option<&FaultInjector>,
+    attempt: u32,
 ) -> Result<Response> {
-    let mut profiler = Profiler::new(TrainerSim::new(req.device.spec(), req.workload, req.seed));
+    let mut sim = TrainerSim::new(req.device.spec(), req.workload, req.seed);
+    if let Some(inj) = faults {
+        if inj.profiling_fails(req.seed, attempt) {
+            return Err(Error::Profiling(format!(
+                "injected transient profiling failure for request {} (attempt {attempt})",
+                req.id
+            )));
+        }
+        sim = sim.with_faults(inj.trainer_faults());
+    }
+    let mut profiler = Profiler::new(sim);
     let corpus = profiler.profile_modes(modes)?;
     metrics.modes_profiled.fetch_add(corpus.len() as u64, Ordering::Relaxed);
     metrics.add_profiling_s(corpus.total_cost_s());
@@ -360,13 +752,14 @@ fn brute_force_response(
         .map(|r| Point { mode: r.mode, time: r.time_ms, power_mw: r.power_mw })
         .collect();
     let front = ParetoFront::build(&points);
-    let chosen = front.optimize(req.power_budget_w * 1000.0)?;
+    let chosen = front.optimize(budget_mw)?;
     let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
     metrics.observe_latency_ms(latency_ms);
     metrics.record_completion(req.id);
     Ok(Response {
         id: req.id,
         strategy: "brute-force".into(),
+        provenance: Provenance::Primary,
         chosen_mode: chosen.mode,
         predicted_time_ms: chosen.time,
         predicted_power_w: chosen.power_mw / 1000.0,
@@ -389,14 +782,22 @@ pub fn handle_request(
     req: &Request,
 ) -> Result<Response> {
     let t0 = Instant::now();
-    admit_request(req, metrics)?;
+    admit_request(req, metrics, true)?;
 
     let strategy = Strategy::for_scenario(req.scenario);
 
     // 1. online profiling of a small random mode sample on the target
     let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
     if let Strategy::BruteForce = strategy {
-        return brute_force_response(req, &grid.modes, metrics, t0);
+        return brute_force_response(
+            req,
+            &grid.modes,
+            metrics,
+            t0,
+            req.power_budget_w * 1000.0,
+            cfg.faults.as_deref(),
+            0,
+        );
     }
     let n_profile = strategy.profiling_modes(grid.len()).min(grid.len());
     let mut rng = Rng::new(req.seed);
@@ -468,7 +869,16 @@ fn finish_predicted(
 
     // optimize: fastest predicted mode within the budget
     let chosen = front.optimize(req.power_budget_w * 1000.0)?;
-    Ok(respond(req, chosen, strategy, profiling_cost_s, metrics, t0))
+    Ok(respond(
+        req,
+        chosen,
+        strategy,
+        profiling_cost_s,
+        metrics,
+        t0,
+        Provenance::Primary,
+        false,
+    ))
 }
 
 #[cfg(test)]
@@ -477,7 +887,25 @@ mod tests {
     use crate::coordinator::test_support::{host_cfg, host_reference};
     use crate::coordinator::Scenario;
     use crate::device::DeviceKind;
+    use crate::sim::FaultPlan;
     use crate::workload::Workload;
+
+    fn chaos_cfg(grid: usize, plan: FaultPlan) -> CoordinatorConfig {
+        let mut cfg = host_cfg(grid);
+        cfg.faults = Some(Arc::new(FaultInjector::new(plan)));
+        cfg
+    }
+
+    fn federated_req(id: u64, seed: u64) -> Request {
+        Request {
+            id,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            seed,
+        }
+    }
 
     #[test]
     fn host_powertrain_request_runs_the_full_loop() {
@@ -668,5 +1096,144 @@ mod tests {
             .unwrap();
         assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.plane_cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn transient_fit_fault_clears_once_the_retry_outlasts_its_streak() {
+        let reference = host_reference();
+        let cfg = chaos_cfg(300, FaultPlan { fit_fail_pct: 1.0, fit_streak: 2, ..Default::default() });
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics);
+        let req = federated_req(1, 5);
+        for attempt in 0..2 {
+            let err = pipe.handle_attempt(&req, attempt).unwrap_err();
+            assert!(matches!(err, Error::Training(_)), "attempt {attempt}: {err}");
+            assert!(err.is_transient());
+        }
+        let resp = pipe.handle_attempt(&req, 2).unwrap();
+        assert_eq!(resp.provenance, Provenance::Primary);
+        assert_eq!(resp.strategy, "powertrain-50(host)");
+        // retried attempts are the same request: one arrival, not three
+        assert_eq!(metrics.requests_received.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn permanent_fit_failure_degrades_to_the_ridge_rung() {
+        let reference = host_reference();
+        let cfg = chaos_cfg(300, FaultPlan { permanent_fit_seeds: vec![5], ..Default::default() });
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics);
+        let req = federated_req(2, 5);
+        // never clears, whatever the attempt
+        for attempt in [0, 1, 7] {
+            let err = pipe.handle_attempt(&req, attempt).unwrap_err();
+            assert!(matches!(err, Error::Artifact(_)), "attempt {attempt}: {err}");
+            assert!(!err.is_transient());
+        }
+        let err = pipe.handle(&req).unwrap_err();
+        let resp = pipe.degrade(&req, err).unwrap();
+        assert_eq!(resp.provenance, Provenance::DegradedRidge);
+        assert_eq!(resp.strategy, "ridge(degraded)");
+        assert!(resp.predicted_power_w <= req.power_budget_w);
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 1);
+        // the ridge rung profiled its small handful, nothing NN-sized
+        assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), RIDGE_FALLBACK_MODES as u64);
+        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn unbroken_profiling_outage_falls_through_to_the_npe_rung() {
+        let reference = host_reference();
+        let cfg = chaos_cfg(
+            300,
+            FaultPlan { profiling_fail_pct: 1.0, profiling_streak: 1_000_000, ..Default::default() },
+        );
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics);
+        let req = federated_req(3, 5);
+        let err = pipe.handle(&req).unwrap_err();
+        assert!(matches!(err, Error::Profiling(_)), "{err}");
+        let resp = pipe.degrade(&req, err).unwrap();
+        assert_eq!(resp.provenance, Provenance::DegradedNpe);
+        assert_eq!(resp.strategy, "npe(degraded)");
+        assert!(resp.predicted_power_w <= req.power_budget_w);
+        // the analytic rung touched the device zero times
+        assert_eq!(metrics.modes_profiled.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn degrade_refuses_to_mask_usage_and_optimization_errors() {
+        let reference = host_reference();
+        let cfg = host_cfg(200);
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics);
+        let req = federated_req(4, 5);
+        let err = pipe.degrade(&req, Error::Usage("bad budget".into())).unwrap_err();
+        assert!(matches!(err, Error::Usage(_)));
+        let err = pipe.degrade(&req, Error::Optimization("infeasible".into())).unwrap_err();
+        assert!(matches!(err, Error::Optimization(_)));
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn corrupted_checkpoint_is_rejected_and_never_cached() {
+        let reference = host_reference();
+        let cfg = chaos_cfg(300, FaultPlan { corrupt_fit_seeds: vec![5], ..Default::default() });
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics);
+        let err = pipe.handle(&federated_req(5, 5)).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        // the fits ran, but the corrupted pair must not be published:
+        // grid cached, model slot evicted, no plane
+        assert_eq!(metrics.host_fits.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.sizes(), (1, 0, 0));
+    }
+
+    #[test]
+    fn thermal_guard_caps_the_budget_one_slice_after_fan_loss() {
+        let reference = host_reference();
+        let cfg = host_cfg(300);
+        let metrics = Metrics::new();
+        let cache = PlaneCache::new();
+        // fan dies at t=0 and never recovers; long slices park the die
+        // near steady state so the physics is unambiguous
+        let inj = Arc::new(FaultInjector::new(FaultPlan {
+            fan_off_s: vec![(0.0, f64::MAX)],
+            ..Default::default()
+        }));
+        let guard = ThermalGuard::new(ThermalConfig { slice_s: 120.0 }, Some(inj));
+        let pipe = HostPipeline::new(&cache, &reference, &cfg, &metrics).with_thermal(&guard);
+
+        // slice 1: the guard still believes the fan is running (it learns
+        // from telemetry, i.e. at advance time), so the full-speed mode is
+        // served — and overdraws the fan-off envelope
+        let first = pipe.handle(&federated_req(6, 5)).unwrap();
+        assert!(guard.throttled(), "full-speed slice with the fan off must trip the throttle");
+        assert_eq!(metrics.thermal_throttle_events.load(Ordering::Relaxed), 1);
+        // throttled ground truth is dilated relative to the clean sim
+        let clean = TrainerSim::new(DeviceKind::OrinAgx.spec(), Workload::mobilenet(), 5 ^ 0xfeed)
+            .true_minibatch_ms(&first.chosen_mode);
+        assert!((first.observed_time_ms * THROTTLE_FACTOR - clean).abs() < 1e-9);
+
+        // slice 2 onward: the ceiling is now the fan-off sustainable
+        // envelope, and the Pareto query respects it
+        let second = pipe.handle(&federated_req(7, 5)).unwrap();
+        let ceiling_w = ThermalModel { fan_max: false, ..Default::default() }.max_sustainable_mw()
+            / 1000.0;
+        assert!(
+            second.predicted_power_w <= ceiling_w + 1e-9,
+            "{} W exceeds fan-off ceiling {} W",
+            second.predicted_power_w,
+            ceiling_w
+        );
+        assert!(first.predicted_power_w > second.predicted_power_w);
     }
 }

@@ -1,7 +1,11 @@
 //! Scenario policies (paper Table 1): which solution approach fits which
-//! deployment scenario, based on training duration and workload churn.
+//! deployment scenario, based on training duration and workload churn —
+//! plus the retry policy the resilient serving loop applies to transient
+//! pipeline-stage failures.
 
 use std::fmt;
+
+use crate::util::rng::Rng;
 
 /// Deployment scenario for an arriving training request (paper Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,6 +101,45 @@ impl Strategy {
     }
 }
 
+/// Retry policy for transient pipeline-stage failures: capped exponential
+/// backoff with deterministic jitter. The jitter is a pure hash of
+/// `(seed, attempt)` — not a shared RNG stream — so a chaos run replays
+/// the exact same delays under the same fault plan regardless of worker
+/// scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (so up to `max_retries + 1`
+    /// attempts total).
+    pub max_retries: u32,
+    /// Backoff before retry 1 (doubles per retry).
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, base_ms: 5, cap_ms: 80 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retrying `attempt` (0-based: the delay between
+    /// attempt N and attempt N+1). Deterministic in `(seed, attempt)`;
+    /// jittered within `[ceil(capped/2), capped]` where
+    /// `capped = min(base * 2^attempt, cap)`.
+    pub fn backoff_ms(&self, seed: u64, attempt: u32) -> u64 {
+        let exp = self.base_ms.saturating_mul(1u64 << attempt.min(20));
+        let capped = exp.min(self.cap_ms).max(1);
+        let low = capped - capped / 2;
+        let span = (capped / 2 + 1) as usize;
+        let jitter = Rng::new(seed ^ 0x6263_6b6f_6666) // "bckoff"
+            .split(attempt as u64)
+            .below(span) as u64;
+        low + jitter
+    }
+}
+
 impl fmt::Display for Strategy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -131,6 +174,35 @@ mod tests {
         for s in Scenario::ALL {
             assert_eq!(Scenario::parse(s.name()), Some(s));
         }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        for attempt in 0..6 {
+            let a = p.backoff_ms(42, attempt);
+            let b = p.backoff_ms(42, attempt);
+            assert_eq!(a, b, "jitter must be a pure function of (seed, attempt)");
+            let capped = (p.base_ms << attempt.min(20)).min(p.cap_ms);
+            assert!(a >= capped - capped / 2 && a <= capped, "attempt {attempt}: {a}");
+        }
+        // different seeds decorrelate the jitter (not all identical)
+        let delays: Vec<u64> = (0..32).map(|s| p.backoff_ms(s, 3)).collect();
+        assert!(delays.iter().any(|&d| d != delays[0]));
+    }
+
+    #[test]
+    fn backoff_grows_then_saturates_at_cap() {
+        let p = RetryPolicy { max_retries: 10, base_ms: 5, cap_ms: 80 };
+        // lower bound of the jitter window doubles until the cap
+        assert!(p.backoff_ms(7, 0) <= 5);
+        assert!(p.backoff_ms(7, 4) <= 80);
+        for attempt in 4..12 {
+            let d = p.backoff_ms(7, attempt);
+            assert!(d >= 40 && d <= 80, "attempt {attempt}: {d}");
+        }
+        // huge attempt numbers must not overflow the shift
+        let _ = p.backoff_ms(7, u32::MAX);
     }
 
     #[test]

@@ -21,6 +21,17 @@
 //! poison-recovering locks, one bad request can no longer wedge the
 //! fleet.
 //!
+//! Resilient serving (host lane): transient failures — including caught
+//! panics — are retried under [`CoordinatorConfig::retry`]'s capped,
+//! deterministically jittered backoff, but never past the job's
+//! deadline: a retry that could only land after `arrival + deadline`
+//! is abandoned and the request goes straight to
+//! [`HostPipeline::degrade`]'s Ridge → NPE ladder, so callers get a
+//! provenance-tagged answer instead of a hang or a late error. When
+//! [`CoordinatorConfig::thermal`] is set, all workers share one
+//! [`ThermalGuard`] that caps Pareto budgets at the sustainable power
+//! envelope.
+//!
 //! Workers whose PJRT runtime cannot be constructed (or builds without
 //! the `xla` feature) serve through the host-native [`HostPipeline`] —
 //! the same profile → transfer → predict loop, computed by the pure-rust
@@ -32,7 +43,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use crate::coordinator::lifecycle::{Feedback, Lifecycle};
-use crate::coordinator::pipeline::HostPipeline;
+use crate::coordinator::pipeline::{HostPipeline, ThermalGuard};
 use crate::coordinator::queue::{Job, RequestQueue};
 use crate::coordinator::{
     CoordinatorConfig, Metrics, PlaneCache, ReferenceModels, Request, Response,
@@ -130,6 +141,7 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     cache: Arc<PlaneCache>,
     lifecycle: Option<Arc<Lifecycle>>,
+    thermal: Option<Arc<ThermalGuard>>,
     handles: Vec<JoinHandle<()>>,
     rx: mpsc::Receiver<(u64, Result<Response>)>,
 }
@@ -157,6 +169,11 @@ impl Coordinator {
         let lifecycle = cfg.lifecycle.map(|lcfg| {
             Lifecycle::start(lcfg, cfg, reference, Arc::clone(&cache), Arc::clone(&metrics))
         });
+        // one thermal guard for the whole pool: the die heats from the
+        // fleet's combined serving, not per worker
+        let thermal = cfg
+            .thermal
+            .map(|tcfg| Arc::new(ThermalGuard::new(tcfg, cfg.faults.clone())));
         let ingress = Arc::new(Ingress {
             queue: RequestQueue::new(),
             submitters: AtomicUsize::new(1),
@@ -170,6 +187,7 @@ impl Coordinator {
             let w_metrics = Arc::clone(&metrics);
             let w_cache = Arc::clone(&cache);
             let w_lifecycle = lifecycle.clone();
+            let w_thermal = thermal.clone();
             let w_tx = tx.clone();
             let w_cfg = cfg.clone();
             let w_reference = reference.clone();
@@ -181,6 +199,7 @@ impl Coordinator {
                         &w_ingress,
                         &w_cache,
                         w_lifecycle.as_deref(),
+                        w_thermal.as_deref(),
                         &w_reference,
                         &w_cfg,
                         &w_metrics,
@@ -201,7 +220,7 @@ impl Coordinator {
             }
         }
         let submitter = Submitter { ingress, lifecycle: lifecycle.clone() };
-        Ok((Coordinator { metrics, cache, lifecycle, handles, rx }, submitter))
+        Ok((Coordinator { metrics, cache, lifecycle, thermal, handles, rx }, submitter))
     }
 
     /// The shared metrics (live — counters advance while workers run).
@@ -218,6 +237,12 @@ impl Coordinator {
     /// (status inspection, `wait_idle` sequencing in tests/demos).
     pub fn lifecycle(&self) -> Option<Arc<Lifecycle>> {
         self.lifecycle.clone()
+    }
+
+    /// The shared thermal guard, when the coordinator runs with one
+    /// (die-temperature/throttle inspection in tests/demos).
+    pub fn thermal(&self) -> Option<Arc<ThermalGuard>> {
+        self.thermal.clone()
     }
 
     /// Receive the next completed result (blocking), *before*
@@ -271,13 +296,15 @@ impl Coordinator {
 
 /// One worker: pull jobs in priority/deadline order, run the pipeline
 /// (artifact-backed when a runtime is available, host-native otherwise),
-/// convert panics into failed responses, account deadline misses.
+/// convert panics into failed responses, account deadline misses. Host
+/// jobs go through [`serve_host_job`]'s retry + degradation stack.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     ingress: &Ingress,
     cache: &PlaneCache,
     lifecycle: Option<&Lifecycle>,
+    thermal: Option<&ThermalGuard>,
     reference: &ReferenceModels,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
@@ -287,6 +314,9 @@ fn worker_loop(
     let mut pipeline = HostPipeline::new(cache, reference, cfg, metrics);
     if let Some(l) = lifecycle {
         pipeline = pipeline.with_lifecycle(l);
+    }
+    if let Some(t) = thermal {
+        pipeline = pipeline.with_thermal(t);
     }
     // each worker owns its own non-Send PJRT runtime; without one it
     // serves through the host engine
@@ -312,12 +342,10 @@ fn worker_loop(
                 handle_request(rt, reference, cfg, metrics, req)
             }))
             .unwrap_or_else(|p| Err(panic_error(worker_id, &*p))),
-            None => catch_unwind(AssertUnwindSafe(|| pipeline.handle(req)))
-                .unwrap_or_else(|p| Err(panic_error(worker_id, &*p))),
+            None => serve_host_job(&pipeline, worker_id, ingress, cfg, metrics, &job),
         };
         #[cfg(not(feature = "xla"))]
-        let res = catch_unwind(AssertUnwindSafe(|| pipeline.handle(req)))
-            .unwrap_or_else(|p| Err(panic_error(worker_id, &*p)));
+        let res = serve_host_job(&pipeline, worker_id, ingress, cfg, metrics, &job);
         // deadline accounting on the simulated arrival clock: a response
         // produced after `arrival + deadline` is a miss (best-effort jobs
         // have an unreachable u64::MAX absolute deadline)
@@ -331,6 +359,47 @@ fn worker_loop(
             break;
         }
     }
+}
+
+/// Serve one job through the host pipeline with the full resilience
+/// stack: per-attempt panic isolation, transient-failure retries under
+/// the deterministic backoff policy (never scheduled past the job's
+/// deadline), then the graceful-degradation ladder once the primary path
+/// has failed for good. Every injected chaos scenario lands here, which
+/// is why each attempt — and the rescue itself — runs under its own
+/// `catch_unwind`.
+fn serve_host_job(
+    pipeline: &HostPipeline<'_>,
+    worker_id: usize,
+    ingress: &Ingress,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    job: &Job,
+) -> Result<Response> {
+    let req = &job.request;
+    let mut attempt: u32 = 0;
+    let err = loop {
+        let res = catch_unwind(AssertUnwindSafe(|| pipeline.handle_attempt(req, attempt)))
+            .unwrap_or_else(|p| Err(panic_error(worker_id, &*p)));
+        match res {
+            Ok(resp) => return Ok(resp),
+            Err(e) if e.is_transient() && attempt < cfg.retry.max_retries => {
+                let delay = cfg.retry.backoff_ms(req.seed ^ req.id, attempt);
+                // a retry that could only land after the deadline would
+                // burn device time to produce a guaranteed miss — stop
+                // retrying and let the degradation ladder answer now
+                if ingress.queue.now_ms().saturating_add(delay) > job.absolute_deadline_ms() {
+                    break e;
+                }
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(delay));
+                attempt += 1;
+            }
+            Err(e) => break e,
+        }
+    };
+    catch_unwind(AssertUnwindSafe(|| pipeline.degrade(req, err)))
+        .unwrap_or_else(|p| Err(panic_error(worker_id, &*p)))
 }
 
 /// Render a caught panic payload as a coordinator error.
@@ -531,5 +600,95 @@ mod tests {
         let (responses, metrics) = serve(&cfg, &reference, Vec::new()).unwrap();
         assert!(responses.is_empty());
         assert_eq!(metrics.requests_received.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn transient_fit_failures_are_retried_to_a_primary_answer() {
+        let reference = host_reference();
+        let mut cfg = host_cfg(200);
+        cfg.workers = 1;
+        cfg.faults = Some(Arc::new(crate::sim::FaultInjector::new(crate::sim::FaultPlan {
+            fit_fail_pct: 1.0,
+            fit_streak: 2,
+            ..Default::default()
+        })));
+        let req = Request {
+            id: 0,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            seed: 5,
+        };
+        let (responses, metrics) = serve(&cfg, &reference, vec![req]).unwrap();
+        assert_eq!(responses.len(), 1);
+        // two scripted failures, then the third attempt lands the real thing
+        assert_eq!(responses[0].provenance, crate::coordinator::Provenance::Primary);
+        assert_eq!(responses[0].strategy, "powertrain-50(host)");
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.requests_received.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn deadline_exhausted_transients_skip_retries_and_degrade() {
+        let reference = host_reference();
+        let mut cfg = host_cfg(200);
+        cfg.workers = 1;
+        // an outage no retry budget can outlast
+        cfg.faults = Some(Arc::new(crate::sim::FaultInjector::new(crate::sim::FaultPlan {
+            fit_fail_pct: 1.0,
+            fit_streak: 1_000_000,
+            ..Default::default()
+        })));
+        let req = Request {
+            id: 0,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            seed: 5,
+        };
+        let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
+        // deadline 0: any backoff delay would already overshoot it, so
+        // the worker must not burn a single retry before degrading
+        submitter.send(Job::immediate(req).with_deadline(0)).unwrap();
+        drop(submitter);
+        let (responses, metrics) = coordinator.finish().unwrap();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].provenance, crate::coordinator::Provenance::DegradedRidge);
+        assert_eq!(responses[0].strategy, "ridge(degraded)");
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn injected_worker_panics_are_retried_transparently() {
+        let reference = host_reference();
+        let mut cfg = host_cfg(200);
+        cfg.workers = 1;
+        cfg.faults = Some(Arc::new(crate::sim::FaultInjector::new(crate::sim::FaultPlan {
+            panic_request_ids: vec![3],
+            ..Default::default()
+        })));
+        let requests: Vec<Request> = (1..=4)
+            .map(|id| Request {
+                id,
+                device: DeviceKind::OrinAgx,
+                workload: Workload::mobilenet(),
+                power_budget_w: 1e6,
+                scenario: Scenario::FederatedLearning,
+                seed: 5,
+            })
+            .collect();
+        let (responses, metrics) = serve(&cfg, &reference, requests).unwrap();
+        // the panicking request is retried (panics classify as transient
+        // coordinator faults) and every request still gets a primary answer
+        assert_eq!(responses.len(), 4);
+        for r in &responses {
+            assert_eq!(r.provenance, crate::coordinator::Provenance::Primary);
+        }
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.failed_requests().len(), 0);
     }
 }

@@ -39,6 +39,10 @@ pub enum Error {
     /// Coordinator / serving failure.
     Coordinator(String),
 
+    /// A circuit breaker rejected the request without attempting the
+    /// guarded operation (the underlying failure already happened K times).
+    CircuitOpen(String),
+
     /// Invalid CLI usage.
     Usage(String),
 }
@@ -59,6 +63,7 @@ impl fmt::Display for Error {
             Error::Training(m) => write!(f, "training error: {m}"),
             Error::Optimization(m) => write!(f, "optimization error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::CircuitOpen(m) => write!(f, "circuit breaker open: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
         }
     }
@@ -94,5 +99,86 @@ impl Error {
     }
     pub fn csv(msg: impl Into<String>) -> Self {
         Error::Csv(msg.into())
+    }
+
+    /// Whether retrying the failed operation could plausibly succeed.
+    ///
+    /// Transient: environmental hiccups (I/O, runtime, profiling telemetry,
+    /// a fit that diverged on one attempt, another worker's in-flight build
+    /// failing under us). Permanent: malformed inputs, inconsistent
+    /// artifacts, infeasible optimizations, usage errors — retrying replays
+    /// the same deterministic failure, so the resilience layer must degrade
+    /// instead.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            Error::Io(_) => true,
+            #[cfg(feature = "xla")]
+            Error::Xla(_) => true,
+            Error::Profiling(_) | Error::Training(_) | Error::Coordinator(_) => true,
+            Error::Json(_)
+            | Error::Csv(_)
+            | Error::Artifact(_)
+            | Error::Device(_)
+            | Error::Optimization(_)
+            | Error::CircuitOpen(_)
+            | Error::Usage(_) => false,
+        }
+    }
+
+    /// Variant name, for the failure ledger and chaos-run grepping.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "io",
+            #[cfg(feature = "xla")]
+            Error::Xla(_) => "xla",
+            Error::Json(_) => "json",
+            Error::Csv(_) => "csv",
+            Error::Artifact(_) => "artifact",
+            Error::Device(_) => "device",
+            Error::Profiling(_) => "profiling",
+            Error::Training(_) => "training",
+            Error::Optimization(_) => "optimization",
+            Error::Coordinator(_) => "coordinator",
+            Error::CircuitOpen(_) => "circuit-open",
+            Error::Usage(_) => "usage",
+        }
+    }
+
+    /// `"transient"` / `"permanent"`, for ledger rendering.
+    pub fn class(&self) -> &'static str {
+        if self.is_transient() {
+            "transient"
+        } else {
+            "permanent"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification() {
+        assert!(Error::Profiling("sensor hiccup".into()).is_transient());
+        assert!(Error::Training("fit diverged".into()).is_transient());
+        assert!(Error::Coordinator("worker panicked".into()).is_transient());
+        assert!(Error::Io(std::io::Error::other("disk")).is_transient());
+
+        assert!(!Error::Usage("bad flag".into()).is_transient());
+        assert!(!Error::Optimization("no feasible mode".into()).is_transient());
+        assert!(!Error::Artifact("fingerprint mismatch".into()).is_transient());
+        assert!(!Error::CircuitOpen("model build".into()).is_transient());
+        assert!(!Error::Json("truncated".into()).is_transient());
+    }
+
+    #[test]
+    fn kind_and_class_names() {
+        let e = Error::Profiling("x".into());
+        assert_eq!(e.kind(), "profiling");
+        assert_eq!(e.class(), "transient");
+        let e = Error::CircuitOpen("x".into());
+        assert_eq!(e.kind(), "circuit-open");
+        assert_eq!(e.class(), "permanent");
     }
 }

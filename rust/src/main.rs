@@ -148,6 +148,19 @@ COMMANDS
       --drift-mape PCT (0=auto)  absolute drift trip threshold in percent
                                  (auto = 2x the fit-time validation MAPE,
                                  floored at 10%)
+      --faults FILE.json         replay a deterministic fault-injection
+                                 plan (see EXPERIMENTS.md, Fault
+                                 injection): scripted sensor noise,
+                                 profiling/fit failures, worker panics,
+                                 corrupted checkpoints and fan-off
+                                 episodes; transient failures retry with
+                                 backoff, persistent ones degrade to
+                                 ridge/npe fallbacks
+      --thermal                  enable the thermal guard: power budgets
+                                 are capped at the sustainable envelope
+                                 and sustained load can throttle the
+                                 (simulated) die, shifting observed
+                                 outcomes
   experiment <id|all>        regenerate paper exhibits; ids:
                              table1-4 fig2a fig2b fig2c fig6 fig7 fig8
                              fig9a-e fig10-14
@@ -464,6 +477,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_ms = args.usize_or("deadline-ms", 0)? as u64; // 0 = best effort
     let feedback = args.get("feedback").is_some();
     let drift_mape = args.f64_or("drift-mape", 0.0)?; // 0 = factor-based auto
+    let faults = match args.get("faults") {
+        Some(path) => {
+            let plan = powertrain::sim::FaultPlan::load(std::path::Path::new(path))?;
+            println!(
+                "fault plan loaded from {path} (seed {}{})",
+                plan.seed,
+                if plan.is_noop() { ", no-op" } else { "" }
+            );
+            Some(std::sync::Arc::new(powertrain::sim::FaultInjector::new(plan)))
+        }
+        None => None,
+    };
+    let thermal = args.get("thermal").is_some();
     let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
     // scenario choice resolved up front so flag errors surface before
     // the worker pool spins up
@@ -493,6 +519,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             window: 8,
             ..Default::default()
         }),
+        faults,
+        thermal: thermal.then(powertrain::coordinator::ThermalConfig::default),
         ..Default::default()
     };
 
@@ -582,12 +610,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // responses arrive sorted by request id, so this table is stable
     // across runs regardless of worker completion order
     let mut t = TextTable::new(&[
-        "id", "strategy", "mode", "pred ms", "obs ms", "obs W", "latency ms",
+        "id", "strategy", "served", "mode", "pred ms", "obs ms", "obs W", "latency ms",
     ]);
     for r in &responses {
         t.row(vec![
             r.id.to_string(),
             r.strategy.clone(),
+            r.provenance.label().to_string(),
             r.chosen_mode.label(),
             format!("{:.1}", r.predicted_time_ms),
             format!("{:.1}", r.observed_time_ms),

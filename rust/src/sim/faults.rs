@@ -1,0 +1,432 @@
+//! Deterministic fault-injection harness.
+//!
+//! A [`FaultPlan`] scripts failures for a chaos run — sensor dropouts and
+//! noise bursts, transient profiling/fit failures, permanently-failing
+//! models, corrupted checkpoints, worker panics and fan-off thermal
+//! episodes — and a [`FaultInjector`] answers "does this operation fail
+//! now?" queries from the serving stack.
+//!
+//! Every decision is a **pure function** of `(plan seed, fault domain,
+//! operation key, attempt)`: the injector holds no mutable state and no
+//! shared RNG stream, so worker scheduling order cannot change which
+//! operations fail, and a chaos run replays bit-identically under the
+//! same plan. Transient faults fail a bounded number of *consecutive*
+//! attempts (`streak`) on an operation key and then succeed, which is
+//! what lets the coordinator's retry layer recover deterministically.
+//!
+//! Plans serialize to JSON (`FaultPlan::load`/[`FaultPlan::save`]) so CI
+//! chaos legs and `serve --faults <plan.json>` share committed scenarios.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sim::trainer_sim::FaultConfig;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Format marker for serialized plans.
+const PLAN_KIND: &str = "powertrain-fault-plan-v1";
+
+/// Hash domains: every fault class rolls in its own stream so e.g. a
+/// profiling fault on key K is independent of a fit fault on key K.
+const DOMAIN_PROFILING: u64 = 0x70_72_6f_66_31; // "prof1"
+const DOMAIN_FIT: u64 = 0x66_69_74_31; // "fit1"
+
+/// A declarative chaos scenario. All knobs default to "off" —
+/// [`FaultPlan::default`] is a no-op plan under which serving behaves
+/// bit-identically to running without an injector at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of every hash-based fault decision.
+    pub seed: u64,
+    /// Fraction of profiling operations (by operation key) that fail
+    /// transiently for their first `profiling_streak` attempts.
+    pub profiling_fail_pct: f64,
+    pub profiling_streak: usize,
+    /// Fraction of model fits (by operation key) that fail transiently
+    /// for their first `fit_streak` attempts.
+    pub fit_fail_pct: f64,
+    pub fit_streak: usize,
+    /// Request seeds whose model build fails *permanently* (every
+    /// attempt) — the scenario a circuit breaker exists for.
+    pub permanent_fit_seeds: Vec<u64>,
+    /// Request seeds whose freshly built checkpoints come back with
+    /// corrupted fingerprints (caught by the integrity verify, never
+    /// cached).
+    pub corrupt_fit_seeds: Vec<u64>,
+    /// Request ids whose first handling attempt panics inside the worker.
+    pub panic_request_ids: Vec<u64>,
+    /// Probability a 1 Hz sensor sample is dropped during profiling.
+    pub sensor_dropout_prob: f64,
+    /// Multiplier on the sensor's read-noise sigma (noise burst when > 1).
+    pub noise_factor: f64,
+    /// Fan-off thermal episodes as `[start_s, end_s)` intervals on the
+    /// thermal guard's simulated clock (the IP-67 enclosure scenario).
+    pub fan_off_s: Vec<(f64, f64)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            profiling_fail_pct: 0.0,
+            profiling_streak: 1,
+            fit_fail_pct: 0.0,
+            fit_streak: 1,
+            permanent_fit_seeds: Vec::new(),
+            corrupt_fit_seeds: Vec::new(),
+            panic_request_ids: Vec::new(),
+            sensor_dropout_prob: 0.0,
+            noise_factor: 1.0,
+            fan_off_s: Vec::new(),
+        }
+    }
+}
+
+fn as_u64(v: &Value) -> Result<u64> {
+    let f = v.as_f64()?;
+    if f < 0.0 || f.fract() != 0.0 || f >= 9.0e15 {
+        return Err(Error::json(format!("expected non-negative integer, got {f}")));
+    }
+    Ok(f as u64)
+}
+
+fn u64_list(plan: &Value, key: &str) -> Result<Vec<u64>> {
+    match plan.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => v.as_arr()?.iter().map(as_u64).collect(),
+    }
+}
+
+fn f64_or(plan: &Value, key: &str, default: f64) -> Result<f64> {
+    match plan.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64(),
+    }
+}
+
+impl FaultPlan {
+    /// True when this plan injects nothing: serving under it must be
+    /// bit-identical to serving without an injector.
+    pub fn is_noop(&self) -> bool {
+        self.profiling_fail_pct == 0.0
+            && self.fit_fail_pct == 0.0
+            && self.permanent_fit_seeds.is_empty()
+            && self.corrupt_fit_seeds.is_empty()
+            && self.panic_request_ids.is_empty()
+            && self.sensor_dropout_prob == 0.0
+            && self.noise_factor == 1.0
+            && self.fan_off_s.is_empty()
+    }
+
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let kind = v.req("kind")?.as_str()?;
+        if kind != PLAN_KIND {
+            return Err(Error::json(format!(
+                "unsupported fault plan kind '{kind}' (expected '{PLAN_KIND}')"
+            )));
+        }
+        let d = FaultPlan::default();
+        let mut fan_off_s = Vec::new();
+        if let Some(episodes) = v.get("fan_off_s") {
+            for ep in episodes.as_arr()? {
+                let pair = ep.as_arr()?;
+                if pair.len() != 2 {
+                    return Err(Error::json("fan_off_s episodes must be [start_s, end_s] pairs"));
+                }
+                let (start, end) = (pair[0].as_f64()?, pair[1].as_f64()?);
+                if !start.is_finite() || !end.is_finite() || start < 0.0 || end < start {
+                    return Err(Error::json(format!(
+                        "malformed fan_off_s episode [{start}, {end}]"
+                    )));
+                }
+                fan_off_s.push((start, end));
+            }
+        }
+        let plan = FaultPlan {
+            seed: v.get("seed").map(as_u64).transpose()?.unwrap_or(d.seed),
+            profiling_fail_pct: f64_or(v, "profiling_fail_pct", d.profiling_fail_pct)?,
+            profiling_streak: v
+                .get("profiling_streak")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(d.profiling_streak),
+            fit_fail_pct: f64_or(v, "fit_fail_pct", d.fit_fail_pct)?,
+            fit_streak: v
+                .get("fit_streak")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(d.fit_streak),
+            permanent_fit_seeds: u64_list(v, "permanent_fit_seeds")?,
+            corrupt_fit_seeds: u64_list(v, "corrupt_fit_seeds")?,
+            panic_request_ids: u64_list(v, "panic_request_ids")?,
+            sensor_dropout_prob: f64_or(v, "sensor_dropout_prob", d.sensor_dropout_prob)?,
+            noise_factor: f64_or(v, "noise_factor", d.noise_factor)?,
+            fan_off_s,
+        };
+        for (name, p) in [
+            ("profiling_fail_pct", plan.profiling_fail_pct),
+            ("fit_fail_pct", plan.fit_fail_pct),
+            ("sensor_dropout_prob", plan.sensor_dropout_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::json(format!("{name} must be in [0, 1], got {p}")));
+            }
+        }
+        if !plan.noise_factor.is_finite() || plan.noise_factor < 0.0 {
+            return Err(Error::json(format!(
+                "noise_factor must be finite and non-negative, got {}",
+                plan.noise_factor
+            )));
+        }
+        Ok(plan)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let nums = |xs: &[u64]| Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        Value::obj(vec![
+            ("kind", Value::Str(PLAN_KIND.into())),
+            ("seed", Value::Num(self.seed as f64)),
+            ("profiling_fail_pct", Value::Num(self.profiling_fail_pct)),
+            ("profiling_streak", Value::Num(self.profiling_streak as f64)),
+            ("fit_fail_pct", Value::Num(self.fit_fail_pct)),
+            ("fit_streak", Value::Num(self.fit_streak as f64)),
+            ("permanent_fit_seeds", nums(&self.permanent_fit_seeds)),
+            ("corrupt_fit_seeds", nums(&self.corrupt_fit_seeds)),
+            ("panic_request_ids", nums(&self.panic_request_ids)),
+            ("sensor_dropout_prob", Value::Num(self.sensor_dropout_prob)),
+            ("noise_factor", Value::Num(self.noise_factor)),
+            (
+                "fan_off_s",
+                Value::Arr(
+                    self.fan_off_s
+                        .iter()
+                        .map(|&(a, b)| Value::Arr(vec![Value::Num(a), Value::Num(b)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)?;
+        FaultPlan::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Answers fault queries for one plan. Stateless and cheap to share
+/// (`Arc`) across workers; every query hashes its inputs instead of
+/// consuming from a stream, so decisions are independent of call order.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Uniform [0, 1) roll, a pure function of (plan seed, domain, key).
+    fn roll(&self, domain: u64, key: u64) -> f64 {
+        Rng::new(self.plan.seed ^ domain).split(key).uniform()
+    }
+
+    /// Does the profiling run for operation `key` fail on `attempt`?
+    /// Selected keys fail attempts `0..profiling_streak`, then succeed.
+    pub fn profiling_fails(&self, key: u64, attempt: u32) -> bool {
+        (attempt as usize) < self.plan.profiling_streak
+            && self.roll(DOMAIN_PROFILING, key) < self.plan.profiling_fail_pct
+    }
+
+    /// Does the model fit for operation `key` fail transiently on
+    /// `attempt`?
+    pub fn fit_fails(&self, key: u64, attempt: u32) -> bool {
+        (attempt as usize) < self.plan.fit_streak
+            && self.roll(DOMAIN_FIT, key) < self.plan.fit_fail_pct
+    }
+
+    /// Does the model fit for request seed `seed` fail on *every*
+    /// attempt? (The circuit-breaker scenario.)
+    pub fn fit_fails_permanently(&self, seed: u64) -> bool {
+        self.plan.permanent_fit_seeds.contains(&seed)
+    }
+
+    /// Do the freshly built checkpoints for request seed `seed` come back
+    /// with corrupted fingerprints?
+    pub fn corrupts_checkpoint(&self, seed: u64) -> bool {
+        self.plan.corrupt_fit_seeds.contains(&seed)
+    }
+
+    /// Does handling request `request_id` panic on this attempt? Only the
+    /// first attempt panics, so a caught-and-retried request recovers.
+    pub fn panics_on(&self, request_id: u64, attempt: u32) -> bool {
+        attempt == 0 && self.plan.panic_request_ids.contains(&request_id)
+    }
+
+    /// Sensor-level faults ([`TrainerSim::with_faults`]) this plan
+    /// scripts: sample dropout and noise bursts.
+    ///
+    /// [`TrainerSim::with_faults`]: crate::sim::TrainerSim::with_faults
+    pub fn trainer_faults(&self) -> FaultConfig {
+        FaultConfig {
+            sensor_dropout_prob: self.plan.sensor_dropout_prob,
+            noise_factor: self.plan.noise_factor,
+            ..Default::default()
+        }
+    }
+
+    /// Is the fan scripted off at simulated second `t_s`?
+    pub fn fan_off_at(&self, t_s: f64) -> bool {
+        self.plan.fan_off_s.iter().any(|&(a, b)| t_s >= a && t_s < b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_noop());
+        let inj = FaultInjector::new(plan);
+        for key in 0..64 {
+            assert!(!inj.profiling_fails(key, 0));
+            assert!(!inj.fit_fails(key, 0));
+            assert!(!inj.fit_fails_permanently(key));
+            assert!(!inj.corrupts_checkpoint(key));
+            assert!(!inj.panics_on(key, 0));
+        }
+        assert!(!inj.fan_off_at(0.0));
+        let faults = inj.trainer_faults();
+        assert_eq!(faults.sensor_dropout_prob, 0.0);
+        assert_eq!(faults.noise_factor, 1.0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_order_independent() {
+        let plan = FaultPlan { seed: 42, profiling_fail_pct: 0.5, ..Default::default() };
+        let a = FaultInjector::new(plan.clone());
+        let b = FaultInjector::new(plan);
+        // query b in reverse order: decisions must not depend on call order
+        let from_a: Vec<bool> = (0..100).map(|k| a.profiling_fails(k, 0)).collect();
+        let from_b: Vec<bool> = (0..100).rev().map(|k| b.profiling_fails(k, 0)).collect();
+        let from_b: Vec<bool> = from_b.into_iter().rev().collect();
+        assert_eq!(from_a, from_b);
+        assert!(from_a.iter().any(|&f| f) && from_a.iter().any(|&f| !f));
+    }
+
+    #[test]
+    fn transient_streak_bounds_consecutive_failures() {
+        let plan = FaultPlan {
+            seed: 7,
+            fit_fail_pct: 1.0,
+            fit_streak: 2,
+            ..Default::default()
+        };
+        let inj = FaultInjector::new(plan);
+        for key in 0..16 {
+            assert!(inj.fit_fails(key, 0));
+            assert!(inj.fit_fails(key, 1));
+            // a retry past the streak deterministically succeeds
+            assert!(!inj.fit_fails(key, 2));
+        }
+    }
+
+    #[test]
+    fn fail_fraction_tracks_the_configured_pct() {
+        let plan = FaultPlan { seed: 3, profiling_fail_pct: 0.3, ..Default::default() };
+        let inj = FaultInjector::new(plan);
+        let n = 2000u64;
+        let fails = (0..n).filter(|&k| inj.profiling_fails(k, 0)).count() as f64 / n as f64;
+        assert!((fails - 0.3).abs() < 0.05, "fail fraction {fails}");
+    }
+
+    #[test]
+    fn panics_only_on_first_attempt_of_listed_ids() {
+        let plan = FaultPlan { panic_request_ids: vec![5], ..Default::default() };
+        let inj = FaultInjector::new(plan);
+        assert!(inj.panics_on(5, 0));
+        assert!(!inj.panics_on(5, 1));
+        assert!(!inj.panics_on(6, 0));
+    }
+
+    #[test]
+    fn fan_episodes_are_half_open_intervals() {
+        let plan = FaultPlan {
+            fan_off_s: vec![(10.0, 20.0), (50.0, 60.0)],
+            ..Default::default()
+        };
+        let inj = FaultInjector::new(plan);
+        assert!(!inj.fan_off_at(9.9));
+        assert!(inj.fan_off_at(10.0));
+        assert!(inj.fan_off_at(19.9));
+        assert!(!inj.fan_off_at(20.0));
+        assert!(inj.fan_off_at(55.0));
+        assert!(!inj.fan_off_at(100.0));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let plan = FaultPlan {
+            seed: 11,
+            profiling_fail_pct: 0.1,
+            profiling_streak: 2,
+            fit_fail_pct: 0.05,
+            fit_streak: 1,
+            permanent_fit_seeds: vec![777],
+            corrupt_fit_seeds: vec![888],
+            panic_request_ids: vec![3, 9],
+            sensor_dropout_prob: 0.05,
+            noise_factor: 4.0,
+            fan_off_s: vec![(0.0, 240.0)],
+        };
+        let back = FaultPlan::from_json(&Value::parse(&plan.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn sparse_json_fills_defaults_and_bad_plans_are_rejected() {
+        let v = Value::parse(r#"{"kind": "powertrain-fault-plan-v1", "seed": 9}"#).unwrap();
+        let plan = FaultPlan::from_json(&v).unwrap();
+        assert_eq!(plan.seed, 9);
+        assert!(plan.is_noop());
+
+        for bad in [
+            r#"{"seed": 1}"#,                                                  // missing kind
+            r#"{"kind": "other"}"#,                                            // wrong kind
+            r#"{"kind": "powertrain-fault-plan-v1", "fit_fail_pct": 1.5}"#,    // pct out of range
+            r#"{"kind": "powertrain-fault-plan-v1", "noise_factor": -1}"#,     // negative noise
+            r#"{"kind": "powertrain-fault-plan-v1", "fan_off_s": [[5]]}"#,     // malformed pair
+            r#"{"kind": "powertrain-fault-plan-v1", "fan_off_s": [[9, 2]]}"#,  // end < start
+            r#"{"kind": "powertrain-fault-plan-v1", "panic_request_ids": [-1]}"#,
+        ] {
+            assert!(
+                FaultPlan::from_json(&Value::parse(bad).unwrap()).is_err(),
+                "accepted bad plan: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn save_and_load() {
+        let dir = std::env::temp_dir().join("pt_fault_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = FaultPlan { seed: 5, profiling_fail_pct: 0.1, ..Default::default() };
+        plan.save(&path).unwrap();
+        assert_eq!(FaultPlan::load(&path).unwrap(), plan);
+        std::fs::remove_file(&path).ok();
+    }
+}

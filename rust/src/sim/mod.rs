@@ -8,12 +8,14 @@
 //! so the learning problem (non-linear bottleneck switches across a 4-D
 //! grid, workload- and device-specific constants) is preserved.
 
+pub mod faults;
 pub mod perf_model;
 pub mod power_model;
 pub mod sensor;
 pub mod thermal;
 pub mod trainer_sim;
 
+pub use faults::{FaultInjector, FaultPlan};
 pub use perf_model::{minibatch_time_ms, TimeBreakdown};
 pub use power_model::steady_power_mw;
 pub use sensor::PowerSensor;

@@ -44,9 +44,24 @@ impl PowerSensor {
         self.since_change_s = 0.0;
     }
 
-    /// Advance simulated time.
+    /// Advance simulated time. Non-finite or negative `dt_s` (possible from
+    /// a malformed fault plan) is clamped to 0 so the settling clock can
+    /// never run backwards or go NaN.
     pub fn advance(&mut self, dt_s: f64) {
+        let dt_s = if dt_s.is_finite() { dt_s.max(0.0) } else { 0.0 };
         self.since_change_s += dt_s;
+        debug_assert!(
+            !self.since_change_s.is_nan(),
+            "sensor settling clock went NaN"
+        );
+    }
+
+    /// Scale the Gaussian read-noise sigma — fault injection uses this for
+    /// noise bursts. Non-finite or negative factors are ignored.
+    pub fn scale_noise(&mut self, factor: f64) {
+        if factor.is_finite() && factor >= 0.0 {
+            self.noise_mw *= factor;
+        }
     }
 
     /// Noise-free instantaneous power.
@@ -116,6 +131,50 @@ mod tests {
         let mut rng = Rng::new(2);
         for _ in 0..1000 {
             let _v: u32 = s.sample(&mut rng); // type guarantees >= 0
+        }
+    }
+
+    #[test]
+    fn advance_survives_hostile_inputs() {
+        let mut s = PowerSensor::new(10_000.0);
+        s.change_mode(40_000.0);
+        s.advance(1.0);
+        let before = s.instantaneous();
+        for &dt in &[f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -2.0] {
+            s.advance(dt);
+            assert!(s.instantaneous().is_finite(), "poisoned by dt={dt}");
+        }
+        // hostile dt values are no-ops (INFINITY snaps to steady is NOT
+        // desired: it must be clamped to zero elapsed time)
+        assert!((s.instantaneous() - before).abs() < 1e-9);
+        s.advance(10.0);
+        assert!(s.settled());
+    }
+
+    #[test]
+    fn noise_scaling_widens_and_silences_samples() {
+        let mut quiet = PowerSensor::new(30_000.0);
+        quiet.scale_noise(0.0);
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(quiet.sample(&mut rng), 30_000);
+        }
+        let mut loud = PowerSensor::new(30_000.0);
+        loud.scale_noise(10.0);
+        let mut rng = Rng::new(5);
+        let spread = (0..200)
+            .map(|_| (loud.sample(&mut rng) as f64 - 30_000.0).abs())
+            .fold(0.0f64, f64::max);
+        assert!(spread > 1_000.0, "spread={spread}");
+        // hostile factors are ignored
+        let mut s = PowerSensor::new(30_000.0);
+        s.scale_noise(f64::NAN);
+        s.scale_noise(-3.0);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let baseline = PowerSensor::new(30_000.0);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&mut r1), baseline.sample(&mut r2));
         }
     }
 

@@ -53,10 +53,18 @@ impl ThermalModel {
     }
 
     /// Advance the thermal state by `dt_s` seconds at `power_mw` draw.
+    ///
+    /// Inputs come from fault plans and predicted power, either of which
+    /// can be garbage; non-finite or negative values are clamped so a bad
+    /// plan cannot NaN-poison `temp_c` (which never recovers: NaN steady
+    /// state infects every later update).
     pub fn advance(&mut self, power_mw: f64, dt_s: f64) {
+        let power_mw = if power_mw.is_finite() { power_mw.max(0.0) } else { 0.0 };
+        let dt_s = if dt_s.is_finite() { dt_s.max(0.0) } else { 0.0 };
         let steady = self.ambient_c + self.resistance() * power_mw / 1000.0;
         let k = (-dt_s / self.tau_s).exp();
         self.temp_c = steady + (self.temp_c - steady) * k;
+        debug_assert!(self.temp_c.is_finite(), "thermal state went non-finite");
     }
 
     /// Steady-state temperature at a sustained power draw.
@@ -107,6 +115,30 @@ mod tests {
         assert!(fan.max_sustainable_mw() > 60_000.0);
         assert!(nofan.max_sustainable_mw() < 60_000.0);
         assert!(nofan.max_sustainable_mw() > 10_000.0);
+    }
+
+    #[test]
+    fn advance_survives_hostile_inputs() {
+        let mut t = ThermalModel::default();
+        t.advance(40_000.0, 10.0);
+        let before = t.temp_c();
+        for &(p, dt) in &[
+            (f64::NAN, 1.0),
+            (f64::INFINITY, 1.0),
+            (40_000.0, f64::NAN),
+            (40_000.0, f64::NEG_INFINITY),
+            (-5_000.0, 1.0),
+            (40_000.0, -3.0),
+        ] {
+            t.advance(p, dt);
+            assert!(t.temp_c().is_finite(), "poisoned by ({p}, {dt})");
+        }
+        // a clamped negative/NaN dt is a no-op in time, so the state is
+        // still in a sane band around where it started
+        assert!((t.temp_c() - before).abs() < 30.0);
+        // and the model keeps working normally afterwards
+        t.advance(40_000.0, 1000.0);
+        assert!((t.temp_c() - t.steady_c(40_000.0)).abs() < 0.5);
     }
 
     #[test]

@@ -17,13 +17,26 @@ use crate::util::rng::Rng;
 use crate::workload::Workload;
 
 /// Fault-injection knobs (all off by default).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct FaultConfig {
     /// Probability that a 1 Hz sensor sample is dropped (jtop hiccup).
     pub sensor_dropout_prob: f64,
+    /// Multiplier on the sensor's read-noise sigma (noise burst when > 1).
+    pub noise_factor: f64,
     /// If set, clocks throttle to this fraction after `throttle_after_s`.
     pub throttle_factor: Option<f64>,
     pub throttle_after_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            sensor_dropout_prob: 0.0,
+            noise_factor: 1.0, // 1.0 = nominal noise, not silence
+            throttle_factor: None,
+            throttle_after_s: 0.0,
+        }
+    }
 }
 
 /// Raw telemetry from profiling one power mode.
@@ -65,6 +78,7 @@ impl TrainerSim {
     }
 
     pub fn with_faults(mut self, faults: FaultConfig) -> TrainerSim {
+        self.sensor.scale_noise(faults.noise_factor);
         self.faults = faults;
         self
     }
@@ -231,6 +245,21 @@ mod tests {
             .with_faults(FaultConfig { sensor_dropout_prob: 0.5, ..Default::default() })
             .profile_mode(&slow, 40);
         assert!(dropped.power_samples_mw.len() < full.power_samples_mw.len() * 3 / 4);
+    }
+
+    #[test]
+    fn noise_burst_widens_power_samples() {
+        let spec = DeviceKind::OrinAgx.spec();
+        let slow = PowerMode { cores: 2, cpu_khz: spec.cpu_khz[2], gpu_khz: spec.gpu_khz[0], mem_khz: spec.mem_khz[0] };
+        let clean = TrainerSim::new(spec, Workload::resnet(), 3).profile_mode(&slow, 40);
+        let noisy = TrainerSim::new(spec, Workload::resnet(), 3)
+            .with_faults(FaultConfig { noise_factor: 20.0, ..Default::default() })
+            .profile_mode(&slow, 40);
+        let late = |run: &ProfilingRun| -> Vec<f64> {
+            run.power_samples_mw[4..].iter().map(|&p| p as f64).collect()
+        };
+        let (c, n) = (late(&clean), late(&noisy));
+        assert!(stats::std_dev(&n) > 3.0 * stats::std_dev(&c));
     }
 
     #[test]

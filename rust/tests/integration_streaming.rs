@@ -1,22 +1,26 @@
 //! Integration: the streaming coordinator service — singleflight
 //! fitting under concurrent identical load, priority/deadline
-//! scheduling, deterministic response ordering, and the per-request
-//! failure ledger.
+//! scheduling, deterministic response ordering, the per-request
+//! failure ledger, and resilient serving under scripted fault plans
+//! (retries, circuit breaking, graceful degradation, thermal drift).
 //!
 //! Reference models are cheap untrained checkpoints (the fit dynamics
 //! under test are the coordinator's, not the models'); scales are
 //! reduced so `cargo test` stays fast.
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use powertrain::coordinator::{
-    serve, Coordinator, CoordinatorConfig, Feedback, Job, LifecycleConfig, ModelState,
-    ReferenceModels, Request, Scenario,
+    serve, Coordinator, CoordinatorConfig, Feedback, Job, LifecycleConfig, Metrics, ModelState,
+    Provenance, ReferenceModels, Request, Scenario, ThermalConfig,
 };
 use powertrain::device::DeviceKind;
 use powertrain::error::Error;
 use powertrain::nn::{checkpoint::Checkpoint, MlpParams};
 use powertrain::profiler::StandardScaler;
+use powertrain::sim::thermal::ThermalModel;
+use powertrain::sim::{FaultInjector, FaultPlan};
 use powertrain::util::rng::Rng;
 use powertrain::workload::Workload;
 
@@ -296,4 +300,341 @@ fn deadline_misses_are_counted() {
     let (responses, metrics) = coordinator.finish().unwrap();
     assert_eq!(responses.len(), 3);
     assert_eq!(metrics.deadline_misses.load(Ordering::Relaxed), 1);
+}
+
+// ------------------------------------------------------------------
+// fault injection + resilient serving
+
+/// Every counter that must reproduce bit-identically run-to-run under
+/// the same fault plan. Wall-clock-dependent metrics (latency, real
+/// profiling seconds) are deliberately excluded — they are the only
+/// nondeterministic ones.
+fn counter_snapshot(m: &Metrics) -> Vec<u64> {
+    [
+        &m.requests_received,
+        &m.requests_completed,
+        &m.requests_failed,
+        &m.admission_rejected,
+        &m.modes_profiled,
+        &m.plane_cache_hits,
+        &m.plane_cache_misses,
+        &m.model_cache_hits,
+        &m.model_cache_misses,
+        &m.host_fits,
+        &m.deadline_misses,
+        &m.feedback_observations,
+        &m.drift_trips,
+        &m.refits,
+        &m.stale_served,
+        &m.retries,
+        &m.breaker_transitions,
+        &m.degraded_served,
+        &m.thermal_throttle_events,
+    ]
+    .iter()
+    .map(|c| c.load(Ordering::Relaxed))
+    .collect()
+}
+
+/// Tentpole acceptance: a no-op fault plan is bit-identical to serving
+/// with no injector at all. The fault layer must add zero behavioral
+/// footprint when it injects nothing — every response field and every
+/// deterministic counter matches the uninjected run exactly.
+#[test]
+fn noop_fault_plan_is_bit_identical_to_an_uninjected_run() {
+    let reference = reference();
+    let stream = || {
+        vec![
+            request(0, Scenario::FederatedLearning, 5),
+            request(1, Scenario::ContinuousLearning, 6),
+            request(2, Scenario::FineTuning, 7),
+            request(3, Scenario::OneTimeTraining, 8),
+            request(4, Scenario::FederatedLearning, 5), // warm cache hit
+        ]
+    };
+    let run = |faults: Option<Arc<FaultInjector>>| {
+        let c = CoordinatorConfig { faults, ..cfg(120, 1) };
+        serve(&c, &reference, stream()).unwrap()
+    };
+    let plan = FaultPlan::default();
+    assert!(plan.is_noop(), "the default plan must be the no-op plan");
+    let (base, base_m) = run(None);
+    let (noop, noop_m) = run(Some(Arc::new(FaultInjector::new(plan))));
+    assert_eq!(base.len(), 5);
+    assert_eq!(noop.len(), 5);
+    for (a, b) in base.iter().zip(&noop) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.provenance, b.provenance);
+        assert_eq!(a.chosen_mode, b.chosen_mode);
+        assert_eq!(a.predicted_time_ms.to_bits(), b.predicted_time_ms.to_bits());
+        assert_eq!(a.predicted_power_w.to_bits(), b.predicted_power_w.to_bits());
+        assert_eq!(a.observed_time_ms.to_bits(), b.observed_time_ms.to_bits());
+        assert_eq!(a.observed_power_w.to_bits(), b.observed_power_w.to_bits());
+        assert_eq!(a.profiling_cost_s.to_bits(), b.profiling_cost_s.to_bits());
+    }
+    assert_eq!(counter_snapshot(&base_m), counter_snapshot(&noop_m));
+    assert!(base.iter().all(|r| r.provenance == Provenance::Primary));
+    assert_eq!(base_m.retries.load(Ordering::Relaxed), 0);
+    assert_eq!(base_m.degraded_served.load(Ordering::Relaxed), 0);
+}
+
+/// Tentpole e2e acceptance: one serving run under a plan combining
+/// transient fit failures, a permanently failing model, an injected
+/// worker panic, a corrupted checkpoint, and a fan-off thermal episode.
+/// The coordinator must
+///
+/// 1. answer EVERY request (degraded where necessary, no hangs),
+/// 2. open exactly one circuit breaker — the permanent-failure key,
+/// 3. trip the drift monitor organically from thermally dilated
+///    observations and recover through one background warm refit,
+/// 4. reproduce responses and counters bit-identically when the same
+///    plan + seeds run a second time.
+#[test]
+fn chaos_plan_serves_everything_opens_one_breaker_and_recovers_from_thermal_drift() {
+    let reference = reference();
+
+    // Probe run — the phase-B model pair served clean (no faults, no
+    // thermal). Serving is deterministic, so this reveals exactly which
+    // APE a throttle-dilated observation of the same key will score
+    // against the same predictions: the drift trip threshold can then be
+    // placed strictly between the clean and the dilated score, making
+    // the "thermal throttling trips drift" phase well-posed regardless
+    // of how accurate the fitted pair happens to be.
+    let nofan_ceiling_w =
+        ThermalModel { fan_max: false, ..Default::default() }.max_sustainable_mw() / 1000.0;
+    let probe_cfg = CoordinatorConfig { transfer_epochs: 40, ..cfg(200, 1) };
+    let (probe, _) = serve(
+        &probe_cfg,
+        &reference,
+        vec![
+            request(0, Scenario::ContinuousLearning, 400),
+            // feasibility under the fan-off ceiling: the clamped phase
+            // below needs at least one front point this cheap
+            Request {
+                power_budget_w: nofan_ceiling_w,
+                ..request(1, Scenario::ContinuousLearning, 400)
+            },
+        ],
+    )
+    .unwrap();
+    assert_eq!(probe.len(), 2, "scenario precondition: fan-off ceiling must be feasible");
+    let clean_resp = &probe[0];
+    assert!(
+        clean_resp.predicted_power_w > nofan_ceiling_w,
+        "scenario precondition: the unclamped choice must exceed the fan-off ceiling \
+         ({} W vs {nofan_ceiling_w} W), otherwise clamping is unobservable",
+        clean_resp.predicted_power_w
+    );
+    // …but stay under the fan-ON ceiling, so the thermally guarded run
+    // picks the identical mode while the fan still spins
+    let fan_on_ceiling_w = ThermalModel::default().max_sustainable_mw() / 1000.0;
+    assert!(
+        clean_resp.predicted_power_w < fan_on_ceiling_w,
+        "scenario precondition: the unclamped choice must fit the fan-on ceiling \
+         ({} W vs {fan_on_ceiling_w} W)",
+        clean_resp.predicted_power_w
+    );
+    let ape = |pred: f64, obs: f64| 100.0 * ((pred - obs) / obs).abs();
+    // the monitor scores max(time APE, power APE); throttling dilates
+    // observed time by 1/0.7 and observed power by 0.7
+    let clean_score = ape(clean_resp.predicted_time_ms, clean_resp.observed_time_ms)
+        .max(ape(clean_resp.predicted_power_w, clean_resp.observed_power_w));
+    let dilated_score = ape(clean_resp.predicted_time_ms, clean_resp.observed_time_ms / 0.7)
+        .max(ape(clean_resp.predicted_power_w, clean_resp.observed_power_w * 0.7));
+    assert!(
+        dilated_score > clean_score,
+        "scenario precondition: throttle dilation must dominate the pair's own error \
+         (clean {clean_score:.2}% vs dilated {dilated_score:.2}%)"
+    );
+    let trip_pct = (clean_score + dilated_score) / 2.0;
+
+    let plan = FaultPlan {
+        seed: 41,
+        fit_fail_pct: 1.0, // every cold build fails once…
+        fit_streak: 1,     // …and deterministically clears on retry
+        permanent_fit_seeds: vec![777],
+        corrupt_fit_seeds: vec![888],
+        panic_request_ids: vec![13],
+        // [1000 s, 1250 s): hits the phase-B window (7 phase-A responses
+        // × 120 s slices put the clock at 840 s when phase B starts) and
+        // ends before the post-refit request, which must serve unclamped
+        fan_off_s: vec![(1000.0, 1250.0)],
+        ..FaultPlan::default()
+    };
+
+    let run = |plan: &FaultPlan| -> (Vec<powertrain::coordinator::Response>, Vec<u64>) {
+        let c = CoordinatorConfig {
+            transfer_epochs: 40, // must match the probe: same ModelKey, same fit bits
+            faults: Some(Arc::new(FaultInjector::new(plan.clone()))),
+            thermal: Some(ThermalConfig { slice_s: 120.0 }), // 4× tau: slices park at steady state
+            lifecycle: Some(LifecycleConfig {
+                trip_override_pct: Some(trip_pct),
+                min_observations: 2,
+                window: 4,
+                refit_epochs: 12,
+                refit_delay_ms: 150, // hold the refit long enough to observe Stale
+                ..Default::default()
+            }),
+            ..cfg(200, 1)
+        };
+        let (coordinator, submitter) = Coordinator::start(&c, &reference).unwrap();
+        let lifecycle = coordinator.lifecycle().expect("lifecycle enabled");
+        let metrics = coordinator.metrics();
+        let mut responses = Vec::new();
+        let mut ask = |req: Request| {
+            submitter.send_request(req).unwrap();
+            let resp = coordinator.recv_result().expect("worker alive").1.unwrap();
+            responses.push(resp.clone());
+            resp
+        };
+
+        // phase A — resilience. Three permanent fit failures on the same
+        // key open its breaker; each is still answered by the ridge rung.
+        for id in 1..=3u64 {
+            let r = ask(request(id, Scenario::ContinuousLearning, 777));
+            assert_eq!(r.provenance, Provenance::DegradedRidge, "id {id}");
+            assert_eq!(r.strategy, "ridge(degraded)");
+        }
+        assert_eq!(metrics.breaker_transitions.load(Ordering::Relaxed), 1);
+        // the fourth is shed by the open breaker — answered without a build
+        let r4 = ask(request(4, Scenario::ContinuousLearning, 777));
+        assert_eq!(r4.provenance, Provenance::DegradedRidge);
+        // injected worker panic: retried transparently to a primary answer
+        let r13 = ask(request(13, Scenario::FederatedLearning, 301));
+        assert_eq!(r13.provenance, Provenance::Primary);
+        // corrupted checkpoint: caught by the fingerprint check, degraded
+        let r20 = ask(request(20, Scenario::ContinuousLearning, 888));
+        assert_eq!(r20.provenance, Provenance::DegradedRidge);
+        // plain transient fit failure: retried to a primary answer
+        let r21 = ask(request(21, Scenario::FederatedLearning, 302));
+        assert_eq!(r21.provenance, Provenance::Primary);
+
+        let open = coordinator.cache().open_breakers();
+        assert_eq!(open.len(), 1, "exactly one breaker must be open");
+        assert_eq!(open[0].seed, 777, "…and it is the permanent-failure key");
+        let thermal = coordinator.thermal().expect("thermal guard enabled");
+        assert_eq!(metrics.thermal_throttle_events.load(Ordering::Relaxed), 0);
+
+        // phase B — thermal. id 100 serves fan-on (clock 840 → 960 s) and
+        // matches the probe bit-for-bit; id 101 queries the ceiling
+        // against the (stale, one-slice-lagged) fan-on telemetry, runs
+        // uncapped into the fan-off window (960 → 1080 s), trips the
+        // throttle, and its observation comes back dilated by 1/0.7.
+        let b = |id: u64| request(id, Scenario::ContinuousLearning, 400);
+        let r100 = ask(b(100));
+        assert_eq!(r100.provenance, Provenance::Primary);
+        assert_eq!(r100.predicted_time_ms.to_bits(), clean_resp.predicted_time_ms.to_bits());
+        assert_eq!(r100.observed_time_ms.to_bits(), clean_resp.observed_time_ms.to_bits());
+        let r101 = ask(b(101));
+        assert!(thermal.throttled(), "the uncapped hot slice must trip the throttle");
+        assert_eq!(metrics.thermal_throttle_events.load(Ordering::Relaxed), 1);
+        assert_eq!(r101.chosen_mode, r100.chosen_mode);
+        assert!(
+            (r101.observed_time_ms * 0.7 - r100.observed_time_ms).abs() < 1e-9,
+            "throttled observation must be dilated by exactly 1/0.7"
+        );
+        // the guard's ceiling now reflects the fan loss: budgets clamp
+        let ceiling_w = thermal.ceiling_mw() / 1000.0;
+        assert!(ceiling_w < r100.predicted_power_w);
+        let r102 = ask(b(102));
+        assert!(r102.predicted_power_w <= ceiling_w + 1e-9, "clamped under the fan-off ceiling");
+        assert!(r102.predicted_power_w < r100.predicted_power_w);
+        let r103 = ask(b(103));
+        assert!(r103.predicted_power_w <= ceiling_w + 1e-9);
+        assert!(!thermal.throttled(), "shedding load must clear the throttle");
+
+        // phase C — drift + recovery. The dilated outcome is reported as
+        // executed-round feedback; two observations fill the quorum and
+        // the rolling MAPE (== dilated score) strictly exceeds the trip
+        // threshold parked below it.
+        for _ in 0..2 {
+            submitter
+                .report(Feedback {
+                    request: b(101),
+                    mode: r101.chosen_mode,
+                    time_ms: r101.observed_time_ms,
+                    power_mw: r101.observed_power_w * 1000.0,
+                })
+                .unwrap();
+        }
+        assert_eq!(
+            metrics.drift_trips.load(Ordering::Relaxed),
+            1,
+            "thermally dilated observations must trip the drift monitor"
+        );
+        assert_eq!(lifecycle.status(&b(101)).unwrap().state, ModelState::Stale);
+        lifecycle.wait_idle();
+        assert_eq!(metrics.refits.load(Ordering::Relaxed), 1, "exactly one warm refit");
+        let status = lifecycle.status(&b(101)).unwrap();
+        assert_eq!(status.state, ModelState::Fresh, "the published refit recovers the key");
+        assert_eq!(status.version, 2);
+        // recovered end-to-end: the key serves again (fan restored after
+        // 1250 s, so the ceiling is back to the fan-on value)
+        let r110 = ask(b(110));
+        assert_eq!(r110.provenance, Provenance::Primary);
+
+        assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.degraded_served.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 4);
+        drop(submitter);
+        let (_, m) = coordinator.finish().unwrap();
+        (responses, counter_snapshot(&m))
+    };
+
+    let (resp_a, counters_a) = run(&plan);
+    let (resp_b, counters_b) = run(&plan);
+    assert_eq!(resp_a.len(), 12, "every submitted request was answered");
+    assert_eq!(counters_a, counters_b, "same plan + seeds ⇒ bit-identical counters");
+    assert_eq!(resp_a.len(), resp_b.len());
+    for (x, y) in resp_a.iter().zip(&resp_b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(x.provenance, y.provenance);
+        assert_eq!(x.chosen_mode, y.chosen_mode);
+        assert_eq!(x.predicted_time_ms.to_bits(), y.predicted_time_ms.to_bits());
+        assert_eq!(x.predicted_power_w.to_bits(), y.predicted_power_w.to_bits());
+        assert_eq!(x.observed_time_ms.to_bits(), y.observed_time_ms.to_bits());
+        assert_eq!(x.observed_power_w.to_bits(), y.observed_power_w.to_bits());
+    }
+}
+
+/// CI chaos smoke: the committed `tests/faults_smoke.json` plan must
+/// parse and be survivable — every request answered across three
+/// request seeds and two workers, the retry and degradation machinery
+/// both demonstrably exercised, and zero panics escaping the harness.
+#[test]
+fn committed_smoke_plan_is_survived_across_seeds() {
+    let reference = reference();
+    let path =
+        std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/faults_smoke.json"));
+    let plan = FaultPlan::load(path).expect("committed smoke plan parses");
+    assert!(!plan.is_noop(), "the smoke plan must actually inject faults");
+    let c = CoordinatorConfig {
+        faults: Some(Arc::new(FaultInjector::new(plan))),
+        ..cfg(120, 2)
+    };
+    let mut requests = Vec::new();
+    for id in 0..9u64 {
+        let seed = [11, 12, 13][id as usize % 3];
+        let scenario = [
+            Scenario::FederatedLearning,
+            Scenario::ContinuousLearning,
+            Scenario::FineTuning,
+        ][(id / 3) as usize];
+        requests.push(request(id, scenario, seed));
+    }
+    let (responses, metrics) = serve(&c, &reference, requests).unwrap();
+    assert_eq!(
+        responses.len(),
+        9,
+        "every request must be answered; failures: {:?}",
+        metrics.failed_requests()
+    );
+    assert_eq!(metrics.requests_failed.load(Ordering::Relaxed), 0);
+    assert!(metrics.retries.load(Ordering::Relaxed) > 0, "smoke must exercise retries");
+    assert!(
+        metrics.degraded_served.load(Ordering::Relaxed) > 0,
+        "smoke must exercise the degradation ladder"
+    );
 }
