@@ -51,11 +51,26 @@
 //! *panicking* build is converted into a failed flight by a drop guard
 //! so waiters never hang on a slot nobody owns.
 //!
-//! A cache-hit request therefore costs one fingerprint pass, one map
-//! lookup and one `partition_point` binary search over the cached front —
-//! O(log front) instead of O(grid × params). [`Metrics`] counts hits,
-//! misses and coalesced waits so degraded cache behaviour is visible in
-//! the serve report.
+//! **Lock-free snapshot reads**: alongside the mutex-guarded maps the
+//! cache maintains a [`ServeSnapshot`] — an immutable copy of the Ready
+//! portion of all three maps, published through an atomically swapped
+//! `Arc` ([`crate::util::arc_cell::ArcCell`]) after every mutation
+//! (leader insert, [`PlaneCache::publish_models`],
+//! [`PlaneCache::invalidate_planes`]). A cache-hit request resolves grid
+//! → models → plane against [`PlaneCache::read_snapshot`] without
+//! touching a single mutex, so hit throughput scales linearly with
+//! reader threads even while fits are in flight; any snapshot miss falls
+//! back to the singleflight slow path above, unchanged. Snapshots cannot
+//! tear: planes are keyed by the checkpoint fingerprints of whichever
+//! model pair a request resolved, so the plane a fast-path hit serves
+//! was predicted by exactly that pair — a reader racing a republication
+//! sees the old or the new (models, plane) pairing, never a mixture.
+//!
+//! A cache-hit request therefore costs one fingerprint pass, three hash
+//! lookups and one `partition_point` binary search over the cached front —
+//! O(log front) instead of O(grid × params), with zero lock traffic.
+//! [`Metrics`] counts hits, misses and coalesced waits so degraded cache
+//! behaviour is visible in the serve report.
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -67,6 +82,7 @@ use crate::device::{DeviceKind, FeatureMatrix, PowerModeGrid};
 use crate::error::{Error, Result};
 use crate::nn::checkpoint::Checkpoint;
 use crate::pareto::ParetoFront;
+use crate::util::arc_cell::ArcCell;
 use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 use crate::workload::Workload;
 
@@ -321,6 +337,48 @@ pub struct ServePlane {
     pub front: ParetoFront,
 }
 
+/// An immutable view of the Ready portion of the cache's three maps,
+/// rebuilt and atomically republished after every mutation. Readers get
+/// it via [`PlaneCache::read_snapshot`] (lock-free) and resolve cache
+/// hits against it without contending with writers; anything absent here
+/// (a miss, an in-flight build, an entry newer than the snapshot) falls
+/// back to the mutex-guarded singleflight path.
+///
+/// The snapshot may lag the maps by one publication (a reader can race a
+/// republish) and may retain an entry the maps already evicted for
+/// capacity until the next republish — both are benign: entries are
+/// deterministic in their keys, so a stale hit serves exactly the bytes
+/// a rebuild would, and planes are keyed by model-pair fingerprints so a
+/// (models, plane) resolution can never mix generations.
+#[derive(Debug, Default)]
+pub struct ServeSnapshot {
+    grids: HashMap<GridKey, Arc<GridEntry>>,
+    models: HashMap<ModelKey, Arc<HostModels>>,
+    planes: HashMap<PlaneKey, Arc<ServePlane>>,
+}
+
+impl ServeSnapshot {
+    /// Resident grid entry for `key`, if the snapshot has one.
+    pub fn grid(&self, key: &GridKey) -> Option<&Arc<GridEntry>> {
+        self.grids.get(key)
+    }
+
+    /// Resident model pair for `key`, if the snapshot has one.
+    pub fn models(&self, key: &ModelKey) -> Option<&Arc<HostModels>> {
+        self.models.get(key)
+    }
+
+    /// Resident serve plane for `key`, if the snapshot has one.
+    pub fn plane(&self, key: &PlaneKey) -> Option<&Arc<ServePlane>> {
+        self.planes.get(key)
+    }
+
+    /// (grids, planes, model pairs) resident in this snapshot.
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.grids.len(), self.planes.len(), self.models.len())
+    }
+}
+
 // ---------------------------------------------------------------------
 // singleflight machinery
 
@@ -535,6 +593,13 @@ pub struct PlaneCache {
     /// of re-paying profiling + fit for a deterministic failure.
     breakers: Mutex<HashMap<ModelKey, Breaker>>,
     breaker_cfg: BreakerConfig,
+    /// The lock-free read path: an atomically swapped immutable copy of
+    /// the Ready portion of the maps above (see [`ServeSnapshot`]).
+    snapshot: ArcCell<ServeSnapshot>,
+    /// Serializes snapshot rebuilds so two concurrent mutators can't
+    /// install snapshots out of order: each rebuild reads the maps after
+    /// its trigger's insert, and publication order follows rebuild order.
+    snapshot_gate: Mutex<()>,
 }
 
 /// Records a breaker failure if the guarded build panics: without this, a
@@ -569,11 +634,17 @@ impl PlaneCache {
     /// Grid + feature matrix for `key`, building (outside the lock,
     /// singleflight) on miss. `build` must be deterministic for the key.
     pub fn grid(&self, key: GridKey, build: impl FnOnce() -> GridEntry) -> Arc<GridEntry> {
-        get_or_build(&self.grids, MAX_GRIDS, key, None, || Ok(build()))
-            .map(|(g, _)| g)
+        match get_or_build(&self.grids, MAX_GRIDS, key, None, || Ok(build())) {
+            Ok((g, led)) => {
+                if led {
+                    self.republish();
+                }
+                g
+            }
             // only reachable when a coalesced leader panicked mid-build;
             // propagate that as a panic here too (workers catch it)
-            .unwrap_or_else(|e| panic!("grid build failed: {e}"))
+            Err(e) => panic!("grid build failed: {e}"),
+        }
     }
 
     /// Serve plane for `key`, building (outside the lock, singleflight)
@@ -589,11 +660,17 @@ impl PlaneCache {
             misses: &metrics.plane_cache_misses,
             waits: &metrics.singleflight_waits,
         };
-        get_or_build(&self.planes, MAX_PLANES, key, Some(counters), || Ok(build()))
-            .map(|(p, _)| p)
+        match get_or_build(&self.planes, MAX_PLANES, key, Some(counters), || Ok(build())) {
+            Ok((p, led)) => {
+                if led {
+                    self.republish();
+                }
+                p
+            }
             // only reachable when a coalesced leader panicked mid-build;
             // propagate that as a panic here too (workers catch it)
-            .unwrap_or_else(|e| panic!("plane build failed: {e}"))
+            Err(e) => panic!("plane build failed: {e}"),
+        }
     }
 
     /// Host-trained model pair for `key`, singleflight: the first
@@ -641,6 +718,9 @@ impl PlaneCache {
         panic_guard.armed = false;
         drop(panic_guard);
         self.note_build_outcome(key, result.is_ok(), led.get(), metrics);
+        if let Ok((_, true)) = &result {
+            self.republish();
+        }
         result
     }
 
@@ -765,19 +845,24 @@ impl PlaneCache {
     /// the flight, and clobbering the slot would orphan them — the
     /// caller treats the refit as superseded and may retry later.
     pub fn publish_models(&self, key: ModelKey, mut models: HostModels) -> Option<Arc<HostModels>> {
-        let mut m = lock_unpoisoned(&self.models);
-        match m.get(&key) {
-            Some(Slot::InFlight(_)) => return None,
-            Some(Slot::Ready(prev)) => models.version = prev.version + 1,
-            None => {
-                // evicted mid-refit: the publish re-inserts a fresh key,
-                // so it must honor the same bound as get_or_build
-                evict_if_full(&mut m, MAX_MODELS);
-                models.version = 1;
+        let arc = {
+            let mut m = lock_unpoisoned(&self.models);
+            match m.get(&key) {
+                Some(Slot::InFlight(_)) => return None,
+                Some(Slot::Ready(prev)) => models.version = prev.version + 1,
+                None => {
+                    // evicted mid-refit: the publish re-inserts a fresh key,
+                    // so it must honor the same bound as get_or_build
+                    evict_if_full(&mut m, MAX_MODELS);
+                    models.version = 1;
+                }
             }
-        }
-        let arc = Arc::new(models);
-        m.insert(key, Slot::Ready(Arc::clone(&arc)));
+            let arc = Arc::new(models);
+            m.insert(key, Slot::Ready(Arc::clone(&arc)));
+            arc
+        };
+        // outside the map lock: the rebuild re-locks the maps itself
+        self.republish();
         Some(arc)
     }
 
@@ -789,18 +874,66 @@ impl PlaneCache {
     /// resolved, so it stays self-consistent. Returns how many planes
     /// were dropped.
     pub fn invalidate_planes(&self, time_fp: u64, power_fp: u64) -> usize {
-        let mut m = lock_unpoisoned(&self.planes);
-        let victims: Vec<PlaneKey> = m
+        let dropped = {
+            let mut m = lock_unpoisoned(&self.planes);
+            let victims: Vec<PlaneKey> = m
+                .iter()
+                .filter_map(|(k, slot)| match slot {
+                    Slot::Ready(_) if k.time_fp == time_fp && k.power_fp == power_fp => Some(*k),
+                    _ => None,
+                })
+                .collect();
+            for k in &victims {
+                m.remove(k);
+            }
+            victims.len()
+        };
+        if dropped > 0 {
+            self.republish();
+        }
+        dropped
+    }
+
+    /// The current [`ServeSnapshot`], without taking any lock: four
+    /// atomic operations, wait-free unless racing a concurrent
+    /// republication. This is the serve pipeline's fast path — a warm
+    /// request resolves grid → models → plane against the returned
+    /// snapshot and never contends with in-flight builds or refits.
+    pub fn read_snapshot(&self) -> Arc<ServeSnapshot> {
+        self.snapshot.load()
+    }
+
+    /// Rebuild the immutable snapshot from the Ready slots of all three
+    /// maps and atomically publish it. Called by every successful mutator
+    /// (leader insert, model publish, plane invalidation) *after* its map
+    /// insert; rebuilds are serialized by `snapshot_gate` so publication
+    /// order follows rebuild order, and each map is locked briefly, one
+    /// at a time — a rebuild never holds two locks and never blocks the
+    /// lock-free readers.
+    fn republish(&self) {
+        let _gate = lock_unpoisoned(&self.snapshot_gate);
+        let grids: HashMap<GridKey, Arc<GridEntry>> = lock_unpoisoned(&self.grids)
             .iter()
             .filter_map(|(k, slot)| match slot {
-                Slot::Ready(_) if k.time_fp == time_fp && k.power_fp == power_fp => Some(*k),
-                _ => None,
+                Slot::Ready(v) => Some((*k, Arc::clone(v))),
+                Slot::InFlight(_) => None,
             })
             .collect();
-        for k in &victims {
-            m.remove(k);
-        }
-        victims.len()
+        let models: HashMap<ModelKey, Arc<HostModels>> = lock_unpoisoned(&self.models)
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready(v) => Some((*k, Arc::clone(v))),
+                Slot::InFlight(_) => None,
+            })
+            .collect();
+        let planes: HashMap<PlaneKey, Arc<ServePlane>> = lock_unpoisoned(&self.planes)
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready(v) => Some((*k, Arc::clone(v))),
+                Slot::InFlight(_) => None,
+            })
+            .collect();
+        self.snapshot.store(Arc::new(ServeSnapshot { grids, models, planes }));
     }
 
     /// (resident grids, resident planes, resident model pairs) — for
@@ -1270,6 +1403,66 @@ mod tests {
         // and the key still recovers once the fault clears
         let _ = cache.models(key, &metrics, || Ok(demo_models(8.0))).unwrap();
         assert_eq!(cache.breaker_state(&key), Some(BreakerState::Closed));
+    }
+
+    #[test]
+    fn snapshot_tracks_ready_entries_through_publish_and_invalidate() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        assert_eq!(cache.read_snapshot().sizes(), (0, 0, 0));
+
+        let gkey = GridKey::for_request(DeviceKind::OrinAgx, None, 1);
+        let g = cache.grid(gkey, || entry(30));
+        let key = model_key(40);
+        let (m1, _) = cache.models(key, &metrics, || Ok(demo_models(1.0))).unwrap();
+        let pkey = PlaneKey { grid: gkey, time_fp: m1.time_fp, power_fp: m1.power_fp };
+        let p1 = cache.plane(pkey, &metrics, || plane_over(Arc::clone(&g)));
+
+        // every leader insert republished: the snapshot resolves all three
+        let snap = cache.read_snapshot();
+        assert_eq!(snap.sizes(), (1, 1, 1));
+        assert!(Arc::ptr_eq(snap.grid(&gkey).unwrap(), &g));
+        assert!(Arc::ptr_eq(snap.models(&key).unwrap(), &m1));
+        assert!(Arc::ptr_eq(snap.plane(&pkey).unwrap(), &p1));
+
+        // a refit publish swaps the visible model pair atomically...
+        let m2 = cache.publish_models(key, demo_models(2.0)).unwrap();
+        let snap = cache.read_snapshot();
+        assert!(Arc::ptr_eq(snap.models(&key).unwrap(), &m2));
+        assert_eq!(snap.models(&key).unwrap().version, 2);
+        // ...and invalidating the superseded planes drops them from the
+        // snapshot too, so the fast path can't serve a stale pairing
+        cache.invalidate_planes(m1.time_fp, m1.power_fp);
+        let snap = cache.read_snapshot();
+        assert!(snap.plane(&pkey).is_none());
+        assert_eq!(snap.sizes(), (1, 0, 1));
+    }
+
+    #[test]
+    fn snapshot_excludes_inflight_builds() {
+        let cache = PlaneCache::new();
+        let metrics = Metrics::new();
+        let key = model_key(41);
+        let in_build = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                cache.models(key, &metrics, || {
+                    in_build.store(true, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(100));
+                    Ok(demo_models(9.0))
+                })
+            });
+            while !in_build.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            // mid-build: the in-flight slot must not leak into a snapshot,
+            // and a refused publish must not republish anything either
+            assert!(cache.publish_models(key, demo_models(10.0)).is_none());
+            assert!(cache.read_snapshot().models(&key).is_none());
+            let (m, _) = leader.join().unwrap().unwrap();
+            // the leader's completion republished
+            assert!(Arc::ptr_eq(cache.read_snapshot().models(&key).unwrap(), &m));
+        });
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! plus the per-request failure ledger the streaming service reports —
 //! a partially-failed batch is never silent: every failed request id and
 //! its error message are recorded here and surfaced by `cmd_serve`.
+//!
+//! Everything the serve hot path records is lock-free: the counters are
+//! relaxed `AtomicU64`s, and the latency/completion ledgers are
+//! fixed-capacity [`AtomicLedger`]s (one `fetch_add` to claim a slot,
+//! one store to fill it) — so metrics recording never serializes
+//! concurrent responses. Only the *failure* ledger keeps a mutex: it
+//! stores heap strings and sits firmly on the cold path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +21,79 @@ use crate::util::sync::lock_unpoisoned;
 /// Long-lived services complete unboundedly many requests; the ledger
 /// keeps only the first window while the counters keep counting.
 const MAX_COMPLETION_LEDGER: usize = 4096;
+
+/// Cap on retained latency samples. Like the completion ledger, the
+/// first window is kept for quantile reporting while a long-lived
+/// service keeps serving; 16k × 8 bytes = 128 KiB per `Metrics`.
+const MAX_LATENCY_SAMPLES: usize = 16_384;
+
+/// A lock-free, fixed-capacity, append-only ledger of `u64` records.
+///
+/// Writers claim a slot with one relaxed `fetch_add` and fill it with
+/// one release store — no mutex, no retry loop, so recording on the
+/// serve hot path never serializes concurrent responses. Once the
+/// capacity is exhausted further records are dropped (the companion
+/// monotonic counters keep counting). Slots are pre-initialized to a
+/// `sentinel` value that no legitimate record uses; a reader that races
+/// a claimed-but-not-yet-filled slot sees the sentinel and skips it, so
+/// [`AtomicLedger::snapshot`] returns exactly the records whose writes
+/// completed, in claim order.
+#[derive(Debug)]
+struct AtomicLedger {
+    slots: Box<[AtomicU64]>,
+    /// Total records ever claimed (may exceed capacity; the excess were
+    /// dropped).
+    claimed: AtomicU64,
+    sentinel: u64,
+}
+
+impl AtomicLedger {
+    fn new(cap: usize, sentinel: u64) -> AtomicLedger {
+        let slots: Box<[AtomicU64]> = (0..cap).map(|_| AtomicU64::new(sentinel)).collect();
+        AtomicLedger { slots, claimed: AtomicU64::new(0), sentinel }
+    }
+
+    /// Lock-free append; silently drops once the ledger is full.
+    fn push(&self, value: u64) {
+        let i = self.claimed.fetch_add(1, Ordering::Relaxed) as usize;
+        if i < self.slots.len() {
+            self.slots[i].store(value, Ordering::Release);
+        }
+    }
+
+    /// Completed records in claim order (first window only).
+    fn snapshot(&self) -> Vec<u64> {
+        let n = (self.claimed.load(Ordering::Acquire) as usize).min(self.slots.len());
+        self.slots[..n]
+            .iter()
+            .map(|s| s.load(Ordering::Acquire))
+            .filter(|&v| v != self.sentinel)
+            .collect()
+    }
+}
+
+/// Latency samples as bit-stored `f64`s. The sentinel is the canonical
+/// NaN bit pattern — a wall-clock latency is never NaN, so no sample can
+/// collide with it.
+#[derive(Debug)]
+struct LatencySamples(AtomicLedger);
+
+impl Default for LatencySamples {
+    fn default() -> Self {
+        LatencySamples(AtomicLedger::new(MAX_LATENCY_SAMPLES, f64::NAN.to_bits()))
+    }
+}
+
+/// Completion-order ledger of request ids. `u64::MAX` is the sentinel
+/// (never issued as a request id by any driver in this codebase).
+#[derive(Debug)]
+struct CompletionLedger(AtomicLedger);
+
+impl Default for CompletionLedger {
+    fn default() -> Self {
+        CompletionLedger(AtomicLedger::new(MAX_COMPLETION_LEDGER, u64::MAX))
+    }
+}
 
 /// Monotonic counters + latency samples. Shared across workers via `Arc`.
 #[derive(Debug, Default)]
@@ -75,14 +155,16 @@ pub struct Metrics {
     pub thermal_throttle_events: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
-    /// Wall-clock request latencies (ms).
-    latencies_ms: Mutex<Vec<f64>>,
+    /// Wall-clock request latencies (ms), recorded lock-free. Bounded:
+    /// the first [`MAX_LATENCY_SAMPLES`] samples feed the quantile
+    /// report; a long-lived service keeps serving without growing it.
+    latencies_ms: LatencySamples,
     /// Request ids in the order their responses were produced (the
     /// scheduler's observable behaviour: priority tests and diagnostics
-    /// read this). Bounded: recording stops at
+    /// read this), recorded lock-free. Bounded: recording stops at
     /// [`MAX_COMPLETION_LEDGER`] so a long-lived service doesn't grow
     /// one u64 per request forever; `requests_completed` keeps counting.
-    completed_ids: Mutex<Vec<u64>>,
+    completed_ids: CompletionLedger,
     /// Every failed request: (id, rendered error). The streaming service
     /// records each failure here so a partially-failed batch reports all
     /// of them, not just the first. Bounded like `completed_ids`
@@ -111,24 +193,23 @@ impl Metrics {
         self.profiling_ms.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
+    /// Record one response latency — lock-free (one `fetch_add`, one
+    /// store), so concurrent workers never serialize here.
     pub fn observe_latency_ms(&self, ms: f64) {
-        lock_unpoisoned(&self.latencies_ms).push(ms);
+        self.latencies_ms.0.push(ms.to_bits());
     }
 
     /// Record a produced response: bumps `requests_completed` and appends
-    /// the id to the (bounded) completion-order ledger.
+    /// the id to the (bounded) completion-order ledger. Lock-free.
     pub fn record_completion(&self, id: u64) {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
-        let mut ids = lock_unpoisoned(&self.completed_ids);
-        if ids.len() < MAX_COMPLETION_LEDGER {
-            ids.push(id);
-        }
+        self.completed_ids.0.push(id);
     }
 
     /// Request ids in the order their responses were produced (first
     /// [`MAX_COMPLETION_LEDGER`] completions only).
     pub fn completion_order(&self) -> Vec<u64> {
-        lock_unpoisoned(&self.completed_ids).clone()
+        self.completed_ids.0.snapshot()
     }
 
     /// Record a failed request: bumps `requests_failed` and remembers the
@@ -159,9 +240,10 @@ impl Metrics {
         self.failed_requests().into_iter().map(|(id, _)| id).collect()
     }
 
-    /// (p50, p95, max) latency in ms.
+    /// (p50, p95, max) latency in ms, over the retained sample window.
     pub fn latency_summary_ms(&self) -> (f64, f64, f64) {
-        let lat = lock_unpoisoned(&self.latencies_ms);
+        let lat: Vec<f64> =
+            self.latencies_ms.0.snapshot().into_iter().map(f64::from_bits).collect();
         if lat.is_empty() {
             return (0.0, 0.0, 0.0);
         }
@@ -303,6 +385,48 @@ mod tests {
             m.requests_completed.load(Ordering::Relaxed),
             MAX_COMPLETION_LEDGER as u64 + 5
         );
+    }
+
+    #[test]
+    fn latency_window_is_bounded_but_quantiles_stay_exact() {
+        let m = Metrics::new();
+        for i in 0..(MAX_LATENCY_SAMPLES + 10) {
+            m.observe_latency_ms(i as f64);
+        }
+        // only the first window is retained; overflow is dropped, not
+        // wrapped or torn
+        let (p50, _, max) = m.latency_summary_ms();
+        assert_eq!(max, (MAX_LATENCY_SAMPLES - 1) as f64);
+        assert!(p50 < max);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing_within_the_window() {
+        // the lock-free ledgers must capture every completed record when
+        // many workers record at once (claim slots race-free, no torn or
+        // dropped slots below capacity)
+        let m = Metrics::new();
+        const THREADS: u64 = 8;
+        const PER: u64 = 500;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        m.record_completion(t * PER + i);
+                        m.observe_latency_ms((t * PER + i) as f64 + 0.5);
+                    }
+                });
+            }
+        });
+        let mut ids = m.completion_order();
+        assert_eq!(ids.len(), (THREADS * PER) as usize);
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), (THREADS * PER) as usize, "duplicated or torn ids");
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), THREADS * PER);
+        let (_, _, max) = m.latency_summary_ms();
+        assert_eq!(max, (THREADS * PER - 1) as f64 + 0.5);
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub mod service;
 
 pub use cache::{
     BreakerConfig, BreakerState, GridEntry, GridKey, HostModels, ModelKey, PlaneCache, PlaneKey,
-    ServePlane,
+    ServePlane, ServeSnapshot,
 };
 pub use lifecycle::{
     DriftMonitor, Feedback, Lifecycle, LifecycleConfig, ModelState, ModelStatus,

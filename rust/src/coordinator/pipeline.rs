@@ -31,7 +31,10 @@
 //! grid identity plus the content fingerprints of the *transferred*
 //! checkpoints. The first request per workload pays profiling + two fits
 //! + the plane build; every later one answers via `ParetoFront::optimize`'s
-//! binary search over the cached front.
+//! binary search over the cached front — and takes the *lock-free fast
+//! path* ([`HostPipeline::handle_attempt`]): the whole hit resolves
+//! against the cache's atomically-published immutable snapshot, so warm
+//! requests never contend with each other or with in-flight builds.
 //!
 //! Resilience: scripted faults from a [`FaultInjector`] fire inside the
 //! cache-miss build (transient profiling/fit failures, permanent per-key
@@ -278,12 +281,23 @@ impl<'a> HostPipeline<'a> {
     /// transient faults fire (a retry outlasting a fault's streak
     /// deterministically clears it) and keeps `requests_received`
     /// counting requests, not attempts.
+    ///
+    /// Warm requests take the **lock-free fast path** first: grid →
+    /// models → plane resolved against the cache's immutable
+    /// [`ServeSnapshot`](crate::coordinator::cache::ServeSnapshot)
+    /// without touching a mutex, so cache-hit throughput scales linearly
+    /// with worker threads even while fits or refits are in flight. Any
+    /// snapshot miss falls through to the staged slow path below,
+    /// unchanged.
     pub fn handle_attempt(&self, req: &Request, attempt: u32) -> Result<Response> {
         let admitted = self.admit(req, attempt)?;
         if let Some(inj) = &self.cfg.faults {
             if inj.panics_on(req.id, attempt) {
                 panic!("injected fault-plan panic while handling request {}", req.id);
             }
+        }
+        if let Some(result) = self.try_snapshot_serve(&admitted) {
+            return result;
         }
         let grid = self.resolve_grid(&admitted);
         if let Strategy::BruteForce = admitted.strategy {
@@ -320,6 +334,58 @@ impl<'a> HostPipeline<'a> {
             admitted.t0,
             Provenance::Primary,
         ))
+    }
+
+    /// The lock-free fast path: resolve the request entirely against the
+    /// cache's immutable snapshot — two hash lookups (model pair by
+    /// [`ModelKey`], plane by the pair's checkpoint fingerprints) and an
+    /// O(log front) budget query, zero mutexes end to end. Returns
+    /// `None` on any snapshot miss (cold key, in-flight build, snapshot
+    /// lagging a just-published entry), in which case the caller runs
+    /// the staged singleflight slow path; `Some(Err)` only for an
+    /// infeasible budget, exactly the error the slow path would produce
+    /// after the same lookups.
+    ///
+    /// Hit accounting matches the slow path — one model-cache hit and
+    /// one plane-cache hit — so cache observability is path-independent.
+    /// The model pair's circuit breaker is *not* consulted: a pair
+    /// resident in the snapshot was, by construction, built or published
+    /// successfully, which is the same evidence that closes a breaker on
+    /// the slow path.
+    fn try_snapshot_serve(&self, a: &Admitted<'_>) -> Option<Result<Response>> {
+        if matches!(a.strategy, Strategy::BruteForce) {
+            // brute force never touches the model/plane caches
+            return None;
+        }
+        let snap = self.cache.read_snapshot();
+        let key = ModelKey::for_request(
+            a.req,
+            a.strategy,
+            self.cfg.prediction_grid,
+            self.cfg.transfer_epochs,
+            self.ref_fps,
+        );
+        let models = snap.models(&key)?;
+        let pkey = PlaneKey { grid: key.grid, time_fp: models.time_fp, power_fp: models.power_fp };
+        let plane = snap.plane(&pkey)?;
+        self.metrics.model_cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.metrics.plane_cache_hits.fetch_add(1, Ordering::Relaxed);
+        let chosen = match pareto_query(&plane.front, self.effective_budget_mw(a.req)) {
+            Ok(p) => p,
+            Err(e) => return Some(Err(e)),
+        };
+        if let Some(lifecycle) = self.lifecycle {
+            lifecycle.note_served(&key);
+        }
+        // a snapshot hit spent zero simulated device-seconds profiling
+        Some(Ok(self.finish(
+            a.req,
+            chosen,
+            format!("{}(host)", a.strategy),
+            0.0,
+            a.t0,
+            Provenance::Primary,
+        )))
     }
 
     /// The graceful-degradation ladder, run by the serving loop once the

@@ -35,7 +35,12 @@
 //! Workers whose PJRT runtime cannot be constructed (or builds without
 //! the `xla` feature) serve through the host-native [`HostPipeline`] —
 //! the same profile → transfer → predict loop, computed by the pure-rust
-//! trainer and the batched host engine.
+//! trainer and the batched host engine. A worker's warm cache hits never
+//! contend with its siblings: the pipeline first resolves the request
+//! against the cache's immutable, atomically-swapped
+//! [`ServeSnapshot`](crate::coordinator::ServeSnapshot) (zero mutexes on
+//! the hit path), and only a miss falls back to the singleflight
+//! mutex+condvar slow path.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -26,6 +26,21 @@
 //!   `std::thread::scope` workers (one scratch each, disjoint output
 //!   slices) when the batch is large enough to amortize spawning.
 //!
+//! * **SIMD-width kernels** — every inner loop is written around explicit
+//!   8-lane `[f32; 8]` accumulator blocks plus a scalar remainder, the
+//!   shape the autovectorizer turns into one AVX2/NEON register per lane
+//!   set: [`dot`] (one weight row), `dot4` (four weight rows sharing one
+//!   activation stream — the register-blocked core of [`gemm_relu`]), the
+//!   8-row layer-1 sweeps, and the [`axpy`] update shared with the
+//!   backward pass. Lane *assignment* is part of the contract: `dot4`
+//!   accumulates each output in exactly `dot`'s order, and the 8-row
+//!   blocks keep each row's expression order unchanged, so blocking is
+//!   bit-identical to the unblocked loops. The optional `simd` cargo
+//!   feature additionally routes [`dot`] onto `std::arch` intrinsics
+//!   (AVX2+FMA on x86_64 behind a cached runtime check, NEON on aarch64);
+//!   FMA contracts the multiply-add rounding, which stays inside the 1e-5
+//!   oracle tolerance below.
+//!
 //! `host_mlp::forward_one` is retained unchanged as the oracle the engine
 //! is property-tested against (`tests/property_engine.rs`): outputs agree
 //! within 1e-5 (the 8-lane accumulators reassociate the f32 sums).
@@ -293,17 +308,37 @@ impl HostEngine {
 
     /// One cache block: `t <= TILE` rows through all four layers.
     fn forward_tile(&self, x: &[f32], t: usize, out: &mut [f32], s: &mut Scratch) {
-        // layer 1: ins = 4 — accumulate in forward_one's exact order
+        // layer 1: ins = 4 — 8-row register blocks. Rows are independent
+        // and each row keeps forward_one's exact accumulation order, so
+        // the blocking is bit-identical to the row-at-a-time loop; the
+        // contiguous `vals` lane array is what lets the compiler compute
+        // all 8 rows in one vector op before the strided scatter into h1.
         {
             let (ins, outs) = (DIMS[0], DIMS[1]);
             let (wt, b) = (&self.wt[0], &self.b[0]);
             for o in 0..outs {
                 let w = &wt[o * ins..o * ins + ins];
-                for r in 0..t {
+                let bo = b[o];
+                let mut r = 0;
+                while r + 8 <= t {
+                    let mut vals = [0.0f32; 8];
+                    for l in 0..8 {
+                        let xr = &x[(r + l) * ins..(r + l) * ins + ins];
+                        let acc =
+                            bo + xr[0] * w[0] + xr[1] * w[1] + xr[2] * w[2] + xr[3] * w[3];
+                        vals[l] = acc.max(0.0);
+                    }
+                    for l in 0..8 {
+                        s.h1[(r + l) * outs + o] = vals[l];
+                    }
+                    r += 8;
+                }
+                while r < t {
                     let xr = &x[r * ins..r * ins + ins];
                     let acc =
-                        b[o] + xr[0] * w[0] + xr[1] * w[1] + xr[2] * w[2] + xr[3] * w[3];
+                        bo + xr[0] * w[0] + xr[1] * w[1] + xr[2] * w[2] + xr[3] * w[3];
                     s.h1[r * outs + o] = acc.max(0.0);
+                    r += 1;
                 }
             }
         }
@@ -315,19 +350,42 @@ impl HostEngine {
     /// only the layer-1 memory walk differs: four unit-stride column
     /// streams instead of row-major rows.
     fn forward_tile_cols(&self, cols: [&[f32]; 4], t: usize, out: &mut [f32], s: &mut Scratch) {
+        // 8-row blocks over four unit-stride column streams: the loads are
+        // already vector-shaped, the `vals` lane array makes the arithmetic
+        // so too. Per-row expression order is unchanged from the scalar
+        // loop (and from `forward_tile`), so both blockings stay bitwise
+        // interchangeable.
         {
             let (ins, outs) = (DIMS[0], DIMS[1]);
             let (wt, b) = (&self.wt[0], &self.b[0]);
             let [c0, c1, c2, c3] = cols;
             for o in 0..outs {
                 let w = &wt[o * ins..o * ins + ins];
-                for r in 0..t {
-                    let acc = b[o]
+                let bo = b[o];
+                let mut r = 0;
+                while r + 8 <= t {
+                    let mut vals = [0.0f32; 8];
+                    for l in 0..8 {
+                        let acc = bo
+                            + c0[r + l] * w[0]
+                            + c1[r + l] * w[1]
+                            + c2[r + l] * w[2]
+                            + c3[r + l] * w[3];
+                        vals[l] = acc.max(0.0);
+                    }
+                    for l in 0..8 {
+                        s.h1[(r + l) * outs + o] = vals[l];
+                    }
+                    r += 8;
+                }
+                while r < t {
+                    let acc = bo
                         + c0[r] * w[0]
                         + c1[r] * w[1]
                         + c2[r] * w[2]
                         + c3[r] * w[3];
                     s.h1[r * outs + o] = acc.max(0.0);
+                    r += 1;
                 }
             }
         }
@@ -354,8 +412,14 @@ impl HostEngine {
 /// Blocked `relu(a @ w^T + b)` over one tile: `a` is `[t, ins]`, `wt` is
 /// `[outs, ins]`, `h` receives `[t, outs]`. Output-neuron-major loop nest:
 /// each weight row is loaded once per tile and reused across all `t` rows.
-/// Shared with the host backward pass (`nn::grad`), whose forward must
-/// match the engine bit-for-bit within a tile.
+/// The core is register-blocked four outputs wide ([`dot4`]): one pass
+/// over the activation row feeds four weight rows, quartering the
+/// activation load traffic; the hidden widths (256/128/64) are all
+/// multiples of 4, so the one-output remainder loop is cold. Shared with
+/// the host backward pass (`nn::grad`), whose forward must match the
+/// engine bit-for-bit within a tile — `dot4` accumulates each output in
+/// exactly [`dot`]'s order, so the blocked and unblocked forms are
+/// interchangeable bitwise.
 pub(crate) fn gemm_relu(
     a: &[f32],
     t: usize,
@@ -365,21 +429,89 @@ pub(crate) fn gemm_relu(
     outs: usize,
     h: &mut [f32],
 ) {
-    for o in 0..outs {
+    let mut o = 0;
+    while o + 4 <= outs {
+        let w0 = &wt[o * ins..(o + 1) * ins];
+        let w1 = &wt[(o + 1) * ins..(o + 2) * ins];
+        let w2 = &wt[(o + 2) * ins..(o + 3) * ins];
+        let w3 = &wt[(o + 3) * ins..(o + 4) * ins];
+        let (b0, b1, b2, b3) = (b[o], b[o + 1], b[o + 2], b[o + 3]);
+        for r in 0..t {
+            let d = dot4(&a[r * ins..r * ins + ins], w0, w1, w2, w3);
+            let hr = &mut h[r * outs + o..r * outs + o + 4];
+            hr[0] = (b0 + d[0]).max(0.0);
+            hr[1] = (b1 + d[1]).max(0.0);
+            hr[2] = (b2 + d[2]).max(0.0);
+            hr[3] = (b3 + d[3]).max(0.0);
+        }
+        o += 4;
+    }
+    while o < outs {
         let w = &wt[o * ins..o * ins + ins];
         let bo = b[o];
         for r in 0..t {
             let acc = bo + dot(&a[r * ins..r * ins + ins], w);
             h[r * outs + o] = acc.max(0.0);
         }
+        o += 1;
     }
+}
+
+/// Four inner products sharing one activation stream: `a·w0 .. a·w3` with
+/// 4×8 lane accumulators. Each output's lane assignment and reduction
+/// tree are exactly [`dot`]'s, so `dot4(a, w0..w3)[j] == dot(a, wj)`
+/// **bitwise** — `gemm_relu` relies on that to stay interchangeable with
+/// its unblocked remainder loop. Always scalar-lane (never intrinsics):
+/// the bit-identity contract is the point.
+#[inline]
+fn dot4(a: &[f32], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32]) -> [f32; 4] {
+    debug_assert!(
+        a.len() == w0.len() && a.len() == w1.len() && a.len() == w2.len() && a.len() == w3.len()
+    );
+    let mut acc = [[0.0f32; 8]; 4];
+    let chunks = a.len() / 8;
+    for k in 0..chunks {
+        let base = k * 8;
+        let xa = &a[base..base + 8];
+        for (j, wj) in [w0, w1, w2, w3].into_iter().enumerate() {
+            let xw = &wj[base..base + 8];
+            for l in 0..8 {
+                acc[j][l] += xa[l] * xw[l];
+            }
+        }
+    }
+    let rem = chunks * 8;
+    let mut out = [0.0f32; 4];
+    for (j, wj) in [w0, w1, w2, w3].into_iter().enumerate() {
+        let mut tail = 0.0f32;
+        for (x, y) in a[rem..].iter().zip(&wj[rem..]) {
+            tail += x * y;
+        }
+        let c = &acc[j];
+        out[j] =
+            ((c[0] + c[4]) + (c[1] + c[5])) + ((c[2] + c[6]) + (c[3] + c[7])) + tail;
+    }
+    out
 }
 
 /// Unit-stride inner product with 8 independent accumulators so the
 /// reduction vectorizes (f32 adds are not reassociable otherwise).
-/// Shared with the host backward pass (`nn::grad`).
+/// Shared with the host backward pass (`nn::grad`). With the `simd`
+/// feature, dispatches to `std::arch` intrinsics where available (FMA
+/// rounding differences only — covered by the 1e-5 oracle tolerance);
+/// the scalar-lane kernel is the portable default and the fallback.
 #[inline]
 pub(crate) fn dot(a: &[f32], w: &[f32]) -> f32 {
+    #[cfg(feature = "simd")]
+    if let Some(v) = simd::dot(a, w) {
+        return v;
+    }
+    dot_scalar(a, w)
+}
+
+/// The portable 8-lane kernel behind [`dot`].
+#[inline]
+fn dot_scalar(a: &[f32], w: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), w.len());
     let mut acc = [0.0f32; 8];
     let ca = a.chunks_exact(8);
@@ -395,6 +527,133 @@ pub(crate) fn dot(a: &[f32], w: &[f32]) -> f32 {
         tail += x * y;
     }
     ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7])) + tail
+}
+
+/// 8-lane `dst[i] += s * src[i]`. Element-wise independent, so lane
+/// blocking cannot change the result bitwise — unlike the reductions
+/// above there is no accumulation order to preserve. Shared with the
+/// host backward pass (`nn::grad`), where the weight-gradient and
+/// input-delta updates are this exact shape.
+#[inline]
+pub(crate) fn axpy(dst: &mut [f32], s: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut cd = dst.chunks_exact_mut(8);
+    let mut cs = src.chunks_exact(8);
+    for (xd, xs) in (&mut cd).zip(&mut cs) {
+        for l in 0..8 {
+            xd[l] += s * xs[l];
+        }
+    }
+    for (d, x) in cd.into_remainder().iter_mut().zip(cs.remainder()) {
+        *d += s * x;
+    }
+}
+
+/// `std::arch` intrinsics behind the `simd` cargo feature: AVX2+FMA on
+/// x86_64 (runtime-detected once, cached in an atomic), NEON on aarch64
+/// (architecturally guaranteed). Only the shared [`dot`] kernel routes
+/// through here — the blocked kernels keep their scalar-lane bit-identity
+/// contracts. On other targets (or pre-AVX2 x86) `dot` returns `None`
+/// and the caller falls back to the portable kernel.
+#[cfg(feature = "simd")]
+mod simd {
+    /// Vector inner product, or `None` when the CPU lacks the required
+    /// extensions.
+    #[inline]
+    pub(super) fn dot(a: &[f32], w: &[f32]) -> Option<f32> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_fma_available() {
+                // SAFETY: AVX2 + FMA presence verified at runtime above.
+                return Some(unsafe { dot_avx2(a, w) });
+            }
+            None
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Some(dot_neon(a, w))
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (a, w);
+            None
+        }
+    }
+
+    /// One-time CPUID probe, memoized (0 = unknown, 1 = yes, 2 = no) so
+    /// the hot loop pays a single relaxed load instead of the detection
+    /// machinery.
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_fma_available() -> bool {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static CACHED: AtomicU8 = AtomicU8::new(0);
+        match CACHED.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let yes = std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma");
+                CACHED.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (checked by the caller).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2(a: &[f32], w: &[f32]) -> f32 {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(a.len(), w.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for k in 0..chunks {
+            let xa = _mm256_loadu_ps(a.as_ptr().add(k * 8));
+            let xw = _mm256_loadu_ps(w.as_ptr().add(k * 8));
+            acc = _mm256_fmadd_ps(xa, xw, acc);
+        }
+        // horizontal reduction: 8 -> 4 -> 2 -> 1 lanes
+        let s4 = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_movehdup_ps(s2));
+        let mut sum = _mm_cvtss_f32(s1);
+        for i in chunks * 8..a.len() {
+            sum += a[i] * w[i];
+        }
+        sum
+    }
+
+    /// NEON is baseline on aarch64, so this needs no runtime probe; the
+    /// two 4-lane accumulators match the 8-lane shape of the scalar
+    /// kernel.
+    #[cfg(target_arch = "aarch64")]
+    fn dot_neon(a: &[f32], w: &[f32]) -> f32 {
+        use std::arch::aarch64::*;
+        debug_assert_eq!(a.len(), w.len());
+        // SAFETY: NEON is mandatory on aarch64; loads stay in-bounds
+        // because k + 8 <= len is checked before each pair of vld1q.
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut k = 0;
+            while k + 8 <= a.len() {
+                let a0 = vld1q_f32(a.as_ptr().add(k));
+                let w0 = vld1q_f32(w.as_ptr().add(k));
+                let a1 = vld1q_f32(a.as_ptr().add(k + 4));
+                let w1 = vld1q_f32(w.as_ptr().add(k + 4));
+                acc0 = vfmaq_f32(acc0, a0, w0);
+                acc1 = vfmaq_f32(acc1, a1, w1);
+                k += 8;
+            }
+            let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+            while k < a.len() {
+                sum += a[k] * w[k];
+                k += 1;
+            }
+            sum
+        }
+    }
 }
 
 #[cfg(test)]
@@ -549,6 +808,53 @@ mod tests {
                 "row {i}: folded {} vs unfused {want}",
                 got[i]
             );
+        }
+    }
+
+    #[test]
+    fn dot4_is_bitwise_identical_to_four_dots() {
+        // the gemm register block leans on this: blocked and unblocked
+        // outputs must be interchangeable bit-for-bit, at every ragged
+        // length and for awkward values (subnormals, negative zero)
+        let mut rng = Rng::new(55);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 256] {
+            let mut mk = |_| -> Vec<f32> {
+                (0..len)
+                    .map(|i| match i % 7 {
+                        0 => -0.0f32,
+                        1 => f32::MIN_POSITIVE / 8.0, // subnormal
+                        _ => rng.normal() as f32,
+                    })
+                    .collect()
+            };
+            let (a, w0, w1, w2, w3) = (mk(0), mk(1), mk(2), mk(3), mk(4));
+            let got = dot4(&a, &w0, &w1, &w2, &w3);
+            for (j, wj) in [&w0, &w1, &w2, &w3].into_iter().enumerate() {
+                assert_eq!(
+                    got[j].to_bits(),
+                    dot_scalar(&a, wj).to_bits(),
+                    "len={len} output {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_is_bitwise_identical_to_scalar_loop() {
+        let mut rng = Rng::new(56);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let src: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let base: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let s = rng.normal() as f32;
+            let mut got = base.clone();
+            axpy(&mut got, s, &src);
+            let mut want = base;
+            for (d, x) in want.iter_mut().zip(&src) {
+                *d += s * x;
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "len={len}");
+            }
         }
     }
 

@@ -13,8 +13,11 @@
 //! * **Transposed-weight layout** — trainable parameters, gradients and
 //!   Adam moments all live in the engine's `[outs, ins]` layout
 //!   ([`TransposedMlp`]), so every forward/backward inner product is a
-//!   unit-stride dual stream ([`crate::nn::engine::dot`] is reused
-//!   directly) and Adam is a flat elementwise sweep. Conversion to the
+//!   unit-stride dual stream reusing the engine's SIMD-width kernels
+//!   directly — [`crate::nn::engine::dot`] and the register-blocked
+//!   `gemm_relu` forward, and the 8-lane `axpy` for the backward
+//!   weight-gradient and input-delta updates — and Adam is a flat
+//!   elementwise sweep. Conversion to the
 //!   canonical row-major `MlpParams` happens only at checkpoint events
 //!   (O(params), never per step).
 //! * **Scratch arena** — activations, deltas and the output-gradient
@@ -32,7 +35,7 @@
 //! central finite differences of an independent f64 reference
 //! (`tests/property_host_training.rs`).
 
-use crate::nn::engine::{dot, gemm_relu};
+use crate::nn::engine::{axpy, dot, gemm_relu};
 use crate::nn::{MlpParams, DIMS};
 
 /// Adam hyperparameters, mirroring `python/compile/kernels/ref.py`
@@ -332,10 +335,9 @@ fn backward_layer(
                 continue; // ReLU-dead unit for this row
             }
             gbo += dro;
-            let ar = &a_prev[r * ins..(r + 1) * ins];
-            for i in 0..ins {
-                gwo[i] += dro * ar[i];
-            }
+            // engine's 8-lane axpy: bitwise identical to the scalar loop
+            // (element-wise update, no accumulation order to preserve)
+            axpy(gwo, dro, &a_prev[r * ins..(r + 1) * ins]);
         }
         gb[o] += gbo;
     }
@@ -349,10 +351,7 @@ fn backward_layer(
                 if dro == 0.0 {
                     continue;
                 }
-                let w = &wt[o * ins..(o + 1) * ins];
-                for i in 0..ins {
-                    dp[i] += dro * w[i];
-                }
+                axpy(dp, dro, &wt[o * ins..(o + 1) * ins]);
             }
             let hp = &h_prev[r * ins..(r + 1) * ins];
             for i in 0..ins {

@@ -87,14 +87,27 @@ impl ParetoFront {
     /// front. A NaN budget partitions at 0 and errors, like the seed's
     /// linear scan.
     pub fn optimize(&self, budget_mw: f64) -> Result<Point> {
-        let idx = self.points.partition_point(|p| p.power_mw <= budget_mw);
-        if idx == 0 {
-            return Err(Error::Optimization(format!(
+        match self.optimize_idx(budget_mw) {
+            Some(idx) => Ok(self.points[idx]),
+            None => Err(Error::Optimization(format!(
                 "no power mode fits within {:.1} W",
                 budget_mw / 1000.0
-            )));
+            ))),
         }
-        Ok(self.points[idx - 1])
+    }
+
+    /// Allocation-free form of [`optimize`](Self::optimize): the index of
+    /// the winning front point, or `None` if no mode fits the budget.
+    ///
+    /// Budget sweeps (the coordinator's cache-hit path, Figs 12–13
+    /// evaluation loops) call this in a tight loop; returning an index
+    /// into the immutable front keeps the per-budget cost at one
+    /// `partition_point` — no `Point` copy, and crucially no error
+    /// `String` allocation on the infeasible branch.
+    #[inline]
+    pub fn optimize_idx(&self, budget_mw: f64) -> Option<usize> {
+        let idx = self.points.partition_point(|p| p.power_mw <= budget_mw);
+        idx.checked_sub(1)
     }
 
     /// True if no point in the front dominates another (invariant check).
@@ -243,6 +256,29 @@ mod tests {
                     (Err(_), None) => {}
                     (got, want) => panic!("budget {b}: {got:?} vs linear {want:?}"),
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_idx_agrees_with_optimize_everywhere() {
+        // the allocation-free index query and the Point-returning wrapper
+        // must agree for every budget, including boundaries and NaN
+        let mut rng = Rng::new(41);
+        let pts: Vec<Point> = (0..300)
+            .map(|_| pt(rng.uniform_range(10.0, 500.0), rng.uniform_range(8.0, 60.0)))
+            .collect();
+        let f = ParetoFront::build(&pts);
+        let mut budgets: Vec<f64> =
+            (0..60).map(|_| rng.uniform_range(0.0, 70.0) * 1000.0).collect();
+        budgets.extend(f.points().iter().map(|p| p.power_mw));
+        budgets.push(f64::NAN);
+        budgets.push(0.0);
+        for &b in &budgets {
+            match (f.optimize_idx(b), f.optimize(b)) {
+                (Some(i), Ok(p)) => assert_eq!(f.points()[i], p),
+                (None, Err(_)) => {}
+                (i, p) => panic!("budget {b}: idx {i:?} vs point {p:?}"),
             }
         }
     }

@@ -4,6 +4,7 @@
 //! (rand, serde, serde_json, csv, proptest, criterion) are replaced by
 //! small, tested, purpose-built implementations (DESIGN.md section 3).
 
+pub mod arc_cell;
 pub mod bench;
 pub mod csv;
 pub mod json;

@@ -49,6 +49,96 @@ fn engine_matches_oracle_across_ragged_batch_sizes() {
     }
 }
 
+/// The 8-lane register blocks (dot4 in gemm_relu, the 8-row layer-1
+/// sweeps) must be invisible at every ragged width: sizes straddling the
+/// lane width (7/8/9), the tile (63/64/65) and a full grid (4368), for
+/// both the row-major and SoA entry points, against the scalar oracle.
+#[test]
+fn eight_lane_kernels_match_oracle_at_every_ragged_width() {
+    for (case, &n) in [1usize, 7, 8, 9, 63, 64, 65, 4_368].iter().enumerate() {
+        let mut rng = Rng::new(300 + case as u64);
+        let params = MlpParams::init_he(&mut rng);
+        let engine = HostEngine::new(&params);
+        let xs: Vec<[f32; 4]> = (0..n)
+            .map(|_| {
+                [
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                ]
+            })
+            .collect();
+        let via_rows = engine.forward_batch(&xs);
+        let mut cols: [Vec<f32>; 4] = Default::default();
+        for x in &xs {
+            for d in 0..4 {
+                cols[d].push(x[d]);
+            }
+        }
+        let mut via_cols = vec![0.0f32; n];
+        engine.forward_cols_into([&cols[0], &cols[1], &cols[2], &cols[3]], &mut via_cols);
+        assert_eq!(via_rows, via_cols, "row/col paths diverged at n={n}");
+        for (i, x) in xs.iter().enumerate() {
+            let want = host_mlp::forward_one(&params, x);
+            assert!(
+                agree(via_rows[i], want),
+                "n={n} row {i}: engine {} vs oracle {want}",
+                via_rows[i]
+            );
+        }
+    }
+}
+
+/// Subnormals and negative zero must flow through the lane kernels the
+/// same way they flow through the scalar oracle — no flush-to-zero
+/// surprises from the blocking, and `(-0.0).max(0.0)` relu gating
+/// identical in both.
+#[test]
+fn subnormal_and_negative_zero_inputs_match_the_oracle() {
+    let mut rng = Rng::new(320);
+    let params = MlpParams::init_he(&mut rng);
+    let engine = HostEngine::new(&params);
+    let tiny = f32::MIN_POSITIVE / 8.0; // subnormal
+    let n = 65; // spans lane and tile remainders
+    let xs: Vec<[f32; 4]> = (0..n)
+        .map(|i| {
+            let mut x = [
+                rng.normal() as f32,
+                rng.normal() as f32,
+                rng.normal() as f32,
+                rng.normal() as f32,
+            ];
+            x[i % 4] = match i % 3 {
+                0 => -0.0f32,
+                1 => tiny,
+                _ => -tiny,
+            };
+            x
+        })
+        .collect();
+    let got = engine.forward_batch(&xs);
+    for (i, x) in xs.iter().enumerate() {
+        let want = host_mlp::forward_one(&params, x);
+        assert!(
+            agree(got[i], want),
+            "row {i} ({x:?}): engine {} vs oracle {want}",
+            got[i]
+        );
+        assert!(got[i].is_finite(), "row {i} produced non-finite output");
+    }
+    // all-subnormal and all-negative-zero batches, exercising the
+    // remainder loops (n=9) as well
+    for special in [[-0.0f32; 4], [tiny; 4], [-tiny; 4]] {
+        let batch = vec![special; 9];
+        let got = engine.forward_batch(&batch);
+        let want = host_mlp::forward_one(&params, &special);
+        for (i, g) in got.iter().enumerate() {
+            assert!(agree(*g, want), "special {special:?} row {i}");
+        }
+    }
+}
+
 #[test]
 fn engine_agrees_for_many_random_parameter_draws() {
     // smaller batches, many independent parameter draws (incl. extreme
