@@ -28,7 +28,11 @@
 //!      the full coordinator service (priority queue + singleflight +
 //!      pre-warmed shared cache): ns/item measures the steady-state
 //!      service overhead per request, directly comparable to bench 7's
-//!      cache-hit number (acceptance: within 10%).
+//!      cache-hit number (acceptance: within 10%);
+//!  10. fleet placement: a 256-request mixed-kind burst routed over a
+//!      64-node registry snapshot and hash-dispatched onto 4 coordinator
+//!      domains (`coordinator/fleet_route_4shards`) — the pure routing +
+//!      dispatch overhead the fleet front-end adds per request.
 //!
 //! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
 //! so successive PRs can track the perf trajectory.
@@ -212,6 +216,8 @@ fn main() {
             workload: Workload::resnet(),
             power_budget_w: 1e6,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 4,
         };
         // cold: every request pays 50-mode profiling, two host transfers,
@@ -330,6 +336,59 @@ fn main() {
                 responses.len()
             });
         }
+    }
+
+    // -- fleet routing: a mixed-kind burst across 4 coordinator domains --
+    // Pure placement cost: one 256-request burst routed against a
+    // 64-node registry snapshot (warmth + load applied between
+    // decisions, exactly what the fleet layer does between heartbeats),
+    // each placement then resolved to its owning domain via the model-key
+    // hash partition. ns/item is the per-request routing + dispatch
+    // overhead the fleet front-end adds on top of a shard's serve path.
+    {
+        use powertrain::coordinator::{ModelKey, Strategy};
+        use powertrain::fleet::{route_burst, FleetRegistry};
+        const SHARDS: usize = 4;
+        const FLEET_BURST: usize = 256;
+        let reference = ReferenceModels { time: demo_ckpt(7), power: demo_ckpt(8) };
+        let ref_fps = reference.fingerprints();
+        let snapshot = FleetRegistry::synthesize(64, 1).snapshot();
+        let items: Vec<(Option<DeviceKind>, Workload)> = (0..FLEET_BURST)
+            .map(|i| {
+                (
+                    Some(DeviceKind::ALL[i % DeviceKind::ALL.len()]),
+                    Workload::default_five()[i % 5],
+                )
+            })
+            .collect();
+        b.bench_items("coordinator/fleet_route_4shards", FLEET_BURST as f64, || {
+            let placements = route_burst(&snapshot, &items);
+            placements
+                .iter()
+                .zip(&items)
+                .filter_map(|(p, (_, wl))| p.map(|p| (p, wl)))
+                .map(|(p, wl)| {
+                    let req = Request {
+                        id: 0,
+                        device: p.kind,
+                        workload: *wl,
+                        power_budget_w: 1e6,
+                        scenario: Scenario::FederatedLearning,
+                        affinity: None,
+                        node: Some(p.node),
+                        seed: 1,
+                    };
+                    ModelKey::for_request(
+                        &req,
+                        Strategy::for_scenario(req.scenario),
+                        None,
+                        100,
+                        ref_fps,
+                    )
+                    .shard_index(SHARDS)
+                })
+                .sum::<usize>()
+        });
     }
 
     #[cfg(feature = "xla")]

@@ -87,6 +87,8 @@ fn main() -> powertrain::Result<()> {
             workload: wl,
             power_budget_w: *budget_w,
             scenario: Scenario::ContinuousLearning,
+            affinity: None,
+            node: None,
             seed, // one model key for the whole stream
         };
         submitter.send_request(req.clone())?;

@@ -71,6 +71,8 @@ fn main() -> powertrain::Result<()> {
                 workload: workloads[i % workloads.len()],
                 power_budget_w: budget,
                 scenario: Scenario::FederatedLearning,
+                affinity: None,
+                node: None,
                 seed: 1000 + i as u64,
             }
         })

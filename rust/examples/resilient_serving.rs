@@ -108,6 +108,8 @@ fn main() -> powertrain::Result<()> {
             workload: wl,
             power_budget_w: 50.0,
             scenario: Scenario::ContinuousLearning,
+            affinity: None,
+            node: None,
             seed,
         };
         submitter.send_request(req.clone())?;

@@ -188,6 +188,20 @@ impl ModelKey {
             ref_power_fp: ref_fps.1,
         }
     }
+
+    /// The coordinator domain this key belongs to when the fleet runs
+    /// `shards` independent domains. Hash-partitioning on the full key
+    /// keeps singleflight and drift state strictly shard-local: two
+    /// requests that would coalesce land on the same shard, and two
+    /// that would not can never contend. `DefaultHasher` uses fixed
+    /// SipHash keys, so the partition is stable within a build — which
+    /// is all the fleet determinism tests require.
+    pub fn shard_index(&self, shards: usize) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut hasher = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut hasher);
+        (hasher.finish() % shards.max(1) as u64) as usize
+    }
 }
 
 /// A host-trained (time, power) checkpoint pair plus the bookkeeping the
@@ -1070,6 +1084,21 @@ mod tests {
             epochs: 100,
             ref_time_fp: 1,
             ref_power_fp: 2,
+        }
+    }
+
+    #[test]
+    fn shard_index_is_stable_and_spreads_keys() {
+        let key = model_key(5);
+        assert_eq!(key.shard_index(4), key.shard_index(4), "partition must be stable");
+        assert_eq!(key.shard_index(0), 0, "degenerate shard count clamps to one domain");
+        assert_eq!(key.shard_index(1), 0);
+        // distinct seeds must not all collapse onto one domain
+        let shards: std::collections::HashSet<usize> =
+            (0..32).map(|s| model_key(s).shard_index(4)).collect();
+        assert!(shards.len() > 1, "32 keys all landed on one of 4 shards");
+        for s in shards {
+            assert!(s < 4);
         }
     }
 

@@ -374,8 +374,14 @@ impl Lifecycle {
             pending_cv: Condvar::new(),
         });
         let for_worker = Arc::clone(&lifecycle);
+        // one refit worker per coordinator domain: shard-labelled so a
+        // multi-domain fleet's thread dumps stay attributable
+        let refit_name = match coord.shard {
+            Some(shard) => format!("pt-refit-s{shard}"),
+            None => "pt-refit".into(),
+        };
         let spawned = std::thread::Builder::new()
-            .name("pt-refit".into())
+            .name(refit_name)
             .spawn(move || {
                 for key in rx {
                     // a panicking refit must not kill the worker: clear

@@ -14,6 +14,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::device::DeviceKind;
 use crate::error::Error;
 use crate::util::sync::lock_unpoisoned;
 
@@ -26,6 +27,11 @@ const MAX_COMPLETION_LEDGER: usize = 4096;
 /// first window is kept for quantile reporting while a long-lived
 /// service keeps serving; 16k × 8 bytes = 128 KiB per `Metrics`.
 const MAX_LATENCY_SAMPLES: usize = 16_384;
+
+/// Most coordinator domains a fleet-level `Metrics` tracks per-shard
+/// counters for. Routing beyond this still works — the overflow shards
+/// simply aggregate into the last slot.
+pub const MAX_FLEET_SHARDS: usize = 16;
 
 /// A lock-free, fixed-capacity, append-only ledger of `u64` records.
 ///
@@ -95,6 +101,33 @@ impl Default for CompletionLedger {
     }
 }
 
+/// Per-(device kind, shard) routed-placement counters — a dense
+/// `kinds × MAX_FLEET_SHARDS` grid of relaxed `AtomicU64`s, so the fleet
+/// submit path records a placement with exactly one `fetch_add` and no
+/// lock, same discipline as every other hot-path counter here.
+#[derive(Debug)]
+struct RoutedLedger(Box<[AtomicU64]>);
+
+impl Default for RoutedLedger {
+    fn default() -> Self {
+        RoutedLedger(
+            (0..DeviceKind::ALL.len() * MAX_FLEET_SHARDS)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+        )
+    }
+}
+
+impl RoutedLedger {
+    fn slot(kind: DeviceKind, shard: usize) -> usize {
+        let k = DeviceKind::ALL
+            .iter()
+            .position(|c| *c == kind)
+            .expect("DeviceKind::ALL covers every kind");
+        k * MAX_FLEET_SHARDS + shard.min(MAX_FLEET_SHARDS - 1)
+    }
+}
+
 /// Monotonic counters + latency samples. Shared across workers via `Arc`.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -153,6 +186,13 @@ pub struct Metrics {
     /// Rising edges of the thermal guard's throttle state (the device
     /// crossed its trip temperature under sustained serve load).
     pub thermal_throttle_events: AtomicU64,
+    /// Fleet requests the router could not place on a healthy node of
+    /// the requested kind (cross-kind fallback or no capacity at all).
+    pub placement_rejected: AtomicU64,
+    /// Fleet submissions whose model pair was already transferred for
+    /// another shard (or an earlier request) — host fits the once-
+    /// fleet-wide transfer discipline avoided.
+    pub cross_shard_transfers_saved: AtomicU64,
     /// Simulated device-seconds spent profiling.
     profiling_ms: AtomicU64,
     /// Wall-clock request latencies (ms), recorded lock-free. Bounded:
@@ -171,6 +211,9 @@ pub struct Metrics {
     /// (first [`MAX_COMPLETION_LEDGER`] failures); `requests_failed`
     /// keeps counting.
     failures: Mutex<Vec<(u64, String)>>,
+    /// Placements routed per (device kind, shard) — only the fleet
+    /// layer's `Metrics` writes here; a plain coordinator's stays zero.
+    routed: RoutedLedger,
 }
 
 impl Metrics {
@@ -240,6 +283,22 @@ impl Metrics {
         self.failed_requests().into_iter().map(|(id, _)| id).collect()
     }
 
+    /// Record a fleet placement routed to `shard` on a node of `kind`.
+    /// Lock-free: one relaxed `fetch_add` into the dense ledger.
+    pub fn note_routed(&self, kind: DeviceKind, shard: usize) {
+        self.routed.0[RoutedLedger::slot(kind, shard)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Placements routed to `shard` on nodes of `kind`.
+    pub fn routed(&self, kind: DeviceKind, shard: usize) -> u64 {
+        self.routed.0[RoutedLedger::slot(kind, shard)].load(Ordering::Relaxed)
+    }
+
+    /// Total placements routed fleet-wide.
+    pub fn routed_total(&self) -> u64 {
+        self.routed.0.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
     /// (p50, p95, max) latency in ms, over the retained sample window.
     pub fn latency_summary_ms(&self) -> (f64, f64, f64) {
         let lat: Vec<f64> =
@@ -283,6 +342,36 @@ impl Metrics {
             p95,
             max,
         );
+        // the fleet segment only appears when fleet counters moved, so a
+        // plain coordinator's serve table is unchanged
+        let routed_total = self.routed_total();
+        let rejected = self.placement_rejected.load(Ordering::Relaxed);
+        let saved = self.cross_shard_transfers_saved.load(Ordering::Relaxed);
+        if routed_total > 0 || rejected > 0 || saved > 0 {
+            let per_kind: Vec<String> = DeviceKind::ALL
+                .iter()
+                .map(|&kind| {
+                    let by_shard: Vec<String> = (0..MAX_FLEET_SHARDS)
+                        .map(|s| (s, self.routed(kind, s)))
+                        .filter(|(_, n)| *n > 0)
+                        .map(|(s, n)| format!("s{s}:{n}"))
+                        .collect();
+                    format!(
+                        "{} {} [{}]",
+                        kind.name(),
+                        (0..MAX_FLEET_SHARDS).map(|s| self.routed(kind, s)).sum::<u64>(),
+                        by_shard.join(" ")
+                    )
+                })
+                .collect();
+            out.push_str(&format!(
+                " | fleet: {} routed ({}), {} placement rejected, {} cross-shard transfers saved",
+                routed_total,
+                per_kind.join("; "),
+                rejected,
+                saved,
+            ));
+        }
         let failed = self.failed_requests();
         if !failed.is_empty() {
             let ids: Vec<String> = failed.iter().map(|(id, _)| id.to_string()).collect();
@@ -466,6 +555,33 @@ mod tests {
             r.contains("resilience: 5 retries, 3 breaker transitions, 2 degraded served, 1 thermal throttles"),
             "{r}"
         );
+    }
+
+    #[test]
+    fn fleet_counters_are_ledgered_per_kind_and_shard_and_rendered() {
+        let m = Metrics::new();
+        // a plain coordinator never shows the fleet segment
+        assert!(!m.render().contains("fleet:"), "{}", m.render());
+        m.note_routed(DeviceKind::OrinAgx, 0);
+        m.note_routed(DeviceKind::OrinAgx, 0);
+        m.note_routed(DeviceKind::OrinAgx, 3);
+        m.note_routed(DeviceKind::XavierAgx, 1);
+        m.placement_rejected.fetch_add(1, Ordering::Relaxed);
+        m.cross_shard_transfers_saved.fetch_add(4, Ordering::Relaxed);
+        assert_eq!(m.routed(DeviceKind::OrinAgx, 0), 2);
+        assert_eq!(m.routed(DeviceKind::OrinAgx, 3), 1);
+        assert_eq!(m.routed(DeviceKind::XavierAgx, 1), 1);
+        assert_eq!(m.routed(DeviceKind::OrinNano, 0), 0);
+        assert_eq!(m.routed_total(), 4);
+        // shards beyond the ledger aggregate into the last slot instead
+        // of panicking
+        m.note_routed(DeviceKind::OrinNano, MAX_FLEET_SHARDS + 7);
+        assert_eq!(m.routed(DeviceKind::OrinNano, MAX_FLEET_SHARDS - 1), 1);
+        let r = m.render();
+        assert!(r.contains("fleet: 5 routed"), "{r}");
+        assert!(r.contains("orin-agx 3 [s0:2 s3:1]"), "{r}");
+        assert!(r.contains("1 placement rejected"), "{r}");
+        assert!(r.contains("4 cross-shard transfers saved"), "{r}");
     }
 
     #[test]

@@ -65,7 +65,9 @@ pub use lifecycle::{
 pub use metrics::Metrics;
 #[cfg(feature = "xla")]
 pub use pipeline::handle_request;
-pub use pipeline::{handle_request_host, HostPipeline, ThermalConfig, ThermalGuard};
+pub use pipeline::{
+    fit_models_for_request, handle_request_host, HostPipeline, ThermalConfig, ThermalGuard,
+};
 pub use policy::{RetryPolicy, Scenario, Strategy};
 pub use queue::{Job, RequestQueue};
 pub use service::{serve, Coordinator, Submitter};
@@ -75,6 +77,7 @@ use std::sync::Arc;
 
 use crate::device::{DeviceKind, PowerMode, PowerModeGrid};
 use crate::error::Result;
+use crate::fleet::NodeId;
 use crate::nn::checkpoint::Checkpoint;
 use crate::profiler::Corpus;
 use crate::sim::FaultInjector;
@@ -97,6 +100,13 @@ pub struct Request {
     pub workload: Workload,
     pub power_budget_w: f64,
     pub scenario: Scenario,
+    /// Fleet placement affinity: prefer a node of this [`DeviceKind`].
+    /// `None` outside fleet mode (the classic single implicit pool) and
+    /// for callers that accept any kind.
+    pub affinity: Option<DeviceKind>,
+    /// The node the fleet router placed this request on. Stamped by the
+    /// fleet layer before submission; `None` outside fleet mode.
+    pub node: Option<NodeId>,
     /// Seed controlling the simulated device telemetry + sampling.
     pub seed: u64,
 }
@@ -115,6 +125,12 @@ pub enum Provenance {
     /// Analytic NPE power estimate + clock-monotone time proxy — no
     /// profiling at all (the last rung).
     DegradedNpe,
+    /// The answer itself came from the primary model pair, but the fleet
+    /// router had to place the request away from its first-choice node
+    /// (e.g. a fan-off episode marked that node unhealthy). The serving
+    /// quality is primary; the *placement* is degraded, and callers
+    /// doing per-node accounting should treat the response accordingly.
+    DegradedPlacement,
 }
 
 impl Provenance {
@@ -127,6 +143,7 @@ impl Provenance {
             Provenance::Primary => "primary",
             Provenance::DegradedRidge => "degraded-ridge",
             Provenance::DegradedNpe => "degraded-npe",
+            Provenance::DegradedPlacement => "degraded-placement",
         }
     }
 }
@@ -150,6 +167,9 @@ pub struct Response {
     pub profiling_cost_s: f64,
     /// Coordinator wall-clock latency (ms) for the decision.
     pub latency_ms: f64,
+    /// The fleet node that served this request (echoed from
+    /// [`Request::node`]; `None` outside fleet mode).
+    pub node: Option<NodeId>,
 }
 
 /// Reference models (time + power) the transfer bootstraps from.
@@ -240,6 +260,12 @@ pub struct CoordinatorConfig {
     /// drift monitor sees the episode. `None` (the default) = the paper's
     /// fan-at-max configuration, no guard.
     pub thermal: Option<ThermalConfig>,
+    /// Fleet shard index this coordinator domain serves, when it is one
+    /// of several hash-partitioned domains under a
+    /// [`Fleet`](crate::fleet::Fleet). Labels worker/refit threads
+    /// (`pt-s{shard}-w{n}`, `pt-refit-s{shard}`) so chaos traces name the
+    /// domain. `None` (the default) = the classic standalone coordinator.
+    pub shard: Option<u32>,
 }
 
 impl Default for CoordinatorConfig {
@@ -253,6 +279,7 @@ impl Default for CoordinatorConfig {
             retry: RetryPolicy::default(),
             faults: None,
             thermal: None,
+            shard: None,
         }
     }
 }

@@ -643,6 +643,39 @@ pub fn handle_request_host(
     HostPipeline::new(cache, reference, cfg, metrics).handle(req)
 }
 
+/// Fleet hook — build the host model pair for `req` outside any
+/// coordinator domain, returning the [`ModelKey`] it must be published
+/// under. The fleet layer runs this **once per (device kind, workload)**
+/// and pushes the result into the owning shard's versioned Ready slot
+/// via [`PlaneCache::publish_models`], so no shard ever refits a pair
+/// another shard (or the fleet itself) already paid for. Identical key
+/// derivation and fit path as the in-domain cache-miss lane, so a pair
+/// built here is bit-identical to one a shard would have built itself.
+pub fn fit_models_for_request(
+    reference: &ReferenceModels,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    req: &Request,
+) -> Result<(ModelKey, HostModels)> {
+    let strategy = Strategy::for_scenario(req.scenario);
+    if let Strategy::BruteForce = strategy {
+        return Err(Error::Usage(format!(
+            "request {}: brute force trains no models to pre-publish",
+            req.id
+        )));
+    }
+    let grid = prediction_grid(req.device, cfg.prediction_grid, req.seed);
+    let key = ModelKey::for_request(
+        req,
+        strategy,
+        cfg.prediction_grid,
+        cfg.transfer_epochs,
+        reference.fingerprints(),
+    );
+    let models = train_host_models(&grid, reference, cfg, metrics, req, strategy, 0)?;
+    Ok((key, models))
+}
+
 /// The model-cache-miss work: online profiling of the strategy's mode
 /// sample on the simulated target, then two host fits (transfer for
 /// PowerTrain, from-scratch for NnProfiled). Deterministic in the
@@ -783,6 +816,7 @@ fn respond(
         observed_power_w: obs_p / 1000.0,
         profiling_cost_s,
         latency_ms,
+        node: req.node,
     }
 }
 
@@ -833,6 +867,7 @@ fn brute_force_response(
         observed_power_w: chosen.power_mw / 1000.0,
         profiling_cost_s: corpus.total_cost_s(),
         latency_ms,
+        node: req.node,
     })
 }
 
@@ -969,6 +1004,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed,
         }
     }
@@ -985,6 +1022,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6, // any front point qualifies
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 5,
         };
         let resp = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
@@ -1013,6 +1052,8 @@ mod tests {
             workload: Workload::lstm(),
             power_budget_w: 1e6,
             scenario: Scenario::FineTuning, // → NnProfiled(100)
+            affinity: None,
+            node: None,
             seed: 6,
         };
         let resp = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap();
@@ -1034,6 +1075,8 @@ mod tests {
                 workload: Workload::mobilenet(),
                 power_budget_w: bad_budget,
                 scenario: Scenario::FederatedLearning,
+                affinity: None,
+                node: None,
                 seed: 5,
             };
             let err = handle_request_host(&cache, &reference, &cfg, &metrics, &req).unwrap_err();
@@ -1057,6 +1100,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 5,
         };
         // uncached baseline on its own fresh cache
@@ -1101,6 +1146,8 @@ mod tests {
                 workload: Workload::lstm(),
                 power_budget_w: *budget_w,
                 scenario: Scenario::ContinuousLearning,
+                affinity: None,
+                node: None,
                 seed: 8,
             };
             match handle_request_host(&cache, &reference, &cfg, &metrics, &req) {
@@ -1141,6 +1188,8 @@ mod tests {
             workload: wl,
             power_budget_w: 1e6,
             scenario: Scenario::ContinuousLearning,
+            affinity: None,
+            node: None,
             seed: 12,
         };
         let a = handle_request_host(&cache, &reference, &cfg, &metrics, &req(0, Workload::lstm()))

@@ -284,6 +284,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 30.0,
             scenario,
+            affinity: None,
+            node: None,
             seed: id,
         }
     }

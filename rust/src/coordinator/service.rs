@@ -196,8 +196,14 @@ impl Coordinator {
             let w_tx = tx.clone();
             let w_cfg = cfg.clone();
             let w_reference = reference.clone();
+            // shard-labelled names (`pt-s2-w0`) keep thread dumps of a
+            // multi-domain fleet attributable to their coordinator domain
+            let thread_name = match cfg.shard {
+                Some(shard) => format!("pt-s{shard}-w{worker_id}"),
+                None => format!("pt-worker-{worker_id}"),
+            };
             let spawned = std::thread::Builder::new()
-                .name(format!("pt-worker-{worker_id}"))
+                .name(thread_name)
                 .spawn(move || {
                     worker_loop(
                         worker_id,
@@ -463,6 +469,8 @@ mod tests {
                 workload: Workload::lstm(),
                 power_budget_w: 1e6,
                 scenario: Scenario::ContinuousLearning,
+                affinity: None,
+                node: None,
                 seed: 40 + i,
             })
             .collect();
@@ -495,6 +503,8 @@ mod tests {
                             workload: Workload::mobilenet(),
                             power_budget_w: 1e6,
                             scenario: Scenario::FederatedLearning,
+                            affinity: None,
+                            node: None,
                             seed: 60 + t, // one fit per producer thread
                         })
                         .unwrap();
@@ -522,6 +532,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: -1.0, // admission-rejected
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 9,
         };
         let err = serve(&cfg, &reference, vec![bad(4), bad(2)]).unwrap_err();
@@ -543,6 +555,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 30.0,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 1,
         };
         let fb = crate::coordinator::Feedback {
@@ -573,6 +587,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6,
             scenario: Scenario::ContinuousLearning,
+            affinity: None,
+            node: None,
             seed: 77,
         };
         submitter.send_request(req.clone()).unwrap();
@@ -623,6 +639,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 5,
         };
         let (responses, metrics) = serve(&cfg, &reference, vec![req]).unwrap();
@@ -652,6 +670,8 @@ mod tests {
             workload: Workload::mobilenet(),
             power_budget_w: 1e6,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 5,
         };
         let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
@@ -683,6 +703,8 @@ mod tests {
                 workload: Workload::mobilenet(),
                 power_budget_w: 1e6,
                 scenario: Scenario::FederatedLearning,
+                affinity: None,
+                node: None,
                 seed: 5,
             })
             .collect();

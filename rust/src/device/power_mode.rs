@@ -73,8 +73,12 @@ impl PowerMode {
     }
 }
 
-/// Nvidia's three pre-defined Orin AGX power modes with power budgets
-/// (besides MAXN) — the baseline of Fig 2c.
+/// Nvidia's pre-defined power modes with power budgets (besides MAXN)
+/// for every [`DeviceKind`] — the Fig 2c baseline on Orin AGX, and the
+/// factory preset tables the fleet baselines use on Xavier AGX / Orin
+/// Nano. Every mode draws its frequencies from the device's discrete
+/// spec tables (validated by the preset tests), so presets are always
+/// legal [`PowerMode`]s on their own device.
 pub fn nvidia_preset_modes(kind: DeviceKind) -> Vec<(f64, PowerMode)> {
     match kind {
         DeviceKind::OrinAgx => vec![
@@ -91,7 +95,30 @@ pub fn nvidia_preset_modes(kind: DeviceKind) -> Vec<(f64, PowerMode)> {
                 PowerMode { cores: 12, cpu_khz: 1_497_600, gpu_khz: 828_750, mem_khz: 3_199_000 },
             ),
         ],
-        _ => Vec::new(),
+        DeviceKind::XavierAgx => vec![
+            (
+                10.0,
+                PowerMode { cores: 2, cpu_khz: 1_190_400, gpu_khz: 522_750, mem_khz: 1_065_600 },
+            ),
+            (
+                15.0,
+                PowerMode { cores: 4, cpu_khz: 1_267_200, gpu_khz: 675_750, mem_khz: 1_331_200 },
+            ),
+            (
+                30.0,
+                PowerMode { cores: 8, cpu_khz: 1_497_600, gpu_khz: 905_250, mem_khz: 1_600_000 },
+            ),
+        ],
+        DeviceKind::OrinNano => vec![
+            (
+                7.0,
+                PowerMode { cores: 4, cpu_khz: 960_000, gpu_khz: 408_000, mem_khz: 665_600 },
+            ),
+            (
+                15.0,
+                PowerMode { cores: 6, cpu_khz: 1_510_400, gpu_khz: 624_750, mem_khz: 2_133_000 },
+            ),
+        ],
     }
 }
 
@@ -347,6 +374,37 @@ mod tests {
         for (budget, m) in presets {
             assert!(budget >= 15.0 && budget <= 50.0);
             m.validate(spec).unwrap();
+        }
+    }
+
+    #[test]
+    fn every_kind_has_spec_clamped_presets() {
+        for kind in DeviceKind::ALL {
+            let spec = kind.spec();
+            let presets = nvidia_preset_modes(kind);
+            assert!(!presets.is_empty(), "{} has no preset table", kind.name());
+            for (budget, m) in presets {
+                // validate() enforces table membership + the core bound,
+                // so a preset can never name a frequency the device's
+                // discrete ladders don't offer
+                m.validate(spec)
+                    .unwrap_or_else(|e| panic!("{} preset {budget} W invalid: {e}", kind.name()));
+                assert!(
+                    budget > 0.0 && budget <= spec.peak_power_w,
+                    "{} preset budget {budget} W exceeds the {} W peak",
+                    kind.name(),
+                    spec.peak_power_w
+                );
+                // presets must be strictly below MAXN (they exist to cap
+                // power), not merely legal
+                let maxn = PowerMode::maxn(spec);
+                assert!(
+                    m.cpu_khz <= maxn.cpu_khz
+                        && m.gpu_khz <= maxn.gpu_khz
+                        && m.mem_khz <= maxn.mem_khz
+                        && m.cores <= maxn.cores
+                );
+            }
         }
     }
 

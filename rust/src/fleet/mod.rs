@@ -1,0 +1,34 @@
+//! Fleet orchestration: the layer above the streaming coordinator that
+//! turns the single implicit device pool into a routed, sharded fleet of
+//! simulated Jetson nodes (ROADMAP item 1).
+//!
+//! Three concerns, one module each:
+//!
+//! * [`registry`] — the node registry: thousands of simulated nodes,
+//!   each carrying its [`DeviceKind`](crate::device::DeviceKind),
+//!   capacity, health, and per-node
+//!   [`ThermalModel`](crate::sim::thermal::ThermalModel) /
+//!   [`PowerSensor`](crate::sim::PowerSensor) state, with deterministic
+//!   registration/heartbeats and a pluggable [`FleetObserver`] proxy for
+//!   external observability planes;
+//! * [`router`] — placement: a **pure** scoring function over an
+//!   immutable [`RegistrySnapshot`] (kind match > warm-model locality >
+//!   least-loaded > thermal headroom, node id as the final tie-break),
+//!   so the same seed and snapshot always produce the same placement;
+//! * [`shard`] — N independent [`Coordinator`](crate::coordinator::Coordinator)
+//!   domains, [`ModelKey`](crate::coordinator::ModelKey)s
+//!   hash-partitioned across them so singleflight and drift state never
+//!   cross shards, with the per-device-kind transfer performed **once
+//!   fleet-wide** and published into the owning shard's versioned Ready
+//!   slots.
+
+pub mod registry;
+pub mod router;
+pub mod shard;
+
+pub use registry::{
+    FleetObserver, FleetRegistry, NodeHealth, NodeId, NodeView, NoopObserver, RecordingObserver,
+    RegistrySnapshot,
+};
+pub use router::{route, route_burst, Placement};
+pub use shard::{Fleet, FleetConfig, FleetOutcome};

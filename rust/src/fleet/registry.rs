@@ -1,0 +1,417 @@
+//! Node registry: deterministic synthesis, heartbeats and observability
+//! for a fleet of simulated Jetson nodes.
+//!
+//! Each [`Node`] owns the per-device state the placement layer scores
+//! against: its [`DeviceKind`], request capacity, outstanding load, the
+//! set of workloads it has already served (warm-model locality), and a
+//! live [`ThermalModel`] + [`PowerSensor`] pair from `sim/` that
+//! heartbeats advance deterministically. Health is derived, never set by
+//! hand: a scripted per-node fan-off episode
+//! ([`FaultPlan::node_fan_off`](crate::sim::FaultPlan)) marks the node
+//! `Degraded`, and a die that would throttle marks it `Down`.
+//!
+//! Everything is a pure function of `(seed, heartbeat count, fault
+//! plan)` — two registries built with the same inputs produce
+//! bit-identical [`RegistrySnapshot`]s, which is what makes fleet
+//! routing reproducible end-to-end.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::device::DeviceKind;
+use crate::sim::thermal::ThermalModel;
+use crate::sim::{FaultInjector, PowerSensor};
+use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
+use crate::workload::Workload;
+
+/// Fleet-unique node identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{:03}", self.0)
+    }
+}
+
+/// Derived node health. Only `Healthy` nodes are placement candidates;
+/// the router treats `Degraded` and `Down` identically (avoid), the
+/// distinction exists for operators reading fleet state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    Healthy,
+    /// The cooling envelope is compromised (scripted fan-off episode):
+    /// the node still runs but must not take new placements.
+    Degraded,
+    /// The die is at (or past) its throttle trip point.
+    Down,
+}
+
+impl NodeHealth {
+    pub fn placeable(&self) -> bool {
+        matches!(self, NodeHealth::Healthy)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodeHealth::Healthy => "healthy",
+            NodeHealth::Degraded => "degraded",
+            NodeHealth::Down => "down",
+        }
+    }
+}
+
+/// One registered node. Mutable state lives behind the registry; the
+/// router only ever sees the immutable [`NodeView`] projection.
+#[derive(Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: DeviceKind,
+    /// Concurrent request slots this node advertises.
+    pub capacity: u32,
+    pub health: NodeHealth,
+    /// Outstanding placements; heartbeats drain one slot's worth each
+    /// tick (a deterministic stand-in for round completions).
+    pub load: u32,
+    /// Workloads this node has served — the warm-model locality signal.
+    warm: Vec<Workload>,
+    thermal: ThermalModel,
+    sensor: PowerSensor,
+}
+
+impl Node {
+    fn new(id: NodeId, kind: DeviceKind) -> Node {
+        let spec = kind.spec();
+        // capacity scales with the module class: the AGX boards take more
+        // concurrent training rounds than a Nano
+        let capacity = match kind {
+            DeviceKind::OrinAgx => 4,
+            DeviceKind::XavierAgx => 3,
+            DeviceKind::OrinNano => 2,
+        };
+        Node {
+            id,
+            kind,
+            capacity,
+            health: NodeHealth::Healthy,
+            load: 0,
+            warm: Vec::new(),
+            thermal: ThermalModel::default(),
+            sensor: PowerSensor::new(spec.p_base_mw),
+        }
+    }
+
+    /// Sustainable-power headroom (mW) at the current die state.
+    fn headroom_mw(&self) -> f64 {
+        self.thermal.max_sustainable_mw() - self.sensor.instantaneous()
+    }
+
+    fn view(&self) -> NodeView {
+        NodeView {
+            id: self.id,
+            kind: self.kind,
+            health: self.health,
+            capacity: self.capacity,
+            load: self.load,
+            warm: self.warm.clone(),
+            headroom_mw: self.headroom_mw(),
+        }
+    }
+}
+
+/// Immutable per-node projection the router scores. `warm` keeps
+/// registration order (deterministic), membership is what matters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeView {
+    pub id: NodeId,
+    pub kind: DeviceKind,
+    pub health: NodeHealth,
+    pub capacity: u32,
+    pub load: u32,
+    pub warm: Vec<Workload>,
+    pub headroom_mw: f64,
+}
+
+impl NodeView {
+    pub fn free_slots(&self) -> u32 {
+        self.capacity.saturating_sub(self.load)
+    }
+
+    pub fn is_warm(&self, workload: &Workload) -> bool {
+        self.warm.contains(workload)
+    }
+}
+
+/// Immutable registry snapshot: what the router routes against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistrySnapshot {
+    /// Simulated seconds of fleet uptime at snapshot time.
+    pub clock_s: f64,
+    pub nodes: Vec<NodeView>,
+}
+
+impl RegistrySnapshot {
+    pub fn healthy_of_kind(&self, kind: DeviceKind) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == kind && n.health.placeable())
+            .count()
+    }
+}
+
+/// Pluggable observability proxy: an external control/observability
+/// plane subscribes to registry events (registration, heartbeats,
+/// health flips, placements) without the registry knowing anything about
+/// it. Default methods are no-ops so observers implement only what they
+/// watch.
+pub trait FleetObserver: Send + Sync + fmt::Debug {
+    fn on_register(&self, _node: &NodeView) {}
+    fn on_heartbeat(&self, _clock_s: f64) {}
+    fn on_health_change(&self, _node: NodeId, _from: NodeHealth, _to: NodeHealth) {}
+    fn on_placement(&self, _node: NodeId, _workload: &Workload) {}
+}
+
+/// The default observer: drops everything.
+#[derive(Debug, Default)]
+pub struct NoopObserver;
+
+impl FleetObserver for NoopObserver {}
+
+/// A test/demo observer that records every event as a rendered line.
+#[derive(Debug, Default)]
+pub struct RecordingObserver {
+    events: Mutex<Vec<String>>,
+}
+
+impl RecordingObserver {
+    pub fn events(&self) -> Vec<String> {
+        lock_unpoisoned(&self.events).clone()
+    }
+
+    fn push(&self, line: String) {
+        lock_unpoisoned(&self.events).push(line);
+    }
+}
+
+impl FleetObserver for RecordingObserver {
+    fn on_register(&self, node: &NodeView) {
+        self.push(format!("register {} {}", node.id, node.kind.name()));
+    }
+    fn on_heartbeat(&self, clock_s: f64) {
+        self.push(format!("heartbeat {clock_s:.0}s"));
+    }
+    fn on_health_change(&self, node: NodeId, from: NodeHealth, to: NodeHealth) {
+        self.push(format!("health {} {} -> {}", node, from.label(), to.label()));
+    }
+    fn on_placement(&self, node: NodeId, workload: &Workload) {
+        self.push(format!("place {} {}", node, workload.name()));
+    }
+}
+
+/// The registry proper. Not internally synchronized — the fleet layer
+/// owns it behind one mutex; everything placement-facing goes through
+/// immutable snapshots.
+#[derive(Debug)]
+pub struct FleetRegistry {
+    nodes: Vec<Node>,
+    clock_s: f64,
+    observer: Arc<dyn FleetObserver>,
+}
+
+/// Registry synthesis salt (kept apart from every other consumer of the
+/// fleet seed).
+const REGISTRY_SALT: u64 = 0xf1ee_7001;
+
+impl FleetRegistry {
+    /// Deterministically synthesize `n_nodes` nodes. The first three
+    /// cover every [`DeviceKind`] (a fleet of any useful size can always
+    /// satisfy any affinity); the rest follow a seeded 50/30/20
+    /// Orin/Xavier/Nano mix. Same `(n_nodes, seed)` ⇒ bit-identical
+    /// registry.
+    pub fn synthesize(n_nodes: usize, seed: u64) -> FleetRegistry {
+        let mut rng = Rng::new(seed ^ REGISTRY_SALT);
+        let mut registry = FleetRegistry {
+            nodes: Vec::with_capacity(n_nodes),
+            clock_s: 0.0,
+            observer: Arc::new(NoopObserver),
+        };
+        for i in 0..n_nodes {
+            let kind = if i < DeviceKind::ALL.len() {
+                DeviceKind::ALL[i]
+            } else {
+                match rng.below(10) {
+                    0..=4 => DeviceKind::OrinAgx,
+                    5..=7 => DeviceKind::XavierAgx,
+                    _ => DeviceKind::OrinNano,
+                }
+            };
+            registry.register(kind);
+        }
+        registry
+    }
+
+    /// Attach an observability proxy; replays registration for the
+    /// already-resident nodes so late subscribers see the full fleet.
+    pub fn with_observer(mut self, observer: Arc<dyn FleetObserver>) -> FleetRegistry {
+        self.observer = observer;
+        for node in &self.nodes {
+            self.observer.on_register(&node.view());
+        }
+        self
+    }
+
+    /// Register one node of `kind`; ids are assigned densely in
+    /// registration order.
+    pub fn register(&mut self, kind: DeviceKind) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        let node = Node::new(id, kind);
+        self.observer.on_register(&node.view());
+        self.nodes.push(node);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// One deterministic heartbeat: advance the fleet clock by `dt_s`,
+    /// drain one slot of load per node, advance every node's sensor +
+    /// die state under its current utilization, apply any scripted
+    /// per-node fan-off episode from `faults`, and re-derive health.
+    pub fn heartbeat(&mut self, dt_s: f64, faults: Option<&FaultInjector>) {
+        self.clock_s += dt_s.max(0.0);
+        for node in &mut self.nodes {
+            node.load = node.load.saturating_sub(1);
+            let spec = node.kind.spec();
+            // utilization drives the simulated draw between idle and peak
+            let busy = f64::from(node.load) / f64::from(node.capacity.max(1));
+            let draw_mw = spec.p_base_mw + busy * (spec.peak_power_w * 1000.0 - spec.p_base_mw);
+            node.sensor.change_mode(draw_mw);
+            node.sensor.advance(dt_s);
+            node.thermal.fan_max = !faults
+                .map(|inj| inj.node_fan_off_at(node.id.0, self.clock_s))
+                .unwrap_or(false);
+            node.thermal.advance(node.sensor.instantaneous(), dt_s);
+            let health = if node.thermal.would_throttle() {
+                NodeHealth::Down
+            } else if !node.thermal.fan_max {
+                NodeHealth::Degraded
+            } else {
+                NodeHealth::Healthy
+            };
+            if health != node.health {
+                self.observer.on_health_change(node.id, node.health, health);
+                node.health = health;
+            }
+        }
+        self.observer.on_heartbeat(self.clock_s);
+    }
+
+    /// Account a placement decided by the router: bump the node's load
+    /// and mark the workload warm there.
+    pub fn note_placement(&mut self, id: NodeId, workload: Workload) {
+        if let Some(node) = self.nodes.get_mut(id.0 as usize) {
+            node.load = node.load.saturating_add(1);
+            if !node.warm.contains(&workload) {
+                node.warm.push(workload);
+            }
+            self.observer.on_placement(id, &workload);
+        }
+    }
+
+    /// Immutable projection for the router.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            clock_s: self.clock_s,
+            nodes: self.nodes.iter().map(Node::view).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FaultPlan;
+
+    #[test]
+    fn synthesis_is_deterministic_and_covers_every_kind() {
+        let a = FleetRegistry::synthesize(64, 7).snapshot();
+        let b = FleetRegistry::synthesize(64, 7).snapshot();
+        assert_eq!(a, b, "same (n, seed) must produce bit-identical registries");
+        for kind in DeviceKind::ALL {
+            assert!(a.healthy_of_kind(kind) > 0, "no {} node", kind.name());
+        }
+        // dense, ordered ids
+        for (i, n) in a.nodes.iter().enumerate() {
+            assert_eq!(n.id, NodeId(i as u32));
+            assert!(n.capacity > 0);
+            assert_eq!(n.health, NodeHealth::Healthy);
+            assert!(n.headroom_mw > 0.0);
+        }
+        // a different seed reshuffles the tail mix
+        let c = FleetRegistry::synthesize(64, 8).snapshot();
+        assert_ne!(
+            a.nodes.iter().map(|n| n.kind).collect::<Vec<_>>(),
+            c.nodes.iter().map(|n| n.kind).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn scripted_node_fan_off_degrades_then_recovers() {
+        let plan = FaultPlan {
+            node_fan_off: vec![(1, 30.0, 90.0)],
+            ..Default::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let mut reg = FleetRegistry::synthesize(4, 1);
+        reg.heartbeat(30.0, Some(&inj)); // clock = 30 s: episode starts
+        assert_eq!(reg.snapshot().nodes[1].health, NodeHealth::Degraded);
+        assert_eq!(reg.snapshot().nodes[0].health, NodeHealth::Healthy);
+        reg.heartbeat(30.0, Some(&inj)); // 60 s: still inside
+        assert_eq!(reg.snapshot().nodes[1].health, NodeHealth::Degraded);
+        reg.heartbeat(30.0, Some(&inj)); // 90 s: half-open end — recovered
+        assert_eq!(reg.snapshot().nodes[1].health, NodeHealth::Healthy);
+    }
+
+    #[test]
+    fn placements_warm_the_node_and_heartbeats_drain_load() {
+        let mut reg = FleetRegistry::synthesize(3, 2);
+        let wl = Workload::resnet();
+        reg.note_placement(NodeId(0), wl);
+        reg.note_placement(NodeId(0), wl);
+        let snap = reg.snapshot();
+        assert_eq!(snap.nodes[0].load, 2);
+        assert!(snap.nodes[0].is_warm(&wl));
+        assert_eq!(snap.nodes[0].warm.len(), 1, "warm set is deduplicated");
+        reg.heartbeat(30.0, None);
+        assert_eq!(reg.snapshot().nodes[0].load, 1);
+    }
+
+    #[test]
+    fn observer_proxy_sees_registration_health_and_placements() {
+        let obs = Arc::new(RecordingObserver::default());
+        let plan = FaultPlan { node_fan_off: vec![(0, 0.0, 9999.0)], ..Default::default() };
+        let inj = FaultInjector::new(plan);
+        let mut reg =
+            FleetRegistry::synthesize(2, 3).with_observer(Arc::clone(&obs) as Arc<dyn FleetObserver>);
+        reg.note_placement(NodeId(1), Workload::bert());
+        reg.heartbeat(10.0, Some(&inj));
+        let events = obs.events();
+        assert!(events.iter().any(|e| e.starts_with("register n000")), "{events:?}");
+        assert!(events.iter().any(|e| e.starts_with("place n001")), "{events:?}");
+        assert!(
+            events.iter().any(|e| e == "health n000 healthy -> degraded"),
+            "{events:?}"
+        );
+        assert!(events.iter().any(|e| e.starts_with("heartbeat")), "{events:?}");
+    }
+}

@@ -1,0 +1,384 @@
+//! Sharded coordinator domains: N independent [`Coordinator`]s behind
+//! one fleet front-end.
+//!
+//! Each shard owns its own [`PlaneCache`], ingress queue, worker pool
+//! and (when configured) refit worker — nothing but the fleet-level
+//! metrics is shared, so singleflight and drift state never cross
+//! shards and a poisoned domain cannot wedge its siblings. [`ModelKey`]s
+//! are hash-partitioned ([`ModelKey::shard_index`]) so identical keys
+//! always land on the same domain and distinct keys never contend.
+//!
+//! **Once-fleet-wide transfer.** [`Fleet::submit`] pins every request to
+//! the fleet's canonical seed, so all requests for one (device kind,
+//! workload, strategy) share one [`ModelKey`]. The first such submission
+//! runs the host transfer exactly once — through the same
+//! [`fit_models_for_request`] path a shard's cache-miss lane would — and
+//! publishes the pair into the owning shard's versioned Ready slot
+//! ([`PlaneCache::publish_models`]); every later submission, whatever
+//! shard or node it routes to, is a snapshot cache hit. The fleet
+//! metrics carry the profiling/fit cost; the shards' own `host_fits`
+//! stay zero, which is precisely the acceptance assert.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::pipeline::fit_models_for_request;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Metrics, ModelKey, Provenance, ReferenceModels, Request,
+    Response, Strategy, Submitter,
+};
+use crate::error::{Error, Result};
+use crate::fleet::registry::FleetRegistry;
+use crate::fleet::router::{route, Placement};
+use crate::util::sync::lock_unpoisoned;
+
+/// Fleet configuration: how many coordinator domains, how many nodes,
+/// and the canonical seed every fleet request is pinned to (the pin is
+/// what lets per-kind model keys coalesce fleet-wide).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Independent coordinator domains (each with its own cache/queue/
+    /// refit worker).
+    pub shards: usize,
+    /// Simulated nodes synthesized into the registry.
+    pub nodes: usize,
+    /// Canonical model seed + registry synthesis seed. Same seed ⇒
+    /// bit-identical registry, placements and model pairs.
+    pub seed: u64,
+    /// Simulated seconds each heartbeat advances the fleet (one
+    /// heartbeat runs before every placement decision).
+    pub heartbeat_slice_s: f64,
+    /// Per-shard coordinator configuration (shard labels are stamped on
+    /// top of this per domain).
+    pub coordinator: CoordinatorConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 4,
+            nodes: 64,
+            seed: 1,
+            heartbeat_slice_s: 30.0,
+            coordinator: CoordinatorConfig::default(),
+        }
+    }
+}
+
+/// One coordinator domain plus its live submission handle.
+struct ShardHandle {
+    coordinator: Coordinator,
+    /// `Some` while the fleet accepts submissions; taken (dropped) at
+    /// [`Fleet::finish`] so the domain's queue closes.
+    submitter: Option<Submitter>,
+}
+
+/// What [`Fleet::finish`] returns: the merged responses plus every
+/// metrics handle, fleet-level and per-shard.
+pub struct FleetOutcome {
+    /// All responses across all shards, sorted by request id.
+    pub responses: Vec<Response>,
+    /// Fleet-level metrics: routing ledgers, placement rejections,
+    /// transfers saved, and the once-fleet-wide profiling/fit cost.
+    pub fleet: Arc<Metrics>,
+    /// Per-shard serving metrics, indexed by shard.
+    pub shards: Vec<Arc<Metrics>>,
+}
+
+/// The fleet front-end: routes requests onto registry nodes and
+/// dispatches them to hash-partitioned coordinator domains.
+pub struct Fleet {
+    cfg: FleetConfig,
+    reference: ReferenceModels,
+    ref_fps: (u64, u64),
+    registry: Mutex<FleetRegistry>,
+    shards: Vec<ShardHandle>,
+    metrics: Arc<Metrics>,
+    /// Model keys whose pair has already been transferred fleet-wide.
+    /// Guards the once-per-key fit; held across the fit so concurrent
+    /// submitters of a new key cannot race a duplicate transfer.
+    transferred: Mutex<HashSet<ModelKey>>,
+    /// Requests the router placed away from their first-choice node;
+    /// their primary responses are re-stamped `DegradedPlacement`.
+    rerouted_ids: Mutex<Vec<u64>>,
+}
+
+impl Fleet {
+    /// Synthesize the registry and spawn every coordinator domain.
+    pub fn start(cfg: FleetConfig, reference: &ReferenceModels) -> Result<Fleet> {
+        if cfg.shards == 0 {
+            return Err(Error::Usage("fleet needs at least one shard".into()));
+        }
+        if cfg.nodes == 0 {
+            return Err(Error::Usage("fleet needs at least one node".into()));
+        }
+        let registry = FleetRegistry::synthesize(cfg.nodes, cfg.seed);
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for s in 0..cfg.shards {
+            let mut shard_cfg = cfg.coordinator.clone();
+            shard_cfg.shard = Some(s as u32);
+            let (coordinator, submitter) = Coordinator::start(&shard_cfg, reference)?;
+            shards.push(ShardHandle { coordinator, submitter: Some(submitter) });
+        }
+        Ok(Fleet {
+            ref_fps: reference.fingerprints(),
+            reference: reference.clone(),
+            cfg,
+            registry: Mutex::new(registry),
+            shards,
+            metrics: Arc::new(Metrics::new()),
+            transferred: Mutex::new(HashSet::new()),
+            rerouted_ids: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fleet-level metrics (live).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Current registry snapshot (heartbeat state as of the last
+    /// placement).
+    pub fn registry_snapshot(&self) -> crate::fleet::registry::RegistrySnapshot {
+        lock_unpoisoned(&self.registry).snapshot()
+    }
+
+    /// Route and dispatch one request. The request's `seed` is pinned to
+    /// the fleet's canonical seed (model identity is per (kind,
+    /// workload, strategy) fleet-wide, not per caller), its `device` is
+    /// rewritten to the placed node's kind, and its `node` is stamped
+    /// before the owning shard sees it. Returns the placement so callers
+    /// can account affinity/reroute decisions; `Err` only when no
+    /// healthy capacity exists anywhere or the fleet is shut down.
+    pub fn submit(&self, mut req: Request) -> Result<Placement> {
+        req.seed = self.cfg.seed;
+        let affinity = req.affinity.or(Some(req.device));
+        req.affinity = affinity;
+
+        let placement = {
+            let mut registry = lock_unpoisoned(&self.registry);
+            registry.heartbeat(self.cfg.heartbeat_slice_s, self.cfg.coordinator.faults.as_deref());
+            let snapshot = registry.snapshot();
+            let placement = match route(&snapshot, affinity, &req.workload) {
+                Some(p) => p,
+                None => {
+                    self.metrics
+                        .placement_rejected
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    return Err(Error::Coordinator(format!(
+                        "request {}: no healthy fleet capacity for affinity {:?}",
+                        req.id,
+                        affinity.map(|k| k.name())
+                    )));
+                }
+            };
+            if placement.cross_kind {
+                // the affinity could not be honored at all — count it,
+                // but still serve on the fallback kind
+                self.metrics
+                    .placement_rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            registry.note_placement(placement.node, req.workload);
+            placement
+        };
+
+        req.device = placement.kind;
+        req.node = Some(placement.node);
+        if placement.rerouted {
+            lock_unpoisoned(&self.rerouted_ids).push(req.id);
+        }
+
+        let strategy = Strategy::for_scenario(req.scenario);
+        let key = ModelKey::for_request(
+            &req,
+            strategy,
+            self.cfg.coordinator.prediction_grid,
+            self.cfg.coordinator.transfer_epochs,
+            self.ref_fps,
+        );
+        let shard_i = key.shard_index(self.shards.len());
+
+        if !matches!(strategy, Strategy::BruteForce) {
+            self.ensure_transferred(key, shard_i, &req);
+        }
+
+        self.metrics.note_routed(req.device, shard_i);
+        let submitter = self.shards[shard_i]
+            .submitter
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("fleet is shut down".into()))?;
+        submitter.send_request(req)?;
+        Ok(placement)
+    }
+
+    /// The once-fleet-wide transfer: the first submission of `key` fits
+    /// the pair (on the *fleet* metrics — no shard pays for it) and
+    /// publishes it into shard `shard_i`'s Ready slot; every later
+    /// submission of the same key, from any node, is a saved transfer.
+    /// A failed fit is forgotten so the owning shard's resilient lane
+    /// (retry → breaker → degradation ladder) handles the request and a
+    /// later submission may try the pre-publish again.
+    fn ensure_transferred(&self, key: ModelKey, shard_i: usize, req: &Request) {
+        let mut transferred = lock_unpoisoned(&self.transferred);
+        if transferred.contains(&key) {
+            self.metrics
+                .cross_shard_transfers_saved
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return;
+        }
+        match fit_models_for_request(&self.reference, &self.cfg.coordinator, &self.metrics, req) {
+            Ok((fit_key, models)) => {
+                debug_assert_eq!(fit_key, key, "fleet and pipeline key derivations diverged");
+                let _ = self.shards[shard_i].coordinator.cache().publish_models(key, models);
+                transferred.insert(key);
+            }
+            Err(_) => {
+                // leave the key unmarked: the shard's own pipeline will
+                // surface (and retry/degrade) the failure per request
+            }
+        }
+    }
+
+    /// Close every domain's ingress, drain them all, stamp rerouted
+    /// responses, and return the merged outcome. Responses are sorted by
+    /// request id across the whole fleet; `Err` is returned only when
+    /// *no* request anywhere succeeded.
+    pub fn finish(mut self) -> Result<FleetOutcome> {
+        let rerouted: HashSet<u64> =
+            lock_unpoisoned(&self.rerouted_ids).iter().copied().collect();
+        let mut responses = Vec::new();
+        let mut shard_metrics = Vec::with_capacity(self.shards.len());
+        let mut first_err: Option<Error> = None;
+        for shard in &mut self.shards {
+            drop(shard.submitter.take());
+        }
+        for shard in self.shards {
+            shard_metrics.push(shard.coordinator.metrics());
+            match shard.coordinator.finish() {
+                Ok((mut rs, _)) => responses.append(&mut rs),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if responses.is_empty() {
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        for r in &mut responses {
+            // placement degradation only overrides a *primary* answer —
+            // a Ridge/NPE ladder response already reports worse quality
+            if rerouted.contains(&r.id) && r.provenance == Provenance::Primary {
+                r.provenance = Provenance::DegradedPlacement;
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        Ok(FleetOutcome { responses, fleet: self.metrics, shards: shard_metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::{host_cfg, host_reference};
+    use crate::coordinator::Scenario;
+    use crate::device::DeviceKind;
+    use crate::workload::Workload;
+    use std::sync::atomic::Ordering;
+
+    fn fleet_cfg(shards: usize, nodes: usize) -> FleetConfig {
+        FleetConfig { shards, nodes, coordinator: host_cfg(120), ..Default::default() }
+    }
+
+    fn req(id: u64, kind: DeviceKind, workload: Workload) -> Request {
+        Request {
+            id,
+            device: kind,
+            workload,
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            affinity: Some(kind),
+            node: None,
+            seed: 999, // overwritten by the canonical fleet seed
+        }
+    }
+
+    #[test]
+    fn mixed_kind_burst_fits_once_per_kind_and_honors_affinity() {
+        let reference = host_reference();
+        let fleet = Fleet::start(fleet_cfg(4, 12), &reference).unwrap();
+        let wl = Workload::mobilenet();
+        let mut placements = Vec::new();
+        for i in 0..9u64 {
+            let kind = DeviceKind::ALL[(i % 3) as usize];
+            placements.push(fleet.submit(req(i, kind, wl)).unwrap());
+        }
+        let snapshot = fleet.registry_snapshot();
+        let outcome = fleet.finish().unwrap();
+        assert_eq!(outcome.responses.len(), 9);
+        // every response served on a node of its requested kind
+        for (r, p) in outcome.responses.iter().zip(&placements) {
+            let node = r.node.expect("fleet responses carry their node");
+            assert_eq!(node, p.node);
+            let view = snapshot.nodes.iter().find(|n| n.id == node).unwrap();
+            assert_eq!(view.kind, DeviceKind::ALL[(r.id % 3) as usize]);
+            assert!(!p.cross_kind);
+        }
+        // exactly one transfer per (kind, workload): 3 keys × 2 fits,
+        // all charged to the fleet, none to any shard
+        assert_eq!(outcome.fleet.host_fits.load(Ordering::Relaxed), 6);
+        for m in &outcome.shards {
+            assert_eq!(m.host_fits.load(Ordering::Relaxed), 0);
+        }
+        // 9 routed, 6 of them saved transfers (first of each kind pays)
+        assert_eq!(outcome.fleet.routed_total(), 9);
+        assert_eq!(outcome.fleet.cross_shard_transfers_saved.load(Ordering::Relaxed), 6);
+        assert_eq!(outcome.fleet.placement_rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fleet_runs_are_bit_reproducible() {
+        let reference = host_reference();
+        let run = || {
+            let fleet = Fleet::start(fleet_cfg(4, 16), &reference).unwrap();
+            let mut placements = Vec::new();
+            for i in 0..12u64 {
+                let kind = DeviceKind::ALL[(i % 3) as usize];
+                let wl = Workload::default_five()[(i % 5) as usize];
+                placements.push(fleet.submit(req(i, kind, wl)).unwrap());
+            }
+            let outcome = fleet.finish().unwrap();
+            (placements, outcome)
+        };
+        let (pa, oa) = run();
+        let (pb, ob) = run();
+        assert_eq!(pa, pb, "same seed ⇒ identical placements");
+        assert_eq!(oa.responses.len(), ob.responses.len());
+        for (a, b) in oa.responses.iter().zip(&ob.responses) {
+            // everything but wall-clock latency must be bit-identical
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.provenance, b.provenance);
+            assert_eq!(a.chosen_mode, b.chosen_mode);
+            assert_eq!(a.predicted_time_ms.to_bits(), b.predicted_time_ms.to_bits());
+            assert_eq!(a.predicted_power_w.to_bits(), b.predicted_power_w.to_bits());
+            assert_eq!(a.observed_time_ms.to_bits(), b.observed_time_ms.to_bits());
+            assert_eq!(a.observed_power_w.to_bits(), b.observed_power_w.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_shards_or_nodes_is_a_usage_error() {
+        let reference = host_reference();
+        assert!(Fleet::start(fleet_cfg(0, 8), &reference).is_err());
+        assert!(Fleet::start(fleet_cfg(2, 0), &reference).is_err());
+    }
+}

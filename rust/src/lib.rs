@@ -28,6 +28,7 @@ pub mod device;
 pub mod error;
 #[cfg(feature = "xla")]
 pub mod experiments;
+pub mod fleet;
 pub mod nn;
 pub mod pareto;
 pub mod predict;

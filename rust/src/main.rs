@@ -21,6 +21,7 @@ use powertrain::coordinator::{
 };
 use powertrain::device::{DeviceKind, PowerModeGrid};
 use powertrain::error::{Error, Result};
+use powertrain::fleet::{Fleet, FleetConfig};
 use powertrain::profiler::Profiler;
 use powertrain::sim::TrainerSim;
 use powertrain::util::rng::Rng;
@@ -161,6 +162,17 @@ COMMANDS
                                  and sustained load can throttle the
                                  (simulated) die, shifting observed
                                  outcomes
+      --fleet N (0=off)          fleet mode: place each request on a
+                                 simulated node registry (device-kind
+                                 affinity, warm-model locality, least
+                                 load, thermal headroom) and dispatch it
+                                 to one of N sharded coordinator
+                                 domains; per-kind models transfer once
+                                 fleet-wide. Incompatible with
+                                 --feedback; --gap-ms/--deadline-ms are
+                                 ignored
+      --nodes N (64)             simulated Jetson nodes synthesized into
+                                 the fleet registry (fleet mode only)
   experiment <id|all>        regenerate paper exhibits; ids:
                              table1-4 fig2a fig2b fig2c fig6 fig7 fig8
                              fig9a-e fig10-14
@@ -446,6 +458,8 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         workload: wl,
         power_budget_w: budget_w,
         scenario: Scenario::ContinuousLearning,
+        affinity: None,
+        node: None,
         seed,
     };
     #[cfg(feature = "xla")]
@@ -490,6 +504,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let thermal = args.get("thermal").is_some();
+    let fleet_shards = args.usize_or("fleet", 0)?;
+    let fleet_nodes = args.usize_or("nodes", 64)?;
+    if fleet_shards > 0 && feedback {
+        return Err(Error::Usage(
+            "--fleet and --feedback are incompatible: the lifecycle feedback lane is \
+             per-coordinator, not fleet-routed"
+                .into(),
+        ));
+    }
     let ref_dir = PathBuf::from(args.get_or("ref-dir", "checkpoints"));
     // scenario choice resolved up front so flag errors surface before
     // the worker pool spins up
@@ -523,6 +546,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         thermal: thermal.then(powertrain::coordinator::ThermalConfig::default),
         ..Default::default()
     };
+
+    if fleet_shards > 0 {
+        return serve_fleet(n, fleet_shards, fleet_nodes, seed, &scenarios, cfg, &reference);
+    }
 
     println!(
         "streaming {n} synthetic requests into {workers} worker(s) (gap {gap_ms} ms, deadline {}, feedback {}) ...",
@@ -558,6 +585,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .map_or_else(|| workloads[rng.below(workloads.len())], |(_, w)| w),
             power_budget_w: rng.uniform_range(12.0, budget_cap.max(13.0)),
             scenario: scenarios[rng.below(scenarios.len())],
+            affinity: None,
+            node: None,
             seed: if feedback { seed } else { seed + i as u64 },
         };
         trace.push(request.clone());
@@ -638,6 +667,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
         responses.len() as f64 / wall,
         wall
     );
+    Ok(())
+}
+
+/// Fleet-mode `serve`: every request carries a device-kind affinity, is
+/// placed on a registry node, and is dispatched to its key's coordinator
+/// domain. Budgets sit well above each kind's peak so the CI smoke leg
+/// exercises routing and sharding, not budget feasibility; a nonzero
+/// exit means a placement or a response actually failed.
+fn serve_fleet(
+    n: usize,
+    shards: usize,
+    nodes: usize,
+    seed: u64,
+    scenarios: &[Scenario],
+    cfg: CoordinatorConfig,
+    reference: &ReferenceModels,
+) -> Result<()> {
+    println!(
+        "routing {n} synthetic requests across {shards} coordinator domain(s) over {nodes} simulated node(s) ..."
+    );
+    let t0 = std::time::Instant::now();
+    let fleet_cfg =
+        FleetConfig { shards, nodes, seed, coordinator: cfg, ..Default::default() };
+    let fleet = Fleet::start(fleet_cfg, reference)?;
+
+    let mut rng = Rng::new(seed);
+    let workloads = Workload::default_five();
+    let devices = [DeviceKind::OrinAgx, DeviceKind::XavierAgx, DeviceKind::OrinNano];
+    let mut placement_errors = 0usize;
+    for i in 0..n {
+        let kind = devices[rng.below(devices.len())];
+        let request = Request {
+            id: i as u64,
+            device: kind,
+            workload: workloads[rng.below(workloads.len())],
+            power_budget_w: kind.spec().peak_power_w * 2.0,
+            scenario: scenarios[rng.below(scenarios.len())],
+            affinity: Some(kind),
+            node: None,
+            seed, // pinned to the canonical fleet seed on submit anyway
+        };
+        if let Err(e) = fleet.submit(request) {
+            eprintln!("request {i} not placed: {e}");
+            placement_errors += 1;
+        }
+    }
+    let outcome = fleet.finish()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = TextTable::new(&[
+        "id", "node", "strategy", "served", "mode", "pred ms", "obs ms", "obs W", "latency ms",
+    ]);
+    for r in &outcome.responses {
+        t.row(vec![
+            r.id.to_string(),
+            r.node.map_or_else(|| "-".into(), |node| node.to_string()),
+            r.strategy.clone(),
+            r.provenance.label().to_string(),
+            r.chosen_mode.label(),
+            format!("{:.1}", r.predicted_time_ms),
+            format!("{:.1}", r.observed_time_ms),
+            format!("{:.2}", r.observed_power_w),
+            format!("{:.0}", r.latency_ms),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut failed = 0usize;
+    for (s, m) in outcome.shards.iter().enumerate() {
+        for (id, msg) in m.failed_requests() {
+            println!("shard {s} failed request #{id}: {msg}");
+            failed += 1;
+        }
+    }
+    println!("fleet: {}", outcome.fleet.render());
+    for (s, m) in outcome.shards.iter().enumerate() {
+        println!("shard {s}: {}", m.render());
+    }
+    println!(
+        "throughput: {:.2} requests/s over {:.1}s wall",
+        outcome.responses.len() as f64 / wall,
+        wall
+    );
+    if placement_errors > 0 || failed > 0 {
+        return Err(Error::Coordinator(format!(
+            "fleet serve: {placement_errors} placement failure(s), {failed} failed response(s)"
+        )));
+    }
     Ok(())
 }
 

@@ -63,6 +63,11 @@ pub struct FaultPlan {
     /// Fan-off thermal episodes as `[start_s, end_s)` intervals on the
     /// thermal guard's simulated clock (the IP-67 enclosure scenario).
     pub fan_off_s: Vec<(f64, f64)>,
+    /// Per-node fan-off episodes for fleet chaos runs, as
+    /// `(node, start_s, end_s)` triples on the fleet registry's heartbeat
+    /// clock: node `node`'s cooling is scripted off for `[start_s,
+    /// end_s)`, marking it `Degraded` so the router places around it.
+    pub node_fan_off: Vec<(u32, f64, f64)>,
 }
 
 impl Default for FaultPlan {
@@ -79,6 +84,7 @@ impl Default for FaultPlan {
             sensor_dropout_prob: 0.0,
             noise_factor: 1.0,
             fan_off_s: Vec::new(),
+            node_fan_off: Vec::new(),
         }
     }
 }
@@ -117,6 +123,7 @@ impl FaultPlan {
             && self.sensor_dropout_prob == 0.0
             && self.noise_factor == 1.0
             && self.fan_off_s.is_empty()
+            && self.node_fan_off.is_empty()
     }
 
     pub fn from_json(v: &Value) -> Result<FaultPlan> {
@@ -143,6 +150,28 @@ impl FaultPlan {
                 fan_off_s.push((start, end));
             }
         }
+        let mut node_fan_off = Vec::new();
+        if let Some(episodes) = v.get("node_fan_off") {
+            for ep in episodes.as_arr()? {
+                let triple = ep.as_arr()?;
+                if triple.len() != 3 {
+                    return Err(Error::json(
+                        "node_fan_off episodes must be [node, start_s, end_s] triples",
+                    ));
+                }
+                let node = as_u64(&triple[0])?;
+                if node > u32::MAX as u64 {
+                    return Err(Error::json(format!("node id {node} out of range")));
+                }
+                let (start, end) = (triple[1].as_f64()?, triple[2].as_f64()?);
+                if !start.is_finite() || !end.is_finite() || start < 0.0 || end < start {
+                    return Err(Error::json(format!(
+                        "malformed node_fan_off episode [{node}, {start}, {end}]"
+                    )));
+                }
+                node_fan_off.push((node as u32, start, end));
+            }
+        }
         let plan = FaultPlan {
             seed: v.get("seed").map(as_u64).transpose()?.unwrap_or(d.seed),
             profiling_fail_pct: f64_or(v, "profiling_fail_pct", d.profiling_fail_pct)?,
@@ -163,6 +192,7 @@ impl FaultPlan {
             sensor_dropout_prob: f64_or(v, "sensor_dropout_prob", d.sensor_dropout_prob)?,
             noise_factor: f64_or(v, "noise_factor", d.noise_factor)?,
             fan_off_s,
+            node_fan_off,
         };
         for (name, p) in [
             ("profiling_fail_pct", plan.profiling_fail_pct),
@@ -202,6 +232,21 @@ impl FaultPlan {
                     self.fan_off_s
                         .iter()
                         .map(|&(a, b)| Value::Arr(vec![Value::Num(a), Value::Num(b)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "node_fan_off",
+                Value::Arr(
+                    self.node_fan_off
+                        .iter()
+                        .map(|&(node, a, b)| {
+                            Value::Arr(vec![
+                                Value::Num(node as f64),
+                                Value::Num(a),
+                                Value::Num(b),
+                            ])
+                        })
                         .collect(),
                 ),
             ),
@@ -288,6 +333,15 @@ impl FaultInjector {
     /// Is the fan scripted off at simulated second `t_s`?
     pub fn fan_off_at(&self, t_s: f64) -> bool {
         self.plan.fan_off_s.iter().any(|&(a, b)| t_s >= a && t_s < b)
+    }
+
+    /// Is fleet node `node`'s fan scripted off at registry-heartbeat
+    /// second `t_s`? Half-open like [`FaultInjector::fan_off_at`].
+    pub fn node_fan_off_at(&self, node: u32, t_s: f64) -> bool {
+        self.plan
+            .node_fan_off
+            .iter()
+            .any(|&(n, a, b)| n == node && t_s >= a && t_s < b)
     }
 }
 
@@ -377,6 +431,25 @@ mod tests {
     }
 
     #[test]
+    fn node_fan_episodes_hit_only_their_node_half_open() {
+        let plan = FaultPlan {
+            node_fan_off: vec![(2, 10.0, 20.0), (5, 15.0, 30.0)],
+            ..Default::default()
+        };
+        assert!(!plan.is_noop());
+        let inj = FaultInjector::new(plan);
+        assert!(!inj.node_fan_off_at(2, 9.9));
+        assert!(inj.node_fan_off_at(2, 10.0));
+        assert!(inj.node_fan_off_at(2, 19.9));
+        assert!(!inj.node_fan_off_at(2, 20.0));
+        // other nodes are untouched by node 2's episode
+        assert!(!inj.node_fan_off_at(3, 15.0));
+        assert!(inj.node_fan_off_at(5, 15.0));
+        // node episodes don't leak into the fleet-wide thermal guard
+        assert!(!inj.fan_off_at(15.0));
+    }
+
+    #[test]
     fn json_round_trip() {
         let plan = FaultPlan {
             seed: 11,
@@ -390,6 +463,7 @@ mod tests {
             sensor_dropout_prob: 0.05,
             noise_factor: 4.0,
             fan_off_s: vec![(0.0, 240.0)],
+            node_fan_off: vec![(7, 30.0, 120.0)],
         };
         let back = FaultPlan::from_json(&Value::parse(&plan.to_json().to_string()).unwrap())
             .unwrap();
@@ -411,6 +485,8 @@ mod tests {
             r#"{"kind": "powertrain-fault-plan-v1", "fan_off_s": [[5]]}"#,     // malformed pair
             r#"{"kind": "powertrain-fault-plan-v1", "fan_off_s": [[9, 2]]}"#,  // end < start
             r#"{"kind": "powertrain-fault-plan-v1", "panic_request_ids": [-1]}"#,
+            r#"{"kind": "powertrain-fault-plan-v1", "node_fan_off": [[1, 5]]}"#,   // not a triple
+            r#"{"kind": "powertrain-fault-plan-v1", "node_fan_off": [[1, 9, 2]]}"#, // end < start
         ] {
             assert!(
                 FaultPlan::from_json(&Value::parse(bad).unwrap()).is_err(),

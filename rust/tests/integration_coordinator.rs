@@ -65,6 +65,8 @@ fn powertrain_request_end_to_end() {
         workload: Workload::mobilenet(),
         power_budget_w: 30.0,
         scenario: Scenario::FederatedLearning,
+        affinity: None,
+        node: None,
         seed: 11,
     };
     let resp = handle_request(&rt, &reference, &test_cfg(), &metrics, &req).unwrap();
@@ -92,6 +94,8 @@ fn cross_device_request_uses_device_grid() {
         workload: Workload::mobilenet(),
         power_budget_w: 10.0,
         scenario: Scenario::ContinuousLearning,
+        affinity: None,
+        node: None,
         seed: 12,
     };
     let cfg = CoordinatorConfig { prediction_grid: None, ..test_cfg() };
@@ -112,6 +116,8 @@ fn infeasible_budget_reported_as_error() {
         workload: Workload::bert(),
         power_budget_w: 2.0, // below idle power
         scenario: Scenario::FederatedLearning,
+        affinity: None,
+        node: None,
         seed: 13,
     };
     let err = handle_request(&rt, &reference, &test_cfg(), &metrics, &req);
@@ -130,6 +136,8 @@ fn serve_processes_all_requests_and_tracks_metrics() {
             workload: if i % 2 == 0 { Workload::mobilenet() } else { Workload::lstm() },
             power_budget_w: 25.0 + 5.0 * i as f64,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 100 + i,
         })
         .collect();
@@ -160,6 +168,8 @@ fn serve_with_two_workers_completes() {
             workload: Workload::lstm(),
             power_budget_w: 28.0,
             scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
             seed: 200 + i,
         })
         .collect();

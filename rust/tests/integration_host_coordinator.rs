@@ -61,6 +61,8 @@ fn powertrain_request_end_to_end_on_host() {
         workload: Workload::mobilenet(),
         power_budget_w: 30.0,
         scenario: Scenario::FederatedLearning,
+        affinity: None,
+        node: None,
         seed: 11,
     };
     let resp = handle_request_host(&cache, &reference, &test_cfg(), &metrics, &req).unwrap();
@@ -92,6 +94,8 @@ fn cross_device_host_request_uses_device_grid() {
         workload: Workload::mobilenet(),
         power_budget_w: 10.0,
         scenario: Scenario::ContinuousLearning,
+        affinity: None,
+        node: None,
         seed: 12,
     };
     let cfg = CoordinatorConfig { prediction_grid: None, ..test_cfg() };
@@ -112,6 +116,8 @@ fn infeasible_budget_reported_as_error_on_host() {
         workload: Workload::bert(),
         power_budget_w: 2.0, // below idle power
         scenario: Scenario::FederatedLearning,
+        affinity: None,
+        node: None,
         seed: 13,
     };
     assert!(handle_request_host(&cache, &reference, &test_cfg(), &metrics, &req).is_err());
@@ -128,6 +134,8 @@ fn host_serve_mixes_strategies_and_reports_metrics() {
             workload: if i % 2 == 0 { Workload::mobilenet() } else { Workload::lstm() },
             power_budget_w: 30.0 + 5.0 * i as f64,
             scenario: if i == 3 { Scenario::FineTuning } else { Scenario::FederatedLearning },
+            affinity: None,
+            node: None,
             seed: 100 + (i % 2), // two distinct (workload, seed) pairs repeat
         })
         .collect();

@@ -56,6 +56,8 @@ fn request(id: u64, scenario: Scenario, seed: u64) -> Request {
         workload: Workload::mobilenet(),
         power_budget_w: 1e6, // any front point qualifies
         scenario,
+        affinity: None,
+        node: None,
         seed,
     }
 }
