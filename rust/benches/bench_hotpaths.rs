@@ -30,9 +30,17 @@
 //!      service overhead per request, directly comparable to bench 7's
 //!      cache-hit number (acceptance: within 10%);
 //!  10. fleet placement: a 256-request mixed-kind burst routed over a
-//!      64-node registry snapshot and hash-dispatched onto 4 coordinator
-//!      domains (`coordinator/fleet_route_4shards`) — the pure routing +
-//!      dispatch overhead the fleet front-end adds per request.
+//!      64-node indexed registry snapshot and hash-dispatched onto 4
+//!      coordinator domains (`coordinator/fleet_route_4shards`) — the
+//!      pure routing + dispatch overhead the fleet front-end adds per
+//!      request;
+//!  11. fleet placement at 10k nodes through the indexed engine: one
+//!      single O(1)-peek decision (`fleet/route_decision_10k_nodes`,
+//!      target < 1 µs), a 1024-item burst folded in place
+//!      (`fleet/route_10k_nodes`, target single-digit ms total), and a
+//!      full heartbeat's dirty-entry rebuild + dirty-gated `ArcCell`
+//!      publication (`fleet/snapshot_publish_10k`, ns/item = per-node
+//!      republication cost).
 //!
 //! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
 //! so successive PRs can track the perf trajectory.
@@ -339,20 +347,21 @@ fn main() {
     }
 
     // -- fleet routing: a mixed-kind burst across 4 coordinator domains --
-    // Pure placement cost: one 256-request burst routed against a
-    // 64-node registry snapshot (warmth + load applied between
-    // decisions, exactly what the fleet layer does between heartbeats),
-    // each placement then resolved to its owning domain via the model-key
-    // hash partition. ns/item is the per-request routing + dispatch
-    // overhead the fleet front-end adds on top of a shard's serve path.
+    // Pure placement cost on the production (indexed) path: one
+    // 256-request burst folded through the indexed snapshot (warmth +
+    // load applied between decisions, exactly what the fleet layer does
+    // between heartbeats), each placement then resolved to its owning
+    // domain via the model-key hash partition. ns/item is the
+    // per-request routing + dispatch overhead the fleet front-end adds
+    // on top of a shard's serve path.
     {
         use powertrain::coordinator::{ModelKey, Strategy};
-        use powertrain::fleet::{route_burst, FleetRegistry};
+        use powertrain::fleet::{route_burst_indexed, FleetRegistry};
         const SHARDS: usize = 4;
         const FLEET_BURST: usize = 256;
         let reference = ReferenceModels { time: demo_ckpt(7), power: demo_ckpt(8) };
         let ref_fps = reference.fingerprints();
-        let snapshot = FleetRegistry::synthesize(64, 1).snapshot();
+        let registry = FleetRegistry::synthesize(64, 1);
         let items: Vec<(Option<DeviceKind>, Workload)> = (0..FLEET_BURST)
             .map(|i| {
                 (
@@ -362,7 +371,7 @@ fn main() {
             })
             .collect();
         b.bench_items("coordinator/fleet_route_4shards", FLEET_BURST as f64, || {
-            let placements = route_burst(&snapshot, &items);
+            let placements = route_burst_indexed(registry.indexed(), &items);
             placements
                 .iter()
                 .zip(&items)
@@ -388,6 +397,44 @@ fn main() {
                     .shard_index(SHARDS)
                 })
                 .sum::<usize>()
+        });
+    }
+
+    // -- fleet placement at 10k nodes: the indexed engine's scale claim --
+    // route_decision: one single placement decision against a 10,000-node
+    // indexed snapshot (the O(1)-peek path; target < 1 µs).
+    // route_10k_nodes: a 1024-item mixed burst folded through a working
+    // copy of the index (one clone + 1024 O(log k) updates; target
+    // single-digit ms total, so ns/item stays in the microsecond band).
+    // snapshot_publish: one full heartbeat over the 10k-node registry —
+    // per-node sim advance, dirty-entry index rebuild, and the dirty-gated
+    // clone-and-store publication through the ArcCell; items = nodes, so
+    // ns/item is the per-node republication cost.
+    {
+        use powertrain::fleet::{route_indexed, route_burst_indexed, FleetRegistry};
+        const FLEET_10K: usize = 10_000;
+        const BURST_10K: usize = 1024;
+        let mut registry = FleetRegistry::synthesize(FLEET_10K, 1);
+        // a heartbeat of state so headrooms differ node-to-node
+        registry.heartbeat(30.0, None);
+        let wl = Workload::default_five()[0];
+        b.bench_items("fleet/route_decision_10k_nodes", 1.0, || {
+            route_indexed(registry.indexed(), Some(DeviceKind::OrinAgx), &wl)
+        });
+        let items: Vec<(Option<DeviceKind>, Workload)> = (0..BURST_10K)
+            .map(|i| {
+                (
+                    Some(DeviceKind::ALL[i % DeviceKind::ALL.len()]),
+                    Workload::default_five()[i % 5],
+                )
+            })
+            .collect();
+        b.bench_items("fleet/route_10k_nodes", BURST_10K as f64, || {
+            route_burst_indexed(registry.indexed(), &items)
+        });
+        b.bench_items("fleet/snapshot_publish_10k", FLEET_10K as f64, || {
+            registry.heartbeat(30.0, None);
+            registry.last_dirty()
         });
     }
 

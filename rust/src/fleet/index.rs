@@ -1,0 +1,767 @@
+//! Indexed placement engine: O(log k) routing decisions at 10,000 nodes.
+//!
+//! The reference router (`fleet::reference`) scores every node on every
+//! decision — O(nodes) per placement, a quadratic wall for bursts at
+//! fleet scale. This module keeps the same scoring contract (see
+//! [`router`](crate::fleet::router)) pre-ordered in an index so the best
+//! candidate is an O(1) peek and folding a placement back in is an
+//! O(log k) bucket move:
+//!
+//! * **Per-kind candidate queues.** Nodes are grouped by [`DeviceKind`];
+//!   each kind keeps two `BTreeSet` orderings keyed by
+//!   `(load, ¬headroom_bits, id)` — one over *all* nodes of the kind
+//!   (the health/saturation-blind "ideal" domain) and one over the
+//!   *eligible* (healthy, non-saturated) placement candidates. The key
+//!   encodes `f64::total_cmp` on headroom via the IEEE-754 total-order
+//!   bit trick, so `BTreeSet` order reproduces the reference
+//!   `better()` comparator bit-for-bit: least-loaded first, then
+//!   largest headroom, then lowest id.
+//! * **Inverted warm-locality map.** Warm-model locality outranks load,
+//!   so each `(kind, workload)` keeps its own warm sub-queues. The
+//!   workload set is small and fixed, so workloads are interned to
+//!   dense `u8` indices ([`WorkloadInterner`]) and each node's warm set
+//!   is a [`WarmSet`] — one `u64` bitset, `Copy`, no heap — which is
+//!   what makes snapshot entries memcpy-cheap and the warm probe a bit
+//!   test instead of a per-node `Vec::contains`.
+//!
+//! A routing decision peeks at most a handful of queue heads; a
+//! placement update touches `2 + 2·|warm|` sets at O(log k) each. The
+//! ordering domains are exactly the reference router's candidate
+//! filters, so [`route_indexed`] is **bit-identical** to
+//! [`reference::route`](crate::fleet::reference::route) — the
+//! differential property suite (`tests/property_fleet_router.rs`) storms
+//! randomized registries through both and asserts equal [`Placement`]
+//! sequences.
+
+use std::collections::BTreeSet;
+
+use crate::device::DeviceKind;
+use crate::fleet::registry::{NodeHealth, NodeId, RegistrySnapshot};
+use crate::fleet::router::Placement;
+use crate::workload::Workload;
+
+/// Number of device kinds (one candidate-queue group per kind).
+pub(crate) const KINDS: usize = DeviceKind::ALL.len();
+
+/// Dense slot for a kind's queue group.
+fn kind_slot(kind: DeviceKind) -> usize {
+    match kind {
+        DeviceKind::OrinAgx => 0,
+        DeviceKind::XavierAgx => 1,
+        DeviceKind::OrinNano => 2,
+    }
+}
+
+/// Interns [`Workload`]s to dense `u8` indices in first-seen order.
+///
+/// The fleet's workload set is a small fixed family (the paper's five
+/// plus variants), far below [`WarmSet::CAPACITY`]; interning it makes
+/// per-node warm sets a single `u64` and the inverted warm map a dense
+/// `Vec` lookup instead of a hash of `Workload` structs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkloadInterner {
+    workloads: Vec<Workload>,
+}
+
+impl WorkloadInterner {
+    /// Index of `workload`, allocating the next dense index on first
+    /// sight. Panics past [`WarmSet::CAPACITY`] distinct workloads —
+    /// the bitset cannot represent more.
+    pub fn intern(&mut self, workload: Workload) -> u8 {
+        if let Some(idx) = self.get(&workload) {
+            return idx;
+        }
+        assert!(
+            self.workloads.len() < WarmSet::CAPACITY,
+            "fleet warm-set index supports at most {} distinct workloads",
+            WarmSet::CAPACITY
+        );
+        self.workloads.push(workload);
+        (self.workloads.len() - 1) as u8
+    }
+
+    /// Index of `workload` if it has ever been interned. A miss means no
+    /// node anywhere can be warm for it.
+    pub fn get(&self, workload: &Workload) -> Option<u8> {
+        self.workloads.iter().position(|w| w == workload).map(|i| i as u8)
+    }
+
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workloads.is_empty()
+    }
+
+    /// The workload behind a dense index (inverse of [`intern`](Self::intern)).
+    pub fn workload(&self, idx: u8) -> Workload {
+        self.workloads[idx as usize]
+    }
+}
+
+/// Compact per-node warm set: bit `i` set ⇔ the node is warm for the
+/// workload interned at index `i`. `Copy`, no heap — cloning a snapshot
+/// entry is a memcpy, and the warm probe is one bit test.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmSet(u64);
+
+impl WarmSet {
+    /// Maximum distinct workloads one fleet can track warmth for.
+    pub const CAPACITY: usize = 64;
+
+    pub fn contains(self, idx: u8) -> bool {
+        debug_assert!((idx as usize) < Self::CAPACITY);
+        (self.0 >> idx) & 1 == 1
+    }
+
+    pub fn insert(&mut self, idx: u8) {
+        debug_assert!((idx as usize) < Self::CAPACITY);
+        self.0 |= 1 << idx;
+    }
+
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Iterate the set workload indices in ascending order.
+    pub fn iter(self) -> WarmIter {
+        WarmIter(self.0)
+    }
+}
+
+/// Iterator over a [`WarmSet`]'s set bits.
+#[derive(Debug, Clone)]
+pub struct WarmIter(u64);
+
+impl Iterator for WarmIter {
+    type Item = u8;
+
+    fn next(&mut self) -> Option<u8> {
+        if self.0 == 0 {
+            return None;
+        }
+        let idx = self.0.trailing_zeros() as u8;
+        self.0 &= self.0 - 1;
+        Some(idx)
+    }
+}
+
+/// Map headroom to a key that sorts *best-first* under `u64` order:
+/// the IEEE-754 total-order bit trick (monotone with `f64::total_cmp`),
+/// then complemented so larger headroom yields a smaller key.
+fn headroom_rank(headroom_mw: f64) -> u64 {
+    let bits = headroom_mw.to_bits();
+    let ascending = if (bits >> 63) == 1 { !bits } else { bits | (1 << 63) };
+    !ascending
+}
+
+/// Candidate ordering key. Derived `Ord` reproduces the reference
+/// router's `better()` exactly: load ascending, headroom descending
+/// (by `total_cmp`), id ascending — `id` is unique, so the order is
+/// total and ties cannot exist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct OrderKey {
+    load: u32,
+    headroom_rank: u64,
+    id: u32,
+}
+
+/// Compact, `Copy` per-node index entry. The `id`-is-index invariant
+/// holds throughout: entry `i` of the snapshot has `id == NodeId(i)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IndexedNode {
+    pub id: NodeId,
+    pub kind: DeviceKind,
+    pub health: NodeHealth,
+    pub capacity: u32,
+    pub load: u32,
+    pub warm: WarmSet,
+    pub headroom_mw: f64,
+}
+
+impl IndexedNode {
+    pub fn free_slots(&self) -> u32 {
+        self.capacity.saturating_sub(self.load)
+    }
+
+    fn eligible(&self) -> bool {
+        self.health.placeable() && self.free_slots() > 0
+    }
+
+    fn key(&self) -> OrderKey {
+        OrderKey {
+            load: self.load,
+            headroom_rank: headroom_rank(self.headroom_mw),
+            id: self.id.0,
+        }
+    }
+
+    /// Bitwise equality (NaN-safe, unlike `PartialEq` on the `f64`):
+    /// the registry's dirty-entry filter, so an entry whose derived
+    /// state did not change is never rebuilt or republished.
+    pub fn bits_eq(&self, other: &IndexedNode) -> bool {
+        self.id == other.id
+            && self.kind == other.kind
+            && self.health == other.health
+            && self.capacity == other.capacity
+            && self.load == other.load
+            && self.warm == other.warm
+            && self.headroom_mw.to_bits() == other.headroom_mw.to_bits()
+    }
+}
+
+/// One kind's candidate queues: the blind "ideal" domain, the eligible
+/// placement domain, and their per-workload warm sub-queues.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct KindIndex {
+    /// Every node of this kind, health/saturation-blind (the domain the
+    /// reference router's `require_healthy = false` ideal pick scans).
+    all: BTreeSet<OrderKey>,
+    /// Healthy, non-saturated nodes — the placement candidates.
+    eligible: BTreeSet<OrderKey>,
+    /// `warm_all[w]` ⊆ `all`: nodes warm for interned workload `w`.
+    warm_all: Vec<BTreeSet<OrderKey>>,
+    /// `warm_eligible[w]` ⊆ `eligible`: the warm placement candidates.
+    warm_eligible: Vec<BTreeSet<OrderKey>>,
+}
+
+impl KindIndex {
+    fn grow(&mut self, n_workloads: usize) {
+        if self.warm_all.len() < n_workloads {
+            self.warm_all.resize_with(n_workloads, BTreeSet::new);
+            self.warm_eligible.resize_with(n_workloads, BTreeSet::new);
+        }
+    }
+
+    fn insert(&mut self, node: &IndexedNode) {
+        let key = node.key();
+        let fresh = self.all.insert(key);
+        debug_assert!(fresh, "duplicate index key for {}", node.id);
+        let eligible = node.eligible();
+        if eligible {
+            self.eligible.insert(key);
+        }
+        for w in node.warm.iter() {
+            self.warm_all[w as usize].insert(key);
+            if eligible {
+                self.warm_eligible[w as usize].insert(key);
+            }
+        }
+    }
+
+    fn remove(&mut self, node: &IndexedNode) {
+        let key = node.key();
+        let present = self.all.remove(&key);
+        debug_assert!(present, "index key for {} vanished", node.id);
+        self.eligible.remove(&key);
+        for w in node.warm.iter() {
+            self.warm_all[w as usize].remove(&key);
+            self.warm_eligible[w as usize].remove(&key);
+        }
+    }
+
+    /// Best candidate of this kind: the warm queue's head when the
+    /// workload is interned and a warm candidate exists (warm-model
+    /// locality outranks load), else the plain queue's head.
+    fn best(&self, workload: Option<u8>, eligible_only: bool) -> Option<OrderKey> {
+        let (plain, warm) = if eligible_only {
+            (&self.eligible, &self.warm_eligible)
+        } else {
+            (&self.all, &self.warm_all)
+        };
+        if let Some(w) = workload {
+            if let Some(key) = warm.get(w as usize).and_then(|set| set.first()) {
+                return Some(*key);
+            }
+        }
+        plain.first().copied()
+    }
+}
+
+/// An immutable indexed registry snapshot: the structure placement
+/// decisions read, and the structure the registry publishes through its
+/// `ArcCell` after every heartbeat that dirtied an entry.
+///
+/// Cloning is cheap by construction — entries are `Copy` (the warm set
+/// is a bitset, not a `Vec`), so a clone is one memcpy plus the queue
+/// node copies; there is no per-node heap allocation to deep-clone.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IndexedSnapshot {
+    /// Simulated seconds of fleet uptime at snapshot time.
+    pub clock_s: f64,
+    entries: Vec<IndexedNode>,
+    kinds: [KindIndex; KINDS],
+    interner: WorkloadInterner,
+}
+
+impl IndexedSnapshot {
+    /// Bulk-build from entries (ids must already be dense and ordered).
+    pub fn build(
+        clock_s: f64,
+        entries: Vec<IndexedNode>,
+        interner: WorkloadInterner,
+    ) -> IndexedSnapshot {
+        let mut snap = IndexedSnapshot {
+            clock_s,
+            entries: Vec::with_capacity(entries.len()),
+            kinds: Default::default(),
+            interner: WorkloadInterner::default(),
+        };
+        // install the interner first so warm queues size correctly
+        snap.interner = interner;
+        let n = snap.interner.len();
+        for ki in &mut snap.kinds {
+            ki.grow(n);
+        }
+        for entry in entries {
+            snap.push_entry(entry);
+        }
+        snap
+    }
+
+    /// Derive from a legacy [`RegistrySnapshot`] (interning every warm
+    /// workload it mentions). Mainly for tests and the differential
+    /// oracle; the registry maintains its index incrementally.
+    pub fn from_registry_snapshot(snap: &RegistrySnapshot) -> IndexedSnapshot {
+        let mut interner = WorkloadInterner::default();
+        let entries: Vec<IndexedNode> = snap
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut warm = WarmSet::default();
+                for w in &n.warm {
+                    warm.insert(interner.intern(*w));
+                }
+                IndexedNode {
+                    id: n.id,
+                    kind: n.kind,
+                    health: n.health,
+                    capacity: n.capacity,
+                    load: n.load,
+                    warm,
+                    headroom_mw: n.headroom_mw,
+                }
+            })
+            .collect();
+        IndexedSnapshot::build(snap.clock_s, entries, interner)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[IndexedNode] {
+        &self.entries
+    }
+
+    pub fn entry(&self, id: NodeId) -> Option<&IndexedNode> {
+        self.entries.get(id.0 as usize)
+    }
+
+    pub fn interner(&self) -> &WorkloadInterner {
+        &self.interner
+    }
+
+    /// Is `id` warm for `workload`? One interner probe + one bit test.
+    pub fn is_warm(&self, id: NodeId, workload: &Workload) -> bool {
+        match (self.interner.get(workload), self.entry(id)) {
+            (Some(w), Some(entry)) => entry.warm.contains(w),
+            _ => false,
+        }
+    }
+
+    /// Healthy placement candidates of `kind` (queue size, O(1)).
+    pub fn eligible_of_kind(&self, kind: DeviceKind) -> usize {
+        self.kinds[kind_slot(kind)].eligible.len()
+    }
+
+    /// Append a newly registered node. The id-is-index invariant is
+    /// enforced here: the entry's id must be the next dense index.
+    pub fn push_entry(&mut self, entry: IndexedNode) {
+        debug_assert_eq!(
+            entry.id.0 as usize,
+            self.entries.len(),
+            "id-is-index invariant: node ids are dense registration indices"
+        );
+        self.kinds[kind_slot(entry.kind)].insert(&entry);
+        self.entries.push(entry);
+    }
+
+    /// Replace node `entry.id`'s entry, moving only its queue keys —
+    /// the O(log k) bucket move (2 + 2·|warm| set operations).
+    pub fn update_entry(&mut self, entry: IndexedNode) {
+        let old = self.entries[entry.id.0 as usize];
+        debug_assert_eq!(old.id, entry.id, "id-is-index invariant");
+        debug_assert_eq!(old.kind, entry.kind, "a node never changes kind");
+        let ki = &mut self.kinds[kind_slot(entry.kind)];
+        ki.remove(&old);
+        ki.insert(&entry);
+        self.entries[entry.id.0 as usize] = entry;
+    }
+
+    /// Intern `workload`, growing every kind's warm queues to fit.
+    pub fn intern(&mut self, workload: Workload) -> u8 {
+        let idx = self.interner.intern(workload);
+        let n = self.interner.len();
+        for ki in &mut self.kinds {
+            ki.grow(n);
+        }
+        idx
+    }
+
+    /// Fold one placement into the index in place: bump the node's load
+    /// and mark the workload warm there — the O(log k) equivalent of
+    /// the reference burst's working-copy scan-and-mutate.
+    pub fn apply_placement(&mut self, id: NodeId, workload: Workload) {
+        let w = self.intern(workload);
+        let mut entry = self.entries[id.0 as usize];
+        debug_assert_eq!(entry.id, id, "id-is-index invariant");
+        entry.load = entry.load.saturating_add(1);
+        entry.warm.insert(w);
+        self.update_entry(entry);
+    }
+
+    /// Override one node's health (test/differential harness API —
+    /// production health flows in through registry heartbeats).
+    pub fn set_health(&mut self, id: NodeId, health: NodeHealth) {
+        let mut entry = self.entries[id.0 as usize];
+        entry.health = health;
+        self.update_entry(entry);
+    }
+
+    /// Override one node's load (test/differential harness API).
+    pub fn set_load(&mut self, id: NodeId, load: u32) {
+        let mut entry = self.entries[id.0 as usize];
+        entry.load = load;
+        self.update_entry(entry);
+    }
+
+    /// Best eligible candidate across every kind: warm candidates first
+    /// (warm outranks load in the reference comparator, kind is not a
+    /// discriminator once the affinity filter is gone), then the global
+    /// queue-head minimum.
+    fn best_any_kind(&self, workload: Option<u8>) -> Option<OrderKey> {
+        if let Some(w) = workload {
+            let warm_best = self
+                .kinds
+                .iter()
+                .filter_map(|ki| ki.warm_eligible.get(w as usize).and_then(|set| set.first()))
+                .min()
+                .copied();
+            if warm_best.is_some() {
+                return warm_best;
+            }
+        }
+        self.kinds.iter().filter_map(|ki| ki.eligible.first()).min().copied()
+    }
+
+    /// Exhaustively verify index consistency: id-is-index, every entry
+    /// in exactly the queues its state implies, no phantom keys.
+    /// O(nodes × workloads) — test/debug harness only.
+    pub fn check_invariants(&self) {
+        let n_wl = self.interner.len();
+        let mut all_counts = [0usize; KINDS];
+        let mut eligible_counts = [0usize; KINDS];
+        let mut warm_all_counts = vec![[0usize; KINDS]; n_wl];
+        let mut warm_eligible_counts = vec![[0usize; KINDS]; n_wl];
+        for (i, entry) in self.entries.iter().enumerate() {
+            assert_eq!(entry.id.0 as usize, i, "id-is-index invariant broken at {i}");
+            let slot = kind_slot(entry.kind);
+            let ki = &self.kinds[slot];
+            let key = entry.key();
+            assert!(ki.all.contains(&key), "{} missing from its all-queue", entry.id);
+            assert_eq!(
+                ki.eligible.contains(&key),
+                entry.eligible(),
+                "{} eligibility out of sync",
+                entry.id
+            );
+            all_counts[slot] += 1;
+            if entry.eligible() {
+                eligible_counts[slot] += 1;
+            }
+            for w in 0..n_wl as u8 {
+                let warm = entry.warm.contains(w);
+                assert_eq!(
+                    ki.warm_all[w as usize].contains(&key),
+                    warm,
+                    "{} warm-all[{w}] out of sync",
+                    entry.id
+                );
+                assert_eq!(
+                    ki.warm_eligible[w as usize].contains(&key),
+                    warm && entry.eligible(),
+                    "{} warm-eligible[{w}] out of sync",
+                    entry.id
+                );
+                if warm {
+                    warm_all_counts[w as usize][slot] += 1;
+                    if entry.eligible() {
+                        warm_eligible_counts[w as usize][slot] += 1;
+                    }
+                }
+            }
+        }
+        for (slot, ki) in self.kinds.iter().enumerate() {
+            assert_eq!(ki.all.len(), all_counts[slot], "phantom keys in all-queue {slot}");
+            assert_eq!(
+                ki.eligible.len(),
+                eligible_counts[slot],
+                "phantom keys in eligible-queue {slot}"
+            );
+            assert!(ki.warm_all.len() >= n_wl, "warm queues lag the interner");
+            assert_eq!(ki.warm_all.len(), ki.warm_eligible.len());
+            for w in 0..n_wl {
+                assert_eq!(
+                    ki.warm_all[w].len(),
+                    warm_all_counts[w][slot],
+                    "phantom keys in warm-all[{w}] of kind {slot}"
+                );
+                assert_eq!(
+                    ki.warm_eligible[w].len(),
+                    warm_eligible_counts[w][slot],
+                    "phantom keys in warm-eligible[{w}] of kind {slot}"
+                );
+            }
+        }
+    }
+}
+
+/// Route one request against the index. Bit-identical to
+/// [`reference::route`](crate::fleet::reference::route) over the same
+/// state, but every probe is a queue-head peek instead of a fleet scan.
+pub fn route_indexed(
+    snap: &IndexedSnapshot,
+    affinity: Option<DeviceKind>,
+    workload: &Workload,
+) -> Option<Placement> {
+    let wl = snap.interner.get(workload);
+    if let Some(kind) = affinity {
+        let ki = &snap.kinds[kind_slot(kind)];
+        // the health/saturation-blind ideal: a chosen node differing
+        // from it means health or saturation forced a reroute
+        let ideal = ki.best(wl, false);
+        if let Some(chosen) = ki.best(wl, true) {
+            return Some(Placement {
+                node: NodeId(chosen.id),
+                kind,
+                rerouted: ideal.is_some_and(|i| i.id != chosen.id),
+                cross_kind: false,
+            });
+        }
+        // no healthy in-kind capacity: fall back across kinds rather
+        // than fail the request outright
+        return snap.best_any_kind(wl).map(|key| {
+            let node = &snap.entries[key.id as usize];
+            Placement {
+                node: node.id,
+                kind: node.kind,
+                rerouted: true,
+                cross_kind: kind != node.kind,
+            }
+        });
+    }
+    snap.best_any_kind(wl).map(|key| {
+        let node = &snap.entries[key.id as usize];
+        Placement { node: node.id, kind: node.kind, rerouted: false, cross_kind: false }
+    })
+}
+
+/// Route a burst against one snapshot, folding each placement into a
+/// working copy of the index in place — one clone up front, then
+/// O(log k) per decision, where the reference burst re-scans O(nodes)
+/// per item.
+pub fn route_burst_indexed(
+    snap: &IndexedSnapshot,
+    items: &[(Option<DeviceKind>, Workload)],
+) -> Vec<Option<Placement>> {
+    let mut working = snap.clone();
+    items
+        .iter()
+        .map(|(affinity, workload)| {
+            let placement = route_indexed(&working, *affinity, workload);
+            if let Some(p) = placement {
+                working.apply_placement(p.node, *workload);
+            }
+            placement
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::reference;
+    use crate::fleet::registry::FleetRegistry;
+
+    #[test]
+    fn warm_set_inserts_probes_and_iterates() {
+        let mut set = WarmSet::default();
+        assert!(set.is_empty());
+        set.insert(0);
+        set.insert(5);
+        set.insert(63);
+        assert!(set.contains(0) && set.contains(5) && set.contains(63));
+        assert!(!set.contains(1));
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.iter().collect::<Vec<_>>(), vec![0, 5, 63]);
+    }
+
+    #[test]
+    fn interner_assigns_dense_first_seen_indices() {
+        let mut interner = WorkloadInterner::default();
+        let a = interner.intern(Workload::resnet());
+        let b = interner.intern(Workload::bert());
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(interner.intern(Workload::resnet()), 0, "re-intern is idempotent");
+        assert_eq!(interner.get(&Workload::yolo()), None);
+        assert_eq!(interner.workload(1), Workload::bert());
+        assert_eq!(interner.len(), 2);
+    }
+
+    /// The ordering key must reproduce `f64::total_cmp` on headroom —
+    /// descending — across the whole messy float landscape.
+    #[test]
+    fn headroom_rank_matches_total_cmp_descending() {
+        let samples = [
+            f64::NEG_INFINITY,
+            -1e12,
+            -1.0,
+            -f64::MIN_POSITIVE / 2.0, // negative subnormal
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE / 2.0, // positive subnormal
+            1.0,
+            1e12,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &samples {
+            for &b in &samples {
+                let by_cmp = a.total_cmp(&b);
+                let by_rank = headroom_rank(b).cmp(&headroom_rank(a)); // descending ⇒ flipped
+                assert_eq!(by_cmp, by_rank, "rank order diverged at ({a}, {b})");
+            }
+        }
+    }
+
+    fn indexed(n: usize, seed: u64) -> IndexedSnapshot {
+        FleetRegistry::synthesize(n, seed).indexed().clone()
+    }
+
+    #[test]
+    fn indexed_route_matches_reference_on_a_fresh_registry() {
+        let reg = FleetRegistry::synthesize(32, 9);
+        let legacy = reg.snapshot();
+        let snap = reg.indexed();
+        for affinity in
+            [None, Some(DeviceKind::OrinAgx), Some(DeviceKind::XavierAgx), Some(DeviceKind::OrinNano)]
+        {
+            for wl in Workload::default_five() {
+                assert_eq!(
+                    reference::route(&legacy, affinity, &wl),
+                    route_indexed(snap, affinity, &wl),
+                    "diverged at {affinity:?} / {}",
+                    wl.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn placement_update_is_an_index_move_not_a_rebuild() {
+        let mut snap = indexed(16, 3);
+        let wl = Workload::yolo();
+        let first = route_indexed(&snap, Some(DeviceKind::OrinAgx), &wl).unwrap();
+        snap.apply_placement(first.node, wl);
+        snap.check_invariants();
+        let entry = snap.entry(first.node).unwrap();
+        assert_eq!(entry.load, 1);
+        assert!(snap.is_warm(first.node, &wl));
+        // the warm node keeps attracting its workload despite the load
+        let again = route_indexed(&snap, Some(DeviceKind::OrinAgx), &wl).unwrap();
+        assert_eq!(again.node, first.node);
+        // a different workload prefers an idle sibling
+        let other = route_indexed(&snap, Some(DeviceKind::OrinAgx), &Workload::bert()).unwrap();
+        assert_ne!(other.node, first.node);
+    }
+
+    #[test]
+    fn saturation_and_health_move_candidates_out_of_the_eligible_queues() {
+        let mut snap = indexed(9, 5);
+        let wl = Workload::lstm();
+        let first = route_indexed(&snap, Some(DeviceKind::OrinNano), &wl).unwrap();
+        let cap = snap.entry(first.node).unwrap().capacity;
+        for _ in 0..cap {
+            snap.apply_placement(first.node, wl);
+        }
+        snap.check_invariants();
+        let next = route_indexed(&snap, Some(DeviceKind::OrinNano), &wl).unwrap();
+        assert_ne!(next.node, first.node);
+        assert!(next.rerouted, "placement away from the ideal node must be flagged");
+        assert!(!next.cross_kind);
+        // knock out every nano: the fallback crosses kinds
+        for i in 0..snap.len() {
+            if snap.entries()[i].kind == DeviceKind::OrinNano {
+                snap.set_health(NodeId(i as u32), NodeHealth::Down);
+            }
+        }
+        snap.check_invariants();
+        let p = route_indexed(&snap, Some(DeviceKind::OrinNano), &wl).unwrap();
+        assert!(p.cross_kind && p.rerouted);
+        assert_ne!(p.kind, DeviceKind::OrinNano);
+        // whole fleet down ⇒ no placement at all
+        for i in 0..snap.len() {
+            snap.set_health(NodeId(i as u32), NodeHealth::Down);
+        }
+        assert_eq!(route_indexed(&snap, Some(DeviceKind::OrinAgx), &wl), None);
+        assert_eq!(route_indexed(&snap, None, &wl), None);
+    }
+
+    #[test]
+    fn burst_fold_matches_reference_burst() {
+        let reg = FleetRegistry::synthesize(16, 11);
+        let items: Vec<(Option<DeviceKind>, Workload)> = (0..24)
+            .map(|i| {
+                (
+                    Some(DeviceKind::ALL[i % DeviceKind::ALL.len()]),
+                    Workload::default_five()[i % 5],
+                )
+            })
+            .collect();
+        let oracle = reference::route_burst(&reg.snapshot(), &items);
+        let fast = route_burst_indexed(reg.indexed(), &items);
+        assert_eq!(oracle, fast);
+        assert!(fast.iter().all(Option::is_some));
+    }
+
+    #[test]
+    fn from_registry_snapshot_round_trips_membership() {
+        let mut reg = FleetRegistry::synthesize(8, 2);
+        reg.note_placement(NodeId(1), Workload::bert());
+        reg.note_placement(NodeId(4), Workload::resnet());
+        let derived = IndexedSnapshot::from_registry_snapshot(&reg.snapshot());
+        derived.check_invariants();
+        assert_eq!(derived.len(), 8);
+        assert!(derived.is_warm(NodeId(1), &Workload::bert()));
+        assert!(derived.is_warm(NodeId(4), &Workload::resnet()));
+        assert!(!derived.is_warm(NodeId(1), &Workload::resnet()));
+        // and it routes exactly like the registry's own incremental index
+        for wl in Workload::default_five() {
+            assert_eq!(
+                route_indexed(&derived, None, &wl),
+                route_indexed(reg.indexed(), None, &wl)
+            );
+        }
+    }
+}

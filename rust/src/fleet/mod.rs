@@ -2,19 +2,25 @@
 //! turns the single implicit device pool into a routed, sharded fleet of
 //! simulated Jetson nodes (ROADMAP item 1).
 //!
-//! Three concerns, one module each:
+//! Concerns, one module each:
 //!
 //! * [`registry`] — the node registry: thousands of simulated nodes,
 //!   each carrying its [`DeviceKind`](crate::device::DeviceKind),
 //!   capacity, health, and per-node
 //!   [`ThermalModel`](crate::sim::thermal::ThermalModel) /
 //!   [`PowerSensor`](crate::sim::PowerSensor) state, with deterministic
-//!   registration/heartbeats and a pluggable [`FleetObserver`] proxy for
-//!   external observability planes;
-//! * [`router`] — placement: a **pure** scoring function over an
-//!   immutable [`RegistrySnapshot`] (kind match > warm-model locality >
-//!   least-loaded > thermal headroom, node id as the final tie-break),
-//!   so the same seed and snapshot always produce the same placement;
+//!   registration/heartbeats, a pluggable [`FleetObserver`] proxy for
+//!   external observability planes, and an incrementally maintained
+//!   [`IndexedSnapshot`] published lock-free through
+//!   [`ArcCell`](crate::util::arc_cell::ArcCell);
+//! * [`router`] — the placement scoring contract (kind match >
+//!   warm-model locality > least-loaded > thermal headroom, node id as
+//!   the final tie-break) and the shared [`Placement`] type;
+//! * [`index`] — the production placement engine: per-kind candidate
+//!   queues + inverted warm-locality bitsets, O(1) peek / O(log k)
+//!   update, bit-identical to the reference scan;
+//! * [`reference`] — the original linear O(nodes) router, retained as
+//!   the executable oracle for the differential property suite;
 //! * [`shard`] — N independent [`Coordinator`](crate::coordinator::Coordinator)
 //!   domains, [`ModelKey`](crate::coordinator::ModelKey)s
 //!   hash-partitioned across them so singleflight and drift state never
@@ -22,13 +28,19 @@
 //!   fleet-wide** and published into the owning shard's versioned Ready
 //!   slots.
 
+pub mod index;
+pub mod reference;
 pub mod registry;
 pub mod router;
 pub mod shard;
 
+pub use index::{
+    route_burst_indexed, route_indexed, IndexedNode, IndexedSnapshot, WarmSet, WorkloadInterner,
+};
+pub use reference::{route, route_burst};
 pub use registry::{
     FleetObserver, FleetRegistry, NodeHealth, NodeId, NodeView, NoopObserver, RecordingObserver,
     RegistrySnapshot,
 };
-pub use router::{route, route_burst, Placement};
+pub use router::Placement;
 pub use shard::{Fleet, FleetConfig, FleetOutcome};

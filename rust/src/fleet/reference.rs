@@ -1,0 +1,232 @@
+//! The linear reference router: the placement oracle.
+//!
+//! This is the original O(nodes)-per-decision scan, retained verbatim as
+//! the executable specification of the scoring contract documented in
+//! [`router`](crate::fleet::router). The production path is the indexed
+//! engine ([`fleet::index`](crate::fleet::index)); the differential
+//! property suite (`tests/property_fleet_router.rs`) storms randomized
+//! registries through both and asserts bit-identical [`Placement`]
+//! sequences, so any drift between implementation and specification
+//! fails loudly.
+//!
+//! [`route`] takes only immutable inputs and allocates nothing on the
+//! happy path, so the same snapshot + request always yields the same
+//! [`Placement`] — the property the fleet determinism tests pin.
+
+use crate::device::DeviceKind;
+use crate::fleet::registry::{NodeView, RegistrySnapshot};
+use crate::fleet::router::Placement;
+use crate::workload::Workload;
+
+/// `true` when `a` scores strictly better than `b` for `workload`.
+fn better(a: &NodeView, b: &NodeView, workload: &Workload) -> bool {
+    let warm = (a.is_warm(workload), b.is_warm(workload));
+    if warm.0 != warm.1 {
+        return warm.0;
+    }
+    if a.load != b.load {
+        return a.load < b.load;
+    }
+    match a.headroom_mw.total_cmp(&b.headroom_mw) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => a.id < b.id,
+    }
+}
+
+/// Best node among `nodes` for `workload`, restricted to `kind` (when
+/// given) and to healthy, non-saturated nodes (when `require_healthy`).
+fn best<'a>(
+    nodes: &'a [NodeView],
+    kind: Option<DeviceKind>,
+    workload: &Workload,
+    require_healthy: bool,
+) -> Option<&'a NodeView> {
+    nodes
+        .iter()
+        .filter(|n| kind.map_or(true, |k| n.kind == k))
+        .filter(|n| !require_healthy || (n.health.placeable() && n.free_slots() > 0))
+        .fold(None, |acc: Option<&NodeView>, n| match acc {
+            Some(cur) if !better(n, cur, workload) => Some(cur),
+            _ => Some(n),
+        })
+}
+
+/// Route one request by scanning every node. Pure: depends only on the
+/// snapshot, the affinity and the workload. Returns `None` when no
+/// healthy capacity exists anywhere in the fleet.
+pub fn route(
+    snapshot: &RegistrySnapshot,
+    affinity: Option<DeviceKind>,
+    workload: &Workload,
+) -> Option<Placement> {
+    // What would win if every node were healthy and empty-handed? A
+    // chosen node differing from this means the fleet degraded the
+    // placement (health or saturation forced a reroute).
+    let ideal = affinity.and_then(|k| best(&snapshot.nodes, Some(k), workload, false));
+
+    if let Some(node) = best(&snapshot.nodes, affinity, workload, true) {
+        return Some(Placement {
+            node: node.id,
+            kind: node.kind,
+            rerouted: ideal.is_some_and(|i| i.id != node.id),
+            cross_kind: false,
+        });
+    }
+    // No healthy in-kind capacity: fall back across kinds rather than
+    // fail the request outright.
+    best(&snapshot.nodes, None, workload, true).map(|node| Placement {
+        node: node.id,
+        kind: node.kind,
+        rerouted: true,
+        cross_kind: affinity.is_some_and(|k| k != node.kind),
+    })
+}
+
+/// Route a burst of `(affinity, workload)` items against one snapshot,
+/// applying each placement (load + warmth) to a working copy before the
+/// next decision. The working-copy update indexes `nodes[p.node.0]`
+/// directly — node ids are dense registration indices (the id-is-index
+/// invariant, debug-asserted at registration and here).
+pub fn route_burst(
+    snapshot: &RegistrySnapshot,
+    items: &[(Option<DeviceKind>, Workload)],
+) -> Vec<Option<Placement>> {
+    let mut working = snapshot.clone();
+    items
+        .iter()
+        .map(|(affinity, workload)| {
+            let placement = route(&working, *affinity, workload);
+            if let Some(p) = placement {
+                let node = &mut working.nodes[p.node.0 as usize];
+                debug_assert_eq!(node.id, p.node, "id-is-index invariant");
+                node.load += 1;
+                if !node.warm.contains(workload) {
+                    node.warm.push(*workload);
+                }
+            }
+            placement
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::{FleetRegistry, NodeHealth, NodeId};
+
+    fn snapshot(n: usize, seed: u64) -> RegistrySnapshot {
+        FleetRegistry::synthesize(n, seed).snapshot()
+    }
+
+    #[test]
+    fn routing_is_pure_and_deterministic() {
+        let snap = snapshot(32, 9);
+        let wl = Workload::resnet();
+        let a = route(&snap, Some(DeviceKind::XavierAgx), &wl);
+        let b = route(&snap, Some(DeviceKind::XavierAgx), &wl);
+        assert_eq!(a, b);
+        let p = a.expect("healthy fleet must place");
+        assert_eq!(p.kind, DeviceKind::XavierAgx);
+        assert!(!p.rerouted);
+        assert!(!p.cross_kind);
+    }
+
+    /// A hand-built registry with `per_kind` nodes of every kind, so
+    /// tests don't depend on the seeded tail mix.
+    fn uniform_registry(per_kind: usize) -> FleetRegistry {
+        let mut reg = FleetRegistry::synthesize(0, 0);
+        for _ in 0..per_kind {
+            for kind in DeviceKind::ALL {
+                reg.register(kind);
+            }
+        }
+        reg
+    }
+
+    #[test]
+    fn warm_locality_beats_less_loaded_cold_node() {
+        let mut reg = uniform_registry(3);
+        let wl = Workload::yolo();
+        let first = route(&reg.snapshot(), Some(DeviceKind::OrinAgx), &wl).unwrap();
+        // warm the chosen node and give it one unit of load
+        reg.note_placement(first.node, wl);
+        let again = route(&reg.snapshot(), Some(DeviceKind::OrinAgx), &wl).unwrap();
+        assert_eq!(again.node, first.node, "warm node should keep attracting its workload");
+        // a different workload prefers an idle sibling over the loaded warm node
+        let other = route(&reg.snapshot(), Some(DeviceKind::OrinAgx), &Workload::bert()).unwrap();
+        assert_ne!(other.node, first.node);
+    }
+
+    #[test]
+    fn saturated_or_unhealthy_nodes_are_skipped_and_flagged_rerouted() {
+        let mut reg = uniform_registry(2);
+        let wl = Workload::lstm();
+        let first = route(&reg.snapshot(), Some(DeviceKind::OrinNano), &wl).unwrap();
+        // saturate the first-choice node
+        let cap = reg
+            .snapshot()
+            .nodes
+            .iter()
+            .find(|n| n.id == first.node)
+            .unwrap()
+            .capacity;
+        for _ in 0..cap {
+            reg.note_placement(first.node, wl);
+        }
+        let next = route(&reg.snapshot(), Some(DeviceKind::OrinNano), &wl).unwrap();
+        assert_ne!(next.node, first.node);
+        assert!(next.rerouted, "placement away from the ideal node must be flagged");
+        assert!(!next.cross_kind);
+    }
+
+    #[test]
+    fn cross_kind_fallback_only_when_no_healthy_in_kind_capacity() {
+        let reg = FleetRegistry::synthesize(3, 6); // exactly one node per kind
+        let wl = Workload::mobilenet();
+        let mut snap = reg.snapshot();
+        for node in &mut snap.nodes {
+            if node.kind == DeviceKind::OrinNano {
+                node.health = NodeHealth::Down;
+            }
+        }
+        let p = route(&snap, Some(DeviceKind::OrinNano), &wl).unwrap();
+        assert!(p.cross_kind);
+        assert!(p.rerouted);
+        assert_ne!(p.kind, DeviceKind::OrinNano);
+        // whole fleet down ⇒ no placement at all
+        for node in &mut snap.nodes {
+            node.health = NodeHealth::Down;
+        }
+        assert_eq!(route(&snap, Some(DeviceKind::OrinAgx), &wl), None);
+        // and the registry untouched by any of this still places in-kind
+        let q = route(&reg.snapshot(), Some(DeviceKind::OrinNano), &wl).unwrap();
+        assert!(!q.cross_kind);
+    }
+
+    #[test]
+    fn route_burst_spreads_load_and_is_reproducible() {
+        let snap = snapshot(16, 11);
+        let items: Vec<(Option<DeviceKind>, Workload)> = (0..12)
+            .map(|i| {
+                (
+                    Some(DeviceKind::ALL[i % DeviceKind::ALL.len()]),
+                    Workload::default_five()[i % 5],
+                )
+            })
+            .collect();
+        let a = route_burst(&snap, &items);
+        let b = route_burst(&snap, &items);
+        assert_eq!(a, b, "same snapshot + items ⇒ identical burst placements");
+        assert!(a.iter().all(Option::is_some));
+        // burst accounting must spread same-kind requests across nodes
+        // once the leader picks up load
+        let orin: Vec<NodeId> = a
+            .iter()
+            .flatten()
+            .filter(|p| p.kind == DeviceKind::OrinAgx)
+            .map(|p| p.node)
+            .collect();
+        assert!(orin.len() >= 4);
+    }
+}

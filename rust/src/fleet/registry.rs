@@ -14,13 +14,32 @@
 //! plan)` — two registries built with the same inputs produce
 //! bit-identical [`RegistrySnapshot`]s, which is what makes fleet
 //! routing reproducible end-to-end.
+//!
+//! # Incremental snapshot publication
+//!
+//! Alongside its mutable [`Node`]s the registry maintains a live
+//! [`IndexedSnapshot`] *incrementally*: registration appends one entry,
+//! a placement is one O(log k) index move, and a heartbeat rebuilds only
+//! the entries whose derived state actually changed (a bitwise
+//! [`IndexedNode::bits_eq`] filter — NaN-safe, so a stuck sensor can't
+//! force perpetual republication). The index is the structure routing
+//! decisions read; a heartbeat that dirtied at least one entry also
+//! publishes a clone through an
+//! [`ArcCell`](crate::util::arc_cell::ArcCell), so external monitors
+//! read fleet state lock-free at heartbeat granularity without ever
+//! touching the registry mutex. The legacy O(nodes) deep-clone
+//! [`snapshot()`](FleetRegistry::snapshot) projection remains for the
+//! reference oracle and tests.
 
+use std::collections::VecDeque;
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::device::DeviceKind;
+use crate::fleet::index::{IndexedNode, IndexedSnapshot, WarmSet};
 use crate::sim::thermal::ThermalModel;
 use crate::sim::{FaultInjector, PowerSensor};
+use crate::util::arc_cell::ArcCell;
 use crate::util::rng::Rng;
 use crate::util::sync::lock_unpoisoned;
 use crate::workload::Workload;
@@ -118,6 +137,21 @@ impl Node {
             headroom_mw: self.headroom_mw(),
         }
     }
+
+    /// The compact index projection; `warm` bits carry over from the
+    /// node's existing entry (warmth only changes via placements, which
+    /// maintain the index themselves).
+    fn indexed_entry(&self, warm: WarmSet) -> IndexedNode {
+        IndexedNode {
+            id: self.id,
+            kind: self.kind,
+            health: self.health,
+            capacity: self.capacity,
+            load: self.load,
+            warm,
+            headroom_mw: self.headroom_mw(),
+        }
+    }
 }
 
 /// Immutable per-node projection the router scores. `warm` keeps
@@ -143,7 +177,10 @@ impl NodeView {
     }
 }
 
-/// Immutable registry snapshot: what the router routes against.
+/// Immutable registry snapshot: what the reference router routes
+/// against. Deep-clones every node's warm vector — O(nodes) to build;
+/// the production path reads the incrementally maintained
+/// [`IndexedSnapshot`] instead.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegistrySnapshot {
     /// Simulated seconds of fleet uptime at snapshot time.
@@ -178,19 +215,58 @@ pub struct NoopObserver;
 
 impl FleetObserver for NoopObserver {}
 
-/// A test/demo observer that records every event as a rendered line.
-#[derive(Debug, Default)]
+/// Retained events in a [`RecordingObserver`] unless overridden with
+/// [`RecordingObserver::with_capacity`].
+const RECORDING_DEFAULT_CAP: usize = 1024;
+
+/// A test/demo observer that records events as rendered lines in a
+/// **capped ring**: a 10k-node registration storm keeps the newest
+/// `capacity` lines and counts the rest as dropped instead of growing an
+/// unbounded `Vec` before the first heartbeat.
+#[derive(Debug)]
 pub struct RecordingObserver {
-    events: Mutex<Vec<String>>,
+    log: Mutex<RecordingLog>,
+    capacity: usize,
+}
+
+#[derive(Debug)]
+struct RecordingLog {
+    events: VecDeque<String>,
+    dropped: u64,
+}
+
+impl Default for RecordingObserver {
+    fn default() -> Self {
+        RecordingObserver::with_capacity(RECORDING_DEFAULT_CAP)
+    }
 }
 
 impl RecordingObserver {
+    /// An observer retaining at most `capacity` newest events (min 1).
+    pub fn with_capacity(capacity: usize) -> RecordingObserver {
+        RecordingObserver {
+            log: Mutex::new(RecordingLog { events: VecDeque::new(), dropped: 0 }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The retained (newest) events, oldest first.
     pub fn events(&self) -> Vec<String> {
-        lock_unpoisoned(&self.events).clone()
+        lock_unpoisoned(&self.log).events.iter().cloned().collect()
+    }
+
+    /// Events evicted from the ring since construction.
+    pub fn dropped(&self) -> u64 {
+        lock_unpoisoned(&self.log).dropped
     }
 
     fn push(&self, line: String) {
-        lock_unpoisoned(&self.events).push(line);
+        let mut log = lock_unpoisoned(&self.log);
+        if log.events.len() == self.capacity {
+            log.events.pop_front();
+            log.dropped += 1;
+        }
+        log.events.push_back(line);
     }
 }
 
@@ -211,12 +287,19 @@ impl FleetObserver for RecordingObserver {
 
 /// The registry proper. Not internally synchronized — the fleet layer
 /// owns it behind one mutex; everything placement-facing goes through
-/// immutable snapshots.
+/// immutable snapshots (the live [`IndexedSnapshot`] under that mutex,
+/// or the lock-free published copy for external readers).
 #[derive(Debug)]
 pub struct FleetRegistry {
     nodes: Vec<Node>,
     clock_s: f64,
     observer: Arc<dyn FleetObserver>,
+    /// The incrementally maintained index routing decisions read.
+    index: IndexedSnapshot,
+    /// Lock-free publication handle (heartbeat-granular copies).
+    published: Arc<ArcCell<IndexedSnapshot>>,
+    /// Entries the last heartbeat found changed (and hence republished).
+    last_dirty: usize,
 }
 
 /// Registry synthesis salt (kept apart from every other consumer of the
@@ -228,13 +311,17 @@ impl FleetRegistry {
     /// cover every [`DeviceKind`] (a fleet of any useful size can always
     /// satisfy any affinity); the rest follow a seeded 50/30/20
     /// Orin/Xavier/Nano mix. Same `(n_nodes, seed)` ⇒ bit-identical
-    /// registry.
+    /// registry. Publishes the built index once at the end (per-node
+    /// publication during a registration storm would be quadratic).
     pub fn synthesize(n_nodes: usize, seed: u64) -> FleetRegistry {
         let mut rng = Rng::new(seed ^ REGISTRY_SALT);
         let mut registry = FleetRegistry {
             nodes: Vec::with_capacity(n_nodes),
             clock_s: 0.0,
             observer: Arc::new(NoopObserver),
+            index: IndexedSnapshot::default(),
+            published: Arc::new(ArcCell::default()),
+            last_dirty: 0,
         };
         for i in 0..n_nodes {
             let kind = if i < DeviceKind::ALL.len() {
@@ -248,6 +335,7 @@ impl FleetRegistry {
             };
             registry.register(kind);
         }
+        registry.publish();
         registry
     }
 
@@ -262,11 +350,20 @@ impl FleetRegistry {
     }
 
     /// Register one node of `kind`; ids are assigned densely in
-    /// registration order.
+    /// registration order — the id-is-index invariant every indexed
+    /// lookup relies on. Appends the node's index entry; does **not**
+    /// publish (call [`publish`](Self::publish) after a manual
+    /// registration batch, as `synthesize` does).
     pub fn register(&mut self, kind: DeviceKind) -> NodeId {
         let id = NodeId(self.nodes.len() as u32);
+        debug_assert_eq!(
+            id.0 as usize,
+            self.index.len(),
+            "id-is-index invariant: node ids are dense registration indices"
+        );
         let node = Node::new(id, kind);
         self.observer.on_register(&node.view());
+        self.index.push_entry(node.indexed_entry(WarmSet::default()));
         self.nodes.push(node);
         id
     }
@@ -287,8 +384,14 @@ impl FleetRegistry {
     /// drain one slot of load per node, advance every node's sensor +
     /// die state under its current utilization, apply any scripted
     /// per-node fan-off episode from `faults`, and re-derive health.
+    ///
+    /// Index maintenance is incremental: only entries whose derived
+    /// state actually changed (bitwise compare) are rebuilt, and a clone
+    /// of the index is published to the lock-free cell only when at
+    /// least one entry was dirty.
     pub fn heartbeat(&mut self, dt_s: f64, faults: Option<&FaultInjector>) {
         self.clock_s += dt_s.max(0.0);
+        let mut dirty = 0usize;
         for node in &mut self.nodes {
             node.load = node.load.saturating_sub(1);
             let spec = node.kind.spec();
@@ -312,34 +415,75 @@ impl FleetRegistry {
                 self.observer.on_health_change(node.id, node.health, health);
                 node.health = health;
             }
+            let old = self.index.entries()[node.id.0 as usize];
+            let entry = node.indexed_entry(old.warm);
+            if !entry.bits_eq(&old) {
+                self.index.update_entry(entry);
+                dirty += 1;
+            }
+        }
+        self.index.clock_s = self.clock_s;
+        self.last_dirty = dirty;
+        if dirty > 0 {
+            self.publish();
         }
         self.observer.on_heartbeat(self.clock_s);
     }
 
     /// Account a placement decided by the router: bump the node's load
-    /// and mark the workload warm there.
+    /// and mark the workload warm there — an O(log k) index move, no
+    /// publication (the next heartbeat's copy carries it to external
+    /// readers).
     pub fn note_placement(&mut self, id: NodeId, workload: Workload) {
         if let Some(node) = self.nodes.get_mut(id.0 as usize) {
+            debug_assert_eq!(node.id, id, "id-is-index invariant");
             node.load = node.load.saturating_add(1);
             if !node.warm.contains(&workload) {
                 node.warm.push(workload);
             }
+            self.index.apply_placement(id, workload);
             self.observer.on_placement(id, &workload);
         }
     }
 
-    /// Immutable projection for the router.
+    /// Immutable projection for the reference router (O(nodes) deep
+    /// clone — tests and oracle only; production routes the index).
     pub fn snapshot(&self) -> RegistrySnapshot {
         RegistrySnapshot {
             clock_s: self.clock_s,
             nodes: self.nodes.iter().map(Node::view).collect(),
         }
     }
+
+    /// The live indexed snapshot routing decisions read (callers hold
+    /// the fleet's registry lock, so this is always current).
+    pub fn indexed(&self) -> &IndexedSnapshot {
+        &self.index
+    }
+
+    /// The lock-free publication handle: external monitors `load()` the
+    /// newest heartbeat-granular copy without touching the registry
+    /// mutex. Clone the `Arc` out and read from any thread.
+    pub fn publication(&self) -> Arc<ArcCell<IndexedSnapshot>> {
+        Arc::clone(&self.published)
+    }
+
+    /// Publish a clone of the live index to the lock-free cell now.
+    pub fn publish(&mut self) {
+        self.published.store(Arc::new(self.index.clone()));
+    }
+
+    /// Entries the last heartbeat found changed (bitwise compare); the
+    /// heartbeat republished iff this is non-zero.
+    pub fn last_dirty(&self) -> usize {
+        self.last_dirty
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::index::route_indexed;
     use crate::sim::FaultPlan;
 
     #[test]
@@ -413,5 +557,76 @@ mod tests {
             "{events:?}"
         );
         assert!(events.iter().any(|e| e.starts_with("heartbeat")), "{events:?}");
+        assert_eq!(obs.dropped(), 0, "a handful of events must not overflow the ring");
+    }
+
+    #[test]
+    fn recording_observer_ring_caps_and_counts_drops() {
+        let obs = RecordingObserver::with_capacity(3);
+        for i in 0..8 {
+            obs.push(format!("event {i}"));
+        }
+        let events = obs.events();
+        assert_eq!(events, vec!["event 5", "event 6", "event 7"], "newest retained, oldest first");
+        assert_eq!(obs.dropped(), 5);
+        // a registration storm through the trait stays bounded too
+        let obs = Arc::new(RecordingObserver::with_capacity(16));
+        let reg =
+            FleetRegistry::synthesize(200, 4).with_observer(Arc::clone(&obs) as Arc<dyn FleetObserver>);
+        assert_eq!(reg.len(), 200);
+        assert_eq!(obs.events().len(), 16);
+        assert_eq!(obs.dropped(), 200 - 16);
+    }
+
+    #[test]
+    fn incremental_index_tracks_every_mutation() {
+        let mut reg = FleetRegistry::synthesize(24, 5);
+        reg.indexed().check_invariants();
+        let wl = Workload::yolo();
+        reg.note_placement(NodeId(3), wl);
+        reg.note_placement(NodeId(3), wl);
+        reg.heartbeat(30.0, None);
+        reg.note_placement(NodeId(7), Workload::bert());
+        reg.indexed().check_invariants();
+        // the incrementally maintained index and a from-scratch rebuild
+        // of the legacy snapshot agree on every routing decision
+        let rebuilt = IndexedSnapshot::from_registry_snapshot(&reg.snapshot());
+        rebuilt.check_invariants();
+        for affinity in [None, Some(DeviceKind::OrinAgx), Some(DeviceKind::OrinNano)] {
+            for wl in Workload::default_five() {
+                assert_eq!(
+                    route_indexed(reg.indexed(), affinity, &wl),
+                    route_indexed(&rebuilt, affinity, &wl),
+                    "incremental index diverged from rebuild at {affinity:?}/{}",
+                    wl.name()
+                );
+            }
+        }
+        // warmth agrees node-by-node
+        for view in &reg.snapshot().nodes {
+            for wl in Workload::default_five() {
+                assert_eq!(reg.indexed().is_warm(view.id, &wl), view.is_warm(&wl));
+            }
+        }
+    }
+
+    #[test]
+    fn publication_is_heartbeat_granular_and_dirty_gated() {
+        let mut reg = FleetRegistry::synthesize(8, 6);
+        let cell = reg.publication();
+        // synthesize published the initial index
+        assert_eq!(cell.load().len(), 8);
+        // a placement updates the live index immediately but is not
+        // published until the next heartbeat...
+        reg.note_placement(NodeId(2), Workload::lstm());
+        assert_eq!(reg.indexed().entry(NodeId(2)).unwrap().load, 1);
+        assert_eq!(cell.load().entry(NodeId(2)).unwrap().load, 0, "publication lags to heartbeat");
+        // ...which dirties entries (sensor/thermal advance) and republishes
+        reg.heartbeat(30.0, None);
+        assert!(reg.last_dirty() > 0);
+        let published = cell.load();
+        assert_eq!(published.clock_s, reg.clock_s());
+        assert!(published.is_warm(NodeId(2), &Workload::lstm()));
+        published.check_invariants();
     }
 }

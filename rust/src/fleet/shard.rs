@@ -28,8 +28,10 @@ use crate::coordinator::{
     Response, Strategy, Submitter,
 };
 use crate::error::{Error, Result};
+use crate::fleet::index::{route_indexed, IndexedSnapshot};
 use crate::fleet::registry::FleetRegistry;
-use crate::fleet::router::{route, Placement};
+use crate::fleet::router::Placement;
+use crate::util::arc_cell::ArcCell;
 use crate::util::sync::lock_unpoisoned;
 
 /// Fleet configuration: how many coordinator domains, how many nodes,
@@ -92,6 +94,9 @@ pub struct Fleet {
     reference: ReferenceModels,
     ref_fps: (u64, u64),
     registry: Mutex<FleetRegistry>,
+    /// The registry's lock-free publication handle: heartbeat-granular
+    /// indexed snapshots readable without the registry mutex.
+    published: Arc<ArcCell<IndexedSnapshot>>,
     shards: Vec<ShardHandle>,
     metrics: Arc<Metrics>,
     /// Model keys whose pair has already been transferred fleet-wide.
@@ -113,6 +118,7 @@ impl Fleet {
             return Err(Error::Usage("fleet needs at least one node".into()));
         }
         let registry = FleetRegistry::synthesize(cfg.nodes, cfg.seed);
+        let published = registry.publication();
         let mut shards = Vec::with_capacity(cfg.shards);
         for s in 0..cfg.shards {
             let mut shard_cfg = cfg.coordinator.clone();
@@ -125,6 +131,7 @@ impl Fleet {
             reference: reference.clone(),
             cfg,
             registry: Mutex::new(registry),
+            published,
             shards,
             metrics: Arc::new(Metrics::new()),
             transferred: Mutex::new(HashSet::new()),
@@ -147,6 +154,14 @@ impl Fleet {
         lock_unpoisoned(&self.registry).snapshot()
     }
 
+    /// The newest *published* indexed snapshot, read lock-free from the
+    /// registry's `ArcCell` — external monitors call this from any
+    /// thread without contending with placement. Heartbeat-granular:
+    /// placements since the last heartbeat are not yet visible here.
+    pub fn indexed_snapshot(&self) -> Arc<IndexedSnapshot> {
+        self.published.load()
+    }
+
     /// Route and dispatch one request. The request's `seed` is pinned to
     /// the fleet's canonical seed (model identity is per (kind,
     /// workload, strategy) fleet-wide, not per caller), its `device` is
@@ -162,8 +177,7 @@ impl Fleet {
         let placement = {
             let mut registry = lock_unpoisoned(&self.registry);
             registry.heartbeat(self.cfg.heartbeat_slice_s, self.cfg.coordinator.faults.as_deref());
-            let snapshot = registry.snapshot();
-            let placement = match route(&snapshot, affinity, &req.workload) {
+            let placement = match route_indexed(registry.indexed(), affinity, &req.workload) {
                 Some(p) => p,
                 None => {
                     self.metrics
@@ -322,6 +336,14 @@ mod tests {
             placements.push(fleet.submit(req(i, kind, wl)).unwrap());
         }
         let snapshot = fleet.registry_snapshot();
+        // the lock-free published index tracks the same fleet at
+        // heartbeat granularity and is internally consistent
+        let indexed = fleet.indexed_snapshot();
+        indexed.check_invariants();
+        assert_eq!(indexed.len(), snapshot.nodes.len());
+        // publication is dirty-gated, so the published clock may lag the
+        // live one by quiescent heartbeats but never lead it
+        assert!(indexed.clock_s > 0.0 && indexed.clock_s <= snapshot.clock_s);
         let outcome = fleet.finish().unwrap();
         assert_eq!(outcome.responses.len(), 9);
         // every response served on a node of its requested kind

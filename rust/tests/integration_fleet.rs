@@ -244,6 +244,12 @@ fn node_fan_off_reroutes_traffic_and_keeps_the_transfer_single() {
     let n0 = snapshot.nodes.iter().find(|n| n.id == NodeId(0)).unwrap();
     assert_eq!(n0.kind, DeviceKind::OrinAgx);
     assert_ne!(n0.health, NodeHealth::Healthy, "fan-off must show in the registry");
+    // the lock-free published index carries the same health flip (health
+    // only changes inside heartbeats, which are exactly what publishes)
+    let indexed = fleet.indexed_snapshot();
+    indexed.check_invariants();
+    let e0 = indexed.entry(NodeId(0)).expect("node 0 is indexed");
+    assert_eq!(e0.health, n0.health, "published index must agree with the registry");
 
     let outcome = fleet.finish().unwrap();
     assert_eq!(outcome.responses.len(), 4);

@@ -1,0 +1,184 @@
+//! Differential property suite: the indexed placement engine vs the
+//! linear reference oracle.
+//!
+//! The indexed router (`fleet::index`) must be **bit-identical** to the
+//! retained linear scan (`fleet::reference`) — same snapshot, same
+//! request ⇒ same `Placement`, including the `rerouted`/`cross_kind`
+//! provenance flags. These tests storm randomized registries (mixed
+//! kinds, organic health flips from scripted fan-off episodes, forced
+//! health/saturation states, warm sets, placement churn) through both
+//! implementations, asserting equal placement sequences and re-checking
+//! the index's structural invariants after every mutation.
+
+use powertrain::device::DeviceKind;
+use powertrain::fleet::index::{route_burst_indexed, route_indexed, IndexedSnapshot};
+use powertrain::fleet::reference;
+use powertrain::fleet::registry::{FleetRegistry, NodeHealth, NodeId, RegistrySnapshot};
+use powertrain::sim::{FaultInjector, FaultPlan};
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+const AFFINITIES: [Option<DeviceKind>; 4] = [
+    None,
+    Some(DeviceKind::OrinAgx),
+    Some(DeviceKind::XavierAgx),
+    Some(DeviceKind::OrinNano),
+];
+
+/// Every affinity × workload probe must agree between the two routers.
+fn assert_routes_agree(legacy: &RegistrySnapshot, indexed: &IndexedSnapshot, ctx: &str) {
+    for affinity in AFFINITIES {
+        for wl in Workload::default_five() {
+            let oracle = reference::route(legacy, affinity, &wl);
+            let fast = route_indexed(indexed, affinity, &wl);
+            assert_eq!(
+                oracle,
+                fast,
+                "routers diverged ({ctx}) at affinity {affinity:?}, workload {}",
+                wl.name()
+            );
+        }
+    }
+}
+
+fn random_items(rng: &mut Rng, n: usize) -> Vec<(Option<DeviceKind>, Workload)> {
+    (0..n)
+        .map(|_| {
+            (
+                AFFINITIES[rng.below(AFFINITIES.len())],
+                Workload::default_five()[rng.below(5)],
+            )
+        })
+        .collect()
+}
+
+/// Storm live registries: random sizes and seeds, scripted fan-off
+/// episodes flipping health organically, placement churn from the
+/// routed decisions themselves. After every mutation the incremental
+/// index must stay structurally sound and route exactly like the
+/// oracle; periodic bursts must match end-to-end.
+#[test]
+fn storming_registries_keeps_routers_bit_identical() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x90f7_0000 ^ seed);
+        let n_nodes = 1 + rng.below(48);
+        let mut reg = FleetRegistry::synthesize(n_nodes, seed);
+        // a handful of scripted per-node fan-off episodes scattered
+        // through the run makes heartbeats flip health organically
+        let episodes: Vec<(u32, f64, f64)> = (0..rng.below(4))
+            .map(|_| {
+                let node = rng.below(n_nodes) as u32;
+                let start = rng.uniform_range(0.0, 300.0);
+                (node, start, start + rng.uniform_range(30.0, 200.0))
+            })
+            .collect();
+        let inj = FaultInjector::new(FaultPlan { node_fan_off: episodes, ..Default::default() });
+
+        for step in 0..60 {
+            match rng.below(3) {
+                0 => reg.heartbeat(rng.uniform_range(5.0, 60.0), Some(&inj)),
+                1 => {
+                    let node = NodeId(rng.below(n_nodes) as u32);
+                    reg.note_placement(node, Workload::default_five()[rng.below(5)]);
+                }
+                _ => {
+                    // route like the fleet does and account the decision
+                    let affinity = AFFINITIES[rng.below(AFFINITIES.len())];
+                    let wl = Workload::default_five()[rng.below(5)];
+                    if let Some(p) = route_indexed(reg.indexed(), affinity, &wl) {
+                        reg.note_placement(p.node, wl);
+                    }
+                }
+            }
+            reg.indexed().check_invariants();
+            assert_routes_agree(&reg.snapshot(), reg.indexed(), &format!("seed {seed} step {step}"));
+            if step % 20 == 19 {
+                let items = random_items(&mut rng, 32);
+                assert_eq!(
+                    reference::route_burst(&reg.snapshot(), &items),
+                    route_burst_indexed(reg.indexed(), &items),
+                    "burst diverged at seed {seed} step {step}"
+                );
+            }
+        }
+    }
+}
+
+/// Force the states heartbeats only reach slowly: arbitrary health
+/// mixes (including every node Down), saturated and over-saturated
+/// loads, dense warm sets. The legacy snapshot is mutated directly and
+/// the index mirrored through its mutation API, so this also exercises
+/// `set_health`/`set_load`/`apply_placement` paths and their invariant
+/// maintenance.
+#[test]
+fn forced_health_and_saturation_states_stay_bit_identical() {
+    const HEALTHS: [NodeHealth; 3] = [NodeHealth::Healthy, NodeHealth::Degraded, NodeHealth::Down];
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x90f7_1000 ^ seed);
+        let n_nodes = 1 + rng.below(32);
+        let reg = FleetRegistry::synthesize(n_nodes, seed);
+        let mut legacy = reg.snapshot();
+        let mut indexed = IndexedSnapshot::from_registry_snapshot(&legacy);
+        // seed the interner with every workload so warm mutations below
+        // never have to extend it mid-mirror
+        for wl in Workload::default_five() {
+            indexed.intern(wl);
+        }
+
+        for step in 0..80 {
+            let i = rng.below(n_nodes);
+            let id = NodeId(i as u32);
+            match rng.below(3) {
+                0 => {
+                    let health = HEALTHS[rng.below(3)];
+                    legacy.nodes[i].health = health;
+                    indexed.set_health(id, health);
+                }
+                1 => {
+                    // 0..=capacity+1 covers empty, partial, saturated and
+                    // over-saturated (free_slots saturates at zero)
+                    let load = rng.below(legacy.nodes[i].capacity as usize + 2) as u32;
+                    legacy.nodes[i].load = load;
+                    indexed.set_load(id, load);
+                }
+                _ => {
+                    let wl = Workload::default_five()[rng.below(5)];
+                    let node = &mut legacy.nodes[i];
+                    node.load = node.load.saturating_add(1);
+                    if !node.warm.contains(&wl) {
+                        node.warm.push(wl);
+                    }
+                    indexed.apply_placement(id, wl);
+                }
+            }
+            indexed.check_invariants();
+            assert_routes_agree(&legacy, &indexed, &format!("forced seed {seed} step {step}"));
+        }
+
+        // the endgame: every node down ⇒ both refuse every request
+        for i in 0..n_nodes {
+            legacy.nodes[i].health = NodeHealth::Down;
+            indexed.set_health(NodeId(i as u32), NodeHealth::Down);
+        }
+        indexed.check_invariants();
+        for affinity in AFFINITIES {
+            for wl in Workload::default_five() {
+                assert_eq!(reference::route(&legacy, affinity, &wl), None);
+                assert_eq!(route_indexed(&indexed, affinity, &wl), None);
+            }
+        }
+    }
+}
+
+/// One fleet-scale spot check: a 2048-node registry and a 256-item
+/// burst must fold identically through both implementations.
+#[test]
+fn large_fleet_burst_matches_oracle() {
+    let mut rng = Rng::new(0x90f7_2048);
+    let reg = FleetRegistry::synthesize(2048, 17);
+    let items = random_items(&mut rng, 256);
+    let oracle = reference::route_burst(&reg.snapshot(), &items);
+    let fast = route_burst_indexed(reg.indexed(), &items);
+    assert_eq!(oracle, fast);
+    assert!(fast.iter().all(Option::is_some), "a healthy 2048-node fleet places everything");
+}
