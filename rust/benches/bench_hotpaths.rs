@@ -40,7 +40,11 @@
 //!      (`fleet/route_10k_nodes`, target single-digit ms total), and a
 //!      full heartbeat's dirty-entry rebuild + dirty-gated `ArcCell`
 //!      publication (`fleet/snapshot_publish_10k`, ns/item = per-node
-//!      republication cost).
+//!      republication cost);
+//!  12. load-test planning (`loadgen/schedule_poisson200_60s`): fixing a
+//!      60 s, 200 req/s Poisson arrival schedule up front — gap draws,
+//!      rounding, the FNV fingerprint and one standard-mix draw per
+//!      event; ns/item is `pt-loadtest`'s per-request setup overhead.
 //!
 //! Results are also written to `BENCH_hotpaths.json` (per-bench ns/item)
 //! so successive PRs can track the perf trajectory.
@@ -435,6 +439,31 @@ fn main() {
         b.bench_items("fleet/snapshot_publish_10k", FLEET_10K as f64, || {
             registry.heartbeat(30.0, None);
             registry.last_dirty()
+        });
+    }
+
+    // -- load generation: schedule + mix materialization ------------------
+    // One pt-loadtest run fixes its whole arrival schedule and every mix
+    // draw up front (that is the determinism contract), so this is the
+    // engine's entire per-run setup cost: a 60 s Poisson schedule at
+    // 200 req/s (~12k events), fingerprinted, with a standard-mix draw
+    // per event. items = expected events, so ns/item is the per-request
+    // planning overhead — it should stay far below any serving cost.
+    {
+        use powertrain::loadgen::arrival::{build_schedule, schedule_fingerprint, ArrivalSpec};
+        use powertrain::loadgen::Mix;
+        const LOAD_EVENTS: f64 = 12_000.0; // 200 req/s x 60 s
+        let spec = ArrivalSpec::parse("poisson:200").unwrap();
+        let mix = Mix::standard();
+        b.bench_items("loadgen/schedule_poisson200_60s", LOAD_EVENTS, || {
+            let mut rng = Rng::new(42);
+            let mut model = spec.build();
+            let schedule = build_schedule(model.as_mut(), &mut rng, 60_000).unwrap();
+            let mut draws = 0usize;
+            for _ in &schedule {
+                draws += mix.draw(&mut rng).deadline_ms.is_none() as usize;
+            }
+            (schedule_fingerprint(&schedule), draws)
         });
     }
 

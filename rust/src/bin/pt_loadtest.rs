@@ -1,0 +1,16 @@
+//! `pt-loadtest` — standalone entry point for the open-world load
+//! generator. Identical to `powertrain loadtest`; the flags, engine and
+//! report all live in [`powertrain::loadgen`].
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match powertrain::loadgen::cli::run_cli(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

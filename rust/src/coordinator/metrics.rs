@@ -16,6 +16,7 @@ use std::sync::Mutex;
 
 use crate::device::DeviceKind;
 use crate::error::Error;
+use crate::util::json::Value;
 use crate::util::sync::lock_unpoisoned;
 
 /// Cap on the completion-order ledger (diagnostics/tests observable).
@@ -299,6 +300,52 @@ impl Metrics {
         self.routed.0.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
+    /// The retained latency samples (ms), in claim order — the load
+    /// report computes its quantiles over these (optionally offset past
+    /// a warm-up prefix) instead of re-deriving them per percentile.
+    pub fn latencies_ms(&self) -> Vec<f64> {
+        self.latencies_ms.0.snapshot().into_iter().map(f64::from_bits).collect()
+    }
+
+    /// A point-in-time copy of every monotonic counter (latency /
+    /// completion / failure ledgers excluded — those have their own
+    /// snapshot accessors). Two snapshots subtract
+    /// ([`CounterSnapshot::delta`]) to scope a measurement window, e.g.
+    /// the load engine's warm-up exclusion.
+    pub fn counters(&self) -> CounterSnapshot {
+        let mut routed = [0u64; ROUTED_SLOTS];
+        for (slot, counter) in routed.iter_mut().zip(self.routed.0.iter()) {
+            *slot = counter.load(Ordering::Relaxed);
+        }
+        CounterSnapshot {
+            requests_received: self.requests_received.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            requests_failed: self.requests_failed.load(Ordering::Relaxed),
+            admission_rejected: self.admission_rejected.load(Ordering::Relaxed),
+            modes_profiled: self.modes_profiled.load(Ordering::Relaxed),
+            reboots: self.reboots.load(Ordering::Relaxed),
+            plane_cache_hits: self.plane_cache_hits.load(Ordering::Relaxed),
+            plane_cache_misses: self.plane_cache_misses.load(Ordering::Relaxed),
+            model_cache_hits: self.model_cache_hits.load(Ordering::Relaxed),
+            model_cache_misses: self.model_cache_misses.load(Ordering::Relaxed),
+            singleflight_waits: self.singleflight_waits.load(Ordering::Relaxed),
+            host_fits: self.host_fits.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            feedback_observations: self.feedback_observations.load(Ordering::Relaxed),
+            drift_trips: self.drift_trips.load(Ordering::Relaxed),
+            refits: self.refits.load(Ordering::Relaxed),
+            stale_served: self.stale_served.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            breaker_transitions: self.breaker_transitions.load(Ordering::Relaxed),
+            degraded_served: self.degraded_served.load(Ordering::Relaxed),
+            thermal_throttle_events: self.thermal_throttle_events.load(Ordering::Relaxed),
+            placement_rejected: self.placement_rejected.load(Ordering::Relaxed),
+            cross_shard_transfers_saved: self.cross_shard_transfers_saved.load(Ordering::Relaxed),
+            profiling_ms: self.profiling_ms.load(Ordering::Relaxed),
+            routed,
+        }
+    }
+
     /// (p50, p95, max) latency in ms, over the retained sample window.
     pub fn latency_summary_ms(&self) -> (f64, f64, f64) {
         let lat: Vec<f64> =
@@ -378,6 +425,251 @@ impl Metrics {
             out.push_str(&format!(" | failed ids: [{}]", ids.join(", ")));
         }
         out
+    }
+}
+
+/// Dense size of the per-(kind, shard) routed grid.
+const ROUTED_SLOTS: usize = 3 * MAX_FLEET_SHARDS;
+// the grid is indexed by DeviceKind::ALL position; keep the constant in
+// lockstep with the kind roster
+const _: () = assert!(ROUTED_SLOTS == DeviceKind::ALL.len() * MAX_FLEET_SHARDS);
+
+/// A point-in-time copy of every [`Metrics`] monotonic counter.
+///
+/// Plain `Copy` data: subtract two snapshots with
+/// [`CounterSnapshot::delta`] to scope a window (the load engine scopes
+/// its measured phase this way — counters keep their absolute meaning on
+/// the live `Metrics` while the report shows only the window), and
+/// serialize with [`CounterSnapshot::to_json`] (deterministic key order
+/// via the JSON object's `BTreeMap`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub requests_received: u64,
+    pub requests_completed: u64,
+    pub requests_failed: u64,
+    pub admission_rejected: u64,
+    pub modes_profiled: u64,
+    pub reboots: u64,
+    pub plane_cache_hits: u64,
+    pub plane_cache_misses: u64,
+    pub model_cache_hits: u64,
+    pub model_cache_misses: u64,
+    pub singleflight_waits: u64,
+    pub host_fits: u64,
+    pub deadline_misses: u64,
+    pub feedback_observations: u64,
+    pub drift_trips: u64,
+    pub refits: u64,
+    pub stale_served: u64,
+    pub retries: u64,
+    pub breaker_transitions: u64,
+    pub degraded_served: u64,
+    pub thermal_throttle_events: u64,
+    pub placement_rejected: u64,
+    pub cross_shard_transfers_saved: u64,
+    /// Simulated profiling milliseconds (the private accumulator behind
+    /// [`Metrics::profiling_s`]).
+    pub profiling_ms: u64,
+    /// The per-(device kind, shard) routed grid, flattened exactly like
+    /// the live ledger: `kind_index * MAX_FLEET_SHARDS + shard`.
+    pub routed: [u64; ROUTED_SLOTS],
+}
+
+impl Default for CounterSnapshot {
+    // not derivable: std only provides `Default` for arrays up to 32
+    // elements, and the routed grid has 3 × MAX_FLEET_SHARDS slots
+    fn default() -> CounterSnapshot {
+        CounterSnapshot {
+            requests_received: 0,
+            requests_completed: 0,
+            requests_failed: 0,
+            admission_rejected: 0,
+            modes_profiled: 0,
+            reboots: 0,
+            plane_cache_hits: 0,
+            plane_cache_misses: 0,
+            model_cache_hits: 0,
+            model_cache_misses: 0,
+            singleflight_waits: 0,
+            host_fits: 0,
+            deadline_misses: 0,
+            feedback_observations: 0,
+            drift_trips: 0,
+            refits: 0,
+            stale_served: 0,
+            retries: 0,
+            breaker_transitions: 0,
+            degraded_served: 0,
+            thermal_throttle_events: 0,
+            placement_rejected: 0,
+            cross_shard_transfers_saved: 0,
+            profiling_ms: 0,
+            routed: [0; ROUTED_SLOTS],
+        }
+    }
+}
+
+impl CounterSnapshot {
+    /// Element-wise `self − earlier` (saturating — a live counter can
+    /// only grow, so a negative delta would mean mismatched snapshots;
+    /// saturate rather than wrap).
+    pub fn delta(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        let mut routed = [0u64; ROUTED_SLOTS];
+        for (i, slot) in routed.iter_mut().enumerate() {
+            *slot = self.routed[i].saturating_sub(earlier.routed[i]);
+        }
+        CounterSnapshot {
+            requests_received: self.requests_received.saturating_sub(earlier.requests_received),
+            requests_completed: self
+                .requests_completed
+                .saturating_sub(earlier.requests_completed),
+            requests_failed: self.requests_failed.saturating_sub(earlier.requests_failed),
+            admission_rejected: self
+                .admission_rejected
+                .saturating_sub(earlier.admission_rejected),
+            modes_profiled: self.modes_profiled.saturating_sub(earlier.modes_profiled),
+            reboots: self.reboots.saturating_sub(earlier.reboots),
+            plane_cache_hits: self.plane_cache_hits.saturating_sub(earlier.plane_cache_hits),
+            plane_cache_misses: self
+                .plane_cache_misses
+                .saturating_sub(earlier.plane_cache_misses),
+            model_cache_hits: self.model_cache_hits.saturating_sub(earlier.model_cache_hits),
+            model_cache_misses: self
+                .model_cache_misses
+                .saturating_sub(earlier.model_cache_misses),
+            singleflight_waits: self
+                .singleflight_waits
+                .saturating_sub(earlier.singleflight_waits),
+            host_fits: self.host_fits.saturating_sub(earlier.host_fits),
+            deadline_misses: self.deadline_misses.saturating_sub(earlier.deadline_misses),
+            feedback_observations: self
+                .feedback_observations
+                .saturating_sub(earlier.feedback_observations),
+            drift_trips: self.drift_trips.saturating_sub(earlier.drift_trips),
+            refits: self.refits.saturating_sub(earlier.refits),
+            stale_served: self.stale_served.saturating_sub(earlier.stale_served),
+            retries: self.retries.saturating_sub(earlier.retries),
+            breaker_transitions: self
+                .breaker_transitions
+                .saturating_sub(earlier.breaker_transitions),
+            degraded_served: self.degraded_served.saturating_sub(earlier.degraded_served),
+            thermal_throttle_events: self
+                .thermal_throttle_events
+                .saturating_sub(earlier.thermal_throttle_events),
+            placement_rejected: self
+                .placement_rejected
+                .saturating_sub(earlier.placement_rejected),
+            cross_shard_transfers_saved: self
+                .cross_shard_transfers_saved
+                .saturating_sub(earlier.cross_shard_transfers_saved),
+            profiling_ms: self.profiling_ms.saturating_sub(earlier.profiling_ms),
+            routed,
+        }
+    }
+
+    /// Element-wise sum — merges per-shard snapshots into a fleet total.
+    pub fn merge(&self, other: &CounterSnapshot) -> CounterSnapshot {
+        // delta with the zero snapshot inverts nothing; add field-wise
+        // via the same exhaustive pattern to stay in lockstep with the
+        // field roster
+        let mut routed = [0u64; ROUTED_SLOTS];
+        for (i, slot) in routed.iter_mut().enumerate() {
+            *slot = self.routed[i] + other.routed[i];
+        }
+        CounterSnapshot {
+            requests_received: self.requests_received + other.requests_received,
+            requests_completed: self.requests_completed + other.requests_completed,
+            requests_failed: self.requests_failed + other.requests_failed,
+            admission_rejected: self.admission_rejected + other.admission_rejected,
+            modes_profiled: self.modes_profiled + other.modes_profiled,
+            reboots: self.reboots + other.reboots,
+            plane_cache_hits: self.plane_cache_hits + other.plane_cache_hits,
+            plane_cache_misses: self.plane_cache_misses + other.plane_cache_misses,
+            model_cache_hits: self.model_cache_hits + other.model_cache_hits,
+            model_cache_misses: self.model_cache_misses + other.model_cache_misses,
+            singleflight_waits: self.singleflight_waits + other.singleflight_waits,
+            host_fits: self.host_fits + other.host_fits,
+            deadline_misses: self.deadline_misses + other.deadline_misses,
+            feedback_observations: self.feedback_observations + other.feedback_observations,
+            drift_trips: self.drift_trips + other.drift_trips,
+            refits: self.refits + other.refits,
+            stale_served: self.stale_served + other.stale_served,
+            retries: self.retries + other.retries,
+            breaker_transitions: self.breaker_transitions + other.breaker_transitions,
+            degraded_served: self.degraded_served + other.degraded_served,
+            thermal_throttle_events: self.thermal_throttle_events + other.thermal_throttle_events,
+            placement_rejected: self.placement_rejected + other.placement_rejected,
+            cross_shard_transfers_saved: self.cross_shard_transfers_saved
+                + other.cross_shard_transfers_saved,
+            profiling_ms: self.profiling_ms + other.profiling_ms,
+            routed,
+        }
+    }
+
+    /// Placements routed to `shard` on nodes of `kind`, mirroring
+    /// [`Metrics::routed`].
+    pub fn routed(&self, kind: DeviceKind, shard: usize) -> u64 {
+        self.routed[RoutedLedger::slot(kind, shard)]
+    }
+
+    /// Total placements per shard (summed over device kinds).
+    pub fn routed_per_shard(&self) -> [u64; MAX_FLEET_SHARDS] {
+        let mut per_shard = [0u64; MAX_FLEET_SHARDS];
+        for (i, &n) in self.routed.iter().enumerate() {
+            per_shard[i % MAX_FLEET_SHARDS] += n;
+        }
+        per_shard
+    }
+
+    /// Total placements routed, mirroring [`Metrics::routed_total`].
+    pub fn routed_total(&self) -> u64 {
+        self.routed.iter().sum()
+    }
+
+    /// Deterministic JSON form: every scalar counter under its field
+    /// name, plus the routed grid as `routed.<kind>` arrays trimmed to
+    /// the highest shard that actually received a placement (kinds with
+    /// zero placements are omitted; an empty fleet emits `routed: {}`).
+    pub fn to_json(&self) -> Value {
+        let num = |v: u64| Value::Num(v as f64);
+        let mut routed_entries: Vec<(&str, Value)> = Vec::new();
+        for (k, kind) in DeviceKind::ALL.iter().enumerate() {
+            let row = &self.routed[k * MAX_FLEET_SHARDS..(k + 1) * MAX_FLEET_SHARDS];
+            let used = row.iter().rposition(|&n| n > 0).map_or(0, |i| i + 1);
+            if used > 0 {
+                routed_entries.push((
+                    kind.name(),
+                    Value::Arr(row[..used].iter().map(|&n| num(n)).collect()),
+                ));
+            }
+        }
+        Value::obj(vec![
+            ("requests_received", num(self.requests_received)),
+            ("requests_completed", num(self.requests_completed)),
+            ("requests_failed", num(self.requests_failed)),
+            ("admission_rejected", num(self.admission_rejected)),
+            ("modes_profiled", num(self.modes_profiled)),
+            ("reboots", num(self.reboots)),
+            ("plane_cache_hits", num(self.plane_cache_hits)),
+            ("plane_cache_misses", num(self.plane_cache_misses)),
+            ("model_cache_hits", num(self.model_cache_hits)),
+            ("model_cache_misses", num(self.model_cache_misses)),
+            ("singleflight_waits", num(self.singleflight_waits)),
+            ("host_fits", num(self.host_fits)),
+            ("deadline_misses", num(self.deadline_misses)),
+            ("feedback_observations", num(self.feedback_observations)),
+            ("drift_trips", num(self.drift_trips)),
+            ("refits", num(self.refits)),
+            ("stale_served", num(self.stale_served)),
+            ("retries", num(self.retries)),
+            ("breaker_transitions", num(self.breaker_transitions)),
+            ("degraded_served", num(self.degraded_served)),
+            ("thermal_throttle_events", num(self.thermal_throttle_events)),
+            ("placement_rejected", num(self.placement_rejected)),
+            ("cross_shard_transfers_saved", num(self.cross_shard_transfers_saved)),
+            ("profiling_ms", num(self.profiling_ms)),
+            ("routed", Value::obj(routed_entries)),
+        ])
     }
 }
 
@@ -582,6 +874,53 @@ mod tests {
         assert!(r.contains("orin-agx 3 [s0:2 s3:1]"), "{r}");
         assert!(r.contains("1 placement rejected"), "{r}");
         assert!(r.contains("4 cross-shard transfers saved"), "{r}");
+    }
+
+    #[test]
+    fn counter_snapshots_delta_merge_and_serialize() {
+        let m = Metrics::new();
+        m.requests_received.fetch_add(3, Ordering::Relaxed);
+        m.record_completion(0);
+        m.note_routed(DeviceKind::OrinAgx, 1);
+        m.add_profiling_s(2.0);
+        let warmup = m.counters();
+        // ... the measured phase moves some counters further ...
+        m.requests_received.fetch_add(5, Ordering::Relaxed);
+        m.record_completion(1);
+        m.record_completion(2);
+        m.plane_cache_hits.fetch_add(4, Ordering::Relaxed);
+        m.note_routed(DeviceKind::OrinAgx, 1);
+        m.note_routed(DeviceKind::OrinNano, 0);
+        let measured = m.counters().delta(&warmup);
+        assert_eq!(measured.requests_received, 5);
+        assert_eq!(measured.requests_completed, 2);
+        assert_eq!(measured.plane_cache_hits, 4);
+        assert_eq!(measured.profiling_ms, 0, "warm-up profiling must not leak");
+        assert_eq!(measured.routed(DeviceKind::OrinAgx, 1), 1);
+        assert_eq!(measured.routed(DeviceKind::OrinNano, 0), 1);
+        assert_eq!(measured.routed_total(), 2);
+        let per_shard = measured.routed_per_shard();
+        assert_eq!(per_shard[0], 1);
+        assert_eq!(per_shard[1], 1);
+        // merge is element-wise: delta(warmup) + warmup == live
+        let merged = measured.merge(&warmup);
+        assert_eq!(merged, m.counters());
+        // deterministic JSON: scalar counters by field name, routed grid
+        // trimmed per kind, zero kinds omitted
+        let json = measured.to_json().to_string();
+        assert!(json.contains("\"requests_received\":5"), "{json}");
+        assert!(json.contains("\"orin-agx\":[0,1]"), "{json}");
+        assert!(json.contains("\"orin-nano\":[1]"), "{json}");
+        assert!(!json.contains("xavier"), "{json}");
+        assert_eq!(json, measured.to_json().to_string());
+    }
+
+    #[test]
+    fn latency_samples_are_exposed_in_claim_order() {
+        let m = Metrics::new();
+        m.observe_latency_ms(3.5);
+        m.observe_latency_ms(1.25);
+        assert_eq!(m.latencies_ms(), vec![3.5, 1.25]);
     }
 
     #[test]

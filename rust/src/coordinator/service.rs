@@ -267,6 +267,17 @@ impl Coordinator {
         self.rx.recv().ok()
     }
 
+    /// Non-blocking variant of [`Coordinator::recv_result`]: drain
+    /// whatever has completed *right now* and return to the caller —
+    /// `None` means "nothing ready yet" as well as "stream ended", so
+    /// this is for paced submitters (the load engine) that interleave
+    /// submission with draining and do a final blocking drain (or
+    /// [`Coordinator::finish`]) at the end. Results consumed here are
+    /// not returned again by `finish`.
+    pub fn try_recv_result(&self) -> Option<(u64, Result<Response>)> {
+        self.rx.try_recv().ok()
+    }
+
     /// Wait for the stream to end and every in-flight request to finish,
     /// then return all responses **sorted by request id** plus the shared
     /// metrics. Per-request failures are recorded in
@@ -520,6 +531,48 @@ mod tests {
         // two distinct (workload, seed) keys → two fits, four cache hits
         assert_eq!(metrics.model_cache_misses.load(Ordering::Relaxed), 2);
         assert_eq!(metrics.model_cache_hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn try_recv_drains_incrementally_and_finish_returns_the_rest() {
+        let reference = host_reference();
+        let cfg = host_cfg(150);
+        let (coordinator, submitter) = Coordinator::start(&cfg, &reference).unwrap();
+        let req = |id: u64| Request {
+            id,
+            device: DeviceKind::OrinAgx,
+            workload: Workload::mobilenet(),
+            power_budget_w: 1e6,
+            scenario: Scenario::FederatedLearning,
+            affinity: None,
+            node: None,
+            seed: 77,
+        };
+        submitter.send_request(req(0)).unwrap();
+        // blocking recv observes the first result, then try_recv on the
+        // empty channel must return None without hanging
+        let (id0, res0) = coordinator.recv_result().unwrap();
+        assert_eq!(id0, 0);
+        assert!(res0.is_ok());
+        assert!(coordinator.try_recv_result().is_none());
+        submitter.send_request(req(1)).unwrap();
+        // poll-drain the second result the way the load engine does
+        let mut drained = None;
+        for _ in 0..20_000 {
+            if let Some(r) = coordinator.try_recv_result() {
+                drained = Some(r);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let (id1, res1) = drained.expect("second result never arrived");
+        assert_eq!(id1, 1);
+        assert!(res1.is_ok());
+        drop(submitter);
+        // both results were consumed pre-finish; finish has nothing left
+        let (responses, metrics) = coordinator.finish().unwrap();
+        assert!(responses.is_empty());
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 2);
     }
 
     #[test]

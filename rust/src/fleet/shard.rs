@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::pipeline::fit_models_for_request;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Metrics, ModelKey, Provenance, ReferenceModels, Request,
+    Coordinator, CoordinatorConfig, Job, Metrics, ModelKey, Provenance, ReferenceModels, Request,
     Response, Strategy, Submitter,
 };
 use crate::error::{Error, Result};
@@ -106,6 +106,11 @@ pub struct Fleet {
     /// Requests the router placed away from their first-choice node;
     /// their primary responses are re-stamped `DegradedPlacement`.
     rerouted_ids: Mutex<Vec<u64>>,
+    /// Queue-clock instant of the first paced submission. Paced arrivals
+    /// advance the registry clock relative to this base, so the
+    /// simulated fleet ages with the load schedule instead of by the
+    /// fixed per-placement heartbeat slice.
+    paced_base_ms: Mutex<Option<u64>>,
 }
 
 impl Fleet {
@@ -136,6 +141,7 @@ impl Fleet {
             metrics: Arc::new(Metrics::new()),
             transferred: Mutex::new(HashSet::new()),
             rerouted_ids: Mutex::new(Vec::new()),
+            paced_base_ms: Mutex::new(None),
         })
     }
 
@@ -169,14 +175,70 @@ impl Fleet {
     /// before the owning shard sees it. Returns the placement so callers
     /// can account affinity/reroute decisions; `Err` only when no
     /// healthy capacity exists anywhere or the fleet is shut down.
-    pub fn submit(&self, mut req: Request) -> Result<Placement> {
+    pub fn submit(&self, req: Request) -> Result<Placement> {
+        self.submit_inner(req, None)
+    }
+
+    /// Paced submission for the load engine: route exactly like
+    /// [`Fleet::submit`], but enter the owning shard's ingress with
+    /// [`Job::arriving`] at `arrival_ms` (queue-clock absolute — rebase
+    /// a schedule offset onto [`Fleet::now_ms`]) and an optional
+    /// arrival-relative deadline, so the shard's queue holds the job
+    /// until its arrival instant and deadline misses are accounted.
+    /// Paced submissions also advance the registry clock to the
+    /// schedule's simulated time (measured from the first paced arrival)
+    /// instead of by the fixed `heartbeat_slice_s`, so node
+    /// thermal/health state ages with the offered load.
+    pub fn submit_paced(
+        &self,
+        req: Request,
+        arrival_ms: u64,
+        deadline_ms: Option<u64>,
+    ) -> Result<Placement> {
+        self.submit_inner(req, Some((arrival_ms, deadline_ms)))
+    }
+
+    /// Milliseconds on the fleet's queue clock (shard 0's queue epoch) —
+    /// the base callers rebase paced arrival schedules onto. Shard
+    /// epochs differ only by their sequential start instants, so a
+    /// schedule rebased here is at worst that skew early on its owning
+    /// shard's clock; past arrivals dispatch immediately, in order.
+    pub fn now_ms(&self) -> Result<u64> {
+        self.shards[0]
+            .submitter
+            .as_ref()
+            .map(|s| s.now_ms())
+            .ok_or_else(|| Error::Coordinator("fleet is shut down".into()))
+    }
+
+    /// Live per-shard serving metrics, indexed by shard — the load
+    /// engine polls these to scope warm-up out of a measured run without
+    /// tearing the fleet down between phases.
+    pub fn shard_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.coordinator.metrics()).collect()
+    }
+
+    fn submit_inner(
+        &self,
+        mut req: Request,
+        paced: Option<(u64, Option<u64>)>,
+    ) -> Result<Placement> {
         req.seed = self.cfg.seed;
         let affinity = req.affinity.or(Some(req.device));
         req.affinity = affinity;
 
         let placement = {
             let mut registry = lock_unpoisoned(&self.registry);
-            registry.heartbeat(self.cfg.heartbeat_slice_s, self.cfg.coordinator.faults.as_deref());
+            let dt_s = match paced {
+                None => self.cfg.heartbeat_slice_s,
+                Some((arrival_ms, _)) => {
+                    let mut base = lock_unpoisoned(&self.paced_base_ms);
+                    let base_ms = *base.get_or_insert(arrival_ms);
+                    let sim_s = arrival_ms.saturating_sub(base_ms) as f64 / 1000.0;
+                    (sim_s - registry.clock_s()).max(0.0)
+                }
+            };
+            registry.heartbeat(dt_s, self.cfg.coordinator.faults.as_deref());
             let placement = match route_indexed(registry.indexed(), affinity, &req.workload) {
                 Some(p) => p,
                 None => {
@@ -226,7 +288,16 @@ impl Fleet {
             .submitter
             .as_ref()
             .ok_or_else(|| Error::Coordinator("fleet is shut down".into()))?;
-        submitter.send_request(req)?;
+        match paced {
+            None => submitter.send_request(req)?,
+            Some((arrival_ms, deadline_ms)) => {
+                let mut job = Job::arriving(req, arrival_ms);
+                if let Some(d) = deadline_ms {
+                    job = job.with_deadline(d);
+                }
+                submitter.send(job)?;
+            }
+        }
         Ok(placement)
     }
 
@@ -395,6 +466,41 @@ mod tests {
             assert_eq!(a.observed_time_ms.to_bits(), b.observed_time_ms.to_bits());
             assert_eq!(a.observed_power_w.to_bits(), b.observed_power_w.to_bits());
         }
+    }
+
+    #[test]
+    fn paced_submission_ages_the_registry_with_the_schedule() {
+        let reference = host_reference();
+        let fleet = Fleet::start(fleet_cfg(2, 8), &reference).unwrap();
+        let base = fleet.now_ms().unwrap();
+        // 3 arrivals spread over 4 simulated seconds, generous deadlines
+        for (i, offset) in [0u64, 1_500, 4_000].into_iter().enumerate() {
+            fleet
+                .submit_paced(
+                    req(i as u64, DeviceKind::OrinAgx, Workload::mobilenet()),
+                    base + offset,
+                    Some(120_000),
+                )
+                .unwrap();
+        }
+        // the registry clock tracked the schedule (4 s), not the default
+        // 30 s-per-placement heartbeat slice (which would read 90 s)
+        let clock = fleet.registry_snapshot().clock_s;
+        assert!((clock - 4.0).abs() < 1e-9, "registry clock {clock} s");
+        let per_shard = fleet.shard_metrics();
+        assert_eq!(per_shard.len(), 2);
+        let outcome = fleet.finish().unwrap();
+        assert_eq!(outcome.responses.len(), 3);
+        // same key throughout: one fleet-paid fit, two saved transfers,
+        // and the paced path reaches the queue with zero deadline misses
+        assert_eq!(outcome.fleet.host_fits.load(Ordering::Relaxed), 2);
+        assert_eq!(outcome.fleet.cross_shard_transfers_saved.load(Ordering::Relaxed), 2);
+        let misses: u64 = outcome
+            .shards
+            .iter()
+            .map(|m| m.deadline_misses.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(misses, 0);
     }
 
     #[test]

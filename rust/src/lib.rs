@@ -20,7 +20,9 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! `powertrain` binary is self-contained.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! See `ARCHITECTURE.md` for the top-down subsystem map and the life of
+//! one request, and `DESIGN.md` for the system inventory and the
+//! per-experiment index.
 
 pub mod baselines;
 pub mod coordinator;
@@ -29,6 +31,7 @@ pub mod error;
 #[cfg(feature = "xla")]
 pub mod experiments;
 pub mod fleet;
+pub mod loadgen;
 pub mod nn;
 pub mod pareto;
 pub mod predict;

@@ -1,0 +1,543 @@
+//! Deterministic arrival processes for the open-world traffic engine.
+//!
+//! Every generator implements [`ArrivalModel`]: a stateful process that
+//! yields the next inter-arrival gap in (simulated) milliseconds, driven
+//! exclusively by the caller's [`Rng`] — no wall clock, no global
+//! randomness — so the same `(spec, seed)` pair reproduces the schedule
+//! bit-for-bit, run after run, machine after machine. Four processes
+//! cover the open-world shapes the load harness needs:
+//!
+//! * [`Poisson`] — memoryless exponential inter-arrivals at a constant
+//!   rate λ (the classic open-system baseline);
+//! * [`Mmpp2`] — a 2-state Markov-modulated Poisson process: each state
+//!   carries its own rate and an exponentially distributed dwell, so a
+//!   `quiet ⇄ burst` alternation emerges without any scripted timeline;
+//! * [`Diurnal`] — a non-homogeneous Poisson process whose rate follows
+//!   a sinusoidal envelope over a simulated "day", sampled exactly by
+//!   Lewis–Shedler thinning against the peak rate;
+//! * [`FixedGap`] — the constant `--gap-ms` spacing the `serve` demo
+//!   has always used, kept for backward comparison.
+//!
+//! [`ArrivalSpec`] is the parsed CLI/config form (`poisson:200`,
+//! `mmpp:20,400:5,1`, `diurnal:100:0.8:60`, `fixed:50`);
+//! [`build_schedule`] materializes a whole horizon of arrival offsets up
+//! front — the engine submits the *fixed* schedule and only completion
+//! order varies under concurrency (see EXPERIMENTS.md §Open-world load).
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Hard cap on the events one schedule may materialize — a fat-fingered
+/// rate (`poisson:1e9` over a minute) should fail loudly, not OOM.
+pub const MAX_SCHEDULE_EVENTS: usize = 2_000_000;
+
+/// One stateful arrival process. Implementations draw exclusively from
+/// the `Rng` handed in (plus their own deterministic state), so a model
+/// rebuilt from the same spec and driven by the same seed replays the
+/// identical gap sequence.
+pub trait ArrivalModel {
+    /// The next inter-arrival gap in simulated milliseconds (> 0 for
+    /// every model except `FixedGap { gap_ms: 0 }`, which is rejected at
+    /// spec validation).
+    fn next_gap_ms(&mut self, rng: &mut Rng) -> f64;
+
+    /// Human/report label, e.g. `poisson:200/s`.
+    fn label(&self) -> String;
+
+    /// The nominal long-run arrival rate (req/s) — the report echoes it
+    /// so a reader can sanity-check throughput against offered load.
+    fn nominal_rate_per_s(&self) -> f64;
+}
+
+/// Exponential sample with the given rate (per second), in milliseconds.
+/// Uses `1 - u` so the open side of `uniform()`'s `[0, 1)` can never
+/// feed `ln(0)`.
+fn exp_gap_ms(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    -(1.0 - rng.uniform()).ln() / rate_per_s * 1000.0
+}
+
+/// Constant-rate Poisson arrivals: i.i.d. exponential gaps, mean 1/λ.
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    pub rate_per_s: f64,
+}
+
+impl ArrivalModel for Poisson {
+    fn next_gap_ms(&mut self, rng: &mut Rng) -> f64 {
+        exp_gap_ms(rng, self.rate_per_s)
+    }
+
+    fn label(&self) -> String {
+        format!("poisson:{}/s", self.rate_per_s)
+    }
+
+    fn nominal_rate_per_s(&self) -> f64 {
+        self.rate_per_s
+    }
+}
+
+/// Fixed inter-arrival gap — `serve --gap-ms` compatibility.
+#[derive(Debug, Clone)]
+pub struct FixedGap {
+    pub gap_ms: f64,
+}
+
+impl ArrivalModel for FixedGap {
+    fn next_gap_ms(&mut self, _rng: &mut Rng) -> f64 {
+        self.gap_ms
+    }
+
+    fn label(&self) -> String {
+        format!("fixed:{}ms", self.gap_ms)
+    }
+
+    fn nominal_rate_per_s(&self) -> f64 {
+        1000.0 / self.gap_ms
+    }
+}
+
+/// 2-state Markov-modulated Poisson process. State `s` emits Poisson
+/// arrivals at `rates_per_s[s]` and holds for an exponentially
+/// distributed dwell with mean `dwell_s[s]`; dwell exhaustion flips the
+/// state. Exactness note: the per-state arrival stream is memoryless, so
+/// discarding a candidate gap that overshoots the state boundary and
+/// resampling in the next state is the textbook-correct construction,
+/// not an approximation.
+#[derive(Debug, Clone)]
+pub struct Mmpp2 {
+    pub rates_per_s: [f64; 2],
+    pub dwell_s: [f64; 2],
+    state: usize,
+    /// Dwell budget left in the current state (ms); `<= 0` means the
+    /// next call samples a fresh dwell.
+    remaining_ms: f64,
+    /// Cumulative simulated ms spent in each state — feeds the
+    /// state-occupancy property test and the report's burst accounting.
+    time_in_state_ms: [f64; 2],
+}
+
+impl Mmpp2 {
+    pub fn new(rates_per_s: [f64; 2], dwell_s: [f64; 2]) -> Mmpp2 {
+        Mmpp2 {
+            rates_per_s,
+            dwell_s,
+            state: 0,
+            remaining_ms: 0.0,
+            time_in_state_ms: [0.0, 0.0],
+        }
+    }
+
+    /// Fraction of simulated time spent in each state so far. The
+    /// stationary expectation is `dwell_s[i] / (dwell_s[0] + dwell_s[1])`.
+    pub fn state_occupancy(&self) -> [f64; 2] {
+        let total = self.time_in_state_ms[0] + self.time_in_state_ms[1];
+        if total <= 0.0 {
+            return [0.0, 0.0];
+        }
+        [self.time_in_state_ms[0] / total, self.time_in_state_ms[1] / total]
+    }
+}
+
+impl ArrivalModel for Mmpp2 {
+    fn next_gap_ms(&mut self, rng: &mut Rng) -> f64 {
+        let mut elapsed = 0.0;
+        loop {
+            if self.remaining_ms <= 0.0 {
+                self.remaining_ms = exp_gap_ms(rng, 1.0 / self.dwell_s[self.state]);
+            }
+            let gap = exp_gap_ms(rng, self.rates_per_s[self.state]);
+            if gap <= self.remaining_ms {
+                self.remaining_ms -= gap;
+                self.time_in_state_ms[self.state] += gap;
+                return elapsed + gap;
+            }
+            // the candidate lands past the state boundary: burn the rest
+            // of the dwell, flip states, resample (memorylessness makes
+            // this exact)
+            elapsed += self.remaining_ms;
+            self.time_in_state_ms[self.state] += self.remaining_ms;
+            self.remaining_ms = 0.0;
+            self.state = 1 - self.state;
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "mmpp:{},{}/s:dwell {},{}s",
+            self.rates_per_s[0], self.rates_per_s[1], self.dwell_s[0], self.dwell_s[1]
+        )
+    }
+
+    fn nominal_rate_per_s(&self) -> f64 {
+        // dwell-weighted stationary rate
+        let total = self.dwell_s[0] + self.dwell_s[1];
+        (self.rates_per_s[0] * self.dwell_s[0] + self.rates_per_s[1] * self.dwell_s[1]) / total
+    }
+}
+
+/// Sinusoidal-envelope non-homogeneous Poisson process:
+/// `λ(t) = base · (1 + amplitude · sin(2πt / period))`, sampled exactly
+/// by Lewis–Shedler thinning: propose at the peak rate
+/// `λ_max = base · (1 + amplitude)`, accept with probability
+/// `λ(t) / λ_max`. `period_s` is a *simulated* day — scale it down to
+/// compress a diurnal cycle into a seconds-long load test.
+#[derive(Debug, Clone)]
+pub struct Diurnal {
+    pub base_rate_per_s: f64,
+    /// Envelope amplitude in `[0, 1]`: 0 degenerates to plain Poisson,
+    /// 1 swings between silence and twice the base rate.
+    pub amplitude: f64,
+    pub period_s: f64,
+    /// Simulated clock (ms since the process started).
+    t_ms: f64,
+}
+
+impl Diurnal {
+    pub fn new(base_rate_per_s: f64, amplitude: f64, period_s: f64) -> Diurnal {
+        Diurnal { base_rate_per_s, amplitude, period_s, t_ms: 0.0 }
+    }
+
+    fn rate_at(&self, t_ms: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * (t_ms / 1000.0) / self.period_s;
+        self.base_rate_per_s * (1.0 + self.amplitude * phase.sin())
+    }
+}
+
+impl ArrivalModel for Diurnal {
+    fn next_gap_ms(&mut self, rng: &mut Rng) -> f64 {
+        let lambda_max = self.base_rate_per_s * (1.0 + self.amplitude);
+        let mut elapsed = 0.0;
+        loop {
+            let gap = exp_gap_ms(rng, lambda_max);
+            elapsed += gap;
+            self.t_ms += gap;
+            if rng.uniform() * lambda_max <= self.rate_at(self.t_ms) {
+                return elapsed;
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "diurnal:{}/s:amp {}:period {}s",
+            self.base_rate_per_s, self.amplitude, self.period_s
+        )
+    }
+
+    fn nominal_rate_per_s(&self) -> f64 {
+        // the sinusoid integrates to zero over full periods
+        self.base_rate_per_s
+    }
+}
+
+/// Parsed, validated arrival-model specification — the CLI/config form.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    Poisson { rate_per_s: f64 },
+    Mmpp { rates_per_s: [f64; 2], dwell_s: [f64; 2] },
+    Diurnal { base_rate_per_s: f64, amplitude: f64, period_s: f64 },
+    Fixed { gap_ms: f64 },
+}
+
+impl ArrivalSpec {
+    /// Parse the CLI syntax:
+    ///
+    /// * `poisson:<rate/s>`                       — `poisson:200`
+    /// * `mmpp:<r0>,<r1>:<dwell0>,<dwell1>`       — `mmpp:20,400:5,1`
+    /// * `diurnal:<base/s>:<amplitude>:<period-s>` — `diurnal:100:0.8:60`
+    /// * `fixed:<gap-ms>`                         — `fixed:50`
+    pub fn parse(s: &str) -> Result<ArrivalSpec> {
+        let usage = |msg: &str| {
+            Error::Usage(format!(
+                "bad arrival spec '{s}': {msg} (poisson:<rate>, mmpp:<r0>,<r1>:<d0>,<d1>, \
+                 diurnal:<base>:<amp>:<period-s>, fixed:<gap-ms>)"
+            ))
+        };
+        let num = |v: &str, what: &str| -> Result<f64> {
+            v.trim()
+                .parse::<f64>()
+                .map_err(|_| usage(&format!("{what} '{v}' is not a number")))
+        };
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or_default();
+        let rest: Vec<&str> = parts.collect();
+        let spec = match (kind, rest.as_slice()) {
+            ("poisson", [rate]) => ArrivalSpec::Poisson { rate_per_s: num(rate, "rate")? },
+            ("fixed", [gap]) => ArrivalSpec::Fixed { gap_ms: num(gap, "gap")? },
+            ("mmpp", [rates, dwells]) => {
+                let pair = |v: &str, what: &str| -> Result<[f64; 2]> {
+                    match v.split(',').collect::<Vec<_>>().as_slice() {
+                        [a, b] => Ok([num(a, what)?, num(b, what)?]),
+                        _ => Err(usage(&format!("{what} wants two comma-separated values"))),
+                    }
+                };
+                ArrivalSpec::Mmpp {
+                    rates_per_s: pair(rates, "rate")?,
+                    dwell_s: pair(dwells, "dwell")?,
+                }
+            }
+            ("diurnal", [base, amp, period]) => ArrivalSpec::Diurnal {
+                base_rate_per_s: num(base, "base rate")?,
+                amplitude: num(amp, "amplitude")?,
+                period_s: num(period, "period")?,
+            },
+            _ => return Err(usage("unknown form")),
+        };
+        spec.validate().map_err(|e| usage(&e))?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> std::result::Result<(), String> {
+        let positive = |v: f64, what: &str| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{what} must be a positive finite number, got {v}"))
+            }
+        };
+        match *self {
+            ArrivalSpec::Poisson { rate_per_s } => positive(rate_per_s, "rate"),
+            ArrivalSpec::Fixed { gap_ms } => positive(gap_ms, "gap"),
+            ArrivalSpec::Mmpp { rates_per_s, dwell_s } => {
+                positive(rates_per_s[0], "rate[0]")?;
+                positive(rates_per_s[1], "rate[1]")?;
+                positive(dwell_s[0], "dwell[0]")?;
+                positive(dwell_s[1], "dwell[1]")
+            }
+            ArrivalSpec::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                positive(base_rate_per_s, "base rate")?;
+                positive(period_s, "period")?;
+                if (0.0..=1.0).contains(&amplitude) {
+                    Ok(())
+                } else {
+                    Err(format!("amplitude must be in [0, 1], got {amplitude}"))
+                }
+            }
+        }
+    }
+
+    /// Instantiate the stateful process.
+    pub fn build(&self) -> Box<dyn ArrivalModel> {
+        match *self {
+            ArrivalSpec::Poisson { rate_per_s } => Box::new(Poisson { rate_per_s }),
+            ArrivalSpec::Fixed { gap_ms } => Box::new(FixedGap { gap_ms }),
+            ArrivalSpec::Mmpp { rates_per_s, dwell_s } => {
+                Box::new(Mmpp2::new(rates_per_s, dwell_s))
+            }
+            ArrivalSpec::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                Box::new(Diurnal::new(base_rate_per_s, amplitude, period_s))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.build().label()
+    }
+}
+
+/// Materialize every arrival offset (ms, rounded, non-decreasing) inside
+/// `horizon_ms`, continuing the model's state from wherever the previous
+/// phase left it. The whole schedule is fixed before a single job is
+/// submitted — determinism under concurrency comes from here.
+pub fn build_schedule(
+    model: &mut dyn ArrivalModel,
+    rng: &mut Rng,
+    horizon_ms: u64,
+) -> Result<Vec<u64>> {
+    let mut arrivals = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        t += model.next_gap_ms(rng);
+        if t >= horizon_ms as f64 {
+            return Ok(arrivals);
+        }
+        if arrivals.len() >= MAX_SCHEDULE_EVENTS {
+            return Err(Error::Usage(format!(
+                "arrival schedule for {} exceeds {MAX_SCHEDULE_EVENTS} events over {horizon_ms} ms; \
+                 lower the rate or shorten the horizon",
+                model.label()
+            )));
+        }
+        arrivals.push(t.round() as u64);
+    }
+}
+
+/// FNV-1a over the arrival offsets — the report's schedule fingerprint.
+/// Two runs with the same `(spec, seed, horizon)` must produce the same
+/// value; anything else is a determinism bug.
+pub fn schedule_fingerprint(arrivals: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &a in arrivals {
+        for b in a.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaps(spec: &ArrivalSpec, seed: u64, n: usize) -> Vec<f64> {
+        let mut model = spec.build();
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| model.next_gap_ms(&mut rng)).collect()
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate_at_10k() {
+        // empirical mean inter-arrival vs 1/λ: the std error of the mean
+        // at n=10k is 1%, so a 5% tolerance is comfortably non-flaky
+        // while still catching a wrong unit (s vs ms) or a wrong sign
+        for &rate in &[5.0, 200.0] {
+            let g = gaps(&ArrivalSpec::Poisson { rate_per_s: rate }, 42, 10_000);
+            let mean = g.iter().sum::<f64>() / g.len() as f64;
+            let expect = 1000.0 / rate;
+            assert!(
+                (mean - expect).abs() / expect < 0.05,
+                "rate {rate}: mean gap {mean:.3} ms vs expected {expect:.3} ms"
+            );
+            assert!(g.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn mmpp_occupancy_tracks_dwell_ratio_and_rate_brackets() {
+        let spec = ArrivalSpec::Mmpp { rates_per_s: [20.0, 400.0], dwell_s: [3.0, 1.0] };
+        let mut model = Mmpp2::new([20.0, 400.0], [3.0, 1.0]);
+        let mut rng = Rng::new(7);
+        let mut total_ms = 0.0;
+        let mut n = 0u64;
+        while total_ms < 600_000.0 {
+            total_ms += model.next_gap_ms(&mut rng);
+            n += 1;
+        }
+        // time-weighted state occupancy ⇒ dwell_i / (dwell_0 + dwell_1)
+        let occ = model.state_occupancy();
+        assert!((occ[0] - 0.75).abs() < 0.08, "occupancy {occ:?}");
+        assert!((occ[1] - 0.25).abs() < 0.08, "occupancy {occ:?}");
+        // the realized rate sits between the two state rates, near the
+        // dwell-weighted stationary mixture (20·0.75 + 400·0.25 = 115/s)
+        let rate = n as f64 / (total_ms / 1000.0);
+        let nominal = spec.build().nominal_rate_per_s();
+        assert!((nominal - 115.0).abs() < 1e-9);
+        assert!(rate > 20.0 && rate < 400.0);
+        assert!((rate - nominal).abs() / nominal < 0.15, "rate {rate:.1}/s");
+    }
+
+    #[test]
+    fn diurnal_period_average_recovers_base_and_peak_beats_trough() {
+        // over whole periods the sinusoid integrates out: the realized
+        // rate must recover the base rate; within a period the peak
+        // quarter must beat the trough quarter decisively
+        let mut model = Diurnal::new(100.0, 0.8, 10.0);
+        let mut rng = Rng::new(99);
+        let period_ms = 10_000.0;
+        let horizon = 40.0 * period_ms; // 40 full periods
+        let (mut t, mut n) = (0.0f64, 0u64);
+        let (mut peak, mut trough) = (0u64, 0u64);
+        while t < horizon {
+            t += model.next_gap_ms(&mut rng);
+            if t >= horizon {
+                break;
+            }
+            n += 1;
+            // sin peaks in the 2nd eighth [π/4, 3π/4), troughs mirrored
+            let phase = (t % period_ms) / period_ms;
+            if (0.125..0.375).contains(&phase) {
+                peak += 1;
+            } else if (0.625..0.875).contains(&phase) {
+                trough += 1;
+            }
+        }
+        let rate = n as f64 / (horizon / 1000.0);
+        assert!((rate - 100.0).abs() / 100.0 < 0.05, "rate {rate:.1}/s");
+        // expected ratio (1 + 0.8·⟨sin⟩) / (1 − 0.8·⟨sin⟩) ≈ 4.3 with
+        // ⟨sin⟩ = 2√2/π over the quarter-period window; 2× is a loose,
+        // unflaky floor
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "peak quarter {peak} vs trough quarter {trough}"
+        );
+    }
+
+    #[test]
+    fn fixed_gap_is_exact() {
+        let g = gaps(&ArrivalSpec::Fixed { gap_ms: 25.0 }, 1, 100);
+        assert!(g.iter().all(|&x| x == 25.0));
+    }
+
+    #[test]
+    fn schedules_replay_bit_exact_per_seed() {
+        let specs = [
+            ArrivalSpec::Poisson { rate_per_s: 150.0 },
+            ArrivalSpec::Mmpp { rates_per_s: [20.0, 300.0], dwell_s: [2.0, 1.0] },
+            ArrivalSpec::Diurnal { base_rate_per_s: 120.0, amplitude: 0.7, period_s: 5.0 },
+            ArrivalSpec::Fixed { gap_ms: 10.0 },
+        ];
+        for spec in &specs {
+            let run = |seed: u64| {
+                let mut rng = Rng::new(seed);
+                build_schedule(spec.build().as_mut(), &mut rng, 5_000).unwrap()
+            };
+            let (a, b) = (run(42), run(42));
+            assert_eq!(a, b, "{spec:?} not replayable");
+            assert_eq!(schedule_fingerprint(&a), schedule_fingerprint(&b));
+            assert!(!a.is_empty());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{spec:?} not sorted");
+            assert!(*a.last().unwrap() < 5_000);
+            // a different seed must actually move the stochastic models
+            if !matches!(spec, ArrivalSpec::Fixed { .. }) {
+                assert_ne!(run(42), run(43), "{spec:?} ignores its seed");
+            }
+        }
+    }
+
+    #[test]
+    fn runaway_rate_fails_loudly_instead_of_allocating_forever() {
+        let spec = ArrivalSpec::Fixed { gap_ms: 1e-6 };
+        let mut rng = Rng::new(1);
+        let err = build_schedule(spec.build().as_mut(), &mut rng, 10_000).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn spec_parsing_round_trips_and_rejects_garbage() {
+        assert_eq!(
+            ArrivalSpec::parse("poisson:200").unwrap(),
+            ArrivalSpec::Poisson { rate_per_s: 200.0 }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("mmpp:20,400:5,1").unwrap(),
+            ArrivalSpec::Mmpp { rates_per_s: [20.0, 400.0], dwell_s: [5.0, 1.0] }
+        );
+        assert_eq!(
+            ArrivalSpec::parse("diurnal:100:0.8:60").unwrap(),
+            ArrivalSpec::Diurnal { base_rate_per_s: 100.0, amplitude: 0.8, period_s: 60.0 }
+        );
+        assert_eq!(ArrivalSpec::parse("fixed:50").unwrap(), ArrivalSpec::Fixed { gap_ms: 50.0 });
+        for bad in [
+            "poisson",
+            "poisson:-3",
+            "poisson:abc",
+            "mmpp:1:2",
+            "mmpp:1,2:0,1",
+            "diurnal:100:1.5:60",
+            "fixed:0",
+            "uniform:9",
+            "",
+        ] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn labels_name_the_process() {
+        assert_eq!(ArrivalSpec::parse("poisson:200").unwrap().label(), "poisson:200/s");
+        assert!(ArrivalSpec::parse("mmpp:20,400:5,1").unwrap().label().starts_with("mmpp:"));
+        assert!(ArrivalSpec::parse("diurnal:100:0.8:60").unwrap().label().starts_with("diurnal:"));
+        assert_eq!(ArrivalSpec::parse("fixed:50").unwrap().label(), "fixed:50ms");
+    }
+}

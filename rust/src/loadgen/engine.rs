@@ -1,0 +1,472 @@
+//! The load engine: drive a coordinator or a fleet with an open-world
+//! arrival schedule and measure what comes back.
+//!
+//! A run has two phases. The **warm-up** phase streams real traffic so
+//! model transfers, plane builds and cache population happen before
+//! anything is measured — exactly the costs a long-lived service has
+//! already paid (see EXPERIMENTS.md §Open-world load for why it is
+//! excluded). The **measured** phase streams the next stretch of the
+//! same arrival process and is scoped with [`CounterSnapshot`] deltas
+//! plus latency-ledger offsets captured at the phase boundary, so one
+//! engine (and one warm cache hierarchy) serves both phases and nothing
+//! is torn down in between.
+//!
+//! Determinism: the whole arrival schedule and every mix draw are fixed
+//! up front from the run seed (arrival and mix streams are split off
+//! independently, so changing the mix never perturbs arrival times).
+//! Concurrency only changes *completion order*; with one worker per
+//! domain the measured counters are bit-identical run to run, which is
+//! the acceptance criterion `pt-loadtest --seed` satisfies.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+use crate::coordinator::metrics::CounterSnapshot;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Job, Metrics, ReferenceModels, Submitter,
+};
+use crate::error::{Error, Result};
+use crate::fleet::{Fleet, FleetConfig};
+use crate::loadgen::arrival::{build_schedule, schedule_fingerprint, ArrivalSpec};
+use crate::loadgen::mix::{Mix, MixEntry};
+use crate::loadgen::report::{DeadlineStats, LatencyStats, LoadReport, PhaseStats};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Independent seed streams: arrivals and mix draws must not share a
+/// stream, or changing the mix would perturb arrival times.
+const ARRIVAL_STREAM: u64 = 0x6172_7269_7661_6c73;
+const MIX_STREAM: u64 = 0x6d69_785f_6472_6177;
+
+/// Ceiling on how long a drain may lag the schedule horizon before the
+/// engine declares the target wedged (generous: CI fleet smokes complete
+/// in seconds).
+const DRAIN_GRACE_S: u64 = 600;
+
+/// Fleet topology for fleet-mode runs.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetShape {
+    pub shards: usize,
+    pub nodes: usize,
+}
+
+/// Everything one load run needs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub arrivals: ArrivalSpec,
+    pub mix: Mix,
+    /// Run seed: arrival schedule, mix draws, request telemetry and
+    /// (fleet mode) registry synthesis all derive from it.
+    pub seed: u64,
+    /// Warm-up horizon (ms of schedule, excluded from stats). 0 skips
+    /// the phase.
+    pub warmup_ms: u64,
+    /// Measured horizon (ms of schedule).
+    pub duration_ms: u64,
+    /// `Some` = fleet mode (placement router + sharded domains),
+    /// `None` = one coordinator.
+    pub fleet: Option<FleetShape>,
+    pub coordinator: CoordinatorConfig,
+}
+
+/// What one phase submitted.
+#[derive(Debug, Clone, Copy, Default)]
+struct PhaseOutcome {
+    submitted: u64,
+    placement_failed: u64,
+    with_deadline: u64,
+}
+
+/// The engine's target: one coordinator or a fleet, behind one paced
+/// submit/drain interface.
+enum Driver {
+    Single {
+        coordinator: Coordinator,
+        submitter: Submitter,
+        /// Results consumed via the non-blocking drain so far (the
+        /// channel is emptied as we go; `Coordinator::finish` then has
+        /// nothing left to collect).
+        drained: Cell<u64>,
+    },
+    Fleet {
+        fleet: Fleet,
+    },
+}
+
+impl Driver {
+    fn start(cfg: &EngineConfig, reference: &ReferenceModels) -> Result<Driver> {
+        match cfg.fleet {
+            None => {
+                let (coordinator, submitter) = Coordinator::start(&cfg.coordinator, reference)?;
+                Ok(Driver::Single { coordinator, submitter, drained: Cell::new(0) })
+            }
+            Some(shape) => {
+                let fleet_cfg = FleetConfig {
+                    shards: shape.shards,
+                    nodes: shape.nodes,
+                    seed: cfg.seed,
+                    coordinator: cfg.coordinator.clone(),
+                    ..Default::default()
+                };
+                Ok(Driver::Fleet { fleet: Fleet::start(fleet_cfg, reference)? })
+            }
+        }
+    }
+
+    /// Per-domain serving metrics (one handle in single mode).
+    fn metrics_handles(&self) -> Vec<Arc<Metrics>> {
+        match self {
+            Driver::Single { coordinator, .. } => vec![coordinator.metrics()],
+            Driver::Fleet { fleet } => fleet.shard_metrics(),
+        }
+    }
+
+    /// Fleet-level metrics handle, when there is one.
+    fn fleet_metrics(&self) -> Option<Arc<Metrics>> {
+        match self {
+            Driver::Single { .. } => None,
+            Driver::Fleet { fleet } => Some(fleet.metrics()),
+        }
+    }
+
+    /// The queue clock arrival schedules are rebased onto.
+    fn now_ms(&self) -> Result<u64> {
+        match self {
+            Driver::Single { submitter, .. } => Ok(submitter.now_ms()),
+            Driver::Fleet { fleet } => fleet.now_ms(),
+        }
+    }
+
+    /// Submit one paced job. Returns `false` when the fleet router had
+    /// no healthy capacity for it (counted, not fatal); propagates real
+    /// errors (closed ingress).
+    fn submit(
+        &self,
+        req: crate::coordinator::Request,
+        arrival_ms: u64,
+        deadline_ms: Option<u64>,
+    ) -> Result<bool> {
+        match self {
+            Driver::Single { submitter, .. } => {
+                let mut job = Job::arriving(req, arrival_ms);
+                if let Some(d) = deadline_ms {
+                    job = job.with_deadline(d);
+                }
+                submitter.send(job)?;
+                Ok(true)
+            }
+            Driver::Fleet { fleet } => match fleet.submit_paced(req, arrival_ms, deadline_ms) {
+                Ok(_) => Ok(true),
+                // no healthy capacity anywhere: the router already
+                // counted `placement_rejected`; the engine accounts the
+                // request as unplaced and the run goes on
+                Err(_) => Ok(false),
+            },
+        }
+    }
+
+    /// Block until `target_total` submissions (cumulative across phases)
+    /// have produced a result. Single mode drains the response channel
+    /// non-blockingly (keeping it empty as the run goes); fleet mode
+    /// polls the shards' completed+failed counters and leaves responses
+    /// for [`Fleet::finish`].
+    fn await_drained(&self, target_total: u64, horizon_ms: u64) -> Result<()> {
+        let deadline = Instant::now()
+            + std::time::Duration::from_secs(DRAIN_GRACE_S + horizon_ms.div_ceil(1000));
+        loop {
+            let done = match self {
+                Driver::Single { coordinator, drained, .. } => {
+                    while drained.get() < target_total {
+                        match coordinator.try_recv_result() {
+                            Some(_) => drained.set(drained.get() + 1),
+                            None => break,
+                        }
+                    }
+                    drained.get() >= target_total
+                }
+                Driver::Fleet { fleet } => {
+                    let settled: u64 = fleet
+                        .shard_metrics()
+                        .iter()
+                        .map(|m| {
+                            let c = m.counters();
+                            c.requests_completed + c.requests_failed
+                        })
+                        .sum();
+                    settled >= target_total
+                }
+            };
+            if done {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Coordinator(format!(
+                    "load drain wedged: fewer than {target_total} results after the \
+                     {horizon_ms} ms schedule plus {DRAIN_GRACE_S} s grace"
+                )));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Close the target's ingress and join it. Per-request failures are
+    /// already in the counters the report captured; an all-failed run
+    /// still yields its report (the `--strict` flag gates on it).
+    fn finish(self) -> Result<()> {
+        match self {
+            Driver::Single { coordinator, submitter, .. } => {
+                drop(submitter);
+                coordinator.finish().map(|_| ())
+            }
+            Driver::Fleet { fleet } => {
+                let _ = fleet.finish();
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Run one load test end to end and return its (validated) report.
+pub fn run(cfg: &EngineConfig, reference: &ReferenceModels) -> Result<LoadReport> {
+    if cfg.duration_ms == 0 {
+        return Err(Error::Usage("load duration must be > 0 ms".into()));
+    }
+
+    // fix the whole open-world schedule up front: arrival offsets from
+    // one stream, per-event mix draws from another — determinism under
+    // concurrency comes from deciding everything before submitting
+    let mut root = Rng::new(cfg.seed);
+    let mut arrival_rng = root.split(ARRIVAL_STREAM);
+    let mut mix_rng = root.split(MIX_STREAM);
+    let mut model = cfg.arrivals.build();
+    let warmup_offsets = build_schedule(model.as_mut(), &mut arrival_rng, cfg.warmup_ms)?;
+    let measured_offsets = build_schedule(model.as_mut(), &mut arrival_rng, cfg.duration_ms)?;
+    if measured_offsets.is_empty() {
+        return Err(Error::Usage(format!(
+            "arrival model {} produced no measured arrivals over {} ms; raise the rate or \
+             the duration",
+            model.label(),
+            cfg.duration_ms
+        )));
+    }
+    let fingerprint = {
+        let mut all = warmup_offsets.clone();
+        all.extend_from_slice(&measured_offsets);
+        schedule_fingerprint(&all)
+    };
+    let draw_events = |offsets: &[u64], mix_rng: &mut Rng| -> Vec<(u64, &MixEntry)> {
+        offsets.iter().map(|&o| (o, cfg.mix.draw(mix_rng))).collect()
+    };
+    let warmup_events = draw_events(&warmup_offsets, &mut mix_rng);
+    let measured_events = draw_events(&measured_offsets, &mut mix_rng);
+
+    let driver = Driver::start(cfg, reference)?;
+    let handles = driver.metrics_handles();
+    let fleet_handle = driver.fleet_metrics();
+
+    // --- warm-up: real traffic, fully drained, then forgotten ---------
+    let warm = submit_phase(&driver, cfg, &warmup_events, 0)?;
+    let warm_placed = warm.submitted - warm.placement_failed;
+    driver.await_drained(warm_placed, cfg.warmup_ms)?;
+
+    // phase boundary: counters + latency-ledger offsets per domain (and
+    // fleet-level, which the per-shard handles don't see)
+    let warm_counters: Vec<CounterSnapshot> = handles.iter().map(|m| m.counters()).collect();
+    let warm_fleet = fleet_handle.as_ref().map(|m| m.counters());
+    let latency_offsets: Vec<usize> =
+        handles.iter().map(|m| m.latencies_ms().len()).collect();
+
+    // --- measured ----------------------------------------------------
+    let wall_start = Instant::now();
+    let measured_outcome =
+        submit_phase(&driver, cfg, &measured_events, warmup_events.len() as u64)?;
+    let measured_placed = measured_outcome.submitted - measured_outcome.placement_failed;
+    driver.await_drained(warm_placed + measured_placed, cfg.duration_ms)?;
+    let wall_s = wall_start.elapsed().as_secs_f64();
+
+    // scope the window: per-domain deltas merged, plus the fleet-level
+    // delta (routing ledger + placement rejections live there)
+    let mut counters = CounterSnapshot::default();
+    for (m, warm0) in handles.iter().zip(&warm_counters) {
+        counters = counters.merge(&m.counters().delta(warm0));
+    }
+    if let (Some(m), Some(warm0)) = (fleet_handle.as_ref(), warm_fleet.as_ref()) {
+        counters = counters.merge(&m.counters().delta(warm0));
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    for (m, &offset) in handles.iter().zip(&latency_offsets) {
+        let lat = m.latencies_ms();
+        samples.extend_from_slice(&lat[offset.min(lat.len())..]);
+    }
+    driver.finish()?;
+
+    let report = LoadReport {
+        arrivals: model.label(),
+        nominal_rate_per_s: model.nominal_rate_per_s(),
+        mix: cfg.mix.name.clone(),
+        seed: cfg.seed,
+        mode: if cfg.fleet.is_some() { "fleet" } else { "single" }.to_string(),
+        shards: cfg.fleet.map_or(1, |f| f.shards as u64),
+        nodes: cfg.fleet.map_or(0, |f| f.nodes as u64),
+        workers: cfg.coordinator.workers as u64,
+        warmup: PhaseStats {
+            events: warmup_events.len() as u64,
+            horizon_ms: cfg.warmup_ms,
+        },
+        measured: PhaseStats {
+            events: measured_events.len() as u64,
+            horizon_ms: cfg.duration_ms,
+        },
+        schedule_fingerprint: fingerprint,
+        submitted: measured_outcome.submitted,
+        placement_failed: measured_outcome.placement_failed,
+        wall_s,
+        throughput_rps: counters.requests_completed as f64 / wall_s.max(1e-9),
+        latency: LatencyStats::from_samples(&samples),
+        deadlines: DeadlineStats {
+            with_deadline: measured_outcome.with_deadline,
+            misses: counters.deadline_misses,
+        },
+        counters,
+    };
+    report.validate()?;
+    Ok(report)
+}
+
+/// Submit every event of one phase, paced onto the target's queue clock.
+fn submit_phase(
+    driver: &Driver,
+    cfg: &EngineConfig,
+    events: &[(u64, &MixEntry)],
+    id_base: u64,
+) -> Result<PhaseOutcome> {
+    let mut outcome = PhaseOutcome::default();
+    if events.is_empty() {
+        return Ok(outcome);
+    }
+    let base = driver.now_ms()?;
+    for (i, (offset, entry)) in events.iter().enumerate() {
+        let req = cfg.mix.request_for(entry, id_base + i as u64, cfg.seed);
+        outcome.submitted += 1;
+        if driver.submit(req, base + offset, entry.deadline_ms)? {
+            if entry.deadline_ms.is_some() {
+                outcome.with_deadline += 1;
+            }
+        } else {
+            outcome.placement_failed += 1;
+        }
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::{host_cfg, host_reference};
+    use crate::coordinator::Scenario;
+    use crate::device::DeviceKind;
+    use crate::workload::Workload;
+
+    /// A mix whose budgets sit at the top of the feasible band
+    /// (`budget_percentile: 1.0` → 0.85·peak). The unit suite serves from
+    /// [`host_reference`]'s random-init checkpoints through a 6-epoch
+    /// transfer — the scalers are refit on the profiled corpus so
+    /// predictions land in realistic watts, but a fit that shallow can
+    /// predict near the corpus mean, and a *tight* budget (orin-nano's
+    /// band is [12, 12.75] W) could then be infeasible. Generous budgets
+    /// keep the zero-failure assertions about the engine, not about
+    /// 6-epoch model quality. The integration suite runs the standard mix
+    /// against a properly bootstrapped reference.
+    fn generous_mix() -> Mix {
+        Mix::new(
+            "unit-generous",
+            vec![
+                MixEntry {
+                    weight: 2.0,
+                    device: DeviceKind::OrinAgx,
+                    workload: Workload::mobilenet(),
+                    scenario: Scenario::FineTuning,
+                    budget_percentile: 1.0,
+                    deadline_ms: None,
+                },
+                MixEntry {
+                    weight: 1.0,
+                    device: DeviceKind::XavierAgx,
+                    workload: Workload::mobilenet(),
+                    scenario: Scenario::FederatedLearning,
+                    budget_percentile: 1.0,
+                    deadline_ms: Some(600_000),
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    fn engine_cfg(fleet: Option<FleetShape>) -> EngineConfig {
+        EngineConfig {
+            arrivals: ArrivalSpec::Fixed { gap_ms: 40.0 },
+            mix: generous_mix(),
+            seed: 7,
+            warmup_ms: 100,
+            duration_ms: 400,
+            fleet,
+            coordinator: host_cfg(120),
+        }
+    }
+
+    #[test]
+    fn zero_duration_is_a_usage_error() {
+        let mut cfg = engine_cfg(None);
+        cfg.duration_ms = 0;
+        let err = run(&cfg, &host_reference()).unwrap_err();
+        assert!(err.to_string().contains("duration"), "{err}");
+    }
+
+    #[test]
+    fn single_mode_run_yields_a_reconciled_report() {
+        // fixed 40 ms gaps: 2 warm-up events over 100 ms, 9 measured
+        // over 400 ms — small enough for the unit suite, real enough to
+        // exercise warm-up scoping end to end
+        let report = run(&engine_cfg(None), &host_reference()).unwrap();
+        assert_eq!(report.mode, "single");
+        assert_eq!(report.warmup.events, 2);
+        assert_eq!(report.measured.events, 9);
+        assert_eq!(report.submitted, 9);
+        assert_eq!(report.placement_failed, 0);
+        assert_eq!(report.counters.requests_completed, 9);
+        assert_eq!(report.counters.requests_failed, 0);
+        assert_eq!(report.latency.samples, 9);
+        assert!(report.latency.p50 > 0.0);
+        assert!(report.throughput_rps > 0.0);
+        // the warm-up already paid every model fit for its entries; the
+        // report's window must not re-charge them for repeated entries
+        assert!(report.counters.model_cache_hits > 0);
+        report.validate().unwrap();
+    }
+
+    #[test]
+    fn standard_mix_reconciles_even_when_tight_budgets_fail() {
+        // the standard mix's tightest budgets may be infeasible under
+        // the unit suite's shallow 6-epoch fit (an Optimization error is
+        // the *correct* answer for an infeasible budget — the ladder
+        // refuses to degrade it); the report must reconcile either way
+        let cfg = EngineConfig { mix: Mix::standard(), ..engine_cfg(None) };
+        let report = run(&cfg, &host_reference()).unwrap();
+        assert_eq!(report.submitted, 9);
+        assert_eq!(
+            report.counters.requests_completed + report.counters.requests_failed,
+            9
+        );
+        assert_eq!(report.latency.samples, report.counters.requests_completed);
+        report.validate().unwrap();
+    }
+
+    #[test]
+    fn report_counters_replay_bit_identically_with_one_worker() {
+        let a = run(&engine_cfg(None), &host_reference()).unwrap();
+        let b = run(&engine_cfg(None), &host_reference()).unwrap();
+        assert_eq!(a.schedule_fingerprint, b.schedule_fingerprint);
+        assert_eq!(a.counters, b.counters, "measured counters must replay");
+        assert_eq!(a.latency.samples, b.latency.samples);
+    }
+}

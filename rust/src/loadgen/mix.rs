@@ -1,0 +1,345 @@
+//! Weighted scenario mixes: *what* each arriving request asks for.
+//!
+//! An arrival process (see [`super::arrival`]) decides *when* requests
+//! land; a [`Mix`] decides *what* each one is — a weighted distribution
+//! over `(workload × device-kind × scenario × budget-percentile ×
+//! deadline)` tuples, sampled deterministically from the engine's seeded
+//! [`Rng`]. One JSON file (schema `powertrain-loadmix-v1`) describes a
+//! whole traffic composition, e.g. "80% fine-tuning on Orin AGX with a
+//! mid-range budget + 20% federated rounds on Xavier with tight
+//! deadlines"; [`Mix::standard`] is the committed default
+//! (`mixes/standard.json` mirrors it).
+//!
+//! The budget percentile maps into the same feasible band the `serve`
+//! demo draws from — `[12 W, 0.85 · device peak]` — so mix files stay
+//! portable across device kinds instead of hard-coding watts.
+
+use crate::coordinator::{Request, Scenario};
+use crate::device::DeviceKind;
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// Schema tag for mix config files.
+pub const LOADMIX_SCHEMA: &str = "powertrain-loadmix-v1";
+
+/// Floor of the budget band (W) — matches the `serve` demo's draw, and
+/// stays above every device's lowest-power Pareto point so a 0th
+/// percentile entry still admits a feasible mode.
+const BUDGET_FLOOR_W: f64 = 12.0;
+
+/// One weighted line of a traffic mix.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    /// Relative weight (any positive scale; normalized at sample time).
+    pub weight: f64,
+    pub device: DeviceKind,
+    pub workload: Workload,
+    pub scenario: Scenario,
+    /// Where in the feasible budget band `[12 W, 0.85 · peak]` this
+    /// entry's power budget sits: 0.0 = tightest, 1.0 = most generous.
+    pub budget_percentile: f64,
+    /// Relative deadline (ms after arrival); `None` = best-effort.
+    pub deadline_ms: Option<u64>,
+}
+
+impl MixEntry {
+    /// The concrete power budget this entry's percentile denotes on its
+    /// device.
+    pub fn budget_w(&self) -> f64 {
+        let cap = (self.device.spec().peak_power_w * 0.85).max(BUDGET_FLOOR_W);
+        BUDGET_FLOOR_W + self.budget_percentile * (cap - BUDGET_FLOOR_W)
+    }
+}
+
+/// A named, weighted traffic composition.
+#[derive(Debug, Clone)]
+pub struct Mix {
+    pub name: String,
+    pub entries: Vec<MixEntry>,
+    /// Prefix sums of entry weights — one binary-search draw per sample.
+    cumulative: Vec<f64>,
+}
+
+impl Mix {
+    pub fn new(name: &str, entries: Vec<MixEntry>) -> Result<Mix> {
+        if entries.is_empty() {
+            return Err(Error::Usage(format!("mix '{name}' has no entries")));
+        }
+        let mut cumulative = Vec::with_capacity(entries.len());
+        let mut acc = 0.0;
+        for (i, e) in entries.iter().enumerate() {
+            if !(e.weight.is_finite() && e.weight > 0.0) {
+                return Err(Error::Usage(format!(
+                    "mix '{name}' entry {i}: weight must be positive and finite, got {}",
+                    e.weight
+                )));
+            }
+            if !(0.0..=1.0).contains(&e.budget_percentile) {
+                return Err(Error::Usage(format!(
+                    "mix '{name}' entry {i}: budget_percentile must be in [0, 1], got {}",
+                    e.budget_percentile
+                )));
+            }
+            acc += e.weight;
+            cumulative.push(acc);
+        }
+        Ok(Mix { name: name.to_string(), entries, cumulative })
+    }
+
+    /// The built-in default mix — the committed `mixes/standard.json`
+    /// mirrors this exactly: a fine-tuning-heavy Orin majority, a
+    /// continuous-learning lane, and two deadline-carrying federated
+    /// lanes on the other device kinds.
+    pub fn standard() -> Mix {
+        Mix::new(
+            "standard",
+            vec![
+                MixEntry {
+                    weight: 4.0,
+                    device: DeviceKind::OrinAgx,
+                    workload: Workload::resnet(),
+                    scenario: Scenario::FineTuning,
+                    budget_percentile: 0.6,
+                    deadline_ms: None,
+                },
+                MixEntry {
+                    weight: 3.0,
+                    device: DeviceKind::OrinAgx,
+                    workload: Workload::yolo(),
+                    scenario: Scenario::ContinuousLearning,
+                    budget_percentile: 0.4,
+                    deadline_ms: None,
+                },
+                MixEntry {
+                    weight: 2.0,
+                    device: DeviceKind::XavierAgx,
+                    workload: Workload::mobilenet(),
+                    scenario: Scenario::FederatedLearning,
+                    budget_percentile: 0.5,
+                    deadline_ms: Some(30_000),
+                },
+                MixEntry {
+                    weight: 1.0,
+                    device: DeviceKind::OrinNano,
+                    workload: Workload::lstm(),
+                    scenario: Scenario::FederatedLearning,
+                    budget_percentile: 0.8,
+                    deadline_ms: Some(30_000),
+                },
+            ],
+        )
+        .expect("builtin standard mix is valid")
+    }
+
+    /// Parse a `powertrain-loadmix-v1` JSON document.
+    pub fn from_json(text: &str) -> Result<Mix> {
+        let v = Value::parse(text)?;
+        let schema = v.req("schema")?.as_str()?;
+        if schema != LOADMIX_SCHEMA {
+            return Err(Error::Usage(format!(
+                "mix schema '{schema}' is not {LOADMIX_SCHEMA}"
+            )));
+        }
+        let name = v.req("name")?.as_str()?.to_string();
+        let mut entries = Vec::new();
+        for (i, e) in v.req("entries")?.as_arr()?.iter().enumerate() {
+            let bad = |what: &str, got: &str| {
+                Error::Usage(format!("mix '{name}' entry {i}: unknown {what} '{got}'"))
+            };
+            let device_s = e.req("device")?.as_str()?;
+            let device = DeviceKind::parse(device_s).ok_or_else(|| bad("device", device_s))?;
+            let workload_s = e.req("workload")?.as_str()?;
+            let workload = Workload::parse(workload_s).ok_or_else(|| bad("workload", workload_s))?;
+            let scenario_s = e.req("scenario")?.as_str()?;
+            let scenario = Scenario::parse(scenario_s).ok_or_else(|| bad("scenario", scenario_s))?;
+            // deadline_ms omitted or 0 ⇒ best-effort
+            let deadline_ms = match e.get("deadline_ms") {
+                Some(d) => match d.as_f64()? {
+                    x if x <= 0.0 => None,
+                    x => Some(x.round() as u64),
+                },
+                None => None,
+            };
+            entries.push(MixEntry {
+                weight: e.req("weight")?.as_f64()?,
+                device,
+                workload,
+                scenario,
+                budget_percentile: e.req("budget_percentile")?.as_f64()?,
+                deadline_ms,
+            });
+        }
+        Mix::new(&name, entries)
+    }
+
+    /// Load a mix file from disk.
+    pub fn load(path: &std::path::Path) -> Result<Mix> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Usage(format!("cannot read mix file {}: {e}", path.display()))
+        })?;
+        Mix::from_json(&text)
+    }
+
+    /// Draw one entry, weight-proportionally, from the caller's rng.
+    pub fn draw<'a>(&'a self, rng: &mut Rng) -> &'a MixEntry {
+        let total = *self.cumulative.last().expect("non-empty by construction");
+        let x = rng.uniform() * total;
+        let i = self.cumulative.partition_point(|&c| c <= x).min(self.entries.len() - 1);
+        &self.entries[i]
+    }
+
+    /// Build the concrete [`Request`] for a drawn entry. The engine
+    /// stamps `seed` with its run seed so simulated telemetry replays.
+    pub fn request_for(&self, entry: &MixEntry, id: u64, seed: u64) -> Request {
+        Request {
+            id,
+            device: entry.device,
+            workload: entry.workload.clone(),
+            power_budget_w: entry.budget_w(),
+            scenario: entry.scenario,
+            affinity: Some(entry.device),
+            node: None,
+            seed,
+        }
+    }
+
+    /// Serialize back to the `powertrain-loadmix-v1` document form.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("schema", Value::Str(LOADMIX_SCHEMA.to_string())),
+            ("name", Value::Str(self.name.clone())),
+            (
+                "entries",
+                Value::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("weight", Value::Num(e.weight)),
+                                ("device", Value::Str(e.device.name().to_string())),
+                                ("workload", Value::Str(e.workload.name())),
+                                ("scenario", Value::Str(e.scenario.name().to_string())),
+                                ("budget_percentile", Value::Num(e.budget_percentile)),
+                                (
+                                    "deadline_ms",
+                                    Value::Num(e.deadline_ms.unwrap_or(0) as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_mix_round_trips_through_json() {
+        let mix = Mix::standard();
+        let text = mix.to_json().to_string();
+        let back = Mix::from_json(&text).unwrap();
+        assert_eq!(back.name, mix.name);
+        assert_eq!(back.entries.len(), mix.entries.len());
+        for (a, b) in mix.entries.iter().zip(&back.entries) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.workload.name(), b.workload.name());
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.budget_percentile, b.budget_percentile);
+            assert_eq!(a.deadline_ms, b.deadline_ms);
+        }
+    }
+
+    #[test]
+    fn committed_standard_mix_file_matches_builtin() {
+        // mixes/standard.json at the repo root must stay in lockstep
+        // with Mix::standard() — the operator's guide points at both
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../mixes/standard.json");
+        let from_file = Mix::load(std::path::Path::new(path)).unwrap();
+        assert_eq!(from_file.to_json().to_string(), Mix::standard().to_json().to_string());
+    }
+
+    #[test]
+    fn draws_are_weight_proportional_and_deterministic() {
+        let mix = Mix::standard();
+        let draw_counts = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut counts = vec![0usize; mix.entries.len()];
+            for _ in 0..10_000 {
+                let e = mix.draw(&mut rng);
+                let i = mix
+                    .entries
+                    .iter()
+                    .position(|x| std::ptr::eq(x, e))
+                    .unwrap();
+                counts[i] += 1;
+            }
+            counts
+        };
+        let counts = draw_counts(11);
+        assert_eq!(counts, draw_counts(11), "same seed must replay draws");
+        let total_w: f64 = mix.entries.iter().map(|e| e.weight).sum();
+        for (i, e) in mix.entries.iter().enumerate() {
+            let expect = 10_000.0 * e.weight / total_w;
+            let got = counts[i] as f64;
+            assert!(
+                (got - expect).abs() < 0.15 * expect + 30.0,
+                "entry {i}: drew {got}, expected ≈{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_percentile_maps_into_the_feasible_band() {
+        for device in DeviceKind::ALL {
+            let cap = device.spec().peak_power_w * 0.85;
+            for pct in [0.0, 0.5, 1.0] {
+                let e = MixEntry {
+                    weight: 1.0,
+                    device,
+                    workload: Workload::mobilenet(),
+                    scenario: Scenario::FineTuning,
+                    budget_percentile: pct,
+                    deadline_ms: None,
+                };
+                let w = e.budget_w();
+                assert!(w >= BUDGET_FLOOR_W - 1e-9 && w <= cap.max(BUDGET_FLOOR_W) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_mixes_are_rejected_with_usage_errors() {
+        for (text, needle) in [
+            (r#"{"schema":"nope","name":"x","entries":[]}"#, "schema"),
+            (r#"{"schema":"powertrain-loadmix-v1","name":"x","entries":[]}"#, "no entries"),
+            (
+                r#"{"schema":"powertrain-loadmix-v1","name":"x","entries":[
+                    {"weight":-1,"device":"orin-agx","workload":"resnet",
+                     "scenario":"fine-tuning","budget_percentile":0.5}]}"#,
+                "weight",
+            ),
+            (
+                r#"{"schema":"powertrain-loadmix-v1","name":"x","entries":[
+                    {"weight":1,"device":"tpu","workload":"resnet",
+                     "scenario":"fine-tuning","budget_percentile":0.5}]}"#,
+                "device",
+            ),
+            (
+                r#"{"schema":"powertrain-loadmix-v1","name":"x","entries":[
+                    {"weight":1,"device":"orin-agx","workload":"resnet",
+                     "scenario":"fine-tuning","budget_percentile":1.5}]}"#,
+                "budget_percentile",
+            ),
+        ] {
+            let err = Mix::from_json(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected '{needle}' in '{err}'");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Open-world traffic engine: arrival models, scenario mixes, the load
+//! engine and its JSON report.
+//!
+//! Everything upstream of this module answers *one* request well; this
+//! module asks how the system behaves under a *stream* of them. It is
+//! the measurement harness behind `pt-loadtest` (and the `powertrain
+//! loadtest` subcommand — same flags, same code):
+//!
+//! * [`arrival`] — deterministic, seed-driven arrival processes behind
+//!   one [`ArrivalModel`](arrival::ArrivalModel) trait: Poisson, bursty
+//!   MMPP-2, diurnal (sinusoidal envelope via thinning) and fixed-gap.
+//!   The whole schedule is materialized up front and fingerprinted, so
+//!   two runs with one seed are bit-identical.
+//! * [`mix`] — weighted scenario mixes over (workload × device-kind ×
+//!   scenario × budget-percentile × deadline), sampled deterministically
+//!   from one JSON config (`powertrain-loadmix-v1`).
+//! * [`engine`] — warm-up phase (excluded from stats) then a measured
+//!   phase streaming jobs through a single coordinator or a sharded
+//!   [`Fleet`](crate::fleet::Fleet), scoped with counter-snapshot deltas.
+//! * [`report`] — the `powertrain-loadreport-v1` JSON report: latency
+//!   p50/p95/p99/p999, throughput, deadline-miss rate, cache hit ratios,
+//!   drift/refit/degraded/breaker counters and per-shard routing.
+//!
+//! See `ARCHITECTURE.md` ("Load generation") for where this sits in the
+//! request's life, `docs/operators-guide.md` for a field-by-field guide
+//! to the report, and EXPERIMENTS.md §Open-world load for methodology.
+
+pub mod arrival;
+pub mod engine;
+pub mod mix;
+pub mod report;
+
+pub use arrival::{ArrivalModel, ArrivalSpec};
+pub use engine::{run, EngineConfig, FleetShape};
+pub use mix::{Mix, MixEntry};
+pub use report::{LoadReport, LOADREPORT_SCHEMA};
+
+pub mod cli {
+    //! The `pt-loadtest` command line, shared verbatim by the dedicated
+    //! binary and the `powertrain loadtest` subcommand.
+
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    use crate::coordinator::{CoordinatorConfig, ReferenceModels};
+    use crate::error::{Error, Result};
+    use crate::loadgen::arrival::ArrivalSpec;
+    use crate::loadgen::engine::{run, EngineConfig, FleetShape};
+    use crate::loadgen::mix::Mix;
+    use crate::loadgen::report::LoadReport;
+
+    pub const HELP: &str = "\
+pt-loadtest — open-world load generator for the PowerTrain coordinator
+
+USAGE: pt-loadtest [flags]
+
+FLAGS
+  --arrivals SPEC     arrival process (default poisson:50):
+                        poisson:RATE          RATE req/s, exponential gaps
+                        mmpp:R1,R2:D1,D2      2-state MMPP, rates req/s,
+                                              mean dwells seconds
+                        diurnal:BASE:AMP:PER  sinusoidal envelope around
+                                              BASE req/s, amplitude 0..1,
+                                              period seconds
+                        fixed:GAP             constant GAP ms between jobs
+  --mix FILE          powertrain-loadmix-v1 JSON scenario mix
+                      (default: the built-in standard mix,
+                      mixes/standard.json)
+  --duration-s N      measured-phase horizon, seconds (default 30)
+  --warmup-s N        warm-up horizon, seconds, excluded from stats
+                      (default 5; 0 skips the phase)
+  --fleet N           N sharded coordinator domains behind the placement
+                      router (default 0 = one coordinator, no fleet)
+  --nodes N           simulated Jetson nodes in the fleet registry
+                      (fleet mode only; default 64)
+  --workers N         workers per coordinator domain (default 1; keep 1
+                      for bit-identical replay of measured counters)
+  --seed N            run seed: schedule, mix draws and registry
+                      synthesis all derive from it (default 42)
+  --ref-dir DIR       reference checkpoints (default checkpoints); run
+                      `powertrain train-ref` first
+  --grid N            prediction-grid size per device (default 200)
+  --epochs N          transfer fine-tuning epochs (default 30)
+  --out FILE          where to write the loadreport-v1 JSON
+                      (default report.json)
+  --strict            exit non-zero if any request failed or any
+                      placement was rejected
+  --help              this text
+
+Same seed + same flags => bit-identical arrival schedule, and (with
+--workers 1) identical measured counters. See docs/operators-guide.md
+for the report schema.
+";
+
+    /// Minimal `--flag value` / `--flag` parser, mirroring the
+    /// `powertrain` binary's: no positional arguments here.
+    struct Flags(BTreeMap<String, String>);
+
+    impl Flags {
+        fn parse(argv: &[String]) -> Result<Flags> {
+            let mut flags = BTreeMap::new();
+            let mut it = argv.iter().peekable();
+            while let Some(a) = it.next() {
+                let Some(name) = a.strip_prefix("--") else {
+                    return Err(Error::Usage(format!(
+                        "unexpected positional argument '{a}'; see `pt-loadtest --help`"
+                    )));
+                };
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            }
+            Ok(Flags(flags))
+        }
+
+        fn get(&self, name: &str) -> Option<&str> {
+            self.0.get(name).map(|s| s.as_str())
+        }
+
+        fn get_or(&self, name: &str, default: &str) -> String {
+            self.get(name).unwrap_or(default).to_string()
+        }
+
+        fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+            match self.get(name) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{v}'"))),
+            }
+        }
+    }
+
+    /// Run the load test described by `argv` (flags only, no program
+    /// name). Writes the report to `--out`, re-reads it through
+    /// [`LoadReport::from_json`] as a self-check, and prints a summary.
+    pub fn run_cli(argv: &[String]) -> Result<()> {
+        let flags = Flags::parse(argv)?;
+        if flags.get("help").is_some() {
+            print!("{HELP}");
+            return Ok(());
+        }
+
+        let arrivals = ArrivalSpec::parse(&flags.get_or("arrivals", "poisson:50"))?;
+        let mix = match flags.get("mix") {
+            Some(path) => Mix::load(std::path::Path::new(path))?,
+            None => Mix::standard(),
+        };
+        let duration_s = flags.usize_or("duration-s", 30)? as u64;
+        let warmup_s = flags.usize_or("warmup-s", 5)? as u64;
+        let shards = flags.usize_or("fleet", 0)?;
+        let nodes = flags.usize_or("nodes", 64)?;
+        let workers = flags.usize_or("workers", 1)?.max(1);
+        let seed = flags.usize_or("seed", 42)? as u64;
+        let grid = flags.usize_or("grid", 200)?;
+        let epochs = flags.usize_or("epochs", 30)?;
+        let ref_dir = PathBuf::from(flags.get_or("ref-dir", "checkpoints"));
+        let out = PathBuf::from(flags.get_or("out", "report.json"));
+        let strict = flags.get("strict").is_some();
+
+        let reference = ReferenceModels::load(&ref_dir).map_err(|e| {
+            Error::Usage(format!(
+                "cannot load reference models from {} ({e}); run `powertrain train-ref` first",
+                ref_dir.display()
+            ))
+        })?;
+
+        let cfg = EngineConfig {
+            arrivals,
+            mix,
+            seed,
+            warmup_ms: warmup_s * 1000,
+            duration_ms: duration_s * 1000,
+            fleet: (shards > 0).then_some(FleetShape { shards, nodes }),
+            coordinator: CoordinatorConfig {
+                transfer_epochs: epochs,
+                prediction_grid: Some(grid),
+                workers,
+                ..Default::default()
+            },
+        };
+
+        println!(
+            "load: {} over {} ({}), warm-up {warmup_s}s + measured {duration_s}s, seed {seed}",
+            cfg.arrivals.label(),
+            cfg.mix.name,
+            if shards > 0 {
+                format!("fleet: {shards} shard(s), {nodes} nodes")
+            } else {
+                "single coordinator".to_string()
+            },
+        );
+
+        let report = run(&cfg, &reference)?;
+        let text = report.to_json().to_string();
+        std::fs::write(&out, format!("{text}\n"))?;
+        // self-check: the file we just wrote must round-trip through the
+        // schema-checked reader and still reconcile
+        let back = LoadReport::from_json(&std::fs::read_to_string(&out)?)?;
+        back.validate()?;
+
+        println!(
+            "measured: {} submitted, {} completed, {} failed, {} unplaced in {:.2}s wall",
+            report.submitted,
+            report.counters.requests_completed,
+            report.counters.requests_failed,
+            report.placement_failed,
+            report.wall_s,
+        );
+        println!(
+            "latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  p999 {:.2}  (n={})",
+            report.latency.p50, report.latency.p95, report.latency.p99, report.latency.p999,
+            report.latency.samples,
+        );
+        println!(
+            "throughput {:.1} req/s; deadline misses {}/{}; plane hit {:.0}%, model hit {:.0}%",
+            report.throughput_rps,
+            report.deadlines.misses,
+            report.deadlines.with_deadline,
+            100.0 * report.plane_hit_ratio(),
+            100.0 * report.model_hit_ratio(),
+        );
+        println!("report: {} ({})", out.display(), super::LOADREPORT_SCHEMA);
+
+        if strict && (report.counters.requests_failed > 0 || report.placement_failed > 0) {
+            return Err(Error::Coordinator(format!(
+                "--strict: {} request(s) failed, {} unplaced",
+                report.counters.requests_failed, report.placement_failed,
+            )));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,484 @@
+//! The machine-readable load report: schema `powertrain-loadreport-v1`.
+//!
+//! One [`LoadReport`] captures everything a load run measured — latency
+//! quantiles over the measured phase (warm-up excluded), throughput,
+//! deadline accounting, the full [`CounterSnapshot`] delta, and the
+//! per-shard routing distribution — in a deterministic JSON document
+//! (`BTreeMap`-ordered keys, so identical runs serialize byte-identical
+//! modulo wall-clock fields). The format is the input for `BENCH_*`-style
+//! trajectory tracking; [`LoadReport::from_json`] parses it back so CI
+//! and tests validate reports instead of grepping them. Field-by-field
+//! documentation lives in `docs/operators-guide.md`.
+
+use crate::coordinator::metrics::CounterSnapshot;
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+use crate::util::stats::quantile_sorted;
+
+/// Schema tag every report carries.
+pub const LOADREPORT_SCHEMA: &str = "powertrain-loadreport-v1";
+
+/// One phase of a run: how many arrivals its schedule contained over
+/// what horizon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseStats {
+    pub events: u64,
+    pub horizon_ms: u64,
+}
+
+/// Latency quantiles (ms) over the measured phase's retained samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Samples the quantiles were computed over. May be smaller than
+    /// completed requests when the bounded latency ledger saturated.
+    pub samples: u64,
+}
+
+impl LatencyStats {
+    /// Compute from raw samples — sorts once, takes every quantile from
+    /// the sorted order ([`quantile_sorted`], the linear-interpolating
+    /// estimator). Empty input produces all-zero stats.
+    pub fn from_samples(samples: &[f64]) -> LatencyStats {
+        let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        if v.is_empty() {
+            return LatencyStats {
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                samples: 0,
+            };
+        }
+        v.sort_unstable_by(f64::total_cmp);
+        LatencyStats {
+            p50: quantile_sorted(&v, 0.5),
+            p95: quantile_sorted(&v, 0.95),
+            p99: quantile_sorted(&v, 0.99),
+            p999: quantile_sorted(&v, 0.999),
+            max: *v.last().expect("non-empty"),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            samples: v.len() as u64,
+        }
+    }
+}
+
+/// Deadline accounting over the measured phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineStats {
+    /// Measured-phase submissions that carried a deadline.
+    pub with_deadline: u64,
+    /// Responses produced after their arrival-relative deadline.
+    pub misses: u64,
+}
+
+impl DeadlineStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.with_deadline == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.with_deadline as f64
+        }
+    }
+}
+
+/// The complete result of one load run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadReport {
+    /// Arrival-model label, e.g. `poisson:200/s`.
+    pub arrivals: String,
+    /// The model's nominal long-run rate (req/s) — compare against
+    /// `throughput_rps` to see whether the system kept up with offered
+    /// load.
+    pub nominal_rate_per_s: f64,
+    /// Mix name (`standard`, or the loaded file's `name`).
+    pub mix: String,
+    pub seed: u64,
+    /// `single` (one coordinator) or `fleet` (sharded domains behind the
+    /// placement router).
+    pub mode: String,
+    /// Coordinator domains (1 in single mode).
+    pub shards: u64,
+    /// Simulated registry nodes (0 in single mode).
+    pub nodes: u64,
+    /// Worker threads per domain. 1 keeps measured counters bit-
+    /// deterministic across runs (see EXPERIMENTS.md §Open-world load).
+    pub workers: u64,
+    pub warmup: PhaseStats,
+    pub measured: PhaseStats,
+    /// FNV-1a over the full arrival schedule (warm-up ∥ measured
+    /// offsets). Same (spec, seed, horizons) ⇒ same fingerprint; the
+    /// determinism acceptance check compares this across runs.
+    pub schedule_fingerprint: u64,
+    /// Measured-phase submissions attempted (placement failures
+    /// included).
+    pub submitted: u64,
+    /// Measured-phase submissions the fleet router could not place
+    /// anywhere (always 0 in single mode).
+    pub placement_failed: u64,
+    /// Measured-phase wall-clock, submission start → last drain.
+    pub wall_s: f64,
+    /// Measured completions / `wall_s`.
+    pub throughput_rps: f64,
+    pub latency: LatencyStats,
+    pub deadlines: DeadlineStats,
+    /// Counter deltas scoped to the measured phase, merged across shards.
+    pub counters: CounterSnapshot,
+}
+
+/// `hits / (hits + misses)`, 0.0 when nothing was looked up.
+fn hit_ratio(hits: u64, misses: u64) -> f64 {
+    if hits + misses == 0 {
+        0.0
+    } else {
+        hits as f64 / (hits + misses) as f64
+    }
+}
+
+impl LoadReport {
+    /// Serving-plane cache hit ratio over the measured phase.
+    pub fn plane_hit_ratio(&self) -> f64 {
+        hit_ratio(self.counters.plane_cache_hits, self.counters.plane_cache_misses)
+    }
+
+    /// Model cache hit ratio over the measured phase.
+    pub fn model_hit_ratio(&self) -> f64 {
+        hit_ratio(self.counters.model_cache_hits, self.counters.model_cache_misses)
+    }
+
+    /// Internal consistency checks a fresh report must satisfy — the CI
+    /// smoke and the integration reconciliation test call this, and
+    /// `pt-loadtest` refuses to write a report that fails it.
+    pub fn validate(&self) -> Result<()> {
+        let fail = |msg: String| Err(Error::Coordinator(format!("invalid load report: {msg}")));
+        let c = &self.counters;
+        if self.submitted != c.requests_completed + c.requests_failed + self.placement_failed {
+            return fail(format!(
+                "submitted {} != completed {} + failed {} + unplaced {}",
+                self.submitted, c.requests_completed, c.requests_failed, self.placement_failed
+            ));
+        }
+        if self.mode == "fleet" && c.routed_total() != self.submitted - self.placement_failed {
+            return fail(format!(
+                "per-shard routed {} != placed submissions {}",
+                c.routed_total(),
+                self.submitted - self.placement_failed
+            ));
+        }
+        if self.latency.samples > c.requests_completed {
+            return fail(format!(
+                "{} latency samples exceed {} completions",
+                self.latency.samples, c.requests_completed
+            ));
+        }
+        if self.deadlines.misses > self.deadlines.with_deadline {
+            return fail(format!(
+                "{} deadline misses exceed {} deadline-carrying submissions",
+                self.deadlines.misses, self.deadlines.with_deadline
+            ));
+        }
+        Ok(())
+    }
+
+    /// The `powertrain-loadreport-v1` document.
+    pub fn to_json(&self) -> Value {
+        let num = |v: u64| Value::Num(v as f64);
+        let phase = |p: &PhaseStats| {
+            Value::obj(vec![
+                ("events", num(p.events)),
+                ("horizon_ms", num(p.horizon_ms)),
+            ])
+        };
+        Value::obj(vec![
+            ("schema", Value::Str(LOADREPORT_SCHEMA.to_string())),
+            ("arrivals", Value::Str(self.arrivals.clone())),
+            ("nominal_rate_per_s", Value::Num(self.nominal_rate_per_s)),
+            ("mix", Value::Str(self.mix.clone())),
+            ("seed", num(self.seed)),
+            ("mode", Value::Str(self.mode.clone())),
+            ("shards", num(self.shards)),
+            ("nodes", num(self.nodes)),
+            ("workers", num(self.workers)),
+            ("warmup", phase(&self.warmup)),
+            ("measured", phase(&self.measured)),
+            // u64 fingerprints exceed f64's integer range; ship as a
+            // string to stay bit-exact through any JSON reader
+            (
+                "schedule_fingerprint",
+                Value::Str(format!("{:016x}", self.schedule_fingerprint)),
+            ),
+            ("submitted", num(self.submitted)),
+            ("placement_failed", num(self.placement_failed)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("throughput_rps", Value::Num(self.throughput_rps)),
+            (
+                "latency_ms",
+                Value::obj(vec![
+                    ("p50", Value::Num(self.latency.p50)),
+                    ("p95", Value::Num(self.latency.p95)),
+                    ("p99", Value::Num(self.latency.p99)),
+                    ("p999", Value::Num(self.latency.p999)),
+                    ("max", Value::Num(self.latency.max)),
+                    ("mean", Value::Num(self.latency.mean)),
+                    ("samples", num(self.latency.samples)),
+                ]),
+            ),
+            (
+                "deadlines",
+                Value::obj(vec![
+                    ("with_deadline", num(self.deadlines.with_deadline)),
+                    ("misses", num(self.deadlines.misses)),
+                    ("miss_rate", Value::Num(self.deadlines.miss_rate())),
+                ]),
+            ),
+            (
+                "hit_ratios",
+                Value::obj(vec![
+                    ("plane_cache", Value::Num(self.plane_hit_ratio())),
+                    ("model_cache", Value::Num(self.model_hit_ratio())),
+                ]),
+            ),
+            ("counters", self.counters.to_json()),
+        ])
+    }
+
+    /// Parse a `powertrain-loadreport-v1` document (schema-checked).
+    /// Derived fields (`miss_rate`, `hit_ratios`) are recomputed, not
+    /// read back.
+    pub fn from_json(text: &str) -> Result<LoadReport> {
+        let v = Value::parse(text)?;
+        let schema = v.req("schema")?.as_str()?;
+        if schema != LOADREPORT_SCHEMA {
+            return Err(Error::Usage(format!(
+                "report schema '{schema}' is not {LOADREPORT_SCHEMA}"
+            )));
+        }
+        let u = |node: &Value, key: &str| -> Result<u64> {
+            Ok(node.req(key)?.as_f64()?.round() as u64)
+        };
+        let phase = |node: &Value| -> Result<PhaseStats> {
+            Ok(PhaseStats { events: u(node, "events")?, horizon_ms: u(node, "horizon_ms")? })
+        };
+        let lat = v.req("latency_ms")?;
+        let dl = v.req("deadlines")?;
+        let fingerprint_hex = v.req("schedule_fingerprint")?.as_str()?;
+        let schedule_fingerprint = u64::from_str_radix(fingerprint_hex, 16).map_err(|_| {
+            Error::Usage(format!("bad schedule_fingerprint '{fingerprint_hex}'"))
+        })?;
+        Ok(LoadReport {
+            arrivals: v.req("arrivals")?.as_str()?.to_string(),
+            nominal_rate_per_s: v.req("nominal_rate_per_s")?.as_f64()?,
+            mix: v.req("mix")?.as_str()?.to_string(),
+            seed: u(&v, "seed")?,
+            mode: v.req("mode")?.as_str()?.to_string(),
+            shards: u(&v, "shards")?,
+            nodes: u(&v, "nodes")?,
+            workers: u(&v, "workers")?,
+            warmup: phase(v.req("warmup")?)?,
+            measured: phase(v.req("measured")?)?,
+            schedule_fingerprint,
+            submitted: u(&v, "submitted")?,
+            placement_failed: u(&v, "placement_failed")?,
+            wall_s: v.req("wall_s")?.as_f64()?,
+            throughput_rps: v.req("throughput_rps")?.as_f64()?,
+            latency: LatencyStats {
+                p50: lat.req("p50")?.as_f64()?,
+                p95: lat.req("p95")?.as_f64()?,
+                p99: lat.req("p99")?.as_f64()?,
+                p999: lat.req("p999")?.as_f64()?,
+                max: lat.req("max")?.as_f64()?,
+                mean: lat.req("mean")?.as_f64()?,
+                samples: u(lat, "samples")?,
+            },
+            deadlines: DeadlineStats {
+                with_deadline: u(dl, "with_deadline")?,
+                misses: u(dl, "misses")?,
+            },
+            counters: counters_from_json(v.req("counters")?)?,
+        })
+    }
+}
+
+/// Parse a [`CounterSnapshot`] back out of its `to_json` form.
+fn counters_from_json(v: &Value) -> Result<CounterSnapshot> {
+    use crate::coordinator::metrics::MAX_FLEET_SHARDS;
+    use crate::device::DeviceKind;
+    let u = |key: &str| -> Result<u64> { Ok(v.req(key)?.as_f64()?.round() as u64) };
+    let mut routed = [0u64; 3 * MAX_FLEET_SHARDS];
+    if let Some(grid) = v.get("routed") {
+        for (k, kind) in DeviceKind::ALL.iter().enumerate() {
+            if let Some(row) = grid.get(kind.name()) {
+                for (s, n) in row.as_f64_vec()?.iter().enumerate().take(MAX_FLEET_SHARDS) {
+                    routed[k * MAX_FLEET_SHARDS + s] = n.round() as u64;
+                }
+            }
+        }
+    }
+    Ok(CounterSnapshot {
+        requests_received: u("requests_received")?,
+        requests_completed: u("requests_completed")?,
+        requests_failed: u("requests_failed")?,
+        admission_rejected: u("admission_rejected")?,
+        modes_profiled: u("modes_profiled")?,
+        reboots: u("reboots")?,
+        plane_cache_hits: u("plane_cache_hits")?,
+        plane_cache_misses: u("plane_cache_misses")?,
+        model_cache_hits: u("model_cache_hits")?,
+        model_cache_misses: u("model_cache_misses")?,
+        singleflight_waits: u("singleflight_waits")?,
+        host_fits: u("host_fits")?,
+        deadline_misses: u("deadline_misses")?,
+        feedback_observations: u("feedback_observations")?,
+        drift_trips: u("drift_trips")?,
+        refits: u("refits")?,
+        stale_served: u("stale_served")?,
+        retries: u("retries")?,
+        breaker_transitions: u("breaker_transitions")?,
+        degraded_served: u("degraded_served")?,
+        thermal_throttle_events: u("thermal_throttle_events")?,
+        placement_rejected: u("placement_rejected")?,
+        cross_shard_transfers_saved: u("cross_shard_transfers_saved")?,
+        profiling_ms: u("profiling_ms")?,
+        routed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+
+    fn sample_report() -> LoadReport {
+        let mut counters = CounterSnapshot {
+            requests_received: 40,
+            requests_completed: 38,
+            requests_failed: 1,
+            plane_cache_hits: 30,
+            plane_cache_misses: 8,
+            model_cache_hits: 36,
+            model_cache_misses: 2,
+            deadline_misses: 1,
+            ..Default::default()
+        };
+        counters.routed[0] = 25; // orin-agx, shard 0
+        counters.routed[1] = 14; // orin-agx, shard 1
+        LoadReport {
+            arrivals: "poisson:200/s".into(),
+            nominal_rate_per_s: 200.0,
+            mix: "standard".into(),
+            seed: 42,
+            mode: "fleet".into(),
+            shards: 2,
+            nodes: 64,
+            workers: 1,
+            warmup: PhaseStats { events: 10, horizon_ms: 1000 },
+            measured: PhaseStats { events: 40, horizon_ms: 5000 },
+            schedule_fingerprint: 0xdead_beef_0123_4567,
+            submitted: 40,
+            placement_failed: 1,
+            wall_s: 5.2,
+            throughput_rps: 38.0 / 5.2,
+            latency: LatencyStats {
+                p50: 1.2,
+                p95: 3.4,
+                p99: 5.6,
+                p999: 7.8,
+                max: 9.0,
+                mean: 1.9,
+                samples: 38,
+            },
+            deadlines: DeadlineStats { with_deadline: 12, misses: 1 },
+            counters,
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let report = sample_report();
+        report.validate().unwrap();
+        let text = report.to_json().to_string();
+        let back = LoadReport::from_json(&text).unwrap();
+        assert_eq!(back, report);
+        // serialization is deterministic
+        assert_eq!(back.to_json().to_string(), text);
+        // the fingerprint survived as exact bits despite being > 2^53
+        assert_eq!(back.schedule_fingerprint, 0xdead_beef_0123_4567);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let mut v = sample_report().to_json();
+        if let Value::Obj(map) = &mut v {
+            map.insert("schema".into(), Value::Str("powertrain-loadreport-v0".into()));
+        }
+        let err = LoadReport::from_json(&v.to_string()).unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_unreconciled_counters() {
+        let mut r = sample_report();
+        r.submitted = 99; // != completed + failed + unplaced
+        let err = r.validate().unwrap_err();
+        assert!(err.to_string().contains("submitted"), "{err}");
+
+        let mut r = sample_report();
+        r.counters.routed[5] += 7; // routed no longer sums to placements
+        let err = r.validate().unwrap_err();
+        assert!(err.to_string().contains("routed"), "{err}");
+
+        let mut r = sample_report();
+        r.deadlines.misses = 99;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn latency_stats_interpolate_over_a_sorted_copy() {
+        // 1..10 ms: hand-computed linear-interpolation fixtures (same as
+        // the stats-module tests, threaded through the report type)
+        let samples: Vec<f64> = (1..=10).map(f64::from).collect();
+        let l = LatencyStats::from_samples(&samples);
+        assert!((l.p50 - 5.5).abs() < 1e-12);
+        assert!((l.p99 - 9.91).abs() < 1e-12);
+        assert!((l.p999 - 9.991).abs() < 1e-12);
+        assert_eq!(l.max, 10.0);
+        assert!((l.mean - 5.5).abs() < 1e-12);
+        assert_eq!(l.samples, 10);
+        // empty input: all zeros, no panic
+        assert_eq!(LatencyStats::from_samples(&[]).samples, 0);
+    }
+
+    #[test]
+    fn hit_ratios_handle_empty_denominators() {
+        let mut r = sample_report();
+        assert!((r.plane_hit_ratio() - 30.0 / 38.0).abs() < 1e-12);
+        assert!((r.model_hit_ratio() - 36.0 / 38.0).abs() < 1e-12);
+        r.counters.plane_cache_hits = 0;
+        r.counters.plane_cache_misses = 0;
+        assert_eq!(r.plane_hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn deadline_miss_rate() {
+        let d = DeadlineStats { with_deadline: 12, misses: 3 };
+        assert!((d.miss_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(DeadlineStats { with_deadline: 0, misses: 0 }.miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn counters_survive_the_routed_grid_round_trip() {
+        let r = sample_report();
+        let back =
+            LoadReport::from_json(&r.to_json().to_string()).unwrap();
+        assert_eq!(back.counters.routed(DeviceKind::OrinAgx, 0), 25);
+        assert_eq!(back.counters.routed(DeviceKind::OrinAgx, 1), 14);
+        assert_eq!(back.counters.routed_total(), 39);
+    }
+}

@@ -8,6 +8,7 @@
 //!   transfer                     PowerTrain-transfer onto a new workload
 //!   optimize                     pick the best power mode under a budget
 //!   serve                        run the coordinator on synthetic arrivals
+//!   loadtest                     open-world load generator (= pt-loadtest)
 //!   experiment <id|all>          regenerate a paper table/figure
 //!
 //! Run `powertrain help` for flag documentation.
@@ -173,6 +174,12 @@ COMMANDS
                                  ignored
       --nodes N (64)             simulated Jetson nodes synthesized into
                                  the fleet registry (fleet mode only)
+  loadtest                   open-world load generator: arrival process ×
+                             scenario mix streamed through a coordinator
+                             or fleet, loadreport-v1 JSON out; identical
+                             to the `pt-loadtest` binary — run
+                             `powertrain loadtest --help` for its flags
+                             (see docs/operators-guide.md)
   experiment <id|all>        regenerate paper exhibits; ids:
                              table1-4 fig2a fig2b fig2c fig6 fig7 fig8
                              fig9a-e fig10-14
@@ -793,6 +800,13 @@ fn real_main() -> Result<()> {
         Some("transfer") => cmd_transfer(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("serve") => cmd_serve(&args),
+        // the loadtest CLI owns its flag parsing (shared with the
+        // `pt-loadtest` binary), so hand it everything after the
+        // subcommand verbatim
+        Some("loadtest") => {
+            let at = argv.iter().position(|a| a == "loadtest").unwrap();
+            powertrain::loadgen::cli::run_cli(&argv[at + 1..])
+        }
         Some("experiment") => cmd_experiment(&args),
         Some("help") | None => {
             print!("{HELP}");

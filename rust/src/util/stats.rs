@@ -39,6 +39,33 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
         return f64::NAN; // every entry was NaN: propagate, don't invent
     }
     v.sort_unstable_by(f64::total_cmp);
+    quantile_sorted(&v, q)
+}
+
+/// Explicitly *linear-interpolating* quantile.
+///
+/// Alias of [`quantile`], which has interpolated (position `q·(n−1)`,
+/// the numpy `linear` / R type-7 convention) since the PR-3 host-training
+/// work — the name exists so latency-reporting call sites can state the
+/// tail-quantile semantics they rely on: p999 over a small sample is
+/// interpolated between order statistics, not quantized to the nearest
+/// observed value the way a nearest-rank estimator would.
+pub fn quantile_linear(xs: &[f64], q: f64) -> f64 {
+    quantile(xs, q)
+}
+
+/// The interpolation core of [`quantile`], for callers that take many
+/// quantiles of one sample (latency p50/p95/p99/p999 reports): sort once
+/// with `f64::total_cmp` (NaN filtered out), then call this per `q`.
+///
+/// `v` must be non-empty and sorted ascending with no NaN entries; ±inf
+/// is allowed and handled as in [`quantile`] (nearest rank when an
+/// interpolation neighbor is non-finite, so inf − inf never manufactures
+/// NaN).
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile q={q}");
+    assert!(!v.is_empty(), "quantile_sorted needs a non-empty sample");
+    debug_assert!(v.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()), "input not sorted");
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -178,6 +205,44 @@ mod tests {
         assert!(median(&[f64::NAN, f64::NAN]).is_nan());
         // empty input keeps the historical 0.0 convention
         assert_eq!(quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_linear_interpolates_against_hand_computed_fixtures() {
+        // numpy `linear` / R type-7 fixtures, computed by hand:
+        // position q·(n−1), interpolate between the bracketing order
+        // statistics
+        let xs: Vec<f64> = (1..=10).map(f64::from).collect(); // 1..10
+        // p50: pos 4.5 → (5 + 6)/2
+        assert!((quantile_linear(&xs, 0.5) - 5.5).abs() < 1e-12);
+        // p95: pos 8.55 → 9 + 0.55·(10−9)
+        assert!((quantile_linear(&xs, 0.95) - 9.55).abs() < 1e-12);
+        // p99: pos 8.91 → 9.91
+        assert!((quantile_linear(&xs, 0.99) - 9.91).abs() < 1e-12);
+        // p999 over a small sample is *not* quantized to an observed
+        // value: pos 8.991 → 9.991 (nearest-rank would answer 10.0)
+        assert!((quantile_linear(&xs, 0.999) - 9.991).abs() < 1e-12);
+        // and stays in lockstep with `quantile` (same estimator)
+        for q in [0.0, 0.25, 0.5, 0.9, 0.999, 1.0] {
+            assert_eq!(quantile_linear(&xs, q), quantile(&xs, q));
+        }
+        // uneven spacing: [10, 20, 40], p75 at pos 1.5 → 30
+        assert!((quantile_linear(&[40.0, 10.0, 20.0], 0.75) - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_sorted_matches_quantile_on_a_sorted_sample() {
+        let mut v = vec![4.0, 1.0, 3.0, 2.0, 8.0, 6.0];
+        let reference: Vec<f64> =
+            [0.0, 0.1, 0.5, 0.9, 0.99, 1.0].iter().map(|&q| quantile(&v, q)).collect();
+        v.sort_unstable_by(f64::total_cmp);
+        for (&q, &want) in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0].iter().zip(&reference) {
+            assert_eq!(quantile_sorted(&v, q), want);
+        }
+        // the non-finite nearest-rank degradation carries over
+        let inf = [1.0, f64::INFINITY];
+        assert_eq!(quantile_sorted(&inf, 0.2), 1.0);
+        assert_eq!(quantile_sorted(&inf, 0.9), f64::INFINITY);
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Integration: the open-world traffic engine end-to-end in the default
+//! (no-`xla`) build — arrival schedules, scenario mixes, the warm-up /
+//! measured split, fleet pacing, and the loadreport-v1 JSON — all driven
+//! the way `pt-loadtest` drives them.
+//!
+//! The suite leans on the engine's determinism contract: the schedule
+//! and every mix draw are fixed up front from the run seed, so with one
+//! worker per domain two runs of one config must agree on every counter
+//! — only wall-clock latencies differ.
+
+use powertrain::coordinator::{CoordinatorConfig, ReferenceModels};
+use powertrain::device::{DeviceKind, PowerModeGrid};
+use powertrain::loadgen::engine::{run, EngineConfig, FleetShape};
+use powertrain::loadgen::report::LoadReport;
+use powertrain::loadgen::{ArrivalSpec, Mix};
+use powertrain::profiler::Profiler;
+use powertrain::sim::TrainerSim;
+use powertrain::util::rng::Rng;
+use powertrain::workload::Workload;
+
+/// Shared, lazily-built host reference models (same recipe as the other
+/// integration suites: in-process `OnceLock`, never a stale temp dir).
+fn reference() -> ReferenceModels {
+    static REF: std::sync::OnceLock<ReferenceModels> = std::sync::OnceLock::new();
+    REF.get_or_init(|| {
+        let mut rng = Rng::new(1);
+        let modes = PowerModeGrid::paper_subset(DeviceKind::OrinAgx).sample(400, &mut rng);
+        let mut profiler = Profiler::new(TrainerSim::new(
+            DeviceKind::OrinAgx.spec(),
+            Workload::resnet(),
+            1,
+        ));
+        let corpus = profiler.profile_modes(&modes).unwrap();
+        ReferenceModels::bootstrap_host(&corpus, 60, 1).unwrap()
+    })
+    .clone()
+}
+
+fn engine_cfg(arrivals: &str, fleet: Option<FleetShape>) -> EngineConfig {
+    EngineConfig {
+        arrivals: ArrivalSpec::parse(arrivals).unwrap(),
+        mix: Mix::standard(),
+        seed: 11,
+        warmup_ms: 500,
+        duration_ms: 2_000,
+        fleet,
+        coordinator: CoordinatorConfig {
+            transfer_epochs: 60,
+            prediction_grid: Some(400),
+            workers: 1,
+            ..Default::default()
+        },
+    }
+}
+
+/// Acceptance: a two-shard fleet run reconciles — submitted equals
+/// completed + failed + unplaced, the per-shard routing grid sums back
+/// to the total, and the report survives its own JSON round trip.
+#[test]
+fn fleet_report_counters_reconcile_and_round_trip() {
+    let shape = FleetShape { shards: 2, nodes: 64 };
+    let report = run(&engine_cfg("poisson:40", Some(shape)), &reference()).unwrap();
+    report.validate().unwrap();
+
+    assert_eq!(report.mode, "fleet");
+    assert_eq!(report.shards, 2);
+    assert!(report.measured.events > 0);
+    assert_eq!(report.submitted, report.measured.events);
+    // every submitted request is accounted for, exactly once
+    assert_eq!(
+        report.submitted,
+        report.counters.requests_completed
+            + report.counters.requests_failed
+            + report.placement_failed,
+    );
+    // the routing grid reconciles: per-shard counts sum to the total,
+    // and the total is every request that made it past placement
+    let per_shard = report.counters.routed_per_shard();
+    assert_eq!(
+        per_shard.iter().sum::<u64>(),
+        report.counters.routed_total()
+    );
+    assert_eq!(
+        report.counters.routed_total(),
+        report.submitted - report.placement_failed
+    );
+    // both shards actually took traffic at this scale
+    assert!(per_shard[0] > 0 && per_shard[1] > 0, "{per_shard:?}");
+
+    assert_eq!(report.latency.samples, report.counters.requests_completed);
+    assert!(report.latency.p50 > 0.0);
+    assert!(report.latency.p99 >= report.latency.p50);
+    assert!(report.throughput_rps > 0.0);
+
+    // the JSON the operator reads must carry the same facts
+    let back = LoadReport::from_json(&report.to_json().to_string()).unwrap();
+    back.validate().unwrap();
+    assert_eq!(back.counters, report.counters);
+    assert_eq!(back.schedule_fingerprint, report.schedule_fingerprint);
+    assert_eq!(back.submitted, report.submitted);
+}
+
+/// Acceptance: same seed + same config ⇒ bit-identical arrival schedule
+/// and identical measured counters across two fleet runs (workers = 1;
+/// only wall-clock latency may differ).
+#[test]
+fn same_seed_fleet_runs_replay_identically() {
+    let cfg = engine_cfg("poisson:25", Some(FleetShape { shards: 2, nodes: 32 }));
+    let a = run(&cfg, &reference()).unwrap();
+    let b = run(&cfg, &reference()).unwrap();
+    assert_eq!(a.schedule_fingerprint, b.schedule_fingerprint);
+    assert_eq!(a.counters, b.counters, "measured counters must replay");
+    assert_eq!(a.submitted, b.submitted);
+    assert_eq!(a.placement_failed, b.placement_failed);
+    assert_eq!(a.latency.samples, b.latency.samples);
+    assert_eq!(a.deadlines.with_deadline, b.deadlines.with_deadline);
+    assert_eq!(a.deadlines.misses, b.deadlines.misses);
+}
+
+/// Every arrival family drives a single coordinator to a valid report
+/// with non-degenerate latency stats.
+#[test]
+fn arrival_families_drive_a_single_coordinator() {
+    for spec in ["poisson:30", "mmpp:10,60:2,1", "diurnal:30:0.8:2"] {
+        let report = run(&engine_cfg(spec, None), &reference()).unwrap();
+        report.validate().unwrap();
+        assert_eq!(report.mode, "single", "{spec}");
+        assert!(report.measured.events > 0, "{spec}: empty measured phase");
+        assert!(
+            report.counters.requests_completed > 0,
+            "{spec}: nothing completed"
+        );
+        assert!(report.latency.p50 > 0.0, "{spec}: degenerate p50");
+        assert!(report.throughput_rps > 0.0, "{spec}");
+        // warm-up paid the fits; the measured window serves from cache
+        assert!(
+            report.counters.model_cache_hits > 0,
+            "{spec}: warm-up did not warm the model cache"
+        );
+    }
+}

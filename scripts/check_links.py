@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Verify that every relative markdown link target exists.
+
+Usage: check_links.py FILE.md [FILE.md ...]
+
+Checks `[text](target)` links whose target is a relative path (external
+URLs and pure in-page `#anchors` are skipped; a relative target's own
+`#fragment` is stripped before the existence check). Exits non-zero
+listing every broken link, so CI catches a doc rename the moment it
+breaks a cross-reference. Stdlib only.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — non-greedy text, target up to the first unescaped ')';
+# images (![alt](src)) match too, which is what we want.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# inside inline code or fenced blocks links are examples, not references
+FENCE = re.compile(r"^(```|~~~)")
+
+
+def targets(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main(argv):
+    if not argv:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    broken = []
+    for name in argv:
+        doc = Path(name)
+        if not doc.is_file():
+            broken.append(f"{name}: file itself is missing")
+            continue
+        for lineno, target in targets(doc):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (doc.parent / rel).exists():
+                broken.append(f"{name}:{lineno}: broken link -> {target}")
+    for b in broken:
+        print(b, file=sys.stderr)
+    if broken:
+        print(f"{len(broken)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"links ok across {len(argv)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
